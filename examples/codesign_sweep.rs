@@ -1,0 +1,42 @@
+//! Fig. 7-style sweep: how energy and area trade off as the SRAM budget
+//! grows, for one benchmark layer.
+//!
+//!     cargo run --release --example codesign_sweep -- [--layer Conv3]
+
+use cnn_blocking::model::benchmarks::by_name;
+use cnn_blocking::optimizer::beam::BeamConfig;
+use cnn_blocking::optimizer::codesign::{diannao_reference, fig7_budgets, sweep_budgets};
+use cnn_blocking::util::cli::Args;
+use cnn_blocking::util::table::{energy_pj, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let name = args.get_or("layer", "Conv3");
+    let bench = by_name(&name).expect("unknown layer; see Table 4");
+    let cfg = BeamConfig::quick();
+
+    let reference = diannao_reference(&bench.dims, &cfg);
+    println!(
+        "{}: DianNao baseline {}  /  DianNao + optimal schedule {}",
+        bench.name,
+        energy_pj(reference.baseline_pj),
+        energy_pj(reference.optimized_pj)
+    );
+
+    let points = sweep_budgets(&bench.dims, &fig7_budgets(), 3, &cfg);
+    let mut t = Table::new(
+        &format!("{} energy/area vs SRAM budget", bench.name),
+        &["budget", "energy", "vs DianNao-opt", "area mm2", "on-chip", "schedule"],
+    );
+    for p in &points {
+        t.row(vec![
+            cnn_blocking::model::hierarchy::human_bytes(p.budget_bytes),
+            energy_pj(p.energy_pj),
+            format!("{:.1}x", reference.optimized_pj / p.energy_pj),
+            format!("{:.2}", p.area_mm2),
+            cnn_blocking::model::hierarchy::human_bytes(p.onchip_bytes),
+            p.string.clone(),
+        ]);
+    }
+    t.print();
+}

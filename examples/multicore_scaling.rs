@@ -1,0 +1,29 @@
+//! Fig. 9-style study: multicore partitioning of a layer under the two
+//! schemes of Sec. 3.3, printing the per-component energy breakdown.
+//!
+//!     cargo run --release --example multicore_scaling -- [--layer Conv1]
+
+use cnn_blocking::figures::fig9;
+use cnn_blocking::model::benchmarks::by_name;
+use cnn_blocking::optimizer::beam::BeamConfig;
+use cnn_blocking::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let name = args.get_or("layer", "Conv1");
+    let bench = by_name(&name).expect("unknown layer; see Table 4");
+    let cfg = BeamConfig::quick();
+
+    println!("finding top-4 single-core schedules for {}...", bench.name);
+    let schedules = fig9::top_schedules(&bench.dims, 4, 8 << 20, &cfg);
+    for (i, s) in schedules.iter().enumerate() {
+        println!("  sched{}: {}", i + 1, s.notation());
+    }
+
+    let cells = fig9::fig9_grid(&bench.dims, &schedules, 8 << 20);
+    fig9::render_fig9(&bench.dims, &cells).print();
+    println!(
+        "paper takeaway (share the dominant buffer -> broadcast is free) holds: {}",
+        fig9::takeaway_holds(&bench.dims, &cells)
+    );
+}

@@ -1,0 +1,61 @@
+//! Optimize every layer of AlexNet and report per-layer energy on a
+//! co-designed 1 MB accelerator vs the DianNao fixed hierarchy, plus the
+//! multi-layer "flexible memory" shared design (Sec. 3.6).
+//!
+//!     cargo run --release --example optimize_alexnet
+
+use cnn_blocking::model::networks::{alexnet, LayerKind};
+use cnn_blocking::optimizer::beam::{optimize, BeamConfig};
+use cnn_blocking::optimizer::multilayer::shared_design;
+use cnn_blocking::optimizer::targets::{BespokeTarget, FixedTarget};
+use cnn_blocking::util::table::{energy_pj, Table};
+
+fn main() {
+    let net = alexnet();
+    let cfg = BeamConfig::quick();
+    let budget = 1 << 20; // 1 MB on-chip
+
+    let mut t = Table::new(
+        "AlexNet per-layer optimal blocking (1 MB co-design vs DianNao-fixed)",
+        &["layer", "dims", "DianNao opt", "co-design", "gain", "schedule"],
+    );
+    let mut conv_dims = Vec::new();
+    for l in net.layers.iter().filter(|l| l.kind == LayerKind::Conv) {
+        let dn = optimize(&l.dims, &FixedTarget::diannao(), 3, &cfg)
+            .into_iter()
+            .next()
+            .unwrap();
+        let cd = optimize(&l.dims, &BespokeTarget::new(budget), 3, &cfg)
+            .into_iter()
+            .next()
+            .unwrap();
+        t.row(vec![
+            l.name.clone(),
+            format!("{}", l.dims),
+            energy_pj(dn.energy_pj),
+            energy_pj(cd.energy_pj),
+            format!("{:.1}x", dn.energy_pj / cd.energy_pj),
+            cd.string.notation(),
+        ]);
+        conv_dims.push(l.dims);
+    }
+    t.print();
+
+    // Sec. 3.6: one shared memory hierarchy for all five conv layers.
+    println!("searching a shared flexible-memory design for all conv layers...");
+    let shared = shared_design(&conv_dims, 10.0, 2, &cfg);
+    println!(
+        "shared design: levels {:?} bytes, area {:.1} mm2, total {}",
+        shared.shape.level_bytes,
+        shared.area_mm2,
+        energy_pj(shared.total_pj)
+    );
+    for (l, pj) in net
+        .layers
+        .iter()
+        .filter(|l| l.kind == LayerKind::Conv)
+        .zip(&shared.per_layer_pj)
+    {
+        println!("  {}: {}", l.name, energy_pj(*pj));
+    }
+}

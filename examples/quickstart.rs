@@ -1,0 +1,51 @@
+//! Quickstart: model a layer, find its optimal blocking, and inspect the
+//! result — the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+
+use cnn_blocking::model::access::analyze;
+use cnn_blocking::model::dims::LayerDims;
+use cnn_blocking::model::string::BlockingString;
+use cnn_blocking::optimizer::beam::{optimize, BeamConfig};
+use cnn_blocking::optimizer::targets::{BespokeTarget, Evaluator};
+use cnn_blocking::util::table::energy_pj;
+
+fn main() {
+    // 1. Describe a convolutional layer (VGG conv4, Table 4 of the paper).
+    let layer = LayerDims::conv(56, 56, 128, 256, 3, 3);
+    println!("layer: {}   ({} MACs)", layer, layer.macs());
+
+    // 2. Any loop nest is a "blocking string". Algorithm 1, unblocked:
+    let naive = BlockingString::unblocked(&layer);
+    println!("\nnaive string:   {}", naive);
+
+    // 3. The analytical model turns a string into buffers and accesses.
+    let (bufs, _profile) = analyze(&naive, &layer);
+    println!("buffers implied by the naive string:");
+    for vb in bufs.all() {
+        println!(
+            "  {}{}  {:>10} elems  refetch-rate {:.1}",
+            vb.tensor, vb.ordinal, vb.size_elems, vb.refetch_rate
+        );
+    }
+
+    // 4. Search for the minimum-energy blocking, co-designing a memory
+    //    hierarchy under an 8 MB SRAM budget.
+    let target = BespokeTarget::new(8 << 20);
+    let naive_pj = target.objective(&naive, &layer);
+    let best = optimize(&layer, &target, 3, &BeamConfig::quick())
+        .into_iter()
+        .next()
+        .unwrap();
+    println!("\nnaive   energy: {}", energy_pj(naive_pj));
+    println!(
+        "optimal energy: {}  ({:.1}x better)",
+        energy_pj(best.energy_pj),
+        naive_pj / best.energy_pj
+    );
+    println!("optimal string: {}", best.string);
+
+    // 5. The level-0 tile is what parameterizes the Pallas kernel.
+    let (x0, y0, c0, k0) = best.string.level0_tile(&layer);
+    println!("level-0 tile: x0={} y0={} c0={} k0={}", x0, y0, c0, k0);
+}

@@ -1,0 +1,170 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the rust runtime.
+
+HLO text, NOT ``lowered.compiler_ir(...).serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced (all f32):
+  artifacts/quickstart.hlo.txt          tiny conv, runtime smoke test
+  artifacts/<layer>.hlo.txt             each pipeline layer standalone
+  artifacts/alexnet_mini_b{1,2,4,8}.hlo.txt
+                                        full 3-layer pipeline at the
+                                        coordinator's batch ladder
+  artifacts/manifest.json               shapes + params checksums
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    batched_pipeline,
+    init_params,
+    input_shape,
+    load_schedules,
+    single_layer_fn,
+)
+from .kernels.blocked_conv import blocked_conv
+
+BATCH_LADDER = (1, 2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is essential: the default printer elides big
+    # literals as `constant({...})`, which the rust-side text parser
+    # accepts but fills with garbage — baked weights would be destroyed.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # new-jax metadata attributes (source_end_line etc.) are rejected by
+    # the 0.5.1 text parser on the rust side — strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def lower_fn(fn, *example_args):
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def write(path, text):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}")
+
+
+def checksum(arr) -> str:
+    return hashlib.sha256(np.asarray(arr).tobytes()).hexdigest()[:16]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--schedules", default=None)
+    args = ap.parse_args()
+
+    schedules = load_schedules(args.schedules) if args.schedules else load_schedules()
+    params = init_params(schedules)
+    out = args.out_dir
+
+    manifest = {"version": 1, "artifacts": {}}
+
+    # --- quickstart: one tiny blocked conv, fixed weights ------------
+    qx = jax.ShapeDtypeStruct((4, 10, 10), jnp.float32)
+    qw = jax.ShapeDtypeStruct((8, 4, 3, 3), jnp.float32)
+
+    def quickstart(x, w):
+        return (blocked_conv(x, w, c0=4, k0=4, fh=3, fw=3),)
+
+    write(os.path.join(out, "quickstart.hlo.txt"), lower_fn(quickstart, qx, qw))
+    manifest["artifacts"]["quickstart"] = {
+        "inputs": [["f32", list(qx.shape)], ["f32", list(qw.shape)]],
+        "output": ["f32", [8, 8, 8]],
+    }
+
+    # --- per-layer artifacts (weights baked in as constants) ---------
+    for layer, p in zip(schedules, params):
+        d = layer["dims"]
+        shape = (d["c"], d["y"] + d["fh"] - 1, d["x"] + d["fw"] - 1)
+        spec = jax.ShapeDtypeStruct(shape, jnp.float32)
+        fn = single_layer_fn(layer, p)
+        write(
+            os.path.join(out, f"{layer['name']}.hlo.txt"),
+            lower_fn(lambda x: (fn(x),), spec),
+        )
+        manifest["artifacts"][layer["name"]] = {
+            "inputs": [["f32", list(shape)]],
+            "output": ["f32", [d["k"], d["y"], d["x"]]],
+            "tile": layer["tile"],
+            "string": layer["string"],
+            "weights_sha": checksum(p[0]),
+        }
+
+    # --- full pipeline at each batch size -----------------------------
+    in_shape = input_shape(schedules)
+    pipe = batched_pipeline(params, schedules)
+    last = schedules[-1]["dims"]
+    for b in BATCH_LADDER:
+        spec = jax.ShapeDtypeStruct((b,) + in_shape, jnp.float32)
+        write(
+            os.path.join(out, f"alexnet_mini_b{b}.hlo.txt"),
+            lower_fn(lambda xb: (pipe(xb),), spec),
+        )
+        manifest["artifacts"][f"alexnet_mini_b{b}"] = {
+            "inputs": [["f32", [b] + list(in_shape)]],
+            "output": ["f32", [b, last["k"], last["y"], last["x"]]],
+        }
+
+    manifest["schedules"] = schedules
+    manifest["params_sha"] = [checksum(w) for (w, _b) in params]
+    write(os.path.join(out, "manifest.json"), json.dumps(manifest, indent=2, sort_keys=True))
+
+    # --- golden pair: deterministic input -> pipeline output ----------
+    # The rust e2e driver replays this input through the compiled b1
+    # artifact and asserts bitwise-close agreement: a cross-language check
+    # of the entire AOT path (weights are baked into the HLO).
+    gx = jax.random.normal(jax.random.PRNGKey(1234), in_shape, dtype=jnp.float32)
+    gout = pipe(gx[None, ...])[0]
+    # per-stage intermediates: input to each standalone layer artifact and
+    # its expected output, so the rust tests can pinpoint a diverging stage
+    from .model import maxpool2
+
+    stages = []
+    h = gx
+    for layer, p in zip(schedules, params):
+        fn = single_layer_fn(layer, p)
+        o = fn(h)
+        stages.append(
+            {
+                "name": layer["name"],
+                "input_shape": list(h.shape),
+                "input": np.asarray(h).ravel().tolist(),
+                "output_shape": list(o.shape),
+                "output": np.asarray(o).ravel().tolist(),
+            }
+        )
+        h = maxpool2(o) if layer is not schedules[-1] else o
+    golden = {
+        "input_shape": list(in_shape),
+        "input": np.asarray(gx).ravel().tolist(),
+        "output_shape": list(gout.shape),
+        "output": np.asarray(gout).ravel().tolist(),
+        "stages": stages,
+    }
+    write(os.path.join(out, "golden.json"), json.dumps(golden))
+
+
+if __name__ == "__main__":
+    main()

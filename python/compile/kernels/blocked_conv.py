@@ -1,0 +1,100 @@
+"""Layer 1: blocked direct-convolution Pallas kernel.
+
+The kernel's blocking comes from the rust optimizer (L3): ``cnnblk
+optimize --emit-schedules`` writes ``schedules.json`` whose level-0 tile
+``(x0, y0, c0, k0)`` parameterizes the ``pallas_call`` grid and BlockSpecs
+here. The channel tiles (c0, k0) become grid dimensions (the HBM<->VMEM
+schedule the paper expressed with its C/K loop splits); the spatial tile
+(x0, y0) governs the within-block compute order and the VMEM-footprint
+estimate recorded in DESIGN.md §Hardware-Adaptation (overlapping halo
+blocks cannot be expressed as disjoint Pallas BlockSpecs, so spatial
+blocking stays inside the block — exactly the role the paper gives the
+innermost shift-register level).
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tensor layouts (single image):
+#   input   (C, H, W)  with  H = Y + Fh - 1, W = X + Fw - 1   ("valid")
+#   weights (K, C, Fh, Fw)
+#   output  (K, Y, X)
+
+
+def _conv_block_kernel(x_ref, w_ref, o_ref, *, fh: int, fw: int):
+    """Compute one (c-tile, k-tile) block: o += conv(x_block, w_block).
+
+    x_ref: (c0, H, W) input channels tile (full spatial extent + halo)
+    w_ref: (k0, c0, fh, fw)
+    o_ref: (k0, Y, X) accumulated across the c grid dimension.
+    """
+    ci = pl.program_id(1)  # reduction position (c tiles iterate fastest)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    k0, y, xdim = o_ref.shape
+
+    acc = jnp.zeros((k0, y, xdim), dtype=jnp.float32)
+    # The Fw/Fh window loops are innermost (Algorithm 1); each (dy, dx)
+    # offset contributes a shifted input slab contracted over the c tile.
+    for dy in range(fh):
+        for dx in range(fw):
+            # (c0, Y, X) window starting at (dy, dx)
+            window = jax.lax.dynamic_slice(
+                x, (0, dy, dx), (x.shape[0], y, xdim)
+            )
+            # (k0, c0) x (c0, Y*X) -> (k0, Y, X)
+            wslice = w[:, :, dy, dx]
+            acc = acc + jnp.tensordot(wslice, window, axes=((1,), (0,)))
+
+    @pl.when(ci == 0)
+    def _init():
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+    @pl.when(ci != 0)
+    def _accum():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + acc).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c0", "k0", "fh", "fw", "interpret")
+)
+def blocked_conv(x, w, *, c0: int, k0: int, fh: int, fw: int, interpret: bool = True):
+    """Valid 2-D convolution of (C,H,W) by (K,C,Fh,Fw) -> (K,Y,X), blocked
+    per the optimizer's (c0, k0) tile."""
+    c, h, wdim = x.shape
+    k = w.shape[0]
+    assert w.shape == (k, c, fh, fw), (w.shape, (k, c, fh, fw))
+    assert c % c0 == 0 and k % k0 == 0, (c, c0, k, k0)
+    y_out, x_out = h - fh + 1, wdim - fw + 1
+
+    grid = (k // k0, c // c0)  # c tiles innermost (accumulation)
+    return pl.pallas_call(
+        functools.partial(_conv_block_kernel, fh=fh, fw=fw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c0, h, wdim), lambda ki, ci: (ci, 0, 0)),
+            pl.BlockSpec((k0, c0, fh, fw), lambda ki, ci: (ki, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((k0, y_out, x_out), lambda ki, ci: (ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, y_out, x_out), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def vmem_estimate_bytes(c0: int, k0: int, x0: int, y0: int, fh: int, fw: int,
+                        h: int, w: int, y: int, x: int, elem_bytes: int = 4):
+    """VMEM footprint of one grid step (DESIGN.md §Perf, L1 profile):
+    input tile + weight tile + output tile, using the optimizer's spatial
+    tile for the shift-register level estimate."""
+    del x0, y0  # spatial tile informs the register level, not VMEM blocks
+    input_tile = c0 * h * w
+    weight_tile = k0 * c0 * fh * fw
+    output_tile = k0 * y * x
+    return (input_tile + weight_tile + output_tile) * elem_bytes

@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracle for the blocked convolution kernel.
+
+Implemented two independent ways — lax.conv_general_dilated and an
+explicit window sum — so a bug in either path cannot silently agree with
+the Pallas kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_ref(x, w):
+    """Valid convolution (cross-correlation, CNN convention) of a (C,H,W)
+    input with (K,C,Fh,Fw) weights -> (K,Y,X), via lax.conv."""
+    out = jax.lax.conv_general_dilated(
+        x[None, ...].astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0].astype(x.dtype)
+
+
+def conv_naive(x, w):
+    """Explicit shifted-window sum (slow; only for tiny shapes)."""
+    k, c, fh, fw = w.shape
+    _, h, wd = x.shape
+    y_out, x_out = h - fh + 1, wd - fw + 1
+    acc = jnp.zeros((k, y_out, x_out), dtype=jnp.float32)
+    for dy in range(fh):
+        for dx in range(fw):
+            window = x[:, dy : dy + y_out, dx : dx + x_out].astype(jnp.float32)
+            acc = acc + jnp.tensordot(
+                w[:, :, dy, dx].astype(jnp.float32), window, axes=((1,), (0,))
+            )
+    return acc.astype(x.dtype)
+
+
+def maxpool2_ref(x):
+    """2x2/stride-2 max pool over (K, Y, X); truncates odd remainders."""
+    k, y, xd = x.shape
+    y2, x2 = y - (y % 2), xd - (xd % 2)
+    x = x[:, :y2, :x2]
+    return jnp.max(x.reshape(k, y2 // 2, 2, x2 // 2, 2), axis=(2, 4))

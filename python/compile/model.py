@@ -1,0 +1,112 @@
+"""Layer 2: the JAX model — conv layers built on the L1 Pallas kernel.
+
+Everything here runs only at build time (``make artifacts``); the rust
+coordinator executes the AOT-lowered HLO through PJRT and python is never
+on the request path.
+
+The pipeline ("AlexNet-mini", DESIGN.md §6) chains three conv layers with
+ReLU and 2x2 max-pools; spatial dims chain exactly (36² -> 32² -pool->
+16² -> 14² -pool-> 7² -> 5²), so no padding is needed.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.blocked_conv import blocked_conv
+
+DEFAULT_SCHEDULES = os.path.join(os.path.dirname(__file__), "schedules.json")
+
+
+def load_schedules(path=DEFAULT_SCHEDULES):
+    """Read the rust optimizer's schedule export. Returns a list of layer
+    dicts with 'name', 'dims' {x,y,c,k,fw,fh} and 'tile' [x0,y0,c0,k0]."""
+    with open(path) as f:
+        data = json.load(f)
+    assert data.get("version") == 1, "unknown schedules.json version"
+    return data["layers"]
+
+
+def conv_layer(x, w, b, *, tile, fh, fw):
+    """One conv layer: blocked conv + bias + ReLU.
+
+    x: (C, H, W); w: (K, C, Fh, Fw); b: (K,). tile = (x0, y0, c0, k0)
+    from the optimizer — only (c0, k0) shape the Pallas grid (see
+    blocked_conv.py).
+    """
+    _, _, c0, k0 = tile
+    out = blocked_conv(x, w, c0=int(c0), k0=int(k0), fh=fh, fw=fw)
+    return jax.nn.relu(out + b[:, None, None])
+
+
+def maxpool2(x):
+    k, y, xd = x.shape
+    y2, x2 = y - (y % 2), xd - (xd % 2)
+    x = x[:, :y2, :x2]
+    return jnp.max(x.reshape(k, y2 // 2, 2, x2 // 2, 2), axis=(2, 4))
+
+
+def init_params(schedules, seed=0):
+    """Deterministic synthetic weights for the pipeline (the blocking
+    behaviour depends only on dims; numerics are verified against the
+    oracle and against the rust-native conv)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for layer in schedules:
+        d = layer["dims"]
+        key, kw, kb = jax.random.split(key, 3)
+        w = jax.random.normal(
+            kw, (d["k"], d["c"], d["fh"], d["fw"]), dtype=jnp.float32
+        ) * (2.0 / (d["c"] * d["fh"] * d["fw"])) ** 0.5
+        b = jax.random.normal(kb, (d["k"],), dtype=jnp.float32) * 0.01
+        params.append((w, b))
+    return params
+
+
+def pipeline(x, params, schedules):
+    """AlexNet-mini forward for one image: conv->relu->pool, x3 convs.
+
+    x: (C1, 36, 36) -> returns (K3, 5, 5).
+    """
+    assert len(params) == len(schedules) == 3
+    h = conv_layer(
+        x, *params[0], tile=schedules[0]["tile"],
+        fh=schedules[0]["dims"]["fh"], fw=schedules[0]["dims"]["fw"],
+    )
+    h = maxpool2(h)
+    h = conv_layer(
+        h, *params[1], tile=schedules[1]["tile"],
+        fh=schedules[1]["dims"]["fh"], fw=schedules[1]["dims"]["fw"],
+    )
+    h = maxpool2(h)
+    h = conv_layer(
+        h, *params[2], tile=schedules[2]["tile"],
+        fh=schedules[2]["dims"]["fh"], fw=schedules[2]["dims"]["fw"],
+    )
+    return h
+
+
+def batched_pipeline(params, schedules):
+    """vmap the pipeline over a leading batch dim: (B, C, H, W)."""
+    def fn(xb):
+        return jax.vmap(lambda x: pipeline(x, params, schedules))(xb)
+    return fn
+
+
+def single_layer_fn(layer, params):
+    """A single conv layer as a standalone jittable fn (per-layer
+    artifacts used by the runtime round-trip tests)."""
+    w, b = params
+    d = layer["dims"]
+
+    def fn(x):
+        return conv_layer(x, w, b, tile=layer["tile"], fh=d["fh"], fw=d["fw"])
+
+    return fn
+
+
+def input_shape(schedules):
+    d = schedules[0]["dims"]
+    return (d["c"], d["y"] + d["fh"] - 1, d["x"] + d["fw"] - 1)

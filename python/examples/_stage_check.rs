@@ -1,0 +1,22 @@
+// quick stage-by-stage check
+use cnn_blocking::runtime::{Engine, Manifest};
+use cnn_blocking::util::json::parse;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    let m = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    let text = std::fs::read_to_string(dir.join("golden.json"))?;
+    let j = parse(&text).unwrap();
+    let stages = j.get("stages").unwrap().as_arr().unwrap();
+    for st in stages {
+        let name = st.get("name").unwrap().as_str().unwrap();
+        let input: Vec<f32> = st.get("input").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        let want: Vec<f32> = st.get("output").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        let module = engine.load(&m.hlo_path(name), m.spec(name)?)?;
+        let got = module.run_f32(&[&input])?;
+        let err = got.iter().zip(&want).map(|(a,b)| (a-b).abs()).fold(0.0f32, f32::max);
+        println!("{}: max err {}", name, err);
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+"""L2 correctness: pipeline shapes, schedule loading, pooling, batching."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import conv_ref, maxpool2_ref
+from compile.model import (
+    batched_pipeline,
+    conv_layer,
+    init_params,
+    input_shape,
+    load_schedules,
+    maxpool2,
+    pipeline,
+)
+
+
+@pytest.fixture(scope="module")
+def schedules():
+    return load_schedules()
+
+
+@pytest.fixture(scope="module")
+def params(schedules):
+    return init_params(schedules)
+
+
+def test_schedules_well_formed(schedules):
+    assert len(schedules) == 3
+    for layer in schedules:
+        d = layer["dims"]
+        x0, y0, c0, k0 = layer["tile"]
+        assert d["x"] % x0 == 0 and d["y"] % y0 == 0
+        assert d["c"] % c0 == 0 and d["k"] % k0 == 0
+
+
+def test_layers_chain_spatially(schedules):
+    """mini1 out --pool--> mini2 in --pool--> mini3 in, exactly."""
+    d1, d2, d3 = (layer["dims"] for layer in schedules)
+    assert d1["x"] // 2 == d2["x"] + d2["fw"] - 1
+    assert d2["x"] // 2 == d3["x"] + d3["fw"] - 1
+    assert d1["k"] == d2["c"] and d2["k"] == d3["c"]
+
+
+def test_pipeline_shape(schedules, params):
+    x = jnp.ones(input_shape(schedules), dtype=jnp.float32)
+    out = pipeline(x, params, schedules)
+    d3 = schedules[-1]["dims"]
+    assert out.shape == (d3["k"], d3["y"], d3["x"])
+    assert bool(jnp.all(out >= 0))  # ReLU output
+
+
+def test_conv_layer_matches_oracle(schedules, params):
+    layer = schedules[0]
+    d = layer["dims"]
+    x = jax.random.normal(
+        jax.random.PRNGKey(9),
+        (d["c"], d["y"] + d["fh"] - 1, d["x"] + d["fw"] - 1),
+    )
+    w, b = params[0]
+    got = conv_layer(x, w, b, tile=layer["tile"], fh=d["fh"], fw=d["fw"])
+    want = jax.nn.relu(conv_ref(x, w) + b[:, None, None])
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_maxpool_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 9, 8))
+    np.testing.assert_allclose(maxpool2(x), maxpool2_ref(x))
+
+
+def test_batched_pipeline_equals_stacked_singles(schedules, params):
+    xb = jax.random.normal(jax.random.PRNGKey(4), (3,) + input_shape(schedules))
+    batched = batched_pipeline(params, schedules)(xb)
+    singles = jnp.stack([pipeline(xb[i], params, schedules) for i in range(3)])
+    np.testing.assert_allclose(batched, singles, rtol=1e-5, atol=1e-6)
+
+
+def test_params_deterministic(schedules):
+    a = init_params(schedules, seed=0)
+    b = init_params(schedules, seed=0)
+    for (wa, ba), (wb, bb) in zip(a, b):
+        np.testing.assert_array_equal(wa, wb)
+        np.testing.assert_array_equal(ba, bb)
+    c = init_params(schedules, seed=1)
+    assert not np.array_equal(np.asarray(a[0][0]), np.asarray(c[0][0]))

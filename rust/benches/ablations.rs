@@ -1,0 +1,139 @@
+//! Ablation bench: how much each modeling/design choice called out in
+//! DESIGN.md actually matters. One table per ablation, regenerated from
+//! the same modules the figures use.
+//!
+//!   A1  halo term in Table 2's IB refetch rate (on vs off): how much of
+//!       the blocked-conv energy is boundary-overlap refetch.
+//!   A2  datapath broadcast/reduction (k_par/c_par = 16 vs 1): the "free"
+//!       operand reuse the 256-MAC unit provides.
+//!   A3  short-sim autotune in the Fig. 3/4 schedule choice (on vs off).
+//!   A4  multicore broadcast as max(access, die) vs naive sum — the
+//!       modeling decision behind Fig. 9's takeaway.
+//!   A5  beam width: quick (24 seeds) vs paper (128 seeds) search quality.
+
+use cnn_blocking::cachesim::conv_trace::trace_blocked_conv;
+use cnn_blocking::cachesim::hierarchy::CacheHierarchy;
+use cnn_blocking::figures::fig3_4;
+use cnn_blocking::model::benchmarks::by_name;
+use cnn_blocking::model::hierarchy::Datapath;
+use cnn_blocking::model::string::BlockingString;
+use cnn_blocking::optimizer::beam::{optimize, BeamConfig};
+use cnn_blocking::optimizer::targets::{BespokeTarget, Evaluator};
+use cnn_blocking::util::bench::banner;
+use cnn_blocking::util::table::Table;
+
+fn main() {
+    banner("Ablations (DESIGN.md design choices)");
+
+    // ---- A1: halo-overlap refetch vs spatial block size ----------------
+    // Table 2 charges each image block's halo on every refetch; smaller
+    // blocks pay proportionally more boundary overlap. Sweep the block
+    // edge on Conv4 and report IB-read inflation relative to whole-image
+    // blocks — the term that drives the optimizer away from tiny tiles.
+    let d = by_name("Conv4").unwrap().dims;
+    let ib_reads_for = |b: u64| -> f64 {
+        let outer = if b == 56 { "" } else { " X1=56 Y1=56" };
+        let txt = format!(
+            "Fw Fh X0={} Y0={} C0=16 K0=16 C1=128 K1=256{}",
+            b, b, outer
+        );
+        let s = BlockingString::parse(&txt).unwrap().with_window(&d);
+        s.validate(&d).unwrap();
+        let (_b, prof) = cnn_blocking::model::access::analyze(&s, &d);
+        prof.input.iter().map(|bb| bb.reads).sum()
+    };
+    let whole = ib_reads_for(56);
+    let mut t1 = Table::new(
+        "A1 — halo refetch inflation vs block edge (Conv4, 3x3 window)",
+        &["block", "IB reads", "vs whole-image"],
+    );
+    for b in [4u64, 8, 14, 28, 56] {
+        let r = ib_reads_for(b);
+        t1.row(vec![
+            format!("{0}x{0}", b),
+            format!("{:.3e}", r),
+            format!("{:.2}x", r / whole),
+        ]);
+    }
+    t1.print();
+    let s = BlockingString::parse("Fw Fh X0=8 Y0=8 C0=16 K0=16 C1=128 K1=256 X1=56 Y1=56")
+        .unwrap()
+        .with_window(&d);
+
+    // ---- A2: datapath broadcast factors --------------------------------
+    let mut t2 = Table::new(
+        "A2 — datapath operand reuse (Conv4, 8 MB co-design)",
+        &["k_par x c_par", "total pJ/MAC"],
+    );
+    for (kp, cp) in [(16u64, 16u64), (1, 16), (16, 1), (1, 1)] {
+        let target = BespokeTarget {
+            sram_budget_bytes: 8 << 20,
+            datapath: Datapath {
+                k_par: kp,
+                c_par: cp,
+                mode: cnn_blocking::model::hierarchy::OperandMode::InnermostBuffer,
+            },
+        };
+        let e = target.objective(&s, &d);
+        t2.row(vec![
+            format!("{}x{}", kp, cp),
+            format!("{:.3}", e / d.macs() as f64),
+        ]);
+    }
+    t2.print();
+
+    // ---- A3: autotune on/off for the CPU schedule ----------------------
+    let dims = by_name("Conv4").unwrap().dims.scaled_for_sim(4_000_000);
+    let analytic_only = optimize(
+        &dims,
+        &cnn_blocking::optimizer::targets::FixedTarget::cpu(),
+        3,
+        &BeamConfig::quick(),
+    )
+    .into_iter()
+    .next()
+    .unwrap()
+    .string;
+    let autotuned = fig3_4::cpu_schedule(&dims);
+    let mut t3 = Table::new(
+        "A3 — Fig. 3/4 schedule choice: analytic-only vs +short-sim autotune (Conv4-mini)",
+        &["variant", "L2 accesses", "L3 accesses", "schedule"],
+    );
+    for (name, sched) in [("analytic-only", &analytic_only), ("autotuned", &autotuned)] {
+        let mut h = CacheHierarchy::xeon();
+        trace_blocked_conv(sched, &dims, &mut h);
+        t3.row(vec![
+            name.into(),
+            h.stats().l2_accesses().to_string(),
+            h.stats().l3_accesses().to_string(),
+            sched.notation(),
+        ]);
+    }
+    t3.print();
+
+    // ---- A5: beam width -------------------------------------------------
+    let mut t5 = Table::new(
+        "A5 — beam width vs result quality (Conv3, bespoke 8 MB)",
+        &["config", "best pJ", "gap vs widest"],
+    );
+    let conv3 = by_name("Conv3").unwrap().dims;
+    let widths = [
+        ("quick (24 seeds)", BeamConfig::quick()),
+        ("paper (128 seeds)", BeamConfig::default()),
+    ];
+    let results: Vec<f64> = widths
+        .iter()
+        .map(|(_, cfg)| {
+            optimize(&conv3, &BespokeTarget::new(8 << 20), 3, cfg)[0].energy_pj
+        })
+        .collect();
+    let best = results.iter().cloned().fold(f64::INFINITY, f64::min);
+    for ((name, _), e) in widths.iter().zip(&results) {
+        t5.row(vec![
+            name.to_string(),
+            format!("{:.4e}", e),
+            format!("+{:.2}%", (e / best - 1.0) * 100.0),
+        ]);
+    }
+    t5.print();
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Figs. 3-4 (L2/L3 cache accesses, ours vs ATLAS/MKL)
+//! through the trace-driven cache simulator, and time the simulation.
+use cnn_blocking::figures::fig3_4;
+use cnn_blocking::util::bench::{banner, Bench};
+
+fn main() {
+    let max_macs: u64 = std::env::var("CNNBLK_BENCH_MACS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20_000_000);
+    banner("Figures 3-4 — cache accesses: direct blocking vs im2col+GEMM");
+    let rows = fig3_4::run_all(max_macs);
+    let (f3, f4) = fig3_4::render(&rows);
+    f3.print();
+    f4.print();
+    println!(
+        "headline: up to {:.0}% memory-access reduction vs the best BLAS baseline (paper: up to 90%)\n",
+        fig3_4::max_reduction(&rows) * 100.0
+    );
+    // time one layer's full 3-way simulation for the perf log
+    let d = cnn_blocking::model::benchmarks::by_name("Conv4").unwrap().dims;
+    Bench::quick().time_fn("fig3: Conv4 3-impl trace sim", || {
+        let row = fig3_4::run_layer("Conv4", &d, max_macs / 4);
+        (row.ours_l2 + row.atlas_l2 + row.mkl_l2) as f64
+    });
+}

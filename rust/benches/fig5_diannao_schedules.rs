@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig. 5 (DianNao baseline vs optimal schedule).
+use cnn_blocking::figures::fig5_8;
+use cnn_blocking::model::benchmarks::all_benchmarks;
+use cnn_blocking::optimizer::beam::BeamConfig;
+use cnn_blocking::util::bench::{banner, Bench};
+
+fn main() {
+    banner("Figure 5 — DianNao: baseline vs optimal schedule energy");
+    let cfg = BeamConfig::quick();
+    let rows = fig5_8::fig5_rows(&all_benchmarks(), &cfg);
+    fig5_8::render_fig5(&rows).print();
+    let gains: Vec<String> = rows
+        .iter()
+        .map(|r| format!("{} {:.1}x", r.name, r.base_total / r.opt_total))
+        .collect();
+    println!("total-energy gains: {} (paper: KB energy 2x-15x)\n", gains.join(", "));
+    let d = cnn_blocking::model::benchmarks::by_name("Conv3").unwrap().dims;
+    Bench::quick().time_fn("fig5: Conv3 schedule search (DianNao target)", || {
+        let r = cnn_blocking::optimizer::codesign::diannao_reference(&d, &cfg);
+        r.optimized_pj
+    });
+}

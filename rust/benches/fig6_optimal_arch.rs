@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig. 6 (optimal co-designed architecture energy,
+//! normalized to DianNao + optimal schedule).
+use cnn_blocking::figures::fig5_8;
+use cnn_blocking::optimizer::beam::BeamConfig;
+use cnn_blocking::util::bench::banner;
+
+fn main() {
+    banner("Figure 6 — optimal architecture energy (8 MB budget)");
+    let cfg = BeamConfig::quick();
+    let rows = fig5_8::fig6_rows(&cfg, 8 << 20, 3);
+    fig5_8::render_fig6(&rows).print();
+    let min_gain = rows
+        .iter()
+        .map(|r| 1.0 / r.normalized())
+        .fold(f64::INFINITY, f64::min);
+    println!("minimum improvement across Conv1-5: {:.1}x (paper: >= 13x at 8 MB)\n", min_gain);
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig. 7 (energy & area vs SRAM budget).
+use cnn_blocking::figures::fig5_8;
+use cnn_blocking::optimizer::beam::BeamConfig;
+use cnn_blocking::util::bench::banner;
+
+fn main() {
+    banner("Figure 7 — energy/area vs SRAM budget (normalized to DianNao)");
+    let cfg = BeamConfig::quick();
+    let rows = fig5_8::fig7_rows(&cfg, 3);
+    fig5_8::render_fig7(&rows).print();
+    if let Some(mb1) = rows.iter().find(|r| r.budget_bytes == 1 << 20) {
+        println!(
+            "1 MB point: {:.1}x energy improvement at {:.1}x area (paper: ~10x at ~6x)\n",
+            1.0 / mb1.energy_norm,
+            mb1.area_norm
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate Fig. 8 (memory vs MAC energy on the optimal system).
+use cnn_blocking::figures::fig5_8;
+use cnn_blocking::model::benchmarks::by_name;
+use cnn_blocking::optimizer::beam::BeamConfig;
+use cnn_blocking::util::bench::banner;
+
+fn main() {
+    banner("Figure 8 — memory vs compute energy (optimal 8 MB system)");
+    let cfg = BeamConfig::quick();
+    let rows = fig5_8::fig8_rows(&cfg, 3);
+    fig5_8::render_fig8(&rows).print();
+    let worst_conv = rows
+        .iter()
+        .filter(|r| r.name.starts_with("Conv"))
+        .map(|r| r.ratio)
+        .fold(f64::MIN, f64::max);
+    let conv1 = by_name("Conv1").unwrap().dims;
+    let reference = cnn_blocking::optimizer::codesign::diannao_reference(&conv1, &cfg);
+    println!(
+        "worst conv mem:MAC ratio on the optimal system: {:.2}x (paper: < 1x)\n\
+         DianNao + optimal-schedule ratio on Conv1: {:.1}x\n\
+         DianNao pseudo-code-baseline ratio on Conv1: {:.1}x (paper: ~20x; ours is\n\
+         halo-degenerate for 11x11 windows - see EXPERIMENTS.md)\n",
+        worst_conv,
+        reference.optimized_breakdown.mem_to_mac_ratio(),
+        fig5_8::diannao_mem_ratio(&conv1, &cfg)
+    );
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate Fig. 9 (multicore scaling, shared-KB vs shared-IB).
+use cnn_blocking::figures::fig9;
+use cnn_blocking::optimizer::beam::BeamConfig;
+use cnn_blocking::util::bench::banner;
+
+fn main() {
+    banner("Figure 9 — multicore scaling of Conv1 (sched1-4, 1/2/4/8 cores)");
+    let cfg = BeamConfig::quick();
+    let dims = fig9::conv1_dims();
+    let scheds = fig9::top_schedules(&dims, 4, 8 << 20, &cfg);
+    for (i, s) in scheds.iter().enumerate() {
+        println!("sched{}: {}", i + 1, s.notation());
+    }
+    let cells = fig9::fig9_grid(&dims, &scheds, 8 << 20);
+    fig9::render_fig9(&dims, &cells).print();
+    println!(
+        "takeaway (share the large buffer -> broadcast free) holds: {}\n",
+        fig9::takeaway_holds(&dims, &cells)
+    );
+}

@@ -1,0 +1,104 @@
+//! Perf bench: the three L3 hot paths (DESIGN.md §8) measured in
+//! isolation — cache-simulator access rate, optimizer candidate
+//! evaluation rate, and end-to-end PJRT serving throughput (when
+//! artifacts are present). Results feed EXPERIMENTS.md §Perf.
+
+use cnn_blocking::cachesim::conv_trace::trace_blocked_conv;
+use cnn_blocking::cachesim::hierarchy::{CacheHierarchy, CountingSink};
+use cnn_blocking::coordinator::{InferenceServer, ServerConfig};
+use cnn_blocking::model::dims::LayerDims;
+use cnn_blocking::model::string::BlockingString;
+use cnn_blocking::optimizer::targets::{BespokeTarget, Evaluator};
+use cnn_blocking::util::bench::{banner, Bench};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() {
+    banner("Perf hot paths (EXPERIMENTS.md §Perf)");
+    let bench = Bench::default();
+
+    // --- 1. cache simulator throughput -----------------------------
+    let d = LayerDims::conv(64, 64, 32, 32, 3, 3);
+    let s = BlockingString::parse("Fw Fh X0=16 Y0=16 C0=16 K0=8 C1=32 K1=32 X1=64 Y1=64")
+        .unwrap()
+        .with_window(&d);
+    s.validate(&d).unwrap();
+    // trace length (references after register filtering)
+    let mut count = CountingSink::default();
+    trace_blocked_conv(&s, &d, &mut count);
+    let refs = (count.reads + count.writes) as f64;
+    bench.time_fn("cachesim: trace gen only (refs/s)", || {
+        let mut c = CountingSink::default();
+        trace_blocked_conv(&s, &d, &mut c);
+        refs
+    });
+    bench.time_fn("cachesim: full 3-level hierarchy (refs/s)", || {
+        let mut h = CacheHierarchy::xeon();
+        trace_blocked_conv(&s, &d, &mut h);
+        refs
+    });
+
+    // --- 2. optimizer candidate evaluation rate --------------------
+    let target = BespokeTarget::new(8 << 20);
+    let dims = LayerDims::conv(56, 56, 128, 256, 3, 3);
+    let eval_str = BlockingString::parse(
+        "Fw Fh X0=8 Y0=8 C0=16 K0=16 C1=128 K1=256 X1=56 Y1=56",
+    )
+    .unwrap()
+    .with_window(&dims);
+    eval_str.validate(&dims).unwrap();
+    bench.time_fn("optimizer: candidate evaluations/s", || {
+        let n = 2000;
+        for _ in 0..n {
+            std::hint::black_box(target.objective(&eval_str, &dims));
+        }
+        n as f64
+    });
+
+    // --- 3. serving throughput (needs artifacts) -------------------
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        let server = InferenceServer::start(ServerConfig {
+            artifacts_dir: dir,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(2),
+            queue_depth: 64,
+        })
+        .expect("server start");
+        let input_len = server.input_len;
+        let mut rng = cnn_blocking::util::rng::Rng::new(5);
+        let input: Vec<f32> = (0..input_len).map(|_| rng.f64() as f32 - 0.5).collect();
+        bench.time_fn("coordinator: e2e requests/s (batch 8)", || {
+            let n = 32;
+            let rxs: Vec<_> = (0..n)
+                .map(|_| server.submit(input.clone()).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+            n as f64
+        });
+        // batching-off comparison: timeout 0, batch 1
+        server.shutdown();
+        let server1 = InferenceServer::start(ServerConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            max_batch: 1,
+            batch_timeout: Duration::ZERO,
+            queue_depth: 64,
+        })
+        .expect("server start");
+        bench.time_fn("coordinator: e2e requests/s (batch 1)", || {
+            let n = 32;
+            let rxs: Vec<_> = (0..n)
+                .map(|_| server1.submit(input.clone()).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+            n as f64
+        });
+        server1.shutdown();
+    } else {
+        println!("(artifacts not built; skipping serving throughput — run `make artifacts`)");
+    }
+}

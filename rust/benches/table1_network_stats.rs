@@ -1,0 +1,13 @@
+//! Bench: regenerate Table 1 (network MACs/memory) and time it.
+use cnn_blocking::figures::tables;
+use cnn_blocking::util::bench::{banner, Bench};
+
+fn main() {
+    banner("Table 1 — computation and memory of AlexNet / VGG-B / VGG-D");
+    tables::table1().print();
+    tables::table4().print();
+    Bench::default().time_fn("table1_regeneration", || {
+        let t = tables::table1();
+        t.rows.len() as f64
+    });
+}

@@ -1,0 +1,131 @@
+//! im2col lowering: the remapping traditional BLAS-based CNN frameworks
+//! (Caffe with MKL/ATLAS, Sec. 2.2) perform before calling GEMM.
+//!
+//! A `C x X x Y` input with a `Fw x Fh` window is materialized as a
+//! `(X*Y) x (C*Fh*Fw)` matrix — duplicating each input element up to
+//! `Fw*Fh` times — after which the convolution is a GEMM against the
+//! `(C*Fh*Fw) x K` weight matrix. The duplication and the extra pass over
+//! memory are exactly the locality loss the paper measures in Figs. 3-4.
+
+use crate::cachesim::conv_trace::Layout;
+use crate::cachesim::hierarchy::Sink;
+use crate::model::dims::LayerDims;
+
+/// Geometry of the lowered problem.
+#[derive(Debug, Clone, Copy)]
+pub struct LoweredGemm {
+    /// Rows of A = output pixels (X*Y*B).
+    pub m: u64,
+    /// Inner dimension = C*Fh*Fw.
+    pub kd: u64,
+    /// Columns of B = output channels K.
+    pub n: u64,
+    /// Base byte address of the lowered matrix A (after the conv tensors).
+    pub a_base: u64,
+    /// Base of the weight matrix B (reuses the kernel tensor storage).
+    pub b_base: u64,
+    /// Base of the output matrix C (reuses the output tensor storage).
+    pub c_base: u64,
+    pub elem_bytes: u64,
+}
+
+impl LoweredGemm {
+    pub fn new(dims: &LayerDims, layout: &Layout) -> LoweredGemm {
+        LoweredGemm {
+            m: dims.x * dims.y * dims.b,
+            kd: dims.c * dims.fh * dims.fw,
+            n: dims.k,
+            a_base: layout.end(dims),
+            b_base: layout.kernel_base,
+            c_base: layout.output_base,
+            elem_bytes: 2,
+        }
+    }
+
+    /// A[row, col] address (row-major).
+    #[inline]
+    pub fn a(&self, row: u64, col: u64) -> u64 {
+        self.a_base + (row * self.kd + col) * self.elem_bytes
+    }
+
+    /// B[row, col] address (row-major: kd x n).
+    #[inline]
+    pub fn b(&self, row: u64, col: u64) -> u64 {
+        self.b_base + (row * self.n + col) * self.elem_bytes
+    }
+
+    /// C[row, col] address (row-major: m x n).
+    #[inline]
+    pub fn c(&self, row: u64, col: u64) -> u64 {
+        self.c_base + (row * self.n + col) * self.elem_bytes
+    }
+
+    /// One past the highest address used by the lowered matrix.
+    pub fn end(&self) -> u64 {
+        self.a(self.m - 1, self.kd - 1) + self.elem_bytes
+    }
+}
+
+/// Emit the lowering pass: read every (input pixel, window offset) pair,
+/// write the lowered matrix.
+pub fn trace_im2col<S: Sink>(dims: &LayerDims, sink: &mut S) -> LoweredGemm {
+    let layout = Layout::new(dims);
+    let g = LoweredGemm::new(dims, &layout);
+    for b in 0..dims.b {
+        for y in 0..dims.y {
+            for x in 0..dims.x {
+                let row = (b * dims.y + y) * dims.x + x;
+                for c in 0..dims.c {
+                    for fh in 0..dims.fh {
+                        for fw in 0..dims.fw {
+                            sink.access(layout.input(x + fw, y + fh, c, b), false);
+                            let col = (c * dims.fh + fh) * dims.fw + fw;
+                            sink.access(g.a(row, col), true);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::hierarchy::CountingSink;
+
+    #[test]
+    fn lowering_duplicates_by_window_size() {
+        let d = LayerDims::conv(8, 8, 4, 4, 3, 3);
+        let mut c = CountingSink::default();
+        let g = trace_im2col(&d, &mut c);
+        // one read + one write per lowered element
+        assert_eq!(c.reads, d.x * d.y * d.c * d.fh * d.fw);
+        assert_eq!(c.writes, c.reads);
+        assert_eq!(g.m * g.kd, c.writes);
+        // duplication factor vs the raw input
+        let dup = c.writes as f64 / d.input_elems() as f64;
+        assert!(dup > 5.0, "3x3 window should duplicate ~9x, got {}", dup);
+    }
+
+    #[test]
+    fn lowered_matrix_is_disjoint_from_tensors() {
+        let d = LayerDims::conv(8, 8, 4, 4, 3, 3);
+        let layout = Layout::new(&d);
+        let g = LoweredGemm::new(&d, &layout);
+        assert!(g.a_base >= layout.end(&d));
+        assert!(g.end() > g.a_base);
+    }
+
+    #[test]
+    fn fc_lowering_degenerates() {
+        let d = LayerDims::fc(64, 32, 1);
+        let mut c = CountingSink::default();
+        let g = trace_im2col(&d, &mut c);
+        assert_eq!(g.m, 1);
+        assert_eq!(g.kd, 64);
+        assert_eq!(g.n, 32);
+        assert_eq!(c.reads, 64);
+    }
+}

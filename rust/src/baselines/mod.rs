@@ -1,0 +1,7 @@
+//! Baseline implementations the paper compares against: the DianNao
+//! accelerator schedule (Fig. 5) and convolution-as-GEMM via im2col
+//! lowering with MKL/ATLAS-like blocked GEMM schedules (Figs. 3-4).
+
+pub mod diannao;
+pub mod gemm;
+pub mod im2col;

@@ -1,0 +1,12 @@
+//! Cache-hierarchy simulator (replaces the paper's PAPI measurements,
+//! Sec. 4.1): set-associative LRU caches, a Xeon E5645-like L1/L2/L3
+//! stack, and the blocked-convolution address-trace generator. The GEMM
+//! baselines' traces live in `baselines::{im2col, gemm}`.
+
+pub mod cache;
+pub mod conv_trace;
+pub mod hierarchy;
+
+pub use cache::{Cache, CacheStats};
+pub use conv_trace::{trace_blocked_conv, Layout};
+pub use hierarchy::{CacheHierarchy, CountingSink, HierarchyStats, Sink};

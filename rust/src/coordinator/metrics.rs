@@ -1,0 +1,102 @@
+//! Serving metrics: request counters, batch-size histogram, and latency
+//! percentiles (exact, from a sorted sample buffer — request counts here
+//! are small enough that reservoir tricks are unnecessary).
+
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    latencies_us: Vec<u64>,
+    batch_sizes: Vec<usize>,
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub errors: u64,
+}
+
+impl Metrics {
+    pub fn record_request(&mut self, latency: Duration) {
+        self.requests += 1;
+        self.latencies_us.push(latency.as_micros() as u64);
+    }
+
+    pub fn record_batch(&mut self, formed: usize, executed: usize) {
+        self.batches += 1;
+        self.batch_sizes.push(formed);
+        self.padded_slots += (executed - formed) as u64;
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    pub fn latency_percentile(&self, q: f64) -> Duration {
+        if self.latencies_us.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((v.len() - 1) as f64 * q).round() as usize;
+        Duration::from_micros(v[idx])
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    pub fn report(&self, wall: Duration) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.2} padded={} errors={} \
+             p50={:?} p90={:?} p99={:?} throughput={:.1} req/s",
+            self.requests,
+            self.batches,
+            self.mean_batch_size(),
+            self.padded_slots,
+            self.errors,
+            self.latency_percentile(0.50),
+            self.latency_percentile(0.90),
+            self.latency_percentile(0.99),
+            self.requests as f64 / wall.as_secs_f64().max(1e-9),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record_request(Duration::from_micros(i * 10));
+        }
+        let p50 = m.latency_percentile(0.5);
+        let p90 = m.latency_percentile(0.9);
+        let p99 = m.latency_percentile(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        assert_eq!(m.requests, 100);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::default();
+        m.record_batch(3, 4);
+        m.record_batch(4, 4);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.padded_slots, 1);
+        assert!((m.mean_batch_size() - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.latency_percentile(0.9), Duration::ZERO);
+        assert_eq!(m.mean_batch_size(), 0.0);
+        let r = m.report(Duration::from_secs(1));
+        assert!(r.contains("requests=0"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Layer-3 coordinator: the threaded batching inference server that runs
+//! the AOT-compiled pipeline through PJRT, plus the rust-native numeric
+//! oracle and serving metrics.
+
+pub mod metrics;
+pub mod naive_conv;
+pub mod server;
+
+pub use metrics::Metrics;
+pub use server::{InferenceServer, ServerConfig};

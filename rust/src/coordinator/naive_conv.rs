@@ -1,0 +1,125 @@
+//! Rust-native reference convolution: an independent numeric oracle for
+//! the PJRT path (no JAX anywhere in the loop). Layouts match model.py:
+//! input (C, H, W), weights (K, C, Fh, Fw), output (K, Y, X).
+
+/// Valid cross-correlation, f32. `x_shape` = (C, H, W), `w_shape` =
+/// (K, C, Fh, Fw); returns (K, H-Fh+1, W-Fw+1) flattened row-major.
+pub fn conv_valid(
+    x: &[f32],
+    x_shape: (usize, usize, usize),
+    w: &[f32],
+    w_shape: (usize, usize, usize, usize),
+) -> Vec<f32> {
+    let (c, h, wd) = x_shape;
+    let (k, wc, fh, fw) = w_shape;
+    assert_eq!(c, wc, "channel mismatch");
+    assert_eq!(x.len(), c * h * wd);
+    assert_eq!(w.len(), k * c * fh * fw);
+    let (yo, xo) = (h - fh + 1, wd - fw + 1);
+    let mut out = vec![0f32; k * yo * xo];
+    for kk in 0..k {
+        for yy in 0..yo {
+            for xx in 0..xo {
+                let mut acc = 0f32;
+                for cc in 0..c {
+                    for dy in 0..fh {
+                        let xrow = (cc * h + yy + dy) * wd + xx;
+                        let wrow = ((kk * c + cc) * fh + dy) * fw;
+                        for dx in 0..fw {
+                            acc += x[xrow + dx] * w[wrow + dx];
+                        }
+                    }
+                }
+                out[(kk * yo + yy) * xo + xx] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// ReLU in place.
+pub fn relu(v: &mut [f32]) {
+    for x in v {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
+/// 2x2/stride-2 max pool over (K, Y, X), truncating odd remainders.
+pub fn maxpool2(x: &[f32], shape: (usize, usize, usize)) -> (Vec<f32>, (usize, usize, usize)) {
+    let (k, y, xd) = shape;
+    let (y2, x2) = (y / 2, xd / 2);
+    let mut out = vec![f32::MIN; k * y2 * x2];
+    for kk in 0..k {
+        for yy in 0..y2 {
+            for xx in 0..x2 {
+                let mut m = f32::MIN;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        m = m.max(x[(kk * y + 2 * yy + dy) * xd + 2 * xx + dx]);
+                    }
+                }
+                out[(kk * y2 + yy) * x2 + xx] = m;
+            }
+        }
+    }
+    (out, (k, y2, x2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_passes_through() {
+        // 1x1 kernel of 1.0 on a single channel = identity.
+        let x: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let out = conv_valid(&x, (1, 3, 3), &[1.0], (1, 1, 1, 1));
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn box_filter_sums_window() {
+        let x = vec![1f32; 1 * 4 * 4];
+        let w = vec![1f32; 1 * 1 * 2 * 2];
+        let out = conv_valid(&x, (1, 4, 4), &w, (1, 1, 2, 2));
+        assert_eq!(out.len(), 9);
+        assert!(out.iter().all(|&v| (v - 4.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn channels_accumulate() {
+        let x = vec![2f32; 3 * 2 * 2]; // 3 channels of 2s
+        let w = vec![1f32; 1 * 3 * 1 * 1];
+        let out = conv_valid(&x, (3, 2, 2), &w, (1, 3, 1, 1));
+        assert!(out.iter().all(|&v| (v - 6.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut v = vec![-1.0, 0.5, -0.2, 2.0];
+        relu(&mut v);
+        assert_eq!(v, vec![0.0, 0.5, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let x = vec![
+            1.0, 2.0, 3.0, 4.0, //
+            5.0, 6.0, 7.0, 8.0, //
+            9.0, 1.0, 2.0, 3.0, //
+            4.0, 5.0, 6.0, 7.0,
+        ];
+        let (out, shape) = maxpool2(&x, (1, 4, 4));
+        assert_eq!(shape, (1, 2, 2));
+        assert_eq!(out, vec![6.0, 8.0, 9.0, 7.0]);
+    }
+
+    #[test]
+    fn maxpool_truncates_odd() {
+        let x = vec![0f32; 1 * 5 * 5];
+        let (_out, shape) = maxpool2(&x, (1, 5, 5));
+        assert_eq!(shape, (1, 2, 2));
+    }
+}

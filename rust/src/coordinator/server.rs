@@ -1,0 +1,349 @@
+//! The L3 inference coordinator: a threaded request loop with dynamic
+//! batching over the AOT-compiled pipeline executables.
+//!
+//! Architecture (vLLM-router-like, shrunk to one node):
+//!  * clients submit single-image requests through a bounded channel;
+//!  * the batcher collects up to `max_batch` requests or until
+//!    `batch_timeout` expires from the first queued request;
+//!  * the executor owns the PJRT engine (created on its own thread — the
+//!    client is not Send) and a ladder of compiled executables, one per
+//!    batch size {1,2,4,8}; a formed batch runs on the smallest ladder
+//!    entry that fits, padding with zeros;
+//!  * responses flow back through per-request channels; metrics capture
+//!    latency percentiles, batch occupancy and padding waste.
+
+use super::metrics::Metrics;
+use crate::runtime::{Engine, Manifest, Module};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: PathBuf,
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+    /// Request queue depth before submitters block (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(2),
+            queue_depth: 64,
+        }
+    }
+}
+
+struct Request {
+    input: Vec<f32>,
+    submitted: Instant,
+    resp: Sender<Result<Vec<f32>, String>>,
+}
+
+/// Handle to a running server.
+pub struct InferenceServer {
+    tx: Option<SyncSender<Request>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Mutex<Metrics>>,
+    pub input_len: usize,
+    pub output_len: usize,
+    pub layer_strings: Vec<String>,
+}
+
+impl InferenceServer {
+    /// Start the server: loads the manifest, spins the executor thread,
+    /// compiles the batch ladder, and blocks until ready.
+    pub fn start(cfg: ServerConfig) -> Result<InferenceServer> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let ladder = manifest.batch_ladder();
+        if ladder.is_empty() {
+            return Err(anyhow!("no alexnet_mini_b* artifacts in manifest"));
+        }
+        let spec1 = manifest.spec(&format!("alexnet_mini_b{}", ladder[0]))?;
+        let input_len: usize = spec1.inputs[0][1..].iter().product();
+        let output_len: usize = spec1.output[1..].iter().product();
+        let layer_strings = manifest.layer_strings.clone();
+
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics2 = metrics.clone();
+        let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(1);
+
+        let handle = std::thread::Builder::new()
+            .name("cnnblk-executor".into())
+            .spawn(move || {
+                executor_loop(cfg, manifest, rx, metrics2, ready_tx, input_len, output_len)
+            })
+            .context("spawning executor")?;
+
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(anyhow!("executor failed to start: {}", e)),
+            Err(_) => return Err(anyhow!("executor died during startup")),
+        }
+
+        Ok(InferenceServer {
+            tx: Some(tx),
+            handle: Some(handle),
+            metrics,
+            input_len,
+            output_len,
+            layer_strings,
+        })
+    }
+
+    /// Submit one image; blocks until the result arrives.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(input)?
+            .recv()
+            .map_err(|_| anyhow!("server dropped the response channel"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Submit without waiting: returns the response channel.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Result<Vec<f32>, String>>> {
+        if input.len() != self.input_len {
+            return Err(anyhow!(
+                "input has {} elements, expected {}",
+                input.len(),
+                self.input_len
+            ));
+        }
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send(Request {
+                input,
+                submitted: Instant::now(),
+                resp: resp_tx,
+            })
+            .map_err(|_| anyhow!("server stopped"))?;
+        Ok(resp_rx)
+    }
+
+    /// Graceful shutdown: drain the queue, join the executor.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_loop(
+    cfg: ServerConfig,
+    manifest: Manifest,
+    rx: Receiver<Request>,
+    metrics: Arc<Mutex<Metrics>>,
+    ready_tx: SyncSender<Result<(), String>>,
+    input_len: usize,
+    output_len: usize,
+) {
+    // The PJRT client must live on this thread.
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready_tx.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let mut modules: BTreeMap<usize, Module> = BTreeMap::new();
+    for b in manifest.batch_ladder() {
+        let name = format!("alexnet_mini_b{}", b);
+        match manifest
+            .spec(&name)
+            .and_then(|spec| engine.load(&manifest.hlo_path(&name), spec))
+        {
+            Ok(m) => {
+                modules.insert(b, m);
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(format!("loading {}: {:#}", name, e)));
+                return;
+            }
+        }
+    }
+    let max_ladder = *modules.keys().last().unwrap();
+    let _ = ready_tx.send(Ok(()));
+
+    loop {
+        // block for the first request of the batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders dropped: shutdown
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.batch_timeout;
+        while batch.len() < cfg.max_batch.min(max_ladder) {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // route to the smallest ladder executable that fits
+        let formed = batch.len();
+        let exec_size = *modules
+            .keys()
+            .find(|&&b| b >= formed)
+            .unwrap_or(&max_ladder);
+        let module = &modules[&exec_size];
+
+        let mut flat = Vec::with_capacity(exec_size * input_len);
+        for r in &batch {
+            flat.extend_from_slice(&r.input);
+        }
+        flat.resize(exec_size * input_len, 0.0); // zero-pad
+
+        let result = module.run_f32(&[&flat]);
+        {
+            let mut m = metrics.lock().unwrap();
+            m.record_batch(formed, exec_size);
+        }
+        match result {
+            Ok(out) => {
+                for (i, r) in batch.into_iter().enumerate() {
+                    let slice = out[i * output_len..(i + 1) * output_len].to_vec();
+                    let latency = r.submitted.elapsed();
+                    metrics.lock().unwrap().record_request(latency);
+                    let _ = r.resp.send(Ok(slice));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in batch {
+                    metrics.lock().unwrap().record_error();
+                    let _ = r.resp.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Golden;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn ready() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    fn config() -> ServerConfig {
+        ServerConfig {
+            artifacts_dir: artifacts_dir(),
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(5),
+            queue_depth: 64,
+        }
+    }
+
+    #[test]
+    fn serves_golden_input_correctly() {
+        if !ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let server = InferenceServer::start(config()).unwrap();
+        let g = Golden::load(&artifacts_dir()).unwrap();
+        let out = server.infer(g.input.clone()).unwrap();
+        let max_err = out
+            .iter()
+            .zip(&g.output)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "golden mismatch through server: {}", max_err);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        if !ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let server = InferenceServer::start(config()).unwrap();
+        let g = Golden::load(&artifacts_dir()).unwrap();
+        // submit 16 requests without waiting, then collect
+        let rxs: Vec<_> = (0..16)
+            .map(|_| server.submit(g.input.clone()).unwrap())
+            .collect();
+        for rx in rxs {
+            let out = rx.recv().unwrap().unwrap();
+            let err = out
+                .iter()
+                .zip(&g.output)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 1e-3);
+        }
+        let m = server.metrics.lock().unwrap();
+        assert_eq!(m.requests, 16);
+        assert!(m.batches <= 16);
+        drop(m);
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_input_size() {
+        if !ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let server = InferenceServer::start(config()).unwrap();
+        assert!(server.infer(vec![0.0; 3]).is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn zero_padding_does_not_corrupt_results() {
+        if !ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // 3 requests pad to the b4 executable; all three results must
+        // still match the single-request result.
+        let server = InferenceServer::start(config()).unwrap();
+        let g = Golden::load(&artifacts_dir()).unwrap();
+        let solo = server.infer(g.input.clone()).unwrap();
+        let rxs: Vec<_> = (0..3)
+            .map(|_| server.submit(g.input.clone()).unwrap())
+            .collect();
+        for rx in rxs {
+            let out = rx.recv().unwrap().unwrap();
+            let err = out
+                .iter()
+                .zip(&solo)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 1e-5, "padded batch diverged: {}", err);
+        }
+        server.shutdown();
+    }
+}

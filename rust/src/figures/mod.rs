@@ -1,0 +1,8 @@
+//! Regeneration harness for every table and figure in the paper's
+//! evaluation (DESIGN.md §5 maps each to its module). The `cargo bench`
+//! targets and the `cnnblk figures` CLI subcommand both call in here.
+
+pub mod fig3_4;
+pub mod fig5_8;
+pub mod fig9;
+pub mod tables;

@@ -1,0 +1,116 @@
+//! Table 1 / Table 3 / Table 4 regeneration.
+
+use crate::model::benchmarks::{all_benchmarks, aux_benchmarks, conv_benchmarks};
+use crate::model::energy::{SIZES_KB, TABLE, WIDTHS};
+use crate::model::networks::{all_networks, network_stats, LayerKind};
+use crate::util::table::{eng, Table};
+
+/// Table 1: computation and memory breakdown of AlexNet / VGG-B / VGG-D.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1 — computation (MACs) and memory of state-of-the-art networks",
+        &["network", "MACs x 1e9", "Mem (MB)", "paper MACs", "paper Mem"],
+    );
+    let paper: &[(&str, LayerKind, &str, &str)] = &[
+        ("AlexNet Convs", LayerKind::Conv, "1.9", "2"),
+        ("VGGNet-B Convs", LayerKind::Conv, "11.2", "19"),
+        ("VGGNet-D Convs", LayerKind::Conv, "15.3", "29"),
+        ("AlexNet FCs", LayerKind::Fc, "0.065", "130"),
+        ("VGGNet-B FCs", LayerKind::Fc, "0.124", "247"),
+        ("VGGNet-D FCs", LayerKind::Fc, "0.124", "247"),
+    ];
+    let nets = all_networks();
+    for (row, (label, kind, pm, pmem)) in paper.iter().enumerate() {
+        let net = &nets[row % 3];
+        let s = network_stats(net, *kind);
+        t.row(vec![
+            label.to_string(),
+            format!("{:.3}", s.macs as f64 / 1e9),
+            format!("{:.0}", s.mem_bytes as f64 / 1e6),
+            pm.to_string(),
+            pmem.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table 3: the memory energy model itself.
+pub fn table3() -> Table {
+    let mut t = Table::new(
+        "Table 3 — memory access energy (pJ/16b)",
+        &["size", "64b", "128b", "256b", "512b"],
+    );
+    for (i, kb) in SIZES_KB.iter().enumerate() {
+        t.row(
+            std::iter::once(format!("{}KB", kb))
+                .chain((0..WIDTHS.len()).map(|w| format!("{:.2}", TABLE[i][w])))
+                .collect(),
+        );
+    }
+    t.row(vec![
+        ">16MB".into(),
+        "320".into(),
+        "320".into(),
+        "320".into(),
+        "320".into(),
+    ]);
+    t
+}
+
+/// Table 4: the benchmark layer dimensions.
+pub fn table4() -> Table {
+    let mut t = Table::new(
+        "Table 4 — benchmark network layers",
+        &["layer", "X", "Y", "C", "K", "Fw", "Fh", "MACs", "source"],
+    );
+    for b in all_benchmarks().into_iter().chain(aux_benchmarks()) {
+        let d = b.dims;
+        t.row(vec![
+            b.name.to_string(),
+            d.x.to_string(),
+            d.y.to_string(),
+            d.c.to_string(),
+            d.k.to_string(),
+            d.fw.to_string(),
+            d.fh.to_string(),
+            eng(d.macs() as f64),
+            b.source.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Sanity summary used by the bench harness.
+pub fn conv_benchmark_names() -> Vec<&'static str> {
+    conv_benchmarks().iter().map(|b| b.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_six_rows() {
+        let t = table1();
+        assert_eq!(t.rows.len(), 6);
+        // FC memory column dominates conv memory
+        let conv_mem: f64 = t.rows[0][2].parse().unwrap();
+        let fc_mem: f64 = t.rows[3][2].parse().unwrap();
+        assert!(fc_mem > conv_mem);
+    }
+
+    #[test]
+    fn table3_matches_model() {
+        let t = table3();
+        assert_eq!(t.rows.len(), 12);
+        assert_eq!(t.rows[0][1], "1.20");
+        assert_eq!(t.rows[10][4], "25.22");
+    }
+
+    #[test]
+    fn table4_lists_benchmarks() {
+        let t = table4();
+        assert!(t.rows.iter().any(|r| r[0] == "Conv1"));
+        assert!(t.rows.iter().any(|r| r[0] == "FC2"));
+    }
+}

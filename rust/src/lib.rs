@@ -1,0 +1,33 @@
+//! # cnn-blocking
+//!
+//! Production-quality reproduction of *"A Systematic Approach to Blocking
+//! Convolutional Neural Networks"* (Yang et al., 2016): an analytical
+//! model and optimizer for blocking CNN loop nests onto multi-level memory
+//! hierarchies, the cache/accelerator simulators needed to regenerate
+//! every figure and table in the paper's evaluation, and a three-layer
+//! rust + JAX + Pallas execution stack in which the optimizer's chosen
+//! blocking parameterizes a real convolution kernel executed through PJRT.
+//!
+//! Layout:
+//! * [`model`] — blocking strings, Table 2 buffers, Eq. 1 accesses,
+//!   Table 3 energy, Table 1/4 networks and benchmarks.
+//! * [`optimizer`] — exhaustive + seeded-beam schedule search, hierarchy
+//!   packing, memory co-design, multi-layer flexible-memory optimization.
+//! * [`cachesim`] — set-associative cache hierarchy + address traces
+//!   (replaces the paper's PAPI measurements).
+//! * [`baselines`] — im2col+GEMM (MKL/ATLAS-like) and DianNao models.
+//! * [`parallel`] — multicore partitioning (Sec. 3.3 / Fig. 9).
+//! * [`runtime`] — PJRT client wrapper (load + run AOT HLO artifacts).
+//! * [`coordinator`] — threaded batching inference driver (L3).
+//! * [`figures`] — harness that regenerates each paper table/figure.
+//! * [`util`] — offline substrates (JSON, CLI, RNG, bench, threads).
+
+pub mod baselines;
+pub mod cachesim;
+pub mod coordinator;
+pub mod figures;
+pub mod parallel;
+pub mod model;
+pub mod optimizer;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,247 @@
+//! `cnnblk` — CLI for the CNN-blocking framework.
+//!
+//! Subcommands:
+//!   optimize   search blocking schedules for a benchmark layer
+//!   schedules  optimize the e2e pipeline layers and emit schedules.json
+//!   figures    regenerate the paper's tables/figures (see --help text)
+//!   cachesim   run the Fig. 3/4 cache-trace comparison
+//!   serve      run the batching inference server on synthetic requests
+//!   validate   PJRT round-trip checks against goldens and the native conv
+
+use cnn_blocking::coordinator::{InferenceServer, ServerConfig};
+use cnn_blocking::figures::{fig3_4, fig5_8, fig9, tables};
+use cnn_blocking::model::benchmarks::{all_benchmarks, by_name};
+use cnn_blocking::optimizer::beam::{optimize, BeamConfig};
+use cnn_blocking::optimizer::schedules::emit_schedules;
+use cnn_blocking::optimizer::targets::{BespokeTarget, FixedTarget};
+use cnn_blocking::runtime::{Engine, Golden, Manifest};
+use cnn_blocking::util::cli::Args;
+use cnn_blocking::util::table::energy_pj;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("optimize") => cmd_optimize(&args),
+        Some("schedules") => cmd_schedules(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("cachesim") => cmd_cachesim(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("validate") => cmd_validate(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "cnnblk — systematic CNN blocking (Yang et al. 2016 reproduction)\n\
+         \n\
+         USAGE: cnnblk <subcommand> [flags]\n\
+         \n\
+         optimize  --layer Conv1 [--levels 3] [--budget-kb 8192] [--target bespoke|diannao|cpu]\n\
+         schedules [--out python/compile/schedules.json]      (step 1 of `make artifacts`)\n\
+         figures   [--table1|--table3|--table4|--fig3|--fig5|--fig6|--fig7|--fig8|--fig9|--all]\n\
+         cachesim  [--max-macs 20000000]                      (Figs. 3-4 traces)\n\
+         serve     [--requests 256] [--batch 8] [--timeout-ms 2] [--artifacts artifacts]\n\
+         validate  [--artifacts artifacts]                    (PJRT round-trip checks)\n\
+         \n\
+         add --full-search for the paper-width beam (128 seeds) instead of the quick one"
+    );
+}
+
+fn beam_cfg(args: &Args) -> BeamConfig {
+    if args.has("full-search") {
+        BeamConfig::default()
+    } else {
+        BeamConfig::quick()
+    }
+}
+
+fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
+    let layer = args.get_or("layer", "Conv1");
+    let bench = by_name(&layer)
+        .ok_or_else(|| anyhow::anyhow!("unknown layer '{}' (see `figures --table4`)", layer))?;
+    let levels = args.get_u64("levels", 3) as usize;
+    let budget = args.get_u64("budget-kb", 8 * 1024) * 1024;
+    let cfg = beam_cfg(args);
+    let t0 = Instant::now();
+    let results = match args.get_or("target", "bespoke").as_str() {
+        "diannao" => optimize(&bench.dims, &FixedTarget::diannao(), levels, &cfg),
+        "cpu" => optimize(&bench.dims, &FixedTarget::cpu(), levels, &cfg),
+        _ => optimize(&bench.dims, &BespokeTarget::new(budget), levels, &cfg),
+    };
+    println!(
+        "{} ({}), {} levels, {} schedules kept, search took {:?}:",
+        bench.name,
+        bench.dims,
+        levels,
+        results.len(),
+        t0.elapsed()
+    );
+    for (i, s) in results.iter().take(args.get_u64("top", 5) as usize).enumerate() {
+        println!(
+            "  #{}: {}  ({}, {:.3} pJ/MAC)",
+            i + 1,
+            s.string,
+            energy_pj(s.energy_pj),
+            s.energy_pj / bench.dims.macs() as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_schedules(args: &Args) -> anyhow::Result<()> {
+    let out = args.get_or("out", "python/compile/schedules.json");
+    let cfg = beam_cfg(args);
+    let schedules = emit_schedules(&out, &cfg)?;
+    println!("wrote {} ({} layers):", out, schedules.len());
+    for s in &schedules {
+        println!(
+            "  {}: tile (x0={}, y0={}, c0={}, k0={})  {}",
+            s.name, s.tile.0, s.tile.1, s.tile.2, s.tile.3, s.string
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let cfg = beam_cfg(args);
+    let only_sub = args.flags.keys().all(|k| k == "full-search" || k == "max-macs");
+    let all = args.has("all") || only_sub;
+    if all || args.has("table1") {
+        tables::table1().print();
+    }
+    if all || args.has("table3") {
+        tables::table3().print();
+    }
+    if all || args.has("table4") {
+        tables::table4().print();
+    }
+    if all || args.has("fig3") || args.has("fig4") {
+        let rows = fig3_4::run_all(args.get_u64("max-macs", 20_000_000));
+        let (f3, f4) = fig3_4::render(&rows);
+        f3.print();
+        f4.print();
+        println!(
+            "headline: up to {:.0}% memory-access reduction vs best BLAS baseline\n",
+            fig3_4::max_reduction(&rows) * 100.0
+        );
+    }
+    if all || args.has("fig5") {
+        let rows = fig5_8::fig5_rows(&all_benchmarks(), &cfg);
+        fig5_8::render_fig5(&rows).print();
+    }
+    if all || args.has("fig6") {
+        let rows = fig5_8::fig6_rows(&cfg, 8 << 20, 3);
+        fig5_8::render_fig6(&rows).print();
+    }
+    if all || args.has("fig7") {
+        let rows = fig5_8::fig7_rows(&cfg, 3);
+        fig5_8::render_fig7(&rows).print();
+    }
+    if all || args.has("fig8") {
+        let rows = fig5_8::fig8_rows(&cfg, 3);
+        fig5_8::render_fig8(&rows).print();
+        let conv1 = by_name("Conv1").unwrap().dims;
+        println!(
+            "DianNao baseline mem:MAC ratio on Conv1 (paper: ~20x): {:.1}x\n",
+            fig5_8::diannao_mem_ratio(&conv1, &cfg)
+        );
+    }
+    if all || args.has("fig9") {
+        let dims = fig9::conv1_dims();
+        let scheds = fig9::top_schedules(&dims, 4, 8 << 20, &cfg);
+        let cells = fig9::fig9_grid(&dims, &scheds, 8 << 20);
+        fig9::render_fig9(&dims, &cells).print();
+        println!(
+            "takeaway (share the large buffer) holds: {}\n",
+            fig9::takeaway_holds(&dims, &cells)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_cachesim(args: &Args) -> anyhow::Result<()> {
+    let rows = fig3_4::run_all(args.get_u64("max-macs", 20_000_000));
+    let (f3, f4) = fig3_4::render(&rows);
+    f3.print();
+    f4.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = ServerConfig {
+        artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")),
+        max_batch: args.get_u64("batch", 8) as usize,
+        batch_timeout: Duration::from_millis(args.get_u64("timeout-ms", 2)),
+        queue_depth: 64,
+    };
+    let n = args.get_u64("requests", 256) as usize;
+    let server = InferenceServer::start(cfg)?;
+    println!("server up; pipeline schedules: {:?}", server.layer_strings);
+    let mut rng = cnn_blocking::util::rng::Rng::new(42);
+    let input_len = server.input_len;
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        let input: Vec<f32> = (0..input_len).map(|_| rng.f64() as f32 - 0.5).collect();
+        pending.push(server.submit(input)?);
+    }
+    for rx in pending {
+        rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+    }
+    let wall = t0.elapsed();
+    println!("{}", server.metrics.lock().unwrap().report(wall));
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let m = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    println!("platform: {}", engine.platform());
+
+    // 1. quickstart vs rust-native conv
+    let module = engine.load(&m.hlo_path("quickstart"), m.spec("quickstart")?)?;
+    let mut rng = cnn_blocking::util::rng::Rng::new(7);
+    let x: Vec<f32> = (0..4 * 10 * 10).map(|_| rng.f64() as f32 - 0.5).collect();
+    let w: Vec<f32> = (0..8 * 4 * 3 * 3).map(|_| rng.f64() as f32 - 0.5).collect();
+    let got = module.run_f32(&[&x, &w])?;
+    let want =
+        cnn_blocking::coordinator::naive_conv::conv_valid(&x, (4, 10, 10), &w, (8, 4, 3, 3));
+    let err = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("quickstart vs rust-native conv: max err {:.2e}", err);
+    anyhow::ensure!(err < 1e-4, "quickstart mismatch");
+
+    // 2. pipeline vs golden, across the whole batch ladder
+    let golden = Golden::load(&dir)?;
+    for b in m.batch_ladder() {
+        let name = format!("alexnet_mini_b{}", b);
+        let module = engine.load(&m.hlo_path(&name), m.spec(&name)?)?;
+        let mut input = Vec::new();
+        for _ in 0..b {
+            input.extend_from_slice(&golden.input);
+        }
+        let out = module.run_f32(&[&input])?;
+        let per = golden.output.len();
+        let mut max_err = 0.0f32;
+        for i in 0..b {
+            for (a, g) in out[i * per..(i + 1) * per].iter().zip(&golden.output) {
+                max_err = max_err.max((a - g).abs());
+            }
+        }
+        println!("{} vs golden: max err {:.2e}", name, max_err);
+        anyhow::ensure!(max_err < 1e-3, "{} mismatch", name);
+    }
+    println!("all validations passed");
+    Ok(())
+}

@@ -1,0 +1,300 @@
+//! Access counting (Eq. 1 of the paper, in its per-buffer form).
+//!
+//! For a virtual buffer `vb_j` of a tensor, created at string position
+//! `p_j` with footprint `vol_j` and Table 2 refetch rate `RR_j`, the
+//! accesses it serves downward over the whole layer are
+//!
+//! ```text
+//!   accesses(vb_j) = fills(vb_j) * vol_j * RR_j
+//!   fills(vb_j)    = product of trip counts of all loops outside p_j
+//! ```
+//!
+//! Because Table 2 allocates a buffer at *every* reuse-creating loop, each
+//! loop outside `p_j` either changes the buffer's content (a relevant dim)
+//! or corresponds to a same-tensor buffer above (whose refetch the RR
+//! chain charges), so `fills` is simply the full outer trip product. This
+//! per-buffer form is exactly the paper's Eq. 1 for kernels, and for
+//! input/output it charges halo refetch and partial-sum read+write traffic
+//! once per hierarchy boundary (the literal alpha-times-suffix-product
+//! reading would stack the OB factor of 2 across levels; see DESIGN.md §4
+//! and `model::validate`, which cross-checks against an interpreter).
+//!
+//! The datapath additionally issues one input read, one kernel read and an
+//! output read+write *per MAC* — on machines with operand/window register
+//! files those hit the registers; on DianNao-style designs they hit the
+//! innermost SRAMs directly (see `hierarchy::Datapath`).
+
+use super::buffers::{BufferSet, Tensor, VirtualBuffer};
+use super::dims::LayerDims;
+use super::string::BlockingString;
+
+/// Per-virtual-buffer access counts.
+#[derive(Debug, Clone)]
+pub struct BufferAccesses {
+    pub buffer: VirtualBuffer,
+    /// Accesses served by this buffer over the whole layer.
+    pub reads: f64,
+    /// Fill events (content loads) over the whole layer.
+    pub fill_events: f64,
+    /// Element traffic into this buffer from the level above.
+    pub fill_elems: f64,
+}
+
+/// Datapath operand traffic per tensor (reads at MAC rate, before the
+/// hardware broadcast/reduction factors are applied).
+#[derive(Debug, Clone, Copy)]
+pub struct OperandTraffic {
+    pub input_reads: f64,
+    pub kernel_reads: f64,
+    /// Output accumulate = read + write per MAC.
+    pub output_accesses: f64,
+}
+
+/// Complete access profile of a blocking.
+#[derive(Debug, Clone)]
+pub struct AccessProfile {
+    pub input: Vec<BufferAccesses>,
+    pub kernel: Vec<BufferAccesses>,
+    pub output: Vec<BufferAccesses>,
+    /// DRAM terminal traffic: fill traffic of the outermost input/kernel
+    /// buffers plus the final output writeback.
+    pub dram_input_reads: f64,
+    pub dram_kernel_reads: f64,
+    pub dram_output_writes: f64,
+    pub operand: OperandTraffic,
+    pub macs: u64,
+}
+
+impl AccessProfile {
+    pub fn of(&self, t: Tensor) -> &[BufferAccesses] {
+        match t {
+            Tensor::Input => &self.input,
+            Tensor::Kernel => &self.kernel,
+            Tensor::Output => &self.output,
+        }
+    }
+
+    /// Terminal DRAM accesses for a tensor (cold/refetch reads of the
+    /// outermost buffer; final writes for the output).
+    pub fn dram_terminal(&self, t: Tensor) -> f64 {
+        match t {
+            Tensor::Input => self.dram_input_reads,
+            Tensor::Kernel => self.dram_kernel_reads,
+            Tensor::Output => self.dram_output_writes,
+        }
+    }
+
+    /// Total accesses across all on-chip virtual buffers.
+    pub fn total_buffer_reads(&self) -> f64 {
+        self.input
+            .iter()
+            .chain(&self.kernel)
+            .chain(&self.output)
+            .map(|b| b.reads)
+            .sum()
+    }
+}
+
+/// `alpha` per tensor: element count of the tensor as held in DRAM.
+pub fn alpha(dims: &LayerDims, t: Tensor) -> f64 {
+    match t {
+        Tensor::Input => dims.input_elems() as f64,
+        Tensor::Kernel => dims.kernel_elems() as f64,
+        Tensor::Output => dims.output_elems() as f64,
+    }
+}
+
+/// Compute the full access profile of a blocking string.
+pub fn profile(string: &BlockingString, dims: &LayerDims, bufs: &BufferSet) -> AccessProfile {
+    let n = string.len();
+    // trips_above[p] = product of trip counts of loops at positions > p
+    // (trips computed in one forward pass over covered extents)
+    let mut cov = [1u64; 7];
+    let mut trips = [1u64; 24];
+    for (i, l) in string.levels.iter().enumerate() {
+        trips[i.min(23)] = l.range / cov[l.dim as usize].max(1);
+        cov[l.dim as usize] = l.range;
+    }
+    let mut trips_above = [1.0f64; 25];
+    for p in (0..n.min(24)).rev() {
+        trips_above[p] = trips_above[p + 1] * trips[p] as f64;
+    }
+    // product over positions STRICTLY above p  ==  trips_above[p+1]
+    let chain = |t: Tensor| -> Vec<BufferAccesses> {
+        bufs.of(t)
+            .iter()
+            .map(|vb| {
+                let fills = trips_above[vb.created_at + 1];
+                let vol = vb.size_elems as f64;
+                BufferAccesses {
+                    buffer: vb.clone(),
+                    reads: fills * vol * vb.refetch_rate,
+                    fill_events: fills,
+                    fill_elems: fills * vol,
+                }
+            })
+            .collect()
+    };
+
+    let input = chain(Tensor::Input);
+    let kernel = chain(Tensor::Kernel);
+    let output = chain(Tensor::Output);
+
+    // DRAM terminals: fill traffic of the outermost buffer (cold + any
+    // genuine refetch when relevant loops remain above it); alpha if the
+    // tensor has no buffers at all.
+    let terminal = |c: &[BufferAccesses], t: Tensor| -> f64 {
+        c.last()
+            .map(|ba| ba.fill_elems)
+            .unwrap_or_else(|| alpha(dims, t))
+    };
+    let macs = dims.macs() as f64;
+    AccessProfile {
+        dram_input_reads: terminal(&input, Tensor::Input),
+        dram_kernel_reads: terminal(&kernel, Tensor::Kernel),
+        dram_output_writes: alpha(dims, Tensor::Output),
+        input,
+        kernel,
+        output,
+        operand: OperandTraffic {
+            input_reads: macs,
+            kernel_reads: macs,
+            output_accesses: 2.0 * macs,
+        },
+        macs: dims.macs(),
+    }
+}
+
+/// Convenience: allocate buffers and profile in one call.
+pub fn analyze(string: &BlockingString, dims: &LayerDims) -> (BufferSet, AccessProfile) {
+    let bufs = super::buffers::allocate(string, dims);
+    let prof = profile(string, dims, &bufs);
+    (bufs, prof)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::string::BlockingString;
+
+    fn conv() -> LayerDims {
+        LayerDims::conv(64, 64, 32, 16, 3, 3)
+    }
+
+    fn analyze_str(d: &LayerDims, s: &str) -> AccessProfile {
+        let b = BlockingString::parse(s).unwrap().with_window(d);
+        b.validate(d).unwrap();
+        analyze(&b, d).1
+    }
+
+    #[test]
+    fn single_ib_matches_hand_count() {
+        let d = conv();
+        // Whole image inner, K split into 4 groups: the one IB holds the
+        // full halo'd input, re-read once per kernel group.
+        let p = analyze_str(&d, "Fw Fh X0=64 Y0=64 C0=32 K0=4 K1=16");
+        let ib = p.input.last().unwrap();
+        let vol = (66 * 66 * 32) as f64;
+        let halo = (66.0 * 66.0) / (64.0 * 64.0);
+        assert!((ib.reads - vol * 4.0 * halo).abs() / ib.reads < 1e-12);
+        assert_eq!(ib.fill_events, 1.0);
+        assert_eq!(ib.fill_elems, vol);
+        assert_eq!(p.dram_input_reads, vol);
+    }
+
+    #[test]
+    fn kernel_chain_equals_literal_eq1() {
+        // For kernels the per-buffer form equals alpha x suffix-RR-product
+        // exactly (no halo, no factor 2) — verify on a 4-KB chain.
+        let d = conv();
+        let p = analyze_str(&d, "Fw Fh X0=8 Y0=8 C0=32 K0=16 X1=64 Y1=64");
+        let alpha_k = d.kernel_elems() as f64;
+        let mut suffix = 1.0;
+        for (j, ba) in p.kernel.iter().enumerate().rev() {
+            suffix *= ba.buffer.refetch_rate;
+            let lit = alpha_k * suffix;
+            assert!(
+                (ba.reads - lit).abs() / lit < 1e-9,
+                "KB{}: per-buffer {} vs literal {}",
+                j,
+                ba.reads,
+                lit
+            );
+        }
+    }
+
+    #[test]
+    fn output_factor_two_charged_once_per_boundary() {
+        let d = LayerDims::fc(16, 8, 4);
+        let p = analyze_str(&d, "Fw Fh C0=4 K0=8 B0=4 C1=16");
+        // OB_0 at C0: vol=1 (k,b covered = 1), fills = trips above C0
+        // (K0=8, B0=4, C1=4) = 128, RR = 2*4.
+        let ob0 = &p.output[0];
+        assert_eq!(ob0.buffer.size_elems, 1);
+        assert_eq!(ob0.fill_events, 128.0);
+        assert_eq!(ob0.reads, 128.0 * 8.0);
+        // Physically: the level-0 accumulator serves one read + one write
+        // per MAC across all its incarnations: 2 * MACs = 1024 exactly.
+        assert_eq!(ob0.reads, 2.0 * d.macs() as f64);
+    }
+
+    #[test]
+    fn chain_monotone_and_fills_decrease_outward() {
+        let d = conv();
+        let p = analyze_str(&d, "Fw Fh X0=8 Y0=8 C0=8 K0=4 C1=32 K1=16 X1=64 Y1=64");
+        for t in Tensor::ALL {
+            for w in p.of(t).windows(2) {
+                assert!(w[0].fill_events >= w[1].fill_events);
+            }
+            if let Some(last) = p.of(t).last() {
+                assert!(last.fill_events >= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn operand_traffic_at_mac_rate() {
+        let d = conv();
+        let p = analyze_str(&d, "Fw Fh X0=64 Y0=64 C0=32 K0=16");
+        assert_eq!(p.operand.input_reads, d.macs() as f64);
+        assert_eq!(p.operand.kernel_reads, d.macs() as f64);
+        assert_eq!(p.operand.output_accesses, 2.0 * d.macs() as f64);
+    }
+
+    #[test]
+    fn fc_profile() {
+        let d = LayerDims::fc(4096, 4096, 16);
+        let p = analyze_str(&d, "Fw Fh C0=512 K0=512 B0=16 C1=4096 K1=4096");
+        let kb = p
+            .kernel
+            .iter()
+            .find(|b| b.buffer.size_elems == 512 * 512)
+            .expect("512x512 KB");
+        assert_eq!(kb.buffer.refetch_rate, 16.0);
+        assert_eq!(p.macs, 4096 * 4096 * 16);
+    }
+
+    #[test]
+    fn no_kernel_reuse_without_batch_blocking() {
+        // FC with B=1: no X/Y/B loop -> no kernel buffer; every kernel
+        // operand read is a DRAM read (the paper's motivation for batch
+        // blocking FC layers).
+        let d = LayerDims::fc(4096, 4096, 1);
+        let p = analyze_str(&d, "Fw Fh C0=512 K0=512 C1=4096 K1=4096");
+        assert!(p.kernel.is_empty());
+        assert_eq!(p.dram_kernel_reads, d.kernel_elems() as f64);
+    }
+
+    #[test]
+    fn dram_terminal_includes_genuine_refetch() {
+        // Small IB with a K loop above it and X above that: the outermost
+        // IB is refilled once per K1 iteration (genuine re-streaming).
+        let d = conv();
+        let p = analyze_str(&d, "Fw Fh X0=8 Y0=64 C0=32 K0=4 K1=16 X1=64");
+        let ib = p.input.last().unwrap();
+        // fills = trips above K1 = X1 trip = 8
+        assert_eq!(ib.fill_events, 8.0);
+        assert_eq!(p.dram_input_reads, ib.fill_elems);
+        assert!(p.dram_input_reads > d.input_elems() as f64);
+    }
+}

@@ -1,0 +1,82 @@
+//! Silicon-area model for the co-design study (Fig. 7).
+//!
+//! The paper anchors two points at 45 nm: DianNao's baseline (datapath +
+//! 36 KB of SRAM ≈ 1 mm² the way Fig. 7 normalizes) and "8 MB hierarchy =
+//! 45 mm² (45x baseline)", with "1 MB ≈ 6x baseline area". We calibrate a
+//! linear SRAM density to those anchors and add a fixed datapath term and
+//! a small per-macro overhead that penalizes very fragmented hierarchies.
+
+/// SRAM density, mm^2 per KB (calibrated: 8 MB -> ~45 mm^2).
+pub const SRAM_MM2_PER_KB: f64 = 45.0 / (8.0 * 1024.0);
+
+/// Register files from the standard-cell generator are ~2x less dense.
+pub const RF_MM2_PER_KB: f64 = 2.0 * SRAM_MM2_PER_KB;
+
+/// Size below which a buffer is built as a register file (Sec. 4.2: SRAMs
+/// become inefficient at small sizes).
+pub const RF_THRESHOLD_BYTES: u64 = 1024;
+
+/// 256-MAC datapath + control area (mm^2).
+pub const DATAPATH_MM2: f64 = 0.74;
+
+/// Fixed per-macro overhead (decoders, periphery) in mm^2.
+pub const MACRO_OVERHEAD_MM2: f64 = 0.004;
+
+/// Area of one on-chip buffer of `bytes`.
+pub fn buffer_area_mm2(bytes: u64) -> f64 {
+    let kb = bytes as f64 / 1024.0;
+    let density = if bytes < RF_THRESHOLD_BYTES {
+        RF_MM2_PER_KB
+    } else {
+        SRAM_MM2_PER_KB
+    };
+    kb * density + MACRO_OVERHEAD_MM2
+}
+
+/// Total area of a design with the given on-chip buffer sizes (bytes).
+pub fn design_area_mm2(buffers: &[u64]) -> f64 {
+    DATAPATH_MM2 + buffers.iter().map(|&b| buffer_area_mm2(b)).sum::<f64>()
+}
+
+/// DianNao baseline area (datapath + 2 KB + 32 KB + 2 KB), the Fig. 7
+/// normalization denominator.
+pub fn diannao_baseline_mm2() -> f64 {
+    design_area_mm2(&[2 * 1024, 32 * 1024, 2 * 1024])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_hold() {
+        let base = diannao_baseline_mm2();
+        // ~1 mm^2 baseline
+        assert!((0.7..1.3).contains(&base), "baseline {}", base);
+        // 8 MB ~ 45x baseline
+        let big = design_area_mm2(&[8 * 1024 * 1024]);
+        let ratio = big / base;
+        assert!((35.0..55.0).contains(&ratio), "8MB ratio {}", ratio);
+        // 1 MB ~ 6x baseline
+        let mid = design_area_mm2(&[1024 * 1024]);
+        let r2 = mid / base;
+        assert!((4.0..9.0).contains(&r2), "1MB ratio {}", r2);
+    }
+
+    #[test]
+    fn rf_denser_than_nothing_but_sparser_than_sram() {
+        let rf = buffer_area_mm2(512);
+        let sram = buffer_area_mm2(2048);
+        assert!(rf > 0.0 && rf < sram);
+    }
+
+    #[test]
+    fn area_monotone() {
+        let mut prev = 0.0;
+        for kb in [1u64, 4, 32, 256, 1024, 8192] {
+            let a = buffer_area_mm2(kb * 1024);
+            assert!(a > prev);
+            prev = a;
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! Buffer allocation rules (Table 2 of the paper).
+//!
+//! Walking a blocking string innermost -> outermost, every loop that creates
+//! *reuse* of a tensor allocates a buffer for it at that level:
+//!
+//! | new loop    | buffer | size                                  | refetch rate              |
+//! |-------------|--------|---------------------------------------|---------------------------|
+//! | `K_i`       | `IB_i` | `(Y+Fh-1)(X+Fw-1) * C` (covered)      | `(K_i/K) * halo-ratio`     |
+//! | `C_i`       | `OB_i` | `X * Y * K` (covered)                 | `2 * C_i/C`                |
+//! | `X_i`/`Y_i` | `KB_i` | `C * K * Fw * Fh` (covered)           | `X_i/X` (resp. `Y_i/Y`)    |
+//! | `B_i`       | `KB_i` | `C * K * Fw * Fh` (covered)           | `B_i/B`                    |
+//! | `Fw`/`Fh` not innermost | `IB_i` + `OB_i` jointly | input/output blocks | trip (x2 for OB) |
+//!
+//! where "covered" extents are those of the loops *below* level i
+//! (`X_{i-1}` etc. in the paper), and the halo ratio
+//! `((Y+Fh-1)(X+Fw-1))/(YX)` charges the boundary-overlap refetch between
+//! adjacent image blocks exactly as Table 2 prints it.
+
+use super::dims::{Dim, LayerDims};
+use super::string::BlockingString;
+use std::fmt;
+
+/// Which tensor a buffer holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Tensor {
+    Input,
+    Kernel,
+    Output,
+}
+
+impl Tensor {
+    pub const ALL: [Tensor; 3] = [Tensor::Input, Tensor::Kernel, Tensor::Output];
+
+    pub fn short(self) -> &'static str {
+        match self {
+            Tensor::Input => "IB",
+            Tensor::Kernel => "KB",
+            Tensor::Output => "OB",
+        }
+    }
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.short())
+    }
+}
+
+/// A buffer the blocking implies, before placement in a physical hierarchy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VirtualBuffer {
+    pub tensor: Tensor,
+    /// Index of the loop level (in the blocking string) that created it.
+    pub created_at: usize,
+    /// Footprint in 16-bit elements.
+    pub size_elems: u64,
+    /// Table 2 refetch rate: reads served per element loaded, i.e. how many
+    /// times the level below re-reads this buffer's content per fill.
+    pub refetch_rate: f64,
+    /// Which-th buffer of this tensor (0 = innermost).
+    pub ordinal: usize,
+}
+
+/// All virtual buffers of a blocking, grouped per tensor, innermost first.
+#[derive(Debug, Clone, Default)]
+pub struct BufferSet {
+    pub input: Vec<VirtualBuffer>,
+    pub kernel: Vec<VirtualBuffer>,
+    pub output: Vec<VirtualBuffer>,
+}
+
+impl BufferSet {
+    pub fn of(&self, t: Tensor) -> &[VirtualBuffer] {
+        match t {
+            Tensor::Input => &self.input,
+            Tensor::Kernel => &self.kernel,
+            Tensor::Output => &self.output,
+        }
+    }
+
+    fn of_mut(&mut self, t: Tensor) -> &mut Vec<VirtualBuffer> {
+        match t {
+            Tensor::Input => &mut self.input,
+            Tensor::Kernel => &mut self.kernel,
+            Tensor::Output => &mut self.output,
+        }
+    }
+
+    pub fn all(&self) -> impl Iterator<Item = &VirtualBuffer> {
+        self.input.iter().chain(&self.kernel).chain(&self.output)
+    }
+
+    pub fn total_count(&self) -> usize {
+        self.input.len() + self.kernel.len() + self.output.len()
+    }
+}
+
+/// Apply Table 2 to a validated blocking string.
+pub fn allocate(string: &BlockingString, _dims: &LayerDims) -> BufferSet {
+    let mut set = BufferSet::default();
+    let push = |set: &mut BufferSet, t: Tensor, created_at: usize, size: u64, rr: f64| {
+        let ordinal = set.of(t).len();
+        set.of_mut(t).push(VirtualBuffer {
+            tensor: t,
+            created_at,
+            size_elems: size,
+            refetch_rate: rr,
+            ordinal,
+        });
+    };
+
+    // single forward walk: maintain covered extents incrementally
+    let mut cov = [1u64; 7];
+    for (i, level) in string.levels.iter().enumerate() {
+        let g = |d: Dim| cov[d as usize];
+        let (x, y, c, k) = (g(Dim::X), g(Dim::Y), g(Dim::C), g(Dim::K));
+        let (fw, fh, b) = (g(Dim::Fw), g(Dim::Fh), g(Dim::B));
+        let trip = (level.range / cov[level.dim as usize].max(1)) as f64;
+        cov[level.dim as usize] = level.range;
+        if trip <= 1.0 && !matches!(level.dim, Dim::Fw | Dim::Fh) {
+            continue; // degenerate level, no reuse created
+        }
+        match level.dim {
+            Dim::K => {
+                // Input reuse: the same image block streams through `trip`
+                // kernel groups. IB covers the halo'd input block.
+                let size = (y + fh - 1) * (x + fw - 1) * c * b;
+                let halo_ratio = ((y + fh - 1) * (x + fw - 1)) as f64 / (y * x) as f64;
+                push(&mut set, Tensor::Input, i, size, trip * halo_ratio);
+            }
+            Dim::C => {
+                // Output partial-sum reuse: each output element is updated
+                // `trip` more times; 2x charges the read+write per update.
+                let size = x * y * k * b;
+                push(&mut set, Tensor::Output, i, size, 2.0 * trip);
+            }
+            Dim::X | Dim::Y | Dim::B => {
+                // Kernel reuse: new image blocks (or images) stream through
+                // the same kernels.
+                let size = c * k * fw * fh;
+                push(&mut set, Tensor::Kernel, i, size, trip);
+            }
+            Dim::Fw | Dim::Fh => {
+                // Window loops innermost create no buffer (their reuse is
+                // served by the operand window registers — see
+                // `access::OperandTraffic`). Hoisted outward, they reuse
+                // both the input block and the output partials.
+                let innermost = string.levels[..i]
+                    .iter()
+                    .all(|l| matches!(l.dim, Dim::Fw | Dim::Fh));
+                if !innermost && trip > 1.0 {
+                    let in_size = (y + fh - 1) * (x + fw - 1) * c * b;
+                    push(&mut set, Tensor::Input, i, in_size, trip);
+                    let out_size = x * y * k * b;
+                    push(&mut set, Tensor::Output, i, out_size, 2.0 * trip);
+                }
+            }
+        }
+    }
+    set
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::string::BlockingString;
+
+    fn conv() -> LayerDims {
+        LayerDims::conv(64, 64, 32, 16, 3, 3)
+    }
+
+    fn parse(d: &LayerDims, s: &str) -> BlockingString {
+        let b = BlockingString::parse(s).unwrap().with_window(d);
+        b.validate(d).unwrap();
+        b
+    }
+
+    #[test]
+    fn table2_kb_rule() {
+        let d = conv();
+        // X1 splits X 8 -> 64: the outermost KB covers C0*K0*Fw*Fh with
+        // RR = X1/X0 = 8. (X0 and Y0 also create level-0 KBs over the
+        // then-covered c=k=1, per Table 2's "level 0" note.)
+        let s = parse(&d, "Fw Fh X0=8 Y0=64 C0=32 K0=16 X1=64");
+        let bufs = allocate(&s, &d);
+        assert_eq!(bufs.kernel.len(), 3);
+        let kb = bufs.kernel.last().unwrap();
+        assert_eq!(kb.size_elems, 32 * 16 * 3 * 3);
+        assert_eq!(kb.refetch_rate, 8.0);
+        assert_eq!(kb.created_at, 6);
+        // level-0 KBs hold a single kernel window
+        assert_eq!(bufs.kernel[0].size_elems, 3 * 3);
+        assert_eq!(bufs.kernel[0].refetch_rate, 8.0); // X0 trip
+    }
+
+    #[test]
+    fn table2_ob_rule() {
+        let d = conv();
+        let s = parse(&d, "Fw Fh X0=64 Y0=64 C0=8 K0=16 C1=32");
+        let bufs = allocate(&s, &d);
+        assert_eq!(bufs.output.len(), 2); // C0 (level-0) and C1
+        let ob = bufs.output.last().unwrap();
+        assert_eq!(ob.size_elems, 64 * 64 * 16);
+        assert_eq!(ob.refetch_rate, 2.0 * 4.0); // 2 * C1/C0
+        assert_eq!(bufs.output[0].size_elems, 64 * 64); // k covered = 1
+        assert_eq!(bufs.output[0].refetch_rate, 2.0 * 8.0); // 2 * C0
+    }
+
+    #[test]
+    fn table2_ib_rule_with_halo() {
+        let d = LayerDims::conv(8, 8, 32, 16, 3, 3);
+        let s = parse(&d, "Fw Fh X0=8 Y0=8 C0=32 K0=4 K1=16");
+        let bufs = allocate(&s, &d);
+        // K0 (level 0) and K1 both create IBs over the same covered block.
+        assert_eq!(bufs.input.len(), 2);
+        let ib = &bufs.input[0];
+        // (8+3-1)^2 * 32
+        assert_eq!(ib.size_elems, 10 * 10 * 32);
+        let halo = (10.0 * 10.0) / 64.0;
+        assert!((ib.refetch_rate - 4.0 * halo).abs() < 1e-12);
+        assert!((bufs.input[1].refetch_rate - 4.0 * halo).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unblocked_string_creates_natural_buffers() {
+        let d = conv();
+        let s = BlockingString::unblocked(&d);
+        let bufs = allocate(&s, &d);
+        // X -> KB, Y -> KB, C -> OB, K -> IB
+        assert_eq!(bufs.kernel.len(), 2);
+        assert_eq!(bufs.output.len(), 1);
+        assert_eq!(bufs.input.len(), 1);
+        // IB at the K loop holds the entire (halo'd) input.
+        assert_eq!(bufs.input[0].size_elems, 66 * 66 * 32);
+    }
+
+    #[test]
+    fn batch_loop_creates_kernel_buffer() {
+        let d = LayerDims::fc(256, 128, 8);
+        let s = parse(&d, "Fw Fh C0=256 K0=128 B0=8");
+        let bufs = allocate(&s, &d);
+        // B0 covers whole batch: kernels reused 8 times.
+        let kb = bufs.kernel.last().unwrap();
+        assert_eq!(kb.size_elems, 256 * 128);
+        assert_eq!(kb.refetch_rate, 8.0);
+    }
+
+    #[test]
+    fn degenerate_trip_makes_no_buffer() {
+        let d = conv();
+        // K0 already covers all of K; the validator would reject K1=16
+        // after K0=16, so check C with full coverage instead: a single C
+        // level covering everything still creates OB (trip 32 > 1) but a
+        // second C level cannot exist. Instead check that B with b=1 never
+        // appears.
+        let s = parse(&d, "Fw Fh X0=64 Y0=64 C0=32 K0=16");
+        let bufs = allocate(&s, &d);
+        // level-0 loops: X0 creates KB? covered c,k are 1 at that point:
+        // KB size = 1*1*9, RR = 64. C0: OB size 64*64*1... all at level 0.
+        assert!(bufs.total_count() >= 3);
+        for vb in bufs.all() {
+            assert!(vb.refetch_rate > 1.0, "rr of {:?}", vb);
+            assert!(vb.size_elems > 0);
+        }
+    }
+
+    #[test]
+    fn ordinals_are_sequential_per_tensor() {
+        let d = conv();
+        let s = parse(&d, "Fw Fh X0=8 Y0=8 C0=8 K0=4 C1=32 K1=16 X1=64 Y1=64");
+        let bufs = allocate(&s, &d);
+        for t in Tensor::ALL {
+            for (j, vb) in bufs.of(t).iter().enumerate() {
+                assert_eq!(vb.ordinal, j);
+                assert_eq!(vb.tensor, t);
+            }
+            // inner buffers are never larger than outer ones
+            for w in bufs.of(t).windows(2) {
+                assert!(w[0].size_elems <= w[1].size_elems);
+                assert!(w[0].created_at < w[1].created_at);
+            }
+        }
+    }
+}

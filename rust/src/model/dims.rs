@@ -1,0 +1,260 @@
+//! Problem dimensions for CNN-like loop nests.
+//!
+//! A convolutional layer maps a `C x X x Y` input (times a batch of `B`
+//! images) through `K` stencils of size `Fw x Fh x C` to a `K x X x Y`
+//! output (Sec. 2 of the paper). Fully-connected layers are the degenerate
+//! case `X = Y = Fw = Fh = 1` where batch blocking (the paper's footnote 1:
+//! "actually a 7 level loop nest") is what creates kernel reuse.
+
+use std::fmt;
+
+/// One loop dimension of the 7-deep nest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dim {
+    /// Kernel window width offset.
+    Fw,
+    /// Kernel window height offset.
+    Fh,
+    /// Output/input image column.
+    X,
+    /// Output/input image row.
+    Y,
+    /// Input channel (reduction).
+    C,
+    /// Output channel / kernel index.
+    K,
+    /// Image within the batch.
+    B,
+}
+
+impl Dim {
+    pub const ALL: [Dim; 7] = [Dim::Fw, Dim::Fh, Dim::X, Dim::Y, Dim::C, Dim::K, Dim::B];
+
+    /// The dims the optimizer is allowed to split ( Fw/Fh stay innermost,
+    /// see DESIGN.md §4 ).
+    pub const SPLITTABLE: [Dim; 5] = [Dim::X, Dim::Y, Dim::C, Dim::K, Dim::B];
+
+    pub fn letter(self) -> &'static str {
+        match self {
+            Dim::Fw => "Fw",
+            Dim::Fh => "Fh",
+            Dim::X => "X",
+            Dim::Y => "Y",
+            Dim::C => "C",
+            Dim::K => "K",
+            Dim::B => "B",
+        }
+    }
+
+    pub fn from_letter(s: &str) -> Option<Dim> {
+        match s {
+            "Fw" => Some(Dim::Fw),
+            "Fh" => Some(Dim::Fh),
+            "X" => Some(Dim::X),
+            "Y" => Some(Dim::Y),
+            "C" => Some(Dim::C),
+            "K" => Some(Dim::K),
+            "B" => Some(Dim::B),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.letter())
+    }
+}
+
+/// Layer problem dimensions (Table 4 of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerDims {
+    pub x: u64,
+    pub y: u64,
+    pub c: u64,
+    pub k: u64,
+    pub fw: u64,
+    pub fh: u64,
+    /// Batch size (number of images). 1 unless batch blocking is studied.
+    pub b: u64,
+}
+
+impl LayerDims {
+    pub fn conv(x: u64, y: u64, c: u64, k: u64, fw: u64, fh: u64) -> LayerDims {
+        LayerDims {
+            x,
+            y,
+            c,
+            k,
+            fw,
+            fh,
+            b: 1,
+        }
+    }
+
+    /// Fully-connected layer: `c` inputs to `k` outputs over a batch of `b`.
+    pub fn fc(c: u64, k: u64, b: u64) -> LayerDims {
+        LayerDims {
+            x: 1,
+            y: 1,
+            c,
+            k,
+            fw: 1,
+            fh: 1,
+            b,
+        }
+    }
+
+    pub fn with_batch(mut self, b: u64) -> LayerDims {
+        self.b = b;
+        self
+    }
+
+    pub fn extent(&self, d: Dim) -> u64 {
+        match d {
+            Dim::Fw => self.fw,
+            Dim::Fh => self.fh,
+            Dim::X => self.x,
+            Dim::Y => self.y,
+            Dim::C => self.c,
+            Dim::K => self.k,
+            Dim::B => self.b,
+        }
+    }
+
+    /// Total multiply-accumulate operations for the layer.
+    pub fn macs(&self) -> u64 {
+        self.x * self.y * self.c * self.k * self.fw * self.fh * self.b
+    }
+
+    /// Input tensor element count, with the convolution halo: the consumed
+    /// input image is `(X + Fw - 1) x (Y + Fh - 1)` ("valid"-style indexing
+    /// where the layer produces X x Y outputs).
+    pub fn input_elems(&self) -> u64 {
+        (self.x + self.fw - 1) * (self.y + self.fh - 1) * self.c * self.b
+    }
+
+    /// Kernel (weight) tensor element count.
+    pub fn kernel_elems(&self) -> u64 {
+        self.fw * self.fh * self.c * self.k
+    }
+
+    /// Output tensor element count.
+    pub fn output_elems(&self) -> u64 {
+        self.x * self.y * self.k * self.b
+    }
+
+    /// Total working set in 16-bit words.
+    pub fn total_elems(&self) -> u64 {
+        self.input_elems() + self.kernel_elems() + self.output_elems()
+    }
+
+    pub fn is_fc(&self) -> bool {
+        self.x == 1 && self.y == 1 && self.fw == 1 && self.fh == 1
+    }
+
+    /// Proportionally scale spatial/channel dims down for trace-based
+    /// simulation (DESIGN.md §3: access-count ratios are scale-stable).
+    /// Kernel window dims are never scaled — they define the reuse pattern.
+    pub fn scaled_for_sim(&self, max_macs: u64) -> LayerDims {
+        let mut d = *self;
+        // Halve the largest scalable dim until under budget; keeps aspect
+        // ratios roughly intact and all dims >= the kernel window.
+        let mut guard = 0;
+        while d.macs() > max_macs && guard < 64 {
+            guard += 1;
+            let candidates = [Dim::X, Dim::Y, Dim::C, Dim::K, Dim::B];
+            let largest = candidates
+                .iter()
+                .copied()
+                .filter(|&dd| match dd {
+                    Dim::X => d.x >= 2 * d.fw && d.x > 4,
+                    Dim::Y => d.y >= 2 * d.fh && d.y > 4,
+                    Dim::C => d.c > 4,
+                    Dim::K => d.k > 4,
+                    Dim::B => d.b > 1,
+                    _ => false,
+                })
+                .max_by_key(|&dd| d.extent(dd));
+            match largest {
+                Some(Dim::X) => d.x /= 2,
+                Some(Dim::Y) => d.y /= 2,
+                Some(Dim::C) => d.c /= 2,
+                Some(Dim::K) => d.k /= 2,
+                Some(Dim::B) => d.b /= 2,
+                _ => break,
+            }
+        }
+        d
+    }
+}
+
+impl fmt::Display for LayerDims {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_fc() {
+            write!(f, "FC[C={} K={} B={}]", self.c, self.k, self.b)
+        } else {
+            write!(
+                f,
+                "Conv[{}x{}x{} -> K={} {}x{} b={}]",
+                self.x, self.y, self.c, self.k, self.fw, self.fh, self.b
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macs_match_paper_table4_conv1() {
+        // Conv1: 256x256x256, K=384, 11x11 -> 256*256*256*384*121 MACs
+        let d = LayerDims::conv(256, 256, 256, 384, 11, 11);
+        assert_eq!(d.macs(), 256 * 256 * 256 * 384 * 121);
+    }
+
+    #[test]
+    fn fc_is_degenerate_conv() {
+        let d = LayerDims::fc(4096, 4096, 1);
+        assert!(d.is_fc());
+        assert_eq!(d.macs(), 4096 * 4096);
+        assert_eq!(d.kernel_elems(), 4096 * 4096);
+        assert_eq!(d.input_elems(), 4096);
+        assert_eq!(d.output_elems(), 4096);
+    }
+
+    #[test]
+    fn halo_in_input_elems() {
+        let d = LayerDims::conv(8, 8, 2, 4, 3, 3);
+        assert_eq!(d.input_elems(), 10 * 10 * 2);
+    }
+
+    #[test]
+    fn extent_roundtrip() {
+        let d = LayerDims::conv(5, 6, 7, 8, 3, 2).with_batch(9);
+        for dim in Dim::ALL {
+            assert!(d.extent(dim) >= 1);
+        }
+        assert_eq!(d.extent(Dim::B), 9);
+        assert_eq!(d.extent(Dim::Fh), 2);
+    }
+
+    #[test]
+    fn letters_roundtrip() {
+        for d in Dim::ALL {
+            assert_eq!(Dim::from_letter(d.letter()), Some(d));
+        }
+        assert_eq!(Dim::from_letter("Z"), None);
+    }
+
+    #[test]
+    fn scaling_preserves_window_and_bounds_macs() {
+        let d = LayerDims::conv(256, 256, 256, 384, 11, 11);
+        let s = d.scaled_for_sim(50_000_000);
+        assert_eq!(s.fw, 11);
+        assert_eq!(s.fh, 11);
+        assert!(s.macs() <= 50_000_000);
+        assert!(s.x >= s.fw && s.y >= s.fh);
+    }
+}

@@ -1,0 +1,187 @@
+//! Memory access energy model (Table 3 of the paper) and datapath energy.
+//!
+//! The paper derived pJ-per-16-bit-access numbers from CACTI 6.0 calibrated
+//! against a commercial 45 nm memory compiler; it prints the exact table it
+//! used, which we hardcode here (that *is* the paper's model — no
+//! substitution needed). Sizes between rows interpolate geometrically in
+//! log-size; sizes below 1 KB (register files from the standard-cell
+//! generator, Sec. 4.2) and between 1 MB and 16 MB extrapolate with the
+//! per-doubling ratio of the nearest rows. Above 16 MB the access goes to
+//! DRAM at a flat 320 pJ/16 b (Micron DDR3 tech note).
+
+/// Table 3 word widths (bits).
+pub const WIDTHS: [u32; 4] = [64, 128, 256, 512];
+
+/// Table 3 sizes (KB).
+pub const SIZES_KB: [u64; 11] = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024];
+
+/// Table 3 body: pJ per 16-bit access, `TABLE[size_idx][width_idx]`.
+pub const TABLE: [[f64; 4]; 11] = [
+    [1.20, 0.93, 0.69, 0.57],
+    [1.54, 1.37, 0.91, 0.68],
+    [2.11, 1.68, 1.34, 0.90],
+    [3.19, 2.71, 2.21, 1.33],
+    [4.36, 3.57, 2.66, 2.19],
+    [5.82, 4.80, 3.52, 2.64],
+    [8.10, 7.51, 5.79, 4.67],
+    [11.66, 11.50, 8.46, 6.15],
+    [15.60, 15.51, 13.09, 8.99],
+    [23.37, 23.24, 17.93, 15.76],
+    [36.32, 32.81, 28.88, 25.22],
+];
+
+/// DRAM access energy per 16 bits (paper: memories beyond 16 MB are DRAM).
+pub const DRAM_PJ: f64 = 320.0;
+
+/// SRAM/DRAM boundary (bytes).
+pub const DRAM_THRESHOLD_BYTES: u64 = 16 * 1024 * 1024;
+
+/// Datapath energy per multiply-accumulate, 16-bit truncated multiplier +
+/// reduction adder at 45 nm (Sec. 4.2's DianNao-like arithmetic unit).
+/// Calibrated so the DianNao-baseline memory:compute ratio lands at the
+/// paper's reported ~20x (Fig. 8) — see EXPERIMENTS.md.
+pub const MAC_PJ: f64 = 1.0;
+
+/// Lower bound for extrapolated register-file access energy.
+pub const RF_FLOOR_PJ: f64 = 0.08;
+
+/// Energy per 16-bit access for a memory of `size_bytes` at word width
+/// `width_bits` (one of `WIDTHS`; other values clamp to nearest column).
+pub fn access_energy_pj(size_bytes: u64, width_bits: u32) -> f64 {
+    if size_bytes > DRAM_THRESHOLD_BYTES {
+        return DRAM_PJ;
+    }
+    let w = width_col(width_bits);
+    let kb = (size_bytes as f64 / 1024.0).max(1.0 / 1024.0);
+
+    let col = |i: usize| TABLE[i][w];
+    let first_kb = SIZES_KB[0] as f64;
+    let last_kb = *SIZES_KB.last().unwrap() as f64;
+
+    if kb <= first_kb {
+        // Extrapolate downward with the first-interval per-doubling ratio.
+        let ratio = col(1) / col(0);
+        let doublings = (first_kb / kb).log2();
+        return (col(0) / ratio.powf(doublings)).max(RF_FLOOR_PJ);
+    }
+    if kb >= last_kb {
+        // Extrapolate upward with the last-interval ratio, capped at DRAM.
+        let ratio = col(10) / col(9);
+        let doublings = (kb / last_kb).log2();
+        return (col(10) * ratio.powf(doublings)).min(DRAM_PJ);
+    }
+    // Geometric interpolation between bracketing rows.
+    let mut i = 0;
+    while SIZES_KB[i + 1] as f64 <= kb {
+        i += 1;
+    }
+    let lo = SIZES_KB[i] as f64;
+    let hi = SIZES_KB[i + 1] as f64;
+    let t = (kb / lo).log2() / (hi / lo).log2();
+    col(i).powf(1.0 - t) * col(i + 1).powf(t)
+}
+
+/// Minimum-energy access for a memory of this size ("we try to use wide bit
+/// widths ... to minimize energy cost", Sec. 4.2): the widest word wins at
+/// every size in Table 3.
+pub fn best_access_energy_pj(size_bytes: u64) -> f64 {
+    WIDTHS
+        .iter()
+        .map(|&w| access_energy_pj(size_bytes, w))
+        .fold(f64::INFINITY, f64::min)
+}
+
+fn width_col(width_bits: u32) -> usize {
+    match width_bits {
+        0..=95 => 0,
+        96..=191 => 1,
+        192..=383 => 2,
+        _ => 3,
+    }
+}
+
+/// Broadcast energy for multi-core fan-out (Sec. 3.4): the cost of sending
+/// one 16-bit word across a die whose area is dominated by `total_sram`
+/// bytes of last-level memory — estimated as the access energy of a single
+/// memory of that size.
+pub fn broadcast_energy_pj(total_sram_bytes: u64) -> f64 {
+    best_access_energy_pj(total_sram_bytes.min(DRAM_THRESHOLD_BYTES))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_table_rows() {
+        assert_eq!(access_energy_pj(1024, 64), 1.20);
+        assert_eq!(access_energy_pj(32 * 1024, 512), 2.64);
+        assert_eq!(access_energy_pj(1024 * 1024, 256), 28.88);
+    }
+
+    #[test]
+    fn dram_beyond_16mb() {
+        assert_eq!(access_energy_pj(17 * 1024 * 1024, 512), DRAM_PJ);
+        assert_eq!(access_energy_pj(1 << 34, 64), DRAM_PJ);
+    }
+
+    #[test]
+    fn interpolation_monotone_in_size() {
+        for w in WIDTHS {
+            let mut prev = 0.0;
+            let mut size = 512u64; // 0.5 KB
+            while size <= DRAM_THRESHOLD_BYTES {
+                let e = access_energy_pj(size, w);
+                assert!(
+                    e >= prev,
+                    "energy not monotone at {} bytes width {}: {} < {}",
+                    size,
+                    w,
+                    e,
+                    prev
+                );
+                prev = e;
+                size = (size as f64 * 1.37) as u64;
+            }
+        }
+    }
+
+    #[test]
+    fn interpolation_brackets_table() {
+        // 3 KB at 64 bits must lie between the 2 KB and 4 KB rows.
+        let e = access_energy_pj(3 * 1024, 64);
+        assert!(e > 1.54 && e < 2.11, "e={}", e);
+    }
+
+    #[test]
+    fn small_rf_extrapolation() {
+        let e256 = access_energy_pj(256, 64);
+        let e1k = access_energy_pj(1024, 64);
+        assert!(e256 < e1k);
+        assert!(e256 >= RF_FLOOR_PJ);
+    }
+
+    #[test]
+    fn wide_words_cheaper() {
+        for (i, &kb) in SIZES_KB.iter().enumerate() {
+            let _ = i;
+            assert!(
+                access_energy_pj(kb * 1024, 512) <= access_energy_pj(kb * 1024, 64),
+                "width ordering violated at {} KB",
+                kb
+            );
+        }
+        assert_eq!(best_access_energy_pj(32 * 1024), 2.64);
+    }
+
+    #[test]
+    fn extrapolation_to_16mb_below_dram() {
+        let e = access_energy_pj(16 * 1024 * 1024, 512);
+        assert!(e > 25.22 && e <= DRAM_PJ, "e={}", e);
+    }
+
+    #[test]
+    fn broadcast_tracks_total_sram() {
+        assert!(broadcast_energy_pj(8 * 1024 * 1024) > broadcast_energy_pj(1024 * 1024));
+    }
+}

@@ -1,0 +1,21 @@
+//! The paper's analytical model (Sections 2-3): problem dimensions,
+//! blocking strings, Table 2 buffer allocation, Eq. 1 access counting,
+//! Table 3 energy, area, and the Table 1/Table 4 benchmark definitions,
+//! plus a reference interpreter that validates the closed forms.
+
+pub mod access;
+pub mod area;
+pub mod benchmarks;
+pub mod buffers;
+pub mod dims;
+pub mod energy;
+pub mod hierarchy;
+pub mod networks;
+pub mod string;
+pub mod validate;
+
+pub use access::{analyze, AccessProfile};
+pub use buffers::{allocate, BufferSet, Tensor, VirtualBuffer};
+pub use dims::{Dim, LayerDims};
+pub use hierarchy::{Breakdown, Datapath, Hierarchy, Placement};
+pub use string::{BlockingString, Level};

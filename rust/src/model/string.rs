@@ -1,0 +1,373 @@
+//! Blocking strings (Sec. 3.1 of the paper).
+//!
+//! A *blocking string* lists the loop nest innermost -> outermost. Each
+//! level carries the **range** of the data it covers for its dim (the
+//! paper's notation: the value of `X_1` is the data extent; the trip count
+//! is `X_1 / X_0`). `FwFhXYCK` — Algorithm 1 — is the unblocked string;
+//! splitting a loop appends an outer level with a larger range.
+//!
+//! Canonical textual form (parse/format roundtrips):
+//! `Fw Fh X0=8 Y0=8 C0=16 K0=4 C1=256 K1=384 X1=256 Y1=256`
+
+use super::dims::{Dim, LayerDims};
+use std::fmt;
+
+/// One loop level: dim + cumulative covered range.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Level {
+    pub dim: Dim,
+    /// Covered data extent of `dim` after this loop completes.
+    pub range: u64,
+}
+
+/// A full blocking of one layer: loops innermost -> outermost.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BlockingString {
+    pub levels: Vec<Level>,
+}
+
+/// Validation failure for a blocking string against a layer's dims.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum StringError {
+    #[error("dim {0} never reaches its full extent ({1} < {2})")]
+    Incomplete(Dim, u64, u64),
+    #[error("dim {0} missing from string")]
+    Missing(Dim),
+    #[error("range {1} of dim {0} does not divide enclosing range {2}")]
+    NonDividing(Dim, u64, u64),
+    #[error("range {1} of dim {0} not larger than inner range {2} (useless split)")]
+    NonIncreasing(Dim, u64, u64),
+    #[error("range {1} of dim {0} exceeds problem extent {2}")]
+    TooLarge(Dim, u64, u64),
+    #[error("window dim {0} must appear exactly once (appears {1} times)")]
+    WindowSplit(Dim, usize),
+}
+
+impl BlockingString {
+    pub fn new(levels: Vec<Level>) -> BlockingString {
+        BlockingString { levels }
+    }
+
+    /// Algorithm 1's unblocked loop nest `FwFhXYCK` (+ trailing B).
+    pub fn unblocked(dims: &LayerDims) -> BlockingString {
+        let mut levels = vec![
+            Level { dim: Dim::Fw, range: dims.fw },
+            Level { dim: Dim::Fh, range: dims.fh },
+            Level { dim: Dim::X, range: dims.x },
+            Level { dim: Dim::Y, range: dims.y },
+            Level { dim: Dim::C, range: dims.c },
+            Level { dim: Dim::K, range: dims.k },
+        ];
+        if dims.b > 1 {
+            levels.push(Level { dim: Dim::B, range: dims.b });
+        }
+        BlockingString::new(levels)
+    }
+
+    /// Validate the string against layer dims: every dim covered to its full
+    /// extent, ranges non-decreasing and dividing, Fw/Fh unsplit.
+    pub fn validate(&self, dims: &LayerDims) -> Result<(), StringError> {
+        for d in [Dim::Fw, Dim::Fh] {
+            let n = self.levels.iter().filter(|l| l.dim == d).count();
+            if n != 1 {
+                return Err(StringError::WindowSplit(d, n));
+            }
+        }
+        let mut covered = [1u64; 7];
+        let idx = |d: Dim| d as usize;
+        for l in &self.levels {
+            let prev = covered[idx(l.dim)];
+            if l.range <= prev && !(l.range == prev && matches!(l.dim, Dim::Fw | Dim::Fh)) {
+                // A range equal to the covered extent is a useless split —
+                // except trivially-sized window dims (Fw=1 for FC layers).
+                if l.range == prev && l.range == dims.extent(l.dim) && prev == 1 {
+                    // Dim of extent 1 appearing once: fine.
+                } else {
+                    return Err(StringError::NonIncreasing(l.dim, l.range, prev));
+                }
+            }
+            if l.range % prev != 0 {
+                return Err(StringError::NonDividing(l.dim, prev, l.range));
+            }
+            if l.range > dims.extent(l.dim) {
+                return Err(StringError::TooLarge(l.dim, l.range, dims.extent(l.dim)));
+            }
+            covered[idx(l.dim)] = l.range;
+        }
+        for d in Dim::ALL {
+            let ext = dims.extent(d);
+            if ext > 1 || matches!(d, Dim::Fw | Dim::Fh) {
+                if !self.levels.iter().any(|l| l.dim == d) {
+                    if ext == 1 {
+                        continue; // dims of extent 1 may be omitted
+                    }
+                    return Err(StringError::Missing(d));
+                }
+            }
+            let last = covered[d as usize];
+            if last != ext && !(ext == 1 && last == 1) {
+                return Err(StringError::Incomplete(d, last, ext));
+            }
+        }
+        Ok(())
+    }
+
+    /// Trip count of level `i` (iterations executed each time the enclosing
+    /// loops reach it): `range / covered-range-below`.
+    pub fn trip(&self, i: usize) -> u64 {
+        let l = self.levels[i];
+        let below = self.levels[..i]
+            .iter()
+            .rev()
+            .find(|p| p.dim == l.dim)
+            .map(|p| p.range)
+            .unwrap_or(1);
+        l.range / below.max(1)
+    }
+
+    /// Covered extents of all dims strictly below level `i`
+    /// (`X_{i-1}, Y_{i-1}, ...` in the paper's notation), as an array
+    /// indexed by `Dim as usize`.
+    pub fn covered_below(&self, i: usize) -> [u64; 7] {
+        let mut cov = [1u64; 7];
+        for l in &self.levels[..i] {
+            cov[l.dim as usize] = l.range;
+        }
+        cov
+    }
+
+    /// Number of loop levels.
+    pub fn len(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.levels.is_empty()
+    }
+
+    /// The innermost block (level-0 tile) extents: covered ranges after the
+    /// first occurrence of each splittable dim. Used to parameterize the
+    /// Pallas kernel's BlockSpec.
+    pub fn level0_tile(&self, dims: &LayerDims) -> (u64, u64, u64, u64) {
+        let mut first = std::collections::BTreeMap::new();
+        for l in &self.levels {
+            first.entry(l.dim).or_insert(l.range);
+        }
+        let get = |d: Dim| *first.get(&d).unwrap_or(&dims.extent(d).min(1));
+        (get(Dim::X), get(Dim::Y), get(Dim::C), get(Dim::K))
+    }
+
+    /// Compact paper-style notation: per-dim subscripts count splits.
+    pub fn notation(&self) -> String {
+        let mut counts = [0usize; 7];
+        let mut parts = Vec::new();
+        for l in &self.levels {
+            let d = l.dim;
+            if matches!(d, Dim::Fw | Dim::Fh) {
+                parts.push(d.letter().to_string());
+            } else {
+                parts.push(format!("{}{}={}", d.letter(), counts[d as usize], l.range));
+                counts[d as usize] += 1;
+            }
+        }
+        parts.join(" ")
+    }
+
+    /// Parse the notation produced by [`notation`]. Subscripts are
+    /// informative only; order in the string is what matters.
+    pub fn parse(text: &str) -> Result<BlockingString, String> {
+        let mut levels = Vec::new();
+        for tok in text.split_whitespace() {
+            if let Some(d) = Dim::from_letter(tok) {
+                // bare window dim: range filled in by `with_window` below —
+                // represented as range 0 placeholder replaced by caller.
+                levels.push(Level { dim: d, range: 0 });
+                continue;
+            }
+            let (name, val) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("bad token '{}'", tok))?;
+            let dim_txt: String = name.chars().take_while(|c| c.is_alphabetic()).collect();
+            let dim = Dim::from_letter(&dim_txt).ok_or_else(|| format!("bad dim '{}'", name))?;
+            let range: u64 = val.parse().map_err(|_| format!("bad range '{}'", val))?;
+            levels.push(Level { dim, range });
+        }
+        Ok(BlockingString::new(levels))
+    }
+
+    /// Fill in zero-range window placeholders from dims (used after parse).
+    pub fn with_window(mut self, dims: &LayerDims) -> BlockingString {
+        for l in &mut self.levels {
+            if l.range == 0 {
+                l.range = dims.extent(l.dim);
+            }
+        }
+        self
+    }
+}
+
+impl fmt::Display for BlockingString {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.notation())
+    }
+}
+
+/// Builder used by the optimizer: start from a level-0 tile and push outer
+/// splits.
+#[derive(Debug, Clone)]
+pub struct StringBuilder {
+    levels: Vec<Level>,
+}
+
+impl StringBuilder {
+    /// Window loops innermost, then the level-0 tile in a given dim order.
+    pub fn with_tile(dims: &LayerDims, order: &[Dim], tile: &[u64]) -> StringBuilder {
+        assert_eq!(order.len(), tile.len());
+        let mut levels = vec![
+            Level { dim: Dim::Fw, range: dims.fw },
+            Level { dim: Dim::Fh, range: dims.fh },
+        ];
+        for (d, r) in order.iter().zip(tile) {
+            levels.push(Level { dim: *d, range: *r });
+        }
+        StringBuilder { levels }
+    }
+
+    pub fn push(&mut self, dim: Dim, range: u64) -> &mut Self {
+        self.levels.push(Level { dim, range });
+        self
+    }
+
+    pub fn build(&self) -> BlockingString {
+        BlockingString::new(self.levels.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> LayerDims {
+        LayerDims::conv(64, 64, 32, 16, 3, 3)
+    }
+
+    #[test]
+    fn unblocked_is_valid() {
+        let d = dims();
+        let s = BlockingString::unblocked(&d);
+        s.validate(&d).unwrap();
+        assert_eq!(s.len(), 6);
+    }
+
+    #[test]
+    fn trips_multiply_to_macs() {
+        let d = dims();
+        let s = BlockingString::parse("Fw Fh X0=8 Y0=8 C0=8 K0=4 C1=32 K1=16 X1=64 Y1=64")
+            .unwrap()
+            .with_window(&d);
+        s.validate(&d).unwrap();
+        let total: u64 = (0..s.len()).map(|i| s.trip(i)).product();
+        assert_eq!(total, d.macs());
+    }
+
+    #[test]
+    fn rejects_non_dividing() {
+        let d = dims();
+        let s = BlockingString::parse("Fw Fh X0=7 Y0=64 C0=32 K0=16 X1=64")
+            .unwrap()
+            .with_window(&d);
+        assert!(matches!(
+            s.validate(&d),
+            Err(StringError::NonDividing(Dim::X, 7, 64))
+        ));
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        let d = dims();
+        let s = BlockingString::parse("Fw Fh X0=64 Y0=64 C0=16 K0=16")
+            .unwrap()
+            .with_window(&d);
+        assert!(matches!(
+            s.validate(&d),
+            Err(StringError::Incomplete(Dim::C, 16, 32))
+        ));
+    }
+
+    #[test]
+    fn rejects_useless_split() {
+        let d = dims();
+        let s = BlockingString::parse("Fw Fh X0=64 X1=64 Y0=64 C0=32 K0=16")
+            .unwrap()
+            .with_window(&d);
+        assert!(matches!(
+            s.validate(&d),
+            Err(StringError::NonIncreasing(Dim::X, 64, 64))
+        ));
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let d = dims();
+        let s = BlockingString::parse("Fw Fh X0=128 Y0=64 C0=32 K0=16")
+            .unwrap()
+            .with_window(&d);
+        assert!(matches!(s.validate(&d), Err(StringError::TooLarge(Dim::X, 128, 64))));
+    }
+
+    #[test]
+    fn covered_below_tracks_prefix() {
+        let d = dims();
+        let s = BlockingString::parse("Fw Fh X0=8 Y0=8 C0=32 K0=16 X1=64 Y1=64")
+            .unwrap()
+            .with_window(&d);
+        let cov = s.covered_below(6); // before X1
+        assert_eq!(cov[Dim::X as usize], 8);
+        assert_eq!(cov[Dim::C as usize], 32);
+        assert_eq!(cov[Dim::Fw as usize], 3);
+        let cov2 = s.covered_below(7); // before Y1
+        assert_eq!(cov2[Dim::X as usize], 64);
+    }
+
+    #[test]
+    fn notation_roundtrips() {
+        let d = dims();
+        let s = BlockingString::parse("Fw Fh X0=8 Y0=8 C0=8 K0=4 C1=32 K1=16 X1=64 Y1=64")
+            .unwrap()
+            .with_window(&d);
+        let text = s.notation();
+        let back = BlockingString::parse(&text).unwrap().with_window(&d);
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn fc_layers_omit_unit_dims() {
+        let d = LayerDims::fc(4096, 4096, 16);
+        let s = BlockingString::parse("Fw Fh C0=128 K0=128 B0=16 C1=4096 K1=4096")
+            .unwrap()
+            .with_window(&d);
+        s.validate(&d).unwrap();
+    }
+
+    #[test]
+    fn level0_tile_extraction() {
+        let d = dims();
+        let s = BlockingString::parse("Fw Fh X0=8 Y0=4 C0=8 K0=2 C1=32 K1=16 X1=64 Y1=64")
+            .unwrap()
+            .with_window(&d);
+        assert_eq!(s.level0_tile(&d), (8, 4, 8, 2));
+    }
+
+    #[test]
+    fn builder_matches_parse() {
+        let d = dims();
+        let mut b = StringBuilder::with_tile(&d, &[Dim::X, Dim::Y, Dim::C, Dim::K], &[8, 8, 8, 4]);
+        b.push(Dim::C, 32).push(Dim::K, 16).push(Dim::X, 64).push(Dim::Y, 64);
+        let s = b.build();
+        s.validate(&d).unwrap();
+        assert_eq!(
+            s.notation(),
+            "Fw Fh X0=8 Y0=8 C0=8 K0=4 C1=32 K1=16 X1=64 Y1=64"
+        );
+    }
+}

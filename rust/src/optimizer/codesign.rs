@@ -1,0 +1,141 @@
+//! Memory-hierarchy co-design (Sec. 5.2, Figs. 6 and 7).
+//!
+//! Jointly optimizes the blocking *and* the memory hierarchy: for each
+//! SRAM budget, the beam search runs against a [`BespokeTarget`] (every
+//! buffer gets a right-sized memory) and reports energy + area, producing
+//! the Fig. 7 energy/area trade-off curve and the Fig. 6 per-benchmark
+//! optimal-architecture energies normalized to DianNao.
+
+use super::beam::{optimize, BeamConfig};
+use super::targets::{BespokeTarget, Evaluator, FixedTarget};
+use crate::model::dims::LayerDims;
+use crate::model::hierarchy::Breakdown;
+
+/// One co-designed point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub budget_bytes: u64,
+    pub energy_pj: f64,
+    pub memory_pj: f64,
+    pub area_mm2: f64,
+    pub onchip_bytes: u64,
+    pub string: String,
+    pub breakdown: Breakdown,
+}
+
+/// Co-design a single layer under one SRAM budget.
+pub fn codesign_layer(
+    dims: &LayerDims,
+    budget_bytes: u64,
+    levels: usize,
+    cfg: &BeamConfig,
+) -> DesignPoint {
+    let target = BespokeTarget::new(budget_bytes);
+    let best = optimize(dims, &target, levels, cfg)
+        .into_iter()
+        .next()
+        .expect("search returned candidates");
+    let out = target.eval(&best.string, dims);
+    DesignPoint {
+        budget_bytes,
+        energy_pj: out.total_pj(),
+        memory_pj: out.memory_pj(),
+        area_mm2: out.area_mm2,
+        onchip_bytes: out.onchip_bytes,
+        string: best.string.notation(),
+        breakdown: out.breakdown,
+    }
+}
+
+/// Sweep SRAM budgets (Fig. 7's x axis): returns one design point per
+/// budget, each with the schedule re-optimized for that budget.
+pub fn sweep_budgets(
+    dims: &LayerDims,
+    budgets: &[u64],
+    levels: usize,
+    cfg: &BeamConfig,
+) -> Vec<DesignPoint> {
+    budgets
+        .iter()
+        .map(|&b| codesign_layer(dims, b, levels, cfg))
+        .collect()
+}
+
+/// DianNao reference energies for normalization (Figs. 5-7): the fixed
+/// DianNao hierarchy with (a) its baseline schedule and (b) the best
+/// schedule our optimizer finds for that fixed hierarchy.
+pub struct DiannaoReference {
+    pub baseline_pj: f64,
+    pub baseline_breakdown: Breakdown,
+    pub optimized_pj: f64,
+    pub optimized_breakdown: Breakdown,
+    pub optimized_string: String,
+}
+
+pub fn diannao_reference(dims: &LayerDims, cfg: &BeamConfig) -> DiannaoReference {
+    let target = FixedTarget::diannao();
+    let baseline = crate::baselines::diannao::baseline_schedule(dims);
+    let base_out = target.eval(&baseline, dims);
+    let best = optimize(dims, &target, 3, cfg)
+        .into_iter()
+        .next()
+        .expect("search returned candidates");
+    let opt_out = target.eval(&best.string, dims);
+    DiannaoReference {
+        baseline_pj: base_out.total_pj(),
+        baseline_breakdown: base_out.breakdown,
+        optimized_pj: opt_out.total_pj(),
+        optimized_breakdown: opt_out.breakdown,
+        optimized_string: best.string.notation(),
+    }
+}
+
+/// Standard Fig. 7 budget ladder: 64 KB .. 8 MB.
+pub fn fig7_budgets() -> Vec<u64> {
+    vec![
+        64 * 1024,
+        128 * 1024,
+        256 * 1024,
+        512 * 1024,
+        1024 * 1024,
+        2 * 1024 * 1024,
+        4 * 1024 * 1024,
+        8 * 1024 * 1024,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_sweep_energy_monotone_down() {
+        let d = LayerDims::conv(32, 32, 16, 16, 3, 3);
+        let cfg = BeamConfig::quick();
+        let pts = sweep_budgets(&d, &[32 * 1024, 512 * 1024], 2, &cfg);
+        assert_eq!(pts.len(), 2);
+        assert!(
+            pts[1].energy_pj <= pts[0].energy_pj * 1.001,
+            "more SRAM should not cost energy: {} -> {}",
+            pts[0].energy_pj,
+            pts[1].energy_pj
+        );
+        assert!(pts[1].area_mm2 >= pts[0].area_mm2 * 0.999);
+    }
+
+    #[test]
+    fn codesign_beats_fixed_diannao() {
+        let d = LayerDims::conv(32, 32, 16, 16, 3, 3);
+        let cfg = BeamConfig::quick();
+        let reference = diannao_reference(&d, &cfg);
+        let point = codesign_layer(&d, 1024 * 1024, 3, &cfg);
+        assert!(
+            point.energy_pj < reference.optimized_pj,
+            "co-design {} !< diannao-optimized {}",
+            point.energy_pj,
+            reference.optimized_pj
+        );
+        // and the optimizer improves on the DianNao pseudo-code schedule
+        assert!(reference.optimized_pj <= reference.baseline_pj);
+    }
+}

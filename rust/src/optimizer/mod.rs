@@ -1,0 +1,17 @@
+//! Schedule optimization (Sec. 3.5-3.6): candidate search over loop
+//! orders x divisor-lattice sizes, the paper's seeded iterative beam for
+//! deep hierarchies, evaluation targets (fixed hierarchies vs bespoke
+//! memory co-design), the Fig. 6/7 co-design sweeps, multi-layer
+//! flexible-memory optimization, and schedule export to the Pallas build.
+
+pub mod beam;
+pub mod codesign;
+pub mod multilayer;
+pub mod schedules;
+pub mod search;
+pub mod sizes;
+pub mod targets;
+
+pub use beam::{optimize, BeamConfig};
+pub use search::{search_exhaustive, search_orders, Candidate, Scored};
+pub use targets::{BespokeTarget, EvalOutcome, Evaluator, FixedTarget};

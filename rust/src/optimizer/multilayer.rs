@@ -1,0 +1,197 @@
+//! Multi-layer "flexible memory" optimization (Sec. 3.6).
+//!
+//! Real systems run many layers on one chip. The paper's two-step
+//! procedure: (1) per layer, record the ~10 most energy-efficient design
+//! points under the area budget; (2) find common design points across the
+//! per-layer sets that minimize *total* energy. We implement design points
+//! as memory-hierarchy shapes (level sizes, innermost first); a shared
+//! shape is scored by re-optimizing each layer's schedule against that
+//! fixed shared hierarchy.
+
+use super::beam::{optimize, BeamConfig};
+use super::targets::{BespokeTarget, FixedTarget};
+use crate::model::area::design_area_mm2;
+use crate::model::dims::LayerDims;
+use crate::model::hierarchy::{Datapath, Hierarchy};
+
+/// A candidate shared memory design: on-chip level sizes in bytes.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct MemoryShape {
+    pub level_bytes: Vec<u64>,
+}
+
+impl MemoryShape {
+    pub fn area_mm2(&self) -> f64 {
+        design_area_mm2(&self.level_bytes)
+    }
+
+    pub fn hierarchy(&self) -> Hierarchy {
+        Hierarchy::custom(&self.level_bytes)
+    }
+
+    /// Quantize buffer sizes up to the next power of two to make shapes
+    /// from different layers comparable/mergeable.
+    pub fn quantized(&self) -> MemoryShape {
+        MemoryShape {
+            level_bytes: self
+                .level_bytes
+                .iter()
+                .map(|&b| b.next_power_of_two().max(256))
+                .collect(),
+        }
+    }
+}
+
+/// Per-layer design point: a shape and the energy the layer achieves on it.
+#[derive(Debug, Clone)]
+pub struct LayerPoint {
+    pub shape: MemoryShape,
+    pub energy_pj: f64,
+    pub string: String,
+}
+
+/// Step 1: explore each layer separately with the bespoke co-design and
+/// keep its `keep` best design points under `area_budget_mm2`.
+pub fn per_layer_points(
+    dims: &LayerDims,
+    area_budget_mm2: f64,
+    levels: usize,
+    keep: usize,
+    cfg: &BeamConfig,
+) -> Vec<LayerPoint> {
+    // Sweep budgets; for each, derive the shape actually used.
+    let budgets = [
+        64 * 1024u64,
+        256 * 1024,
+        1024 * 1024,
+        4 * 1024 * 1024,
+        8 * 1024 * 1024,
+    ];
+    let mut points = Vec::new();
+    for &b in &budgets {
+        let target = BespokeTarget::new(b);
+        for scored in optimize(dims, &target, levels, cfg).into_iter().take(3) {
+            let (hier, _place, _prof) = target.design(&scored.string, dims);
+            let shape = MemoryShape {
+                level_bytes: hier.levels.iter().filter_map(|l| l.capacity).collect(),
+            }
+            .quantized();
+            if shape.area_mm2() <= area_budget_mm2 {
+                points.push(LayerPoint {
+                    shape,
+                    energy_pj: scored.energy_pj,
+                    string: scored.string.notation(),
+                });
+            }
+        }
+    }
+    points.sort_by(|a, b| a.energy_pj.partial_cmp(&b.energy_pj).unwrap());
+    points.dedup_by(|a, b| a.shape == b.shape);
+    points.truncate(keep);
+    points
+}
+
+/// Result of the shared-design search.
+#[derive(Debug, Clone)]
+pub struct SharedDesign {
+    pub shape: MemoryShape,
+    pub per_layer_pj: Vec<f64>,
+    pub total_pj: f64,
+    pub area_mm2: f64,
+}
+
+/// Step 2: score every candidate shape (union of the per-layer point
+/// shapes) across *all* layers — each layer's schedule re-optimized for
+/// the fixed shared hierarchy — and return the total-energy winner.
+pub fn shared_design(
+    layers: &[LayerDims],
+    area_budget_mm2: f64,
+    levels: usize,
+    cfg: &BeamConfig,
+) -> SharedDesign {
+    let mut shapes: Vec<MemoryShape> = Vec::new();
+    for l in layers {
+        for p in per_layer_points(l, area_budget_mm2, levels, 10, cfg) {
+            if !shapes.contains(&p.shape) {
+                shapes.push(p.shape);
+            }
+        }
+    }
+    assert!(!shapes.is_empty(), "no feasible shapes under area budget");
+
+    let mut best: Option<SharedDesign> = None;
+    for shape in shapes {
+        let hier = shape.hierarchy();
+        let target = FixedTarget {
+            hier,
+            dedicated: None,
+            datapath: Datapath::accel256(),
+        };
+        let per_layer: Vec<f64> = layers
+            .iter()
+            .map(|l| {
+                optimize(l, &target, levels, cfg)
+                    .first()
+                    .map(|s| s.energy_pj)
+                    .unwrap_or(f64::INFINITY)
+            })
+            .collect();
+        let total: f64 = per_layer.iter().sum();
+        if best.as_ref().map_or(true, |b| total < b.total_pj) {
+            best = Some(SharedDesign {
+                area_mm2: shape.area_mm2(),
+                shape,
+                per_layer_pj: per_layer,
+                total_pj: total,
+            });
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_layer_points_under_budget() {
+        let d = LayerDims::conv(32, 32, 16, 16, 3, 3);
+        let pts = per_layer_points(&d, 10.0, 2, 10, &BeamConfig::quick());
+        assert!(!pts.is_empty());
+        for p in &pts {
+            assert!(p.shape.area_mm2() <= 10.0);
+        }
+    }
+
+    #[test]
+    fn shared_design_covers_all_layers() {
+        let layers = vec![
+            LayerDims::conv(16, 16, 8, 8, 3, 3),
+            LayerDims::conv(8, 8, 16, 16, 3, 3),
+        ];
+        let shared = shared_design(&layers, 20.0, 2, &BeamConfig::quick());
+        assert_eq!(shared.per_layer_pj.len(), 2);
+        assert!(shared.total_pj.is_finite());
+        assert!(shared.area_mm2 <= 20.0);
+    }
+
+    #[test]
+    fn shared_no_better_than_sum_of_private() {
+        // A single shared hierarchy cannot beat giving each layer its own
+        // ideal memory: sanity lower bound.
+        let layers = vec![
+            LayerDims::conv(16, 16, 8, 8, 3, 3),
+            LayerDims::conv(8, 8, 16, 16, 3, 3),
+        ];
+        let cfg = BeamConfig::quick();
+        let shared = shared_design(&layers, 50.0, 2, &cfg);
+        let private_sum: f64 = layers
+            .iter()
+            .map(|l| {
+                let t = BespokeTarget::new(8 * 1024 * 1024);
+                optimize(l, &t, 2, &cfg)[0].energy_pj
+            })
+            .sum();
+        assert!(shared.total_pj >= private_sum * 0.99);
+    }
+}

@@ -1,0 +1,185 @@
+//! Schedule export: the bridge from the rust optimizer (L3) to the Pallas
+//! kernel build (L1).
+//!
+//! `make artifacts` runs `cnnblk optimize --emit-schedules`, which
+//! optimizes the end-to-end pipeline's layers and writes
+//! `python/compile/schedules.json`; `python/compile/aot.py` reads it and
+//! derives each layer's `pallas_call` grid/BlockSpec from the level-0 tile
+//! of the chosen blocking string — the paper's "integrate this into
+//! Halide" end state, with Pallas in Halide's role.
+
+use super::beam::{optimize, BeamConfig};
+use super::targets::BespokeTarget;
+use crate::model::dims::LayerDims;
+use crate::util::json::{self, Json};
+
+/// One exported layer schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSchedule {
+    pub name: String,
+    pub dims: LayerDims,
+    /// Level-0 tile (x0, y0, c0, k0) — the Pallas block shape.
+    pub tile: (u64, u64, u64, u64),
+    /// Full blocking string notation, for reporting/reproducibility.
+    pub string: String,
+    /// Model-predicted energy (pJ) on the bespoke 8 MB target.
+    pub energy_pj: f64,
+}
+
+/// The end-to-end pipeline layers ("AlexNet-mini", DESIGN.md §6): small
+/// enough for interpret-mode Pallas, structured like AlexNet's first
+/// three conv layers. Spatial dims chain exactly through 2x2 max-pools:
+/// 36² --conv5x5--> 32² --pool--> 16² --conv3x3--> 14² --pool--> 7²
+/// --conv3x3--> 5².
+pub fn e2e_layers() -> Vec<(String, LayerDims)> {
+    vec![
+        ("mini1".to_string(), LayerDims::conv(32, 32, 8, 16, 5, 5)),
+        ("mini2".to_string(), LayerDims::conv(14, 14, 16, 32, 3, 3)),
+        ("mini3".to_string(), LayerDims::conv(5, 5, 32, 32, 3, 3)),
+    ]
+}
+
+/// MXU-friendliness filter for TPU tiles (DESIGN.md §Hardware-Adaptation):
+/// prefer c0/k0 tiles that are multiples of 8 when the dims allow.
+fn mxu_friendly(tile: (u64, u64, u64, u64), dims: &LayerDims) -> bool {
+    let ok = |t: u64, ext: u64| ext < 8 || t % 8 == 0 || t == ext;
+    ok(tile.2, dims.c) && ok(tile.3, dims.k)
+}
+
+/// Optimize one layer and export its schedule.
+pub fn schedule_layer(name: &str, dims: &LayerDims, cfg: &BeamConfig) -> LayerSchedule {
+    let target = BespokeTarget::new(8 * 1024 * 1024);
+    let results = optimize(dims, &target, 3, cfg);
+    let best = results
+        .iter()
+        .find(|s| mxu_friendly(s.string.level0_tile(dims), dims))
+        .unwrap_or(&results[0]);
+    LayerSchedule {
+        name: name.to_string(),
+        dims: *dims,
+        tile: best.string.level0_tile(dims),
+        string: best.string.notation(),
+        energy_pj: best.energy_pj,
+    }
+}
+
+/// Serialize schedules to the JSON interchange format read by aot.py.
+pub fn to_json(schedules: &[LayerSchedule]) -> Json {
+    let mut root = Json::obj();
+    root.set("version", json::unum(1));
+    let layers: Vec<Json> = schedules
+        .iter()
+        .map(|s| {
+            let mut o = Json::obj();
+            o.set("name", json::s(&s.name));
+            let mut d = Json::obj();
+            d.set("x", json::unum(s.dims.x))
+                .set("y", json::unum(s.dims.y))
+                .set("c", json::unum(s.dims.c))
+                .set("k", json::unum(s.dims.k))
+                .set("fw", json::unum(s.dims.fw))
+                .set("fh", json::unum(s.dims.fh));
+            o.set("dims", d);
+            o.set(
+                "tile",
+                json::arr([
+                    json::unum(s.tile.0),
+                    json::unum(s.tile.1),
+                    json::unum(s.tile.2),
+                    json::unum(s.tile.3),
+                ]),
+            );
+            o.set("string", json::s(&s.string));
+            o.set("energy_pj", json::num(s.energy_pj));
+            o
+        })
+        .collect();
+    root.set("layers", Json::Arr(layers));
+    root
+}
+
+/// Parse schedules back (used by tests and by the coordinator to report
+/// the schedule compiled into each artifact).
+pub fn from_json(j: &Json) -> anyhow::Result<Vec<LayerSchedule>> {
+    let layers = j
+        .get("layers")
+        .and_then(|l| l.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("missing layers"))?;
+    layers
+        .iter()
+        .map(|o| {
+            let g = |k: &str| -> anyhow::Result<u64> {
+                o.get("dims")
+                    .and_then(|d| d.get(k))
+                    .and_then(|v| v.as_u64())
+                    .ok_or_else(|| anyhow::anyhow!("missing dims.{}", k))
+            };
+            let tile = o
+                .get("tile")
+                .and_then(|t| t.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("missing tile"))?;
+            let tv = |i: usize| -> anyhow::Result<u64> {
+                tile.get(i)
+                    .and_then(|v| v.as_u64())
+                    .ok_or_else(|| anyhow::anyhow!("bad tile[{}]", i))
+            };
+            Ok(LayerSchedule {
+                name: o
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string(),
+                dims: LayerDims::conv(g("x")?, g("y")?, g("c")?, g("k")?, g("fw")?, g("fh")?),
+                tile: (tv(0)?, tv(1)?, tv(2)?, tv(3)?),
+                string: o
+                    .get("string")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                energy_pj: o.get("energy_pj").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            })
+        })
+        .collect()
+}
+
+/// Optimize all e2e layers and write schedules.json.
+pub fn emit_schedules(path: &str, cfg: &BeamConfig) -> anyhow::Result<Vec<LayerSchedule>> {
+    let schedules: Vec<LayerSchedule> = e2e_layers()
+        .iter()
+        .map(|(name, dims)| schedule_layer(name, dims, cfg))
+        .collect();
+    std::fs::write(path, to_json(&schedules).pretty())?;
+    Ok(schedules)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_roundtrip_json() {
+        let cfg = BeamConfig::quick();
+        let (name, dims) = &e2e_layers()[2];
+        let s = schedule_layer(name, dims, &cfg);
+        let j = to_json(&[s.clone()]);
+        let text = j.pretty();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let back = from_json(&parsed).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].name, s.name);
+        assert_eq!(back[0].dims, s.dims);
+        assert_eq!(back[0].tile, s.tile);
+    }
+
+    #[test]
+    fn tiles_divide_dims() {
+        let cfg = BeamConfig::quick();
+        for (name, dims) in e2e_layers() {
+            let s = schedule_layer(&name, &dims, &cfg);
+            assert_eq!(dims.x % s.tile.0, 0, "{}: x tile", name);
+            assert_eq!(dims.y % s.tile.1, 0, "{}: y tile", name);
+            assert_eq!(dims.c % s.tile.2, 0, "{}: c tile", name);
+            assert_eq!(dims.k % s.tile.3, 0, "{}: k tile", name);
+        }
+    }
+}

@@ -1,0 +1,437 @@
+//! Schedule search: candidate orders, size optimization, and exhaustive
+//! enumeration (Sec. 3.5).
+//!
+//! A candidate is (loop order per level) x (per-dim divisor chains). For
+//! 2-level blockings the order space is enumerated outright (the paper's
+//! "~3000 strings") and each order's sizes are optimized by coordinate
+//! descent over the divisor lattice from several seeded starts; deeper
+//! hierarchies are grown level-by-level by the seeded beam in `beam.rs`,
+//! exactly mirroring the paper's iterative procedure.
+
+use super::sizes::choices_above;
+use super::targets::Evaluator;
+use crate::model::dims::{Dim, LayerDims};
+use crate::model::string::{BlockingString, Level};
+use crate::util::pool::par_map;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Max divisor choices per dim per level during size optimization.
+pub const DIVISOR_CAP: usize = 12;
+
+/// A structured candidate: per-level dim order + per-dim size chains.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    /// Dim visit order per level, innermost level first. All levels list
+    /// the same dim set (the active dims); a dim whose chain does not grow
+    /// at a level is simply skipped when the string is built.
+    pub order: Vec<Vec<Dim>>,
+    /// Per-dim monotone divisor chain, one entry per level, ending at the
+    /// dim's extent.
+    pub chain: BTreeMap<Dim, Vec<u64>>,
+}
+
+impl Candidate {
+    pub fn levels(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Materialize the blocking string (skipping no-op splits).
+    pub fn to_string_repr(&self, dims: &LayerDims) -> BlockingString {
+        let mut levels = vec![
+            Level { dim: Dim::Fw, range: dims.fw },
+            Level { dim: Dim::Fh, range: dims.fh },
+        ];
+        let mut covered: BTreeMap<Dim, u64> = BTreeMap::new();
+        for (l, order) in self.order.iter().enumerate() {
+            for &d in order {
+                let r = self.chain[&d][l];
+                let prev = covered.get(&d).copied().unwrap_or(1);
+                if r > prev {
+                    levels.push(Level { dim: d, range: r });
+                    covered.insert(d, r);
+                }
+            }
+        }
+        BlockingString::new(levels)
+    }
+}
+
+/// Scored candidate.
+#[derive(Debug, Clone)]
+pub struct Scored {
+    pub candidate: Candidate,
+    pub string: BlockingString,
+    pub energy_pj: f64,
+}
+
+/// The dims a layer actually blocks over (extent > 1), in canonical order.
+pub fn active_dims(dims: &LayerDims) -> Vec<Dim> {
+    Dim::SPLITTABLE
+        .iter()
+        .copied()
+        .filter(|&d| dims.extent(d) > 1)
+        .collect()
+}
+
+/// All permutations of a dim set (n <= 5 in practice).
+pub fn permutations(dims: &[Dim]) -> Vec<Vec<Dim>> {
+    if dims.is_empty() {
+        return vec![vec![]];
+    }
+    let mut out = Vec::new();
+    for (i, &d) in dims.iter().enumerate() {
+        let mut rest = dims.to_vec();
+        rest.remove(i);
+        for mut tail in permutations(&rest) {
+            let mut v = vec![d];
+            v.append(&mut tail);
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Initial geometric size chains: level l covers roughly extent^((l+1)/L),
+/// constrained to the divisor lattice (each entry divides the next).
+pub fn geometric_chain(extent: u64, levels: usize) -> Vec<u64> {
+    let mut chain = Vec::with_capacity(levels);
+    let mut prev = 1u64;
+    for l in 0..levels {
+        let v = if l + 1 == levels {
+            extent
+        } else {
+            let target = (extent as f64).powf((l + 1) as f64 / levels as f64).ln();
+            choices_above(extent, prev, DIVISOR_CAP)
+                .into_iter()
+                .min_by(|a, b| {
+                    let da = ((*a as f64).ln() - target).abs();
+                    let db = ((*b as f64).ln() - target).abs();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap_or(extent)
+        };
+        chain.push(v);
+        prev = v;
+    }
+    chain
+}
+
+/// Make a fresh candidate with the given per-level orders.
+pub fn seed_candidate(dims: &LayerDims, order: Vec<Vec<Dim>>) -> Candidate {
+    let levels = order.len();
+    let chain = active_dims(dims)
+        .into_iter()
+        .map(|d| (d, geometric_chain(dims.extent(d), levels)))
+        .collect();
+    Candidate { order, chain }
+}
+
+/// Coordinate descent over the divisor lattice: repeatedly sweep every
+/// (dim, level) coordinate, trying each legal divisor value, keeping the
+/// best. Converges in a few passes; `max_passes` bounds the work.
+pub fn descend<E: Evaluator>(
+    cand: &mut Candidate,
+    dims: &LayerDims,
+    target: &E,
+    max_passes: usize,
+) -> f64 {
+    let score = |c: &Candidate| -> f64 {
+        let s = c.to_string_repr(dims);
+        debug_assert!(s.validate(dims).is_ok(), "invalid candidate string {}", s);
+        target.objective(&s, dims)
+    };
+    let mut best = score(cand);
+    let levels = cand.levels();
+    for _pass in 0..max_passes {
+        let mut improved = false;
+        for d in active_dims(dims) {
+            for l in 0..levels.saturating_sub(1) {
+                let lo = if l == 0 { 1 } else { cand.chain[&d][l - 1] };
+                let hi = cand.chain[&d][l + 1];
+                let mut held = cand.chain[&d][l]; // best value so far
+                for v in choices_above(dims.extent(d), lo, DIVISOR_CAP) {
+                    if v == held || hi % v != 0 {
+                        continue;
+                    }
+                    cand.chain.get_mut(&d).unwrap()[l] = v;
+                    let e = score(cand);
+                    if e < best {
+                        best = e;
+                        held = v;
+                        improved = true;
+                    } else {
+                        cand.chain.get_mut(&d).unwrap()[l] = held;
+                    }
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    best
+}
+
+/// Optimize every 2-level order with coordinate descent; return the best
+/// `keep` candidates, sorted by energy (the paper's 2-level base search).
+pub fn search_orders<E: Evaluator>(
+    dims: &LayerDims,
+    target: &E,
+    levels: usize,
+    keep: usize,
+) -> Vec<Scored> {
+    let act = active_dims(dims);
+    let perms = permutations(&act);
+    // Level-0 order matters most; outer levels reuse a rotation set rather
+    // than the full cross product to keep 2-level search ~O(paper's 3000).
+    let mut orders: Vec<Vec<Vec<Dim>>> = Vec::new();
+    if levels == 1 {
+        for p in &perms {
+            orders.push(vec![p.clone()]);
+        }
+    } else {
+        for p0 in &perms {
+            for p1 in &perms {
+                let mut o = vec![p0.clone()];
+                for _ in 1..levels {
+                    o.push(p1.clone());
+                }
+                orders.push(o);
+            }
+        }
+    }
+    let mut scored: Vec<Scored> = par_map(&orders, |order| {
+        let mut cand = seed_candidate(dims, order.clone());
+        let energy = descend(&mut cand, dims, target, 3);
+        let string = cand.to_string_repr(dims);
+        Scored {
+            candidate: cand,
+            string,
+            energy_pj: energy,
+        }
+    });
+    scored.sort_by(|a, b| a.energy_pj.partial_cmp(&b.energy_pj).unwrap());
+    scored.truncate(keep);
+    scored
+}
+
+/// Randomly perturb a candidate (Sec. 3.5: "randomly perturbing the loop
+/// sizes and exchanging some adjacent loops").
+pub fn perturb(cand: &Candidate, dims: &LayerDims, rng: &mut Rng) -> Candidate {
+    let mut c = cand.clone();
+    let act = active_dims(dims);
+    // size jiggle: move one chain entry to a neighboring divisor
+    for _ in 0..2 {
+        let d = *rng.pick(&act);
+        let levels = c.levels();
+        if levels < 2 {
+            break;
+        }
+        let l = rng.range(0, levels - 2);
+        let lo = if l == 0 { 1 } else { c.chain[&d][l - 1] };
+        let hi = c.chain[&d][l + 1];
+        let legal: Vec<u64> = choices_above(dims.extent(d), lo, DIVISOR_CAP)
+            .into_iter()
+            .filter(|&v| hi % v == 0)
+            .collect();
+        if !legal.is_empty() {
+            c.chain.get_mut(&d).unwrap()[l] = *rng.pick(&legal);
+        }
+    }
+    // adjacent swap in a random level's order
+    let l = rng.range(0, c.order.len() - 1);
+    if c.order[l].len() >= 2 {
+        let i = rng.range(0, c.order[l].len() - 2);
+        c.order[l].swap(i, i + 1);
+    }
+    c
+}
+
+/// Fully exhaustive search (orders x complete divisor chains) for small
+/// problems; panics if the estimated candidate count exceeds `limit`.
+/// Used to validate the heuristic search in tests (the paper's "24 hours
+/// on a Xeon" mode, shrunk to toy sizes).
+pub fn search_exhaustive<E: Evaluator>(
+    dims: &LayerDims,
+    target: &E,
+    levels: usize,
+    limit: usize,
+) -> Scored {
+    let act = active_dims(dims);
+    let perms = permutations(&act);
+    let chain_sets: Vec<(Dim, Vec<Vec<u64>>)> = act
+        .iter()
+        .map(|&d| (d, super::sizes::chains(dims.extent(d), levels, DIVISOR_CAP)))
+        .collect();
+    let mut count = perms.len().pow(levels as u32);
+    for (_, cs) in &chain_sets {
+        count = count.saturating_mul(cs.len());
+    }
+    assert!(
+        count <= limit,
+        "exhaustive space {} exceeds limit {}",
+        count,
+        limit
+    );
+
+    // enumerate chains via odometer
+    let mut best: Option<Scored> = None;
+    let mut chain_idx = vec![0usize; chain_sets.len()];
+    loop {
+        let chain: BTreeMap<Dim, Vec<u64>> = chain_sets
+            .iter()
+            .zip(&chain_idx)
+            .map(|((d, cs), &i)| (*d, cs[i].clone()))
+            .collect();
+        // all order combinations
+        let mut order_idx = vec![0usize; levels];
+        loop {
+            let order: Vec<Vec<Dim>> = order_idx.iter().map(|&i| perms[i].clone()).collect();
+            let cand = Candidate {
+                order,
+                chain: chain.clone(),
+            };
+            let s = cand.to_string_repr(dims);
+            if s.validate(dims).is_ok() {
+                let e = target.objective(&s, dims);
+                if best.as_ref().map_or(true, |b| e < b.energy_pj) {
+                    best = Some(Scored {
+                        candidate: cand,
+                        string: s,
+                        energy_pj: e,
+                    });
+                }
+            }
+            // advance orders
+            let mut c = 0;
+            loop {
+                if c == levels {
+                    break;
+                }
+                order_idx[c] += 1;
+                if order_idx[c] < perms.len() {
+                    break;
+                }
+                order_idx[c] = 0;
+                c += 1;
+            }
+            if c == levels {
+                break;
+            }
+        }
+        // advance chains
+        let mut c = 0;
+        loop {
+            if c == chain_idx.len() {
+                break;
+            }
+            chain_idx[c] += 1;
+            if chain_idx[c] < chain_sets[c].1.len() {
+                break;
+            }
+            chain_idx[c] = 0;
+            c += 1;
+        }
+        if c == chain_idx.len() {
+            break;
+        }
+    }
+    best.expect("non-empty search space")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::targets::{BespokeTarget, FixedTarget};
+
+    fn small() -> LayerDims {
+        LayerDims::conv(16, 16, 8, 8, 3, 3)
+    }
+
+    #[test]
+    fn permutations_count() {
+        assert_eq!(permutations(&[Dim::X, Dim::Y]).len(), 2);
+        assert_eq!(permutations(&[Dim::X, Dim::Y, Dim::C, Dim::K]).len(), 24);
+    }
+
+    #[test]
+    fn geometric_chain_valid() {
+        let c = geometric_chain(256, 3);
+        assert_eq!(*c.last().unwrap(), 256);
+        for w in c.windows(2) {
+            assert!(w[1] % w[0] == 0 && w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn candidates_build_valid_strings() {
+        let d = small();
+        let act = active_dims(&d);
+        for order in permutations(&act).into_iter().take(6) {
+            let cand = seed_candidate(&d, vec![order.clone(), order.clone()]);
+            let s = cand.to_string_repr(&d);
+            s.validate(&d).unwrap_or_else(|e| panic!("invalid: {} ({})", s, e));
+        }
+    }
+
+    #[test]
+    fn descent_improves_or_equal() {
+        let d = small();
+        let t = FixedTarget::diannao();
+        let act = active_dims(&d);
+        let order = permutations(&act)[0].clone();
+        let mut cand = seed_candidate(&d, vec![order.clone(), order]);
+        let s0 = cand.to_string_repr(&d);
+        let before = t.objective(&s0, &d);
+        let after = descend(&mut cand, &d, &t, 3);
+        assert!(after <= before);
+    }
+
+    #[test]
+    fn search_orders_sorted_and_valid() {
+        let d = small();
+        let t = BespokeTarget::new(256 * 1024);
+        let top = search_orders(&d, &t, 2, 16);
+        assert!(!top.is_empty());
+        for w in top.windows(2) {
+            assert!(w[0].energy_pj <= w[1].energy_pj);
+        }
+        for s in &top {
+            s.string.validate(&d).unwrap();
+        }
+    }
+
+    #[test]
+    fn heuristic_close_to_exhaustive_tiny() {
+        // Tiny problem where full enumeration is feasible; heuristic must
+        // land within 10% of the global optimum (paper reports 8%).
+        let d = LayerDims::conv(8, 8, 4, 4, 3, 3);
+        let t = BespokeTarget::new(32 * 1024);
+        let exact = search_exhaustive(&d, &t, 2, 3_000_000);
+        let heur = &search_orders(&d, &t, 2, 8)[0];
+        let gap = heur.energy_pj / exact.energy_pj;
+        assert!(
+            gap <= 1.10,
+            "heuristic {} vs exhaustive {} (gap {:.3})",
+            heur.energy_pj,
+            exact.energy_pj,
+            gap
+        );
+    }
+
+    #[test]
+    fn perturb_keeps_validity() {
+        let d = small();
+        let act = active_dims(&d);
+        let order = permutations(&act)[3].clone();
+        let cand = seed_candidate(&d, vec![order.clone(), order]);
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let p = perturb(&cand, &d, &mut rng);
+            let s = p.to_string_repr(&d);
+            s.validate(&d)
+                .unwrap_or_else(|e| panic!("perturbed invalid: {} ({})", s, e));
+        }
+    }
+}

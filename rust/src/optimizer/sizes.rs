@@ -1,0 +1,127 @@
+//! Divisor utilities for loop-split size enumeration.
+//!
+//! Split sizes must divide the enclosing range (Sec. 3.1's blocking
+//! notation increments loop variables by the inner range), so the size
+//! search space per dim is the divisor lattice of its extent. Extents in
+//! real networks are small and smooth (Table 4), so plain trial division
+//! is plenty fast; a cap keeps pathological extents (large primes) from
+//! blowing up the candidate count.
+
+/// All divisors of `n`, ascending.
+pub fn divisors(n: u64) -> Vec<u64> {
+    assert!(n >= 1);
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            small.push(i);
+            if i != n / i {
+                large.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Divisors of `n`, thinned to at most `cap` geometrically-spread values
+/// (always keeping 1 and n). The optimizer's size search uses this to keep
+/// per-dim choice counts bounded on extents like 500 = 2^2*5^3.
+pub fn divisors_capped(n: u64, cap: usize) -> Vec<u64> {
+    let all = divisors(n);
+    if all.len() <= cap || cap < 2 {
+        return all;
+    }
+    let mut out = Vec::with_capacity(cap);
+    for j in 0..cap {
+        let idx = (j as f64 / (cap - 1) as f64 * (all.len() - 1) as f64).round() as usize;
+        if out.last() != Some(&all[idx]) {
+            out.push(all[idx]);
+        }
+    }
+    out
+}
+
+/// Divisors of `extent` that are multiples of `lo` (the already-covered
+/// inner range): the legal choices for the next split level.
+pub fn choices_above(extent: u64, lo: u64, cap: usize) -> Vec<u64> {
+    divisors_capped(extent, cap)
+        .into_iter()
+        .filter(|&d| d >= lo && d % lo == 0)
+        .collect()
+}
+
+/// All monotone divisor chains `d_0 | d_1 | ... | d_{L-1} = extent` of
+/// length `levels` (chains may repeat values; repeats mean "this dim does
+/// not advance at that level"). Used by the exhaustive search on small
+/// problems.
+pub fn chains(extent: u64, levels: usize, cap: usize) -> Vec<Vec<u64>> {
+    fn rec(extent: u64, lo: u64, left: usize, cap: usize, acc: &mut Vec<u64>, out: &mut Vec<Vec<u64>>) {
+        if left == 1 {
+            acc.push(extent);
+            out.push(acc.clone());
+            acc.pop();
+            return;
+        }
+        for d in choices_above(extent, lo, cap) {
+            acc.push(d);
+            rec(extent, d, left - 1, cap, acc, out);
+            acc.pop();
+        }
+    }
+    let mut out = Vec::new();
+    let mut acc = Vec::new();
+    rec(extent, 1, levels, cap, &mut acc, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(256).len(), 9);
+        assert_eq!(divisors(97), vec![1, 97]); // prime
+    }
+
+    #[test]
+    fn capped_keeps_ends() {
+        let d = divisors_capped(500, 6);
+        assert!(d.len() <= 6);
+        assert_eq!(*d.first().unwrap(), 1);
+        assert_eq!(*d.last().unwrap(), 500);
+        for w in d.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn choices_above_filters() {
+        let c = choices_above(64, 8, 16);
+        assert_eq!(c, vec![8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn chains_end_at_extent_and_divide() {
+        for ch in chains(16, 3, 16) {
+            assert_eq!(ch.len(), 3);
+            assert_eq!(*ch.last().unwrap(), 16);
+            for w in ch.windows(2) {
+                assert_eq!(w[1] % w[0], 0);
+            }
+        }
+        // chain count for 16 (divisors 1,2,4,8,16), L=2: all d|16 -> 5
+        assert_eq!(chains(16, 2, 16).len(), 5);
+    }
+
+    #[test]
+    fn chains_level1_is_trivial() {
+        assert_eq!(chains(12, 1, 16), vec![vec![12]]);
+    }
+}

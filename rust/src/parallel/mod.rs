@@ -1,0 +1,6 @@
+//! Coarse-grain parallelism model (Sec. 3.3 / Sec. 5.3): K vs XY
+//! partitioning, broadcast cost, and inter-layer shuffle energy.
+
+pub mod partition;
+
+pub use partition::{evaluate_multicore, MulticoreBreakdown, PartitionScheme};

@@ -1,0 +1,294 @@
+//! Coarse-grain multicore partitioning (Sec. 3.3, Fig. 9).
+//!
+//! Unrolling an outer loop across S cores physically partitions some
+//! buffers and turns the refetched tensor's fetches into a broadcast:
+//!
+//! * **K partitioning** — each core owns a K/S slice of the kernels: the
+//!   last-level KB and OB are split S ways (cheaper per access), while the
+//!   input must be *broadcast* to every core. The broadcast's energy is
+//!   modeled (Sec. 3.4) as one access to a memory the size of the total
+//!   on-chip SRAM — the data must travel the whole die.
+//! * **XY partitioning** — each core owns an image slice: IB and OB are
+//!   split, the kernels are broadcast. One broadcast serves all S cores'
+//!   lockstep demand, so shared-buffer accesses scale as 1/S.
+//!
+//! The paper's takeaway reproduces directly: share the *large* buffer
+//! (for Conv1, the last-level KB) so the unavoidable broadcast distance is
+//! one the data had to travel anyway, and let the small buffers shrink
+//! per-core.
+
+use crate::model::access::AccessProfile;
+use crate::model::buffers::Tensor;
+use crate::model::dims::LayerDims;
+use crate::model::energy::{best_access_energy_pj, broadcast_energy_pj, DRAM_PJ, MAC_PJ};
+use crate::model::hierarchy::{Datapath, OperandMode};
+use crate::model::string::BlockingString;
+use crate::optimizer::targets::BespokeTarget;
+
+/// Which loop family is unrolled across the cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionScheme {
+    /// Kernels split per core; input broadcast (shared IB).
+    KPartition,
+    /// Image split per core; kernels broadcast (shared KB).
+    XYPartition,
+}
+
+impl PartitionScheme {
+    pub fn name(self) -> &'static str {
+        match self {
+            PartitionScheme::KPartition => "shared-IB (K part.)",
+            PartitionScheme::XYPartition => "shared-KB (XY part.)",
+        }
+    }
+}
+
+/// Fig. 9's energy components.
+#[derive(Debug, Clone)]
+pub struct MulticoreBreakdown {
+    pub cores: u64,
+    pub scheme: PartitionScheme,
+    /// Total energy spent inside the cores (inner buffers + operands).
+    pub private_pj: f64,
+    pub ll_ib_pj: f64,
+    pub ll_kb_pj: f64,
+    pub ll_ob_pj: f64,
+    pub dram_pj: f64,
+    /// Restoring the memory layout after the layer completes.
+    pub shuffle_pj: f64,
+    pub mac_pj: f64,
+}
+
+impl MulticoreBreakdown {
+    pub fn memory_pj(&self) -> f64 {
+        self.private_pj
+            + self.ll_ib_pj
+            + self.ll_kb_pj
+            + self.ll_ob_pj
+            + self.dram_pj
+            + self.shuffle_pj
+    }
+
+    pub fn total_pj(&self) -> f64 {
+        self.memory_pj() + self.mac_pj
+    }
+
+    /// Energy per MAC (the Fig. 9 y-axis, in pJ/op).
+    pub fn pj_per_mac(&self, dims: &LayerDims) -> f64 {
+        self.total_pj() / dims.macs() as f64
+    }
+}
+
+/// Split a profile's buffers into (private inner chain, last-level buffer)
+/// per tensor, considering only on-chip buffers (those the bespoke design
+/// kept under budget).
+struct TensorSplit {
+    private_reads_pj: f64,
+    ll_reads: f64,
+    ll_bytes: u64,
+    dram_reads: f64,
+}
+
+fn split_tensor(
+    prof: &AccessProfile,
+    t: Tensor,
+    onchip: &dyn Fn(u64) -> bool,
+    dp: &Datapath,
+) -> TensorSplit {
+    let chain = prof.of(t);
+    let onchip_idxs: Vec<usize> = (0..chain.len())
+        .filter(|&j| onchip(chain[j].buffer.size_elems * 2))
+        .collect();
+    let mut private_pj = 0.0;
+    let mut ll_reads = 0.0;
+    let mut ll_bytes = 0;
+    let mut dram_reads;
+    // operand traffic hits the innermost on-chip buffer (private)
+    let macs = prof.macs as f64;
+    let operand = match t {
+        Tensor::Input => macs / dp.k_par as f64,
+        Tensor::Kernel => macs,
+        Tensor::Output => 2.0 * macs / dp.c_par as f64,
+    };
+    match onchip_idxs.split_last() {
+        Some((&last, inner)) => {
+            let inner_home_bytes = chain[*inner.first().unwrap_or(&last)].buffer.size_elems * 2;
+            private_pj += operand * best_access_energy_pj(inner_home_bytes.max(256));
+            for &j in inner {
+                let b = &chain[j];
+                private_pj += b.reads * best_access_energy_pj(b.buffer.size_elems * 2);
+            }
+            ll_reads = chain[last].reads;
+            ll_bytes = chain[last].buffer.size_elems * 2;
+            dram_reads = chain[last].fill_elems;
+        }
+        None => {
+            // nothing on chip: operands stream through a minimal staging
+            // buffer (2 KB equivalent); the element stream itself is the
+            // DRAM terminal traffic.
+            private_pj += operand * best_access_energy_pj(2 * 1024);
+            dram_reads = prof.dram_terminal(t);
+        }
+    }
+    // buffers over budget (off-chip) add their reads to DRAM
+    for (j, b) in chain.iter().enumerate() {
+        if !onchip_idxs.contains(&j) {
+            dram_reads += b.reads;
+        }
+    }
+    TensorSplit {
+        private_reads_pj: private_pj,
+        ll_reads,
+        ll_bytes,
+        dram_reads,
+    }
+}
+
+/// Evaluate one (schedule, cores, scheme) point for Fig. 9.
+pub fn evaluate_multicore(
+    string: &BlockingString,
+    dims: &LayerDims,
+    cores: u64,
+    scheme: PartitionScheme,
+    sram_budget_bytes: u64,
+) -> MulticoreBreakdown {
+    assert!(cores.is_power_of_two() && cores >= 1);
+    let target = BespokeTarget::new(sram_budget_bytes);
+    let (hier, _placement, prof) = target.design(string, dims);
+    let dp = Datapath::accel256();
+    debug_assert_eq!(dp.mode, OperandMode::InnermostBuffer);
+
+    // which buffer sizes made it on chip in the bespoke design
+    let onchip_caps: Vec<u64> = hier.levels.iter().filter_map(|l| l.capacity).collect();
+    let onchip = |bytes: u64| onchip_caps.contains(&bytes);
+    let total_sram: u64 = onchip_caps.iter().sum();
+
+    let i = split_tensor(&prof, Tensor::Input, &onchip, &dp);
+    let k = split_tensor(&prof, Tensor::Kernel, &onchip, &dp);
+    let o = split_tensor(&prof, Tensor::Output, &onchip, &dp);
+
+    let s = cores as f64;
+    let bcast = if cores > 1 {
+        broadcast_energy_pj(total_sram)
+    } else {
+        0.0
+    };
+    let part = |bytes: u64| best_access_energy_pj((bytes / cores).max(256));
+    // Sharing a buffer means every fetch travels the whole die. If the
+    // shared buffer is the *large* one, its own access energy already
+    // pays that distance ("the broadcast is essentially free", Sec. 5.3);
+    // sharing a small buffer inflates each access to full-die cost.
+    let shared = |bytes: u64| best_access_energy_pj(bytes.max(256)).max(bcast);
+
+    let (ll_ib, ll_kb, ll_ob, shuffle) = match scheme {
+        PartitionScheme::KPartition => {
+            // IB shared+broadcast (one fetch feeds all cores), KB/OB split.
+            let ib = (i.ll_reads / s) * shared(i.ll_bytes);
+            let kb = k.ll_reads * part(k.ll_bytes);
+            let ob = o.ll_reads * part(o.ll_bytes);
+            // outputs end up K-sliced across cores; the next layer needs
+            // them as interleaved channels everywhere: all-to-all shuffle
+            // at broadcast distance.
+            let sh = dims.output_elems() as f64 * bcast;
+            (ib, kb, ob, sh)
+        }
+        PartitionScheme::XYPartition => {
+            let kb = (k.ll_reads / s) * shared(k.ll_bytes);
+            let ib = i.ll_reads * part(i.ll_bytes);
+            let ob = o.ll_reads * part(o.ll_bytes);
+            // outputs stay local if the next layer partitions the same
+            // way: local re-layout within each core's slice.
+            let sh = dims.output_elems() as f64 * part(o.ll_bytes.max(256));
+            (ib, kb, ob, sh)
+        }
+    };
+
+    let dram_pj = (i.dram_reads + k.dram_reads + o.dram_reads
+        + prof.dram_output_writes) * DRAM_PJ;
+
+    MulticoreBreakdown {
+        cores,
+        scheme,
+        private_pj: i.private_reads_pj + k.private_reads_pj + o.private_reads_pj,
+        ll_ib_pj: ll_ib,
+        ll_kb_pj: ll_kb,
+        ll_ob_pj: ll_ob,
+        dram_pj,
+        shuffle_pj: shuffle,
+        mac_pj: prof.macs as f64 * MAC_PJ,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (LayerDims, BlockingString) {
+        let d = LayerDims::conv(64, 64, 32, 32, 3, 3);
+        let s = BlockingString::parse("Fw Fh X0=8 Y0=8 C0=8 K0=8 C1=32 K1=32 X1=64 Y1=64")
+            .unwrap()
+            .with_window(&d);
+        s.validate(&d).unwrap();
+        (d, s)
+    }
+
+    #[test]
+    fn single_core_schemes_agree_on_private() {
+        let (d, s) = setup();
+        let a = evaluate_multicore(&s, &d, 1, PartitionScheme::KPartition, 8 << 20);
+        let b = evaluate_multicore(&s, &d, 1, PartitionScheme::XYPartition, 8 << 20);
+        assert_eq!(a.private_pj, b.private_pj);
+        assert_eq!(a.dram_pj, b.dram_pj);
+    }
+
+    #[test]
+    fn sharing_the_large_buffer_wins() {
+        // Make KB the dominant buffer (large C*K, small image): sharing KB
+        // (XY partitioning) must beat partitioning it at 8 cores.
+        let d = LayerDims::conv(16, 16, 64, 128, 3, 3);
+        let s = BlockingString::parse("Fw Fh X0=4 Y0=4 C0=16 K0=16 C1=64 K1=128 X1=16 Y1=16")
+            .unwrap()
+            .with_window(&d);
+        s.validate(&d).unwrap();
+        let xy = evaluate_multicore(&s, &d, 8, PartitionScheme::XYPartition, 8 << 20);
+        let kp = evaluate_multicore(&s, &d, 8, PartitionScheme::KPartition, 8 << 20);
+        assert!(
+            xy.memory_pj() < kp.memory_pj(),
+            "shared-KB {} !< shared-IB {}",
+            xy.memory_pj(),
+            kp.memory_pj()
+        );
+    }
+
+    #[test]
+    fn shared_large_buffer_scales_down_with_cores() {
+        let d = LayerDims::conv(16, 16, 64, 128, 3, 3);
+        let s = BlockingString::parse("Fw Fh X0=4 Y0=4 C0=16 K0=16 C1=64 K1=128 X1=16 Y1=16")
+            .unwrap()
+            .with_window(&d);
+        s.validate(&d).unwrap();
+        let e1 = evaluate_multicore(&s, &d, 1, PartitionScheme::XYPartition, 8 << 20);
+        let e8 = evaluate_multicore(&s, &d, 8, PartitionScheme::XYPartition, 8 << 20);
+        assert!(
+            e8.pj_per_mac(&d) <= e1.pj_per_mac(&d) * 1.05,
+            "8-core {} should not exceed 1-core {} pJ/op",
+            e8.pj_per_mac(&d),
+            e1.pj_per_mac(&d)
+        );
+        // the shared KB term itself must shrink
+        assert!(e8.ll_kb_pj < e1.ll_kb_pj);
+    }
+
+    #[test]
+    fn breakdown_components_positive() {
+        let (d, s) = setup();
+        for scheme in [PartitionScheme::KPartition, PartitionScheme::XYPartition] {
+            for cores in [1, 2, 4, 8] {
+                let bd = evaluate_multicore(&s, &d, cores, scheme, 8 << 20);
+                assert!(bd.total_pj() > 0.0);
+                assert!(bd.memory_pj() >= bd.private_pj);
+                assert!(bd.pj_per_mac(&d) > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! PJRT engine: compile HLO text once, execute many times.
+
+use super::manifest::ArtifactSpec;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Owns the PJRT client. One per process (CPU client spawns its own
+/// thread pool). Not Send: create it on the thread that executes.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {:?}", e))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path, spec: &ArtifactSpec) -> Result<Module> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {:?}", path.display(), e))
+            .with_context(|| "HLO text load (run `make artifacts`?)")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {:?}", path.display(), e))?;
+        Ok(Module {
+            exe,
+            spec: spec.clone(),
+        })
+    }
+}
+
+/// A compiled executable + its shape contract.
+pub struct Module {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl Module {
+    /// Execute with f32 inputs (row-major, shapes per the manifest spec).
+    /// Returns the flattened f32 output.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            let want = self.spec.input_len(i);
+            if data.len() != want {
+                return Err(anyhow!(
+                    "{}: input {} has {} elements, expected {}",
+                    self.spec.name,
+                    i,
+                    data.len(),
+                    want
+                ));
+            }
+            let dims: Vec<i64> = self.spec.inputs[i].iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {}: {:?}", i, e))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {:?}", self.spec.name, e))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {:?}", e))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("to_tuple1: {:?}", e))?;
+        let values = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec<f32>: {:?}", e))?;
+        if values.len() != self.spec.output_len() {
+            return Err(anyhow!(
+                "{}: output has {} elements, expected {}",
+                self.spec.name,
+                values.len(),
+                self.spec.output_len()
+            ));
+        }
+        Ok(values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Golden, Manifest};
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn ready() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn quickstart_matches_native_conv() {
+        if !ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let module = engine
+            .load(&m.hlo_path("quickstart"), m.spec("quickstart").unwrap())
+            .unwrap();
+        // deterministic pseudo-random inputs
+        let mut rng = crate::util::rng::Rng::new(77);
+        let x: Vec<f32> = (0..4 * 10 * 10).map(|_| rng.f64() as f32 - 0.5).collect();
+        let w: Vec<f32> = (0..8 * 4 * 3 * 3).map(|_| rng.f64() as f32 - 0.5).collect();
+        let got = module.run_f32(&[&x, &w]).unwrap();
+        let want = crate::coordinator::naive_conv::conv_valid(&x, (4, 10, 10), &w, (8, 4, 3, 3));
+        assert_eq!(got.len(), want.len());
+        for (g, wv) in got.iter().zip(&want) {
+            assert!((g - wv).abs() < 1e-4, "PJRT {} vs native {}", g, wv);
+        }
+    }
+
+    #[test]
+    fn pipeline_reproduces_golden() {
+        if !ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let g = Golden::load(&artifacts_dir()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let module = engine
+            .load(
+                &m.hlo_path("alexnet_mini_b1"),
+                m.spec("alexnet_mini_b1").unwrap(),
+            )
+            .unwrap();
+        let got = module.run_f32(&[&g.input]).unwrap();
+        assert_eq!(got.len(), g.output.len());
+        let max_err = got
+            .iter()
+            .zip(&g.output)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "golden mismatch: max err {}", max_err);
+    }
+
+    #[test]
+    fn shape_errors_are_caught() {
+        if !ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let module = engine
+            .load(&m.hlo_path("quickstart"), m.spec("quickstart").unwrap())
+            .unwrap();
+        let too_short = vec![0f32; 7];
+        let w = vec![0f32; 8 * 4 * 3 * 3];
+        assert!(module.run_f32(&[&too_short, &w]).is_err());
+        assert!(module.run_f32(&[&w]).is_err());
+    }
+}

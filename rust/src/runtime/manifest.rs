@@ -1,0 +1,216 @@
+//! Artifact manifest (written by aot.py): shapes per artifact plus the
+//! schedules compiled into each kernel, so the coordinator can report the
+//! blocking it is actually running.
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Input shapes (row-major dims), all f32.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shape.
+    pub output: Vec<usize>,
+}
+
+impl ArtifactSpec {
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Blocking-string notation per pipeline layer (from schedules.json).
+    pub layer_strings: Vec<String>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    // ["f32", [d0, d1, ...]]
+    let dims = j
+        .idx(1)
+        .and_then(|d| d.as_arr())
+        .ok_or_else(|| anyhow!("bad shape spec"))?;
+    dims.iter()
+        .map(|v| {
+            v.as_u64()
+                .map(|u| u as usize)
+                .ok_or_else(|| anyhow!("bad dim"))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = parse(&text).context("parsing manifest.json")?;
+        let arts = j
+            .get("artifacts")
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = BTreeMap::new();
+        if let Json::Obj(m) = arts {
+            for (name, spec) in m {
+                let inputs = spec
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("{}: missing inputs", name))?
+                    .iter()
+                    .map(shape_of)
+                    .collect::<Result<Vec<_>>>()?;
+                let output = shape_of(
+                    spec.get("output")
+                        .ok_or_else(|| anyhow!("{}: missing output", name))?,
+                )?;
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        name: name.clone(),
+                        inputs,
+                        output,
+                    },
+                );
+            }
+        }
+        let layer_strings = j
+            .get("schedules")
+            .and_then(|s| s.as_arr())
+            .map(|layers| {
+                layers
+                    .iter()
+                    .map(|l| {
+                        l.get("string")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("")
+                            .to_string()
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            layer_strings,
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{}' not in manifest", name))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{}.hlo.txt", name))
+    }
+
+    /// The compiled pipeline batch sizes, ascending.
+    pub fn batch_ladder(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix("alexnet_mini_b"))
+            .filter_map(|b| b.parse().ok())
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// Load the golden input/output pair exported by aot.py.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub input_shape: Vec<usize>,
+    pub input: Vec<f32>,
+    pub output_shape: Vec<usize>,
+    pub output: Vec<f32>,
+}
+
+impl Golden {
+    pub fn load(dir: &Path) -> Result<Golden> {
+        let text = std::fs::read_to_string(dir.join("golden.json"))
+            .context("reading golden.json (run `make artifacts`)")?;
+        let j = parse(&text).context("parsing golden.json")?;
+        let floats = |key: &str| -> Result<Vec<f32>> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("golden missing {}", key))?
+                .iter()
+                .map(|v| v.as_f64().map(|f| f as f32).ok_or_else(|| anyhow!("bad f")))
+                .collect()
+        };
+        let shape = |key: &str| -> Result<Vec<usize>> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("golden missing {}", key))?
+                .iter()
+                .map(|v| v.as_u64().map(|u| u as usize).ok_or_else(|| anyhow!("bad dim")))
+                .collect()
+        };
+        Ok(Golden {
+            input_shape: shape("input_shape")?,
+            input: floats("input")?,
+            output_shape: shape("output_shape")?,
+            output: floats("output")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_manifest_when_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.spec("quickstart").is_ok());
+        let qs = m.spec("quickstart").unwrap();
+        assert_eq!(qs.inputs.len(), 2);
+        assert_eq!(qs.inputs[0], vec![4, 10, 10]);
+        assert_eq!(qs.output, vec![8, 8, 8]);
+        assert_eq!(m.batch_ladder(), vec![1, 2, 4, 8]);
+        assert_eq!(m.layer_strings.len(), 3);
+    }
+
+    #[test]
+    fn golden_pair_consistent() {
+        let dir = artifacts_dir();
+        if !dir.join("golden.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let g = Golden::load(&dir).unwrap();
+        assert_eq!(
+            g.input.len(),
+            g.input_shape.iter().product::<usize>()
+        );
+        assert_eq!(
+            g.output.len(),
+            g.output_shape.iter().product::<usize>()
+        );
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! PJRT client — the only place the `xla` crate is touched. Python never
+//! runs here; the artifacts are self-contained (weights baked in as HLO
+//! constants by `python/compile/aot.py`).
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Module};
+pub use manifest::{ArtifactSpec, Golden, Manifest};

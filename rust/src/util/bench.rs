@@ -1,0 +1,127 @@
+//! Minimal benchmark harness (criterion is not in the offline crate set).
+//!
+//! Two roles:
+//!  1. `time_fn` — wall-clock micro-benchmark with warmup + N samples,
+//!     reporting median / p10 / p90, used by `benches/perf_hotpaths.rs`.
+//!  2. The figure benches use it to time the *regeneration* of each paper
+//!     table/figure while also printing the rows themselves.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub iters_per_sample: u64,
+    /// Optional throughput numerator (e.g. simulated accesses per iter).
+    pub items_per_iter: f64,
+}
+
+impl Sample {
+    pub fn throughput(&self) -> Option<f64> {
+        if self.items_per_iter > 0.0 {
+            Some(self.items_per_iter / self.median.as_secs_f64())
+        } else {
+            None
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) => format!("  ({} items/s)", super::table::eng(t)),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} median {:>12?}  p10 {:>12?}  p90 {:>12?}{}",
+            self.name, self.median, self.p10, self.p90, tp
+        )
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 2,
+            samples: 10,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench {
+            warmup: 1,
+            samples: 5,
+        }
+    }
+
+    /// Time `f`, which performs one logical iteration and returns the number
+    /// of "items" it processed (for throughput reporting; return 0.0 if not
+    /// meaningful). The closure's result is folded into a black box so the
+    /// optimizer cannot delete the work.
+    pub fn time_fn<F>(&self, name: &str, mut f: F) -> Sample
+    where
+        F: FnMut() -> f64,
+    {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        let mut items = 0.0;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            items = std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let pick = |q: f64| times[((times.len() - 1) as f64 * q).round() as usize];
+        let s = Sample {
+            name: name.to_string(),
+            median: pick(0.5),
+            p10: pick(0.1),
+            p90: pick(0.9),
+            iters_per_sample: 1,
+            items_per_iter: items,
+        };
+        println!("{}", s.report());
+        s
+    }
+}
+
+/// Shared entry banner for the figure benches.
+pub fn banner(what: &str) {
+    println!("\n================================================================");
+    println!("  {}", what);
+    println!("================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_sane() {
+        let b = Bench {
+            warmup: 1,
+            samples: 5,
+        };
+        let s = b.time_fn("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc as f64 * 0.0 + 10_000.0
+        });
+        assert!(s.median.as_nanos() > 0);
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+        assert_eq!(s.items_per_iter, 10_000.0);
+        assert!(s.throughput().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Minimal CLI argument parser (clap is not in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Subcommand dispatch is done by the caller on the first positional.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+pub const FLAG_SET: &str = "true";
+
+impl Args {
+    /// Parse an iterator of raw arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` if next token doesn't start with --,
+                    // else boolean flag.
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(stripped.to_string(), FLAG_SET.to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| {
+                v.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{} expects an integer, got '{}'", key, v))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{} expects a number, got '{}'", key, v))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["optimize", "--levels", "4", "--emit-schedules", "--out=x.json"]);
+        assert_eq!(a.subcommand(), Some("optimize"));
+        assert_eq!(a.get_u64("levels", 2), 4);
+        assert!(a.has("emit-schedules"));
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn boolean_flag_before_positional_consumes_next() {
+        // Documented quirk: `--flag positional` binds positional as value.
+        let a = parse(&["--v", "run"]);
+        assert_eq!(a.get("v"), Some("run"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.subcommand(), None);
+        assert_eq!(a.get_u64("n", 7), 7);
+        assert_eq!(a.get_f64("x", 1.5), 1.5);
+        assert_eq!(a.get_or("s", "d"), "d");
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_int_panics() {
+        let a = parse(&["--n", "abc"]);
+        a.get_u64("n", 0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Offline-friendly substrates: JSON codec, PRNG, CLI parsing, property
+//! testing, bench harness, table printing, and a small thread-pool.
+//!
+//! These exist because the build image resolves crates from a vendored
+//! snapshot that does not include serde_json / clap / rand / proptest /
+//! criterion / rayon; the library is self-contained instead.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,151 @@
+//! ASCII table pretty-printer used by the figure/benchmark harness so the
+//! regenerated tables read like the paper's (rows + aligned columns).
+
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                if i > 0 {
+                    line.push('|');
+                }
+                line.push_str(&format!(" {:>w$} ", cells[i], w = widths[i]));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a float with engineering-style significant digits (3 sig figs),
+/// e.g. 1.23e9 -> "1.23G", 4560 -> "4.56K".
+pub fn eng(v: f64) -> String {
+    let a = v.abs();
+    let (div, suffix) = if a >= 1e12 {
+        (1e12, "T")
+    } else if a >= 1e9 {
+        (1e9, "G")
+    } else if a >= 1e6 {
+        (1e6, "M")
+    } else if a >= 1e3 {
+        (1e3, "K")
+    } else {
+        (1.0, "")
+    };
+    let scaled = v / div;
+    if scaled.abs() >= 100.0 {
+        format!("{:.0}{}", scaled, suffix)
+    } else if scaled.abs() >= 10.0 {
+        format!("{:.1}{}", scaled, suffix)
+    } else {
+        format!("{:.2}{}", scaled, suffix)
+    }
+}
+
+/// Format picojoules as a human-readable energy (pJ / nJ / uJ / mJ / J).
+pub fn energy_pj(pj: f64) -> String {
+    let a = pj.abs();
+    if a >= 1e12 {
+        format!("{:.3}J", pj / 1e12)
+    } else if a >= 1e9 {
+        format!("{:.3}mJ", pj / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.3}uJ", pj / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.3}nJ", pj / 1e3)
+    } else {
+        format!("{:.1}pJ", pj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("t", &["a", "blah"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["100".into(), "x".into()]);
+        let r = t.render();
+        assert!(r.contains("## t"));
+        let lines: Vec<&str> = r.lines().collect();
+        // all data lines same width
+        assert_eq!(lines[1].len(), lines[3].len());
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn eng_formats() {
+        assert_eq!(eng(1234.0), "1.23K");
+        assert_eq!(eng(1.9e9), "1.90G");
+        assert_eq!(eng(7.8e11), "780G");
+        assert_eq!(eng(12.0), "12.0");
+        assert_eq!(eng(3.0), "3.00");
+    }
+
+    #[test]
+    fn energy_formats() {
+        assert_eq!(energy_pj(320.0), "320.0pJ");
+        assert_eq!(energy_pj(4.5e6), "4.500uJ");
+    }
+}

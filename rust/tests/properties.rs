@@ -1,0 +1,209 @@
+//! Property-based tests over the analytical model, using the in-tree
+//! proptest harness (seeded, reproducible): random layer dims + random
+//! valid blocking strings, checked against the reference interpreter and
+//! structural invariants.
+
+use cnn_blocking::model::access::analyze;
+use cnn_blocking::model::buffers::Tensor;
+use cnn_blocking::model::dims::{Dim, LayerDims};
+use cnn_blocking::model::string::{BlockingString, Level};
+use cnn_blocking::model::validate::check_consistency;
+use cnn_blocking::optimizer::sizes::divisors;
+use cnn_blocking::util::proptest::{check, Config};
+use cnn_blocking::util::rng::Rng;
+
+/// Random small conv dims (kept tiny: the interpreter enumerates loops).
+fn random_dims(rng: &mut Rng) -> LayerDims {
+    let pick = |rng: &mut Rng, opts: &[u64]| *rng.pick(opts);
+    LayerDims::conv(
+        pick(rng, &[4, 6, 8]),
+        pick(rng, &[4, 6, 8]),
+        pick(rng, &[2, 3, 4]),
+        pick(rng, &[2, 4]),
+        pick(rng, &[1, 2, 3]),
+        pick(rng, &[1, 2, 3]),
+    )
+}
+
+/// Random valid blocking string: random level-0 tile (divisors), random
+/// order, random subset of outer splits.
+fn random_string(rng: &mut Rng, dims: &LayerDims) -> BlockingString {
+    let mut levels = vec![
+        Level { dim: Dim::Fw, range: dims.fw },
+        Level { dim: Dim::Fh, range: dims.fh },
+    ];
+    let mut order: Vec<Dim> = Dim::SPLITTABLE
+        .iter()
+        .copied()
+        .filter(|&d| dims.extent(d) > 1)
+        .collect();
+    rng.shuffle(&mut order);
+    let mut covered: Vec<(Dim, u64)> = Vec::new();
+    for &d in &order {
+        let divs = divisors(dims.extent(d));
+        let r = *rng.pick(&divs);
+        if r > 1 {
+            levels.push(Level { dim: d, range: r });
+        }
+        covered.push((d, r));
+    }
+    // outer levels: grow each dim to its extent via random midpoints
+    let mut outer = order.clone();
+    rng.shuffle(&mut outer);
+    for &d in &outer {
+        let cur = covered.iter().find(|(dd, _)| *dd == d).unwrap().1;
+        let ext = dims.extent(d);
+        if cur == ext {
+            continue;
+        }
+        // optional midpoint
+        let mids: Vec<u64> = divisors(ext)
+            .into_iter()
+            .filter(|&v| v > cur && v < ext && v % cur == 0)
+            .collect();
+        if !mids.is_empty() && rng.chance(0.5) {
+            levels.push(Level { dim: d, range: *rng.pick(&mids) });
+        }
+    }
+    let mut final_dims = order;
+    rng.shuffle(&mut final_dims);
+    for &d in &final_dims {
+        let ext = dims.extent(d);
+        let cur = levels
+            .iter()
+            .rev()
+            .find(|l| l.dim == d)
+            .map(|l| l.range)
+            .unwrap_or(1);
+        if cur < ext {
+            levels.push(Level { dim: d, range: ext });
+        }
+    }
+    BlockingString::new(levels)
+}
+
+#[test]
+fn random_strings_are_valid() {
+    check("random strings valid", Config { cases: 200, ..Default::default() }, |rng| {
+        let dims = random_dims(rng);
+        let s = random_string(rng, &dims);
+        s.validate(&dims)
+            .map_err(|e| format!("invalid string {} for {}: {}", s, dims, e))
+    });
+}
+
+#[test]
+fn interpreter_agrees_with_closed_forms() {
+    check(
+        "interpreter consistency",
+        Config { cases: 60, ..Default::default() },
+        |rng| {
+            let dims = random_dims(rng);
+            let s = random_string(rng, &dims);
+            s.validate(&dims).map_err(|e| e.to_string())?;
+            check_consistency(&s, &dims)
+        },
+    );
+}
+
+#[test]
+fn trips_always_multiply_to_macs() {
+    check("trip product == MACs", Config { cases: 200, ..Default::default() }, |rng| {
+        let dims = random_dims(rng);
+        let s = random_string(rng, &dims);
+        s.validate(&dims).map_err(|e| e.to_string())?;
+        let product: u64 = (0..s.len()).map(|i| s.trip(i)).product();
+        if product == dims.macs() {
+            Ok(())
+        } else {
+            Err(format!("{} != {} for {}", product, dims.macs(), s))
+        }
+    });
+}
+
+#[test]
+fn access_counts_monotone_in_chain() {
+    check("inner buffers serve more", Config { cases: 100, ..Default::default() }, |rng| {
+        let dims = random_dims(rng);
+        let s = random_string(rng, &dims);
+        s.validate(&dims).map_err(|e| e.to_string())?;
+        let (_bufs, prof) = analyze(&s, &dims);
+        for t in Tensor::ALL {
+            for w in prof.of(t).windows(2) {
+                if w[0].fill_events < w[1].fill_events {
+                    return Err(format!(
+                        "{:?}: inner fills {} < outer fills {} in {}",
+                        t, w[0].fill_events, w[1].fill_events, s
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn notation_roundtrips_randomly() {
+    check("notation roundtrip", Config { cases: 200, ..Default::default() }, |rng| {
+        let dims = random_dims(rng);
+        let s = random_string(rng, &dims);
+        let back = BlockingString::parse(&s.notation())
+            .map_err(|e| e.to_string())?
+            .with_window(&dims);
+        if back == s {
+            Ok(())
+        } else {
+            Err(format!("{} != {}", back, s))
+        }
+    });
+}
+
+#[test]
+fn more_sram_never_costs_energy() {
+    use cnn_blocking::optimizer::targets::{BespokeTarget, Evaluator};
+    check("budget monotone", Config { cases: 40, ..Default::default() }, |rng| {
+        let dims = random_dims(rng);
+        let s = random_string(rng, &dims);
+        s.validate(&dims).map_err(|e| e.to_string())?;
+        let small = BespokeTarget::new(4 * 1024).eval(&s, &dims);
+        let big = BespokeTarget::new(1024 * 1024).eval(&s, &dims);
+        if big.memory_pj() <= small.memory_pj() * 1.000001 {
+            Ok(())
+        } else {
+            Err(format!(
+                "1MB {} > 4KB {} for {}",
+                big.memory_pj(),
+                small.memory_pj(),
+                s
+            ))
+        }
+    });
+}
+
+#[test]
+fn trace_length_invariant_under_blocking() {
+    // The register-filtered trace length may vary, but the un-filtered
+    // MAC count served must be identical for every blocking of the same
+    // layer — blocking is a schedule, not different work.
+    use cnn_blocking::cachesim::conv_trace::trace_blocked_conv;
+    use cnn_blocking::cachesim::hierarchy::CountingSink;
+    check("work invariant", Config { cases: 20, ..Default::default() }, |rng| {
+        let dims = random_dims(rng);
+        let a = random_string(rng, &dims);
+        let b = random_string(rng, &dims);
+        a.validate(&dims).map_err(|e| e.to_string())?;
+        b.validate(&dims).map_err(|e| e.to_string())?;
+        let mut ca = CountingSink::default();
+        trace_blocked_conv(&a, &dims, &mut ca);
+        let mut cb = CountingSink::default();
+        trace_blocked_conv(&b, &dims, &mut cb);
+        // writes = output store events; both bounded by MACs and nonzero
+        let macs = dims.macs();
+        for (name, c) in [("a", &ca), ("b", &cb)] {
+            if c.reads + c.writes == 0 || c.reads + c.writes > 4 * macs {
+                return Err(format!("trace {} out of range for {}", name, dims));
+            }
+        }
+        Ok(())
+    });
+}
