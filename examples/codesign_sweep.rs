@@ -1,5 +1,6 @@
 //! Fig. 7-style sweep: how energy and area trade off as the SRAM budget
-//! grows, for one benchmark layer.
+//! grows, for one benchmark layer. Each budget point is planned through
+//! the `Planner` facade (via `optimizer::codesign`).
 //!
 //!     cargo run --release --example codesign_sweep -- [--layer Conv3]
 
@@ -11,6 +12,10 @@ use cnn_blocking::util::table::{energy_pj, Table};
 
 fn main() {
     let args = Args::from_env();
+    if let Err(e) = args.reject_unknown(&["layer"]) {
+        eprintln!("{}", e);
+        std::process::exit(2);
+    }
     let name = args.get_or("layer", "Conv3");
     let bench = by_name(&name).expect("unknown layer; see Table 4");
     let cfg = BeamConfig::quick();

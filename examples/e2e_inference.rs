@@ -21,6 +21,12 @@ use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    if let Err(e) =
+        args.reject_unknown(&["artifacts", "requests", "batch", "timeout-ms", "schedules"])
+    {
+        eprintln!("{}", e);
+        std::process::exit(2);
+    }
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let n = args.get_u64("requests", 256) as usize;
 
@@ -31,9 +37,14 @@ fn main() -> anyhow::Result<()> {
         queue_depth: 64,
     })?;
 
-    println!("== pipeline schedules compiled into the artifacts ==");
-    for (i, s) in server.layer_strings.iter().enumerate() {
-        println!("  layer {}: {}", i + 1, s);
+    println!("== pipeline plans compiled into the artifacts ==");
+    for (i, p) in server.layer_plans.iter().enumerate() {
+        println!("  layer {} ({}): {}", i + 1, p.name, p.string);
+    }
+    if server.layer_plans.is_empty() {
+        for (i, s) in server.layer_strings.iter().enumerate() {
+            println!("  layer {}: {}", i + 1, s);
+        }
     }
 
     // -- correctness gate 1: golden replay through the batching path
@@ -73,18 +84,18 @@ fn main() -> anyhow::Result<()> {
     println!("{}", server.metrics.lock().unwrap().report(wall));
     println!("output checksum: {:.4}", checksum);
 
-    // -- model-predicted energy for the compiled schedules
+    // -- model-predicted energy for the compiled plans
     println!("\n== model-predicted energy of the compiled blockings ==");
     let sched_path = args.get_or("schedules", "python/compile/schedules.json");
     if let Ok(text) = std::fs::read_to_string(&sched_path) {
         let j = cnn_blocking::util::json::parse(&text).unwrap();
-        if let Ok(layers) = cnn_blocking::optimizer::schedules::from_json(&j) {
-            for l in &layers {
+        if let Ok(plans) = cnn_blocking::optimizer::schedules::plans_from_json(&j) {
+            for p in &plans {
                 println!(
                     "  {}: {}  ({:.3} pJ/MAC predicted on the 8MB bespoke target)",
-                    l.name,
-                    energy_pj(l.energy_pj),
-                    l.energy_pj / l.dims.macs() as f64
+                    p.name,
+                    energy_pj(p.outcome.total_pj),
+                    p.pj_per_mac()
                 );
             }
         }

@@ -1,26 +1,44 @@
 //! Fig. 9-style study: multicore partitioning of a layer under the two
-//! schemes of Sec. 3.3, printing the per-component energy breakdown.
+//! schemes of Sec. 3.3. The single-core `BlockingPlan`s come from the
+//! `Planner` facade; `partition_plan` picks the cheaper scheme per plan.
 //!
 //!     cargo run --release --example multicore_scaling -- [--layer Conv1]
 
 use cnn_blocking::figures::fig9;
 use cnn_blocking::model::benchmarks::by_name;
 use cnn_blocking::optimizer::beam::BeamConfig;
+use cnn_blocking::parallel::partition::partition_plan;
 use cnn_blocking::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
+    if let Err(e) = args.reject_unknown(&["layer"]) {
+        eprintln!("{}", e);
+        std::process::exit(2);
+    }
     let name = args.get_or("layer", "Conv1");
     let bench = by_name(&name).expect("unknown layer; see Table 4");
     let cfg = BeamConfig::quick();
 
-    println!("finding top-4 single-core schedules for {}...", bench.name);
-    let schedules = fig9::top_schedules(&bench.dims, 4, 8 << 20, &cfg);
-    for (i, s) in schedules.iter().enumerate() {
-        println!("  sched{}: {}", i + 1, s.notation());
+    println!("finding top-4 single-core plans for {}...", bench.name);
+    let plans = fig9::top_plans(&bench.dims, 4, 8 << 20, &cfg);
+    for (i, p) in plans.iter().enumerate() {
+        println!("  plan{}: {}", i + 1, p.string);
     }
 
-    let cells = fig9::fig9_grid(&bench.dims, &schedules, 8 << 20);
+    // the plan-level entry point: best scheme at 8 cores per plan
+    println!("\nbest partitioning at 8 cores:");
+    for (i, p) in plans.iter().enumerate() {
+        let mc = partition_plan(p, 8);
+        println!(
+            "  plan{}: {}  ({:.2} pJ/MAC)",
+            i + 1,
+            mc.scheme.name(),
+            mc.pj_per_mac()
+        );
+    }
+
+    let cells = fig9::fig9_grid(&plans);
     fig9::render_fig9(&bench.dims, &cells).print();
     println!(
         "paper takeaway (share the dominant buffer -> broadcast is free) holds: {}",

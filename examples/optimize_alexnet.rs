@@ -1,43 +1,49 @@
-//! Optimize every layer of AlexNet and report per-layer energy on a
-//! co-designed 1 MB accelerator vs the DianNao fixed hierarchy, plus the
-//! multi-layer "flexible memory" shared design (Sec. 3.6).
+//! Plan every conv layer of AlexNet through the network facade and report
+//! per-layer energy on a co-designed 1 MB accelerator vs the DianNao fixed
+//! hierarchy, plus the multi-layer "flexible memory" shared design
+//! (Sec. 3.6).
 //!
 //!     cargo run --release --example optimize_alexnet
 
-use cnn_blocking::model::networks::{alexnet, LayerKind};
-use cnn_blocking::optimizer::beam::{optimize, BeamConfig};
+use cnn_blocking::optimizer::beam::BeamConfig;
 use cnn_blocking::optimizer::multilayer::shared_design;
-use cnn_blocking::optimizer::targets::{BespokeTarget, FixedTarget};
 use cnn_blocking::util::table::{energy_pj, Table};
+use cnn_blocking::{Planner, Target};
 
-fn main() {
-    let net = alexnet();
+fn main() -> anyhow::Result<()> {
     let cfg = BeamConfig::quick();
     let budget = 1 << 20; // 1 MB on-chip
+
+    // One facade call plans the whole network on the co-design target...
+    let codesigned = Planner::for_network("AlexNet")?
+        .target(Target::Bespoke {
+            budget_bytes: budget,
+        })
+        .levels(3)
+        .beam(cfg.clone())
+        .plan_all()?;
+    // ...and a second pass scores the same layers on fixed DianNao.
+    let diannao = Planner::for_network("AlexNet")?
+        .target(Target::DianNao)
+        .levels(3)
+        .beam(cfg.clone())
+        .plan_all()?;
 
     let mut t = Table::new(
         "AlexNet per-layer optimal blocking (1 MB co-design vs DianNao-fixed)",
         &["layer", "dims", "DianNao opt", "co-design", "gain", "schedule"],
     );
     let mut conv_dims = Vec::new();
-    for l in net.layers.iter().filter(|l| l.kind == LayerKind::Conv) {
-        let dn = optimize(&l.dims, &FixedTarget::diannao(), 3, &cfg)
-            .into_iter()
-            .next()
-            .unwrap();
-        let cd = optimize(&l.dims, &BespokeTarget::new(budget), 3, &cfg)
-            .into_iter()
-            .next()
-            .unwrap();
+    for (cd, dn) in codesigned.iter().zip(&diannao) {
         t.row(vec![
-            l.name.clone(),
-            format!("{}", l.dims),
-            energy_pj(dn.energy_pj),
-            energy_pj(cd.energy_pj),
-            format!("{:.1}x", dn.energy_pj / cd.energy_pj),
+            cd.name.clone(),
+            format!("{}", cd.dims),
+            energy_pj(dn.outcome.total_pj),
+            energy_pj(cd.outcome.total_pj),
+            format!("{:.1}x", dn.outcome.total_pj / cd.outcome.total_pj),
             cd.string.notation(),
         ]);
-        conv_dims.push(l.dims);
+        conv_dims.push(cd.dims);
     }
     t.print();
 
@@ -50,12 +56,8 @@ fn main() {
         shared.area_mm2,
         energy_pj(shared.total_pj)
     );
-    for (l, pj) in net
-        .layers
-        .iter()
-        .filter(|l| l.kind == LayerKind::Conv)
-        .zip(&shared.per_layer_pj)
-    {
-        println!("  {}: {}", l.name, energy_pj(*pj));
+    for (plan, pj) in codesigned.iter().zip(&shared.per_layer_pj) {
+        println!("  {}: {}", plan.name, energy_pj(*pj));
     }
+    Ok(())
 }

@@ -1,51 +1,69 @@
-//! Quickstart: model a layer, find its optimal blocking, and inspect the
-//! result — the 60-second tour of the public API.
+//! Quickstart: plan a layer through the `Planner` facade and inspect the
+//! resulting `BlockingPlan` — the 60-second tour of the public API.
 //!
 //!     cargo run --release --example quickstart
 
-use cnn_blocking::model::access::analyze;
 use cnn_blocking::model::dims::LayerDims;
 use cnn_blocking::model::string::BlockingString;
-use cnn_blocking::optimizer::beam::{optimize, BeamConfig};
-use cnn_blocking::optimizer::targets::{BespokeTarget, Evaluator};
+use cnn_blocking::optimizer::beam::BeamConfig;
 use cnn_blocking::util::table::energy_pj;
+use cnn_blocking::{BlockingPlan, Planner, Target};
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     // 1. Describe a convolutional layer (VGG conv4, Table 4 of the paper).
     let layer = LayerDims::conv(56, 56, 128, 256, 3, 3);
     println!("layer: {}   ({} MACs)", layer, layer.macs());
 
-    // 2. Any loop nest is a "blocking string". Algorithm 1, unblocked:
-    let naive = BlockingString::unblocked(&layer);
-    println!("\nnaive string:   {}", naive);
+    // 2. The front door: a Planner turns the layer into a BlockingPlan —
+    //    searching blockings and co-designing a memory hierarchy under an
+    //    8 MB SRAM budget in one call.
+    let planner = Planner::for_named("vgg_conv4", layer)
+        .target(Target::Bespoke {
+            budget_bytes: 8 << 20,
+        })
+        .levels(3)
+        .beam(BeamConfig::quick());
+    let plan = planner.plan()?;
 
-    // 3. The analytical model turns a string into buffers and accesses.
-    let (bufs, _profile) = analyze(&naive, &layer);
-    println!("buffers implied by the naive string:");
-    for vb in bufs.all() {
+    // 3. A plan is the whole story: the chosen blocking string, where
+    //    every buffer landed, and the predicted energy/area.
+    println!("\nplan:   {}", plan.string);
+    println!("energy: {}  ({:.3} pJ/MAC)", energy_pj(plan.outcome.total_pj), plan.pj_per_mac());
+    println!(
+        "area:   {:.2} mm2  (on-chip {} bytes)",
+        plan.outcome.area_mm2, plan.outcome.onchip_bytes
+    );
+    println!("buffer placement:");
+    for b in &plan.buffers {
         println!(
-            "  {}{}  {:>10} elems  refetch-rate {:.1}",
-            vb.tensor, vb.ordinal, vb.size_elems, vb.refetch_rate
+            "  {}{}  {:>10} B  -> {}{}",
+            b.tensor,
+            b.ordinal,
+            b.size_bytes,
+            b.level,
+            if b.on_chip { "" } else { "  (off-chip)" }
         );
     }
 
-    // 4. Search for the minimum-energy blocking, co-designing a memory
-    //    hierarchy under an 8 MB SRAM budget.
-    let target = BespokeTarget::new(8 << 20);
-    let naive_pj = target.objective(&naive, &layer);
-    let best = optimize(&layer, &target, 3, &BeamConfig::quick())
-        .into_iter()
-        .next()
-        .unwrap();
-    println!("\nnaive   energy: {}", energy_pj(naive_pj));
+    // 4. How much did planning buy? Evaluate Algorithm 1's unblocked nest
+    //    on the same target for comparison.
+    let naive = planner.plan_string(&BlockingString::unblocked(&layer))?;
     println!(
-        "optimal energy: {}  ({:.1}x better)",
-        energy_pj(best.energy_pj),
-        naive_pj / best.energy_pj
+        "\nnaive {} vs planned {}  ({:.1}x better)",
+        energy_pj(naive.outcome.total_pj),
+        energy_pj(plan.outcome.total_pj),
+        naive.outcome.total_pj / plan.outcome.total_pj
     );
-    println!("optimal string: {}", best.string);
 
-    // 5. The level-0 tile is what parameterizes the Pallas kernel.
-    let (x0, y0, c0, k0) = best.string.level0_tile(&layer);
+    // 5. Plans serialize: JSON round-trips exactly, which is what the
+    //    PlanCache and the schedules.json export build on.
+    let text = plan.to_json().pretty();
+    let back = BlockingPlan::from_json(&cnn_blocking::util::json::parse(&text)?)?;
+    assert_eq!(back, plan);
+    println!("\nJSON round-trip OK ({} bytes)", text.len());
+
+    // 6. The level-0 tile is what parameterizes the Pallas kernel.
+    let (x0, y0, c0, k0) = plan.tile;
     println!("level-0 tile: x0={} y0={} c0={} k0={}", x0, y0, c0, k0);
+    Ok(())
 }

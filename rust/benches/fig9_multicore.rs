@@ -7,11 +7,11 @@ fn main() {
     banner("Figure 9 — multicore scaling of Conv1 (sched1-4, 1/2/4/8 cores)");
     let cfg = BeamConfig::quick();
     let dims = fig9::conv1_dims();
-    let scheds = fig9::top_schedules(&dims, 4, 8 << 20, &cfg);
-    for (i, s) in scheds.iter().enumerate() {
-        println!("sched{}: {}", i + 1, s.notation());
+    let plans = fig9::top_plans(&dims, 4, 8 << 20, &cfg);
+    for (i, p) in plans.iter().enumerate() {
+        println!("sched{}: {}", i + 1, p.string);
     }
-    let cells = fig9::fig9_grid(&dims, &scheds, 8 << 20);
+    let cells = fig9::fig9_grid(&plans);
     fig9::render_fig9(&dims, &cells).print();
     println!(
         "takeaway (share the large buffer -> broadcast free) holds: {}\n",

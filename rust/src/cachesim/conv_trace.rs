@@ -158,6 +158,13 @@ pub fn trace_blocked_conv<S: Sink>(string: &BlockingString, dims: &LayerDims, si
     run(0, &order, &mut off, &layout, sink, &mut regs);
 }
 
+/// Emit the full trace of a [`crate::plan::BlockingPlan`] into `sink` —
+/// the plan-IR entry point: consumers that hold a plan never need to pull
+/// the string/dims apart themselves.
+pub fn trace_plan<S: Sink>(plan: &crate::plan::BlockingPlan, sink: &mut S) {
+    trace_blocked_conv(&plan.string, &plan.dims, sink)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,6 +245,25 @@ mod tests {
             h2.stats().l3_accesses(),
             h1.stats().l3_accesses()
         );
+    }
+
+    #[test]
+    fn trace_plan_matches_string_trace() {
+        use crate::plan::{BlockingPlan, Provenance, Target};
+        let d = dims();
+        let s = string(&d, "Fw Fh X0=4 Y0=4 C0=4 K0=4 X1=8 Y1=8");
+        let plan = BlockingPlan::evaluate(
+            "trace",
+            d,
+            s.clone(),
+            Provenance::external(Target::Cpu, "manual"),
+        )
+        .unwrap();
+        let mut a = CountingSink::default();
+        trace_plan(&plan, &mut a);
+        let mut b = CountingSink::default();
+        trace_blocked_conv(&s, &d, &mut b);
+        assert_eq!((a.reads, a.writes), (b.reads, b.writes));
     }
 
     #[test]

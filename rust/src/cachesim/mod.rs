@@ -8,5 +8,5 @@ pub mod conv_trace;
 pub mod hierarchy;
 
 pub use cache::{Cache, CacheStats};
-pub use conv_trace::{trace_blocked_conv, Layout};
+pub use conv_trace::{trace_blocked_conv, trace_plan, Layout};
 pub use hierarchy::{CacheHierarchy, CountingSink, HierarchyStats, Sink};

@@ -55,6 +55,10 @@ pub struct InferenceServer {
     pub input_len: usize,
     pub output_len: usize,
     pub layer_strings: Vec<String>,
+    /// The plan behind each pipeline executable (from the manifest's
+    /// schedule records), so the server can report exactly what blocking
+    /// it is serving.
+    pub layer_plans: Vec<crate::plan::BlockingPlan>,
 }
 
 impl InferenceServer {
@@ -70,6 +74,7 @@ impl InferenceServer {
         let input_len: usize = spec1.inputs[0][1..].iter().product();
         let output_len: usize = spec1.output[1..].iter().product();
         let layer_strings = manifest.layer_strings.clone();
+        let layer_plans = manifest.layer_plans.clone();
 
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let metrics = Arc::new(Mutex::new(Metrics::default()));
@@ -96,6 +101,7 @@ impl InferenceServer {
             input_len,
             output_len,
             layer_strings,
+            layer_plans,
         })
     }
 

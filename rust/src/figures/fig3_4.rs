@@ -7,12 +7,12 @@
 //! *ratios* are scale-stable, which `tests::ratios_scale_stable` checks.
 
 use crate::baselines::gemm::{trace_atlas_like, trace_mkl_like};
-use crate::cachesim::conv_trace::trace_blocked_conv;
+use crate::cachesim::conv_trace::{trace_blocked_conv, trace_plan};
 use crate::cachesim::hierarchy::CacheHierarchy;
 use crate::model::benchmarks::conv_benchmarks;
 use crate::model::dims::LayerDims;
-use crate::optimizer::beam::{optimize, BeamConfig};
-use crate::optimizer::targets::FixedTarget;
+use crate::optimizer::beam::BeamConfig;
+use crate::plan::{BlockingPlan, Planner, Target};
 use crate::util::pool::par_map;
 use crate::util::table::{eng, Table};
 
@@ -29,19 +29,21 @@ pub struct CacheRow {
     pub mkl_l3: u64,
 }
 
-/// Pick "our" schedule for a layer on the CPU cache hierarchy.
+/// Pick "our" plan for a layer on the CPU cache hierarchy.
 ///
 /// The analytic model ranks candidates, then the top few are *autotuned*
 /// through a reduced-scale trace simulation (the analytic packing is
 /// line- and associativity-oblivious; a short sim catches schedules that
 /// fragment cache lines) — mirroring how the paper hand-tuned its Halide
 /// schedules on the real machine.
-pub fn cpu_schedule(dims: &LayerDims) -> crate::model::string::BlockingString {
-    let target = FixedTarget::cpu();
-    let cfg = BeamConfig::quick();
-    let candidates = optimize(dims, &target, 3, &cfg);
-    let mut probes: Vec<crate::model::string::BlockingString> =
-        candidates.iter().take(3).map(|c| c.string.clone()).collect();
+pub fn cpu_plan(dims: &LayerDims) -> BlockingPlan {
+    let planner = Planner::for_named("cpu", *dims)
+        .target(Target::Cpu)
+        .levels(3)
+        .beam(BeamConfig::quick());
+    let mut probes = planner
+        .candidate_strings(3)
+        .expect("search returned candidates");
     // Heuristic compact-tile candidates (small c/k tiles, K inside the
     // image block): the analytic objective is line- and L1-conflict-
     // oblivious and can under-rank these; the short sim arbitrates.
@@ -58,12 +60,20 @@ pub fn cpu_schedule(dims: &LayerDims) -> crate::model::string::BlockingString {
         trace_blocked_conv(string, dims, &mut h);
         h.stats().l2_accesses() + 4 * h.stats().l3_accesses()
     });
-    probes
+    let winner = probes
         .into_iter()
         .zip(costs)
         .min_by_key(|(_, c)| *c)
         .map(|(s, _)| s)
-        .expect("search returned candidates")
+        .expect("search returned candidates");
+    let mut plan = planner.plan_string(&winner).expect("probe string valid");
+    plan.provenance.origin = "autotune".to_string();
+    plan
+}
+
+/// Back-compat: the autotuned schedule as a bare string.
+pub fn cpu_schedule(dims: &LayerDims) -> crate::model::string::BlockingString {
+    cpu_plan(dims).string
 }
 
 /// L1-sized compact tile: small x strip, modest c/k tiles, K completing
@@ -109,10 +119,10 @@ fn compact_tile_schedule(dims: &LayerDims) -> crate::model::string::BlockingStri
 /// Run one benchmark through the three implementations.
 pub fn run_layer(name: &str, full: &LayerDims, max_macs: u64) -> CacheRow {
     let dims = full.scaled_for_sim(max_macs);
-    let ours = cpu_schedule(&dims);
+    let ours = cpu_plan(&dims);
 
     let mut h_ours = CacheHierarchy::xeon();
-    trace_blocked_conv(&ours, &dims, &mut h_ours);
+    trace_plan(&ours, &mut h_ours);
     let mut h_atlas = CacheHierarchy::xeon();
     trace_atlas_like(&dims, &mut h_atlas);
     let mut h_mkl = CacheHierarchy::xeon();
@@ -121,7 +131,7 @@ pub fn run_layer(name: &str, full: &LayerDims, max_macs: u64) -> CacheRow {
     CacheRow {
         name: name.to_string(),
         dims,
-        ours_string: ours.notation(),
+        ours_string: ours.string.notation(),
         ours_l2: h_ours.stats().l2_accesses(),
         atlas_l2: h_atlas.stats().l2_accesses(),
         mkl_l2: h_mkl.stats().l2_accesses(),

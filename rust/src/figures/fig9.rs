@@ -1,12 +1,12 @@
 //! Figure 9: multicore scaling of on-chip memory energy for Conv1 under
 //! shared-KB vs shared-IB partitioning, across the top four single-core
-//! schedules and 1/2/4/8 cores.
+//! plans and 1/2/4/8 cores.
 
 use crate::model::benchmarks::by_name;
 use crate::model::dims::LayerDims;
-use crate::optimizer::beam::{optimize, BeamConfig};
-use crate::optimizer::targets::BespokeTarget;
-use crate::parallel::partition::{evaluate_multicore, MulticoreBreakdown, PartitionScheme};
+use crate::optimizer::beam::BeamConfig;
+use crate::parallel::partition::{evaluate_plan, MulticoreBreakdown, PartitionScheme};
+use crate::plan::{BlockingPlan, Planner, Target};
 use crate::util::table::{energy_pj, Table};
 
 #[derive(Debug, Clone)]
@@ -16,34 +16,45 @@ pub struct Fig9Cell {
     pub breakdown: MulticoreBreakdown,
 }
 
-/// Top-`n` single-core schedules for a layer on the bespoke target.
+/// Top-`n` single-core plans for a layer on the bespoke target. An
+/// empty search yields an empty list (matching the old string-based
+/// helper) rather than panicking.
+pub fn top_plans(dims: &LayerDims, n: usize, budget: u64, cfg: &BeamConfig) -> Vec<BlockingPlan> {
+    Planner::for_named("fig9", *dims)
+        .target(Target::Bespoke {
+            budget_bytes: budget,
+        })
+        .levels(3)
+        .beam(cfg.clone())
+        .plan_top(n)
+        .unwrap_or_default()
+}
+
+/// Back-compat: the top plans as bare strings.
 pub fn top_schedules(
     dims: &LayerDims,
     n: usize,
     budget: u64,
     cfg: &BeamConfig,
 ) -> Vec<crate::model::string::BlockingString> {
-    optimize(dims, &BespokeTarget::new(budget), 3, cfg)
+    top_plans(dims, n, budget, cfg)
         .into_iter()
-        .take(n)
-        .map(|s| s.string)
+        .map(|p| p.string)
         .collect()
 }
 
-/// The full Fig. 9 grid for a layer (default: Conv1).
-pub fn fig9_grid(
-    dims: &LayerDims,
-    schedules: &[crate::model::string::BlockingString],
-    budget: u64,
-) -> Vec<Fig9Cell> {
+/// The full Fig. 9 grid for a layer (default: Conv1). Each plan carries
+/// its own SRAM budget (its bespoke target), so the grid needs only the
+/// plans themselves.
+pub fn fig9_grid(plans: &[BlockingPlan]) -> Vec<Fig9Cell> {
     let mut out = Vec::new();
-    for (i, s) in schedules.iter().enumerate() {
+    for (i, p) in plans.iter().enumerate() {
         for scheme in [PartitionScheme::XYPartition, PartitionScheme::KPartition] {
             for cores in [1u64, 2, 4, 8] {
                 out.push(Fig9Cell {
                     schedule_idx: i + 1,
-                    schedule: s.notation(),
-                    breakdown: evaluate_multicore(s, dims, cores, scheme, budget),
+                    schedule: p.string.notation(),
+                    breakdown: evaluate_plan(p, cores, scheme),
                 });
             }
         }
@@ -105,8 +116,8 @@ mod tests {
     #[test]
     fn grid_covers_all_cells() {
         let d = LayerDims::conv(32, 32, 32, 64, 3, 3);
-        let scheds = top_schedules(&d, 2, 8 << 20, &BeamConfig::quick());
-        let cells = fig9_grid(&d, &scheds, 8 << 20);
+        let plans = top_plans(&d, 2, 8 << 20, &BeamConfig::quick());
+        let cells = fig9_grid(&plans);
         assert_eq!(cells.len(), 2 * 2 * 4);
     }
 
@@ -117,8 +128,8 @@ mod tests {
         // schemes (on tiny designs both partitionings are legitimately
         // equivalent).
         let d = conv1_dims();
-        let scheds = top_schedules(&d, 2, 8 << 20, &BeamConfig::quick());
-        let cells = fig9_grid(&d, &scheds, 8 << 20);
+        let plans = top_plans(&d, 2, 8 << 20, &BeamConfig::quick());
+        let cells = fig9_grid(&plans);
         assert!(takeaway_holds(&d, &cells));
     }
 
@@ -128,8 +139,8 @@ mod tests {
         // the LL-IB term at 2+ cores (the paper's "IB energy becomes as
         // large as the large KB was").
         let d = conv1_dims();
-        let scheds = top_schedules(&d, 1, 8 << 20, &BeamConfig::quick());
-        let cells = fig9_grid(&d, &scheds, 8 << 20);
+        let plans = top_plans(&d, 1, 8 << 20, &BeamConfig::quick());
+        let cells = fig9_grid(&plans);
         let ib = |cores: u64| {
             cells
                 .iter()

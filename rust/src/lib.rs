@@ -8,7 +8,36 @@
 //! rust + JAX + Pallas execution stack in which the optimizer's chosen
 //! blocking parameterizes a real convolution kernel executed through PJRT.
 //!
-//! Layout:
+//! ## Public API
+//!
+//! The front door is the [`plan`] module: a [`Planner`] turns a layer (or
+//! a whole network) into a serializable [`BlockingPlan`] — the chosen
+//! blocking string, its buffer placement, the predicted energy/area
+//! outcome, and the provenance needed to reproduce it:
+//!
+//! ```ignore
+//! use cnn_blocking::{Planner, Target};
+//! use cnn_blocking::model::dims::LayerDims;
+//!
+//! let plan = Planner::for_layer(LayerDims::conv(56, 56, 128, 256, 3, 3))
+//!     .target(Target::Bespoke { budget_bytes: 8 << 20 })
+//!     .levels(3)
+//!     .plan()?;
+//! println!("{}", plan.to_json().pretty());   // JSON round-trips exactly
+//!
+//! let network = Planner::for_network("AlexNet")?.plan_all()?;
+//! ```
+//!
+//! Plans flow to every consumer: `optimizer::schedules` serializes them
+//! into the `schedules.json` the Pallas AOT build reads,
+//! `cachesim::conv_trace::trace_plan` replays them as address traces,
+//! `parallel::partition::partition_plan` splits them across cores, the
+//! coordinator reports the plan compiled into each serving artifact, and
+//! a [`PlanCache`] lets repeat searches be answered from disk.
+//!
+//! ## Layout
+//!
+//! * [`plan`] — the `BlockingPlan` IR, `Planner` facade, `PlanCache`.
 //! * [`model`] — blocking strings, Table 2 buffers, Eq. 1 accesses,
 //!   Table 3 energy, Table 1/4 networks and benchmarks.
 //! * [`optimizer`] — exhaustive + seeded-beam schedule search, hierarchy
@@ -26,8 +55,11 @@ pub mod baselines;
 pub mod cachesim;
 pub mod coordinator;
 pub mod figures;
-pub mod parallel;
 pub mod model;
 pub mod optimizer;
+pub mod parallel;
+pub mod plan;
 pub mod runtime;
 pub mod util;
+
+pub use plan::{BlockingPlan, PlanCache, Planner, Target};

@@ -1,8 +1,14 @@
 //! `cnnblk` — CLI for the CNN-blocking framework.
 //!
+//! Every subcommand routes through the `Planner`/`BlockingPlan` public
+//! API: `optimize` plans a layer (consulting the JSON plan cache first),
+//! `schedules` plans the e2e pipeline and serializes the plans for the
+//! Pallas build, `cachesim` replays autotuned plans as address traces,
+//! and `serve` reports the plan behind each compiled artifact.
+//!
 //! Subcommands:
-//!   optimize   search blocking schedules for a benchmark layer
-//!   schedules  optimize the e2e pipeline layers and emit schedules.json
+//!   optimize   plan a benchmark layer (cache-aware)
+//!   schedules  plan the e2e pipeline layers and emit schedules.json
 //!   figures    regenerate the paper's tables/figures (see --help text)
 //!   cachesim   run the Fig. 3/4 cache-trace comparison
 //!   serve      run the batching inference server on synthetic requests
@@ -11,14 +17,18 @@
 use cnn_blocking::coordinator::{InferenceServer, ServerConfig};
 use cnn_blocking::figures::{fig3_4, fig5_8, fig9, tables};
 use cnn_blocking::model::benchmarks::{all_benchmarks, by_name};
-use cnn_blocking::optimizer::beam::{optimize, BeamConfig};
+use cnn_blocking::model::hierarchy::human_bytes;
+use cnn_blocking::optimizer::beam::BeamConfig;
 use cnn_blocking::optimizer::schedules::emit_schedules;
-use cnn_blocking::optimizer::targets::{BespokeTarget, FixedTarget};
 use cnn_blocking::runtime::{Engine, Golden, Manifest};
 use cnn_blocking::util::cli::Args;
 use cnn_blocking::util::table::energy_pj;
+use cnn_blocking::{BlockingPlan, Planner, Target};
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+/// Default on-disk plan cache consulted by `optimize`.
+const DEFAULT_CACHE: &str = ".cnnblk/plan-cache.json";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -43,6 +53,7 @@ fn print_help() {
          USAGE: cnnblk <subcommand> [flags]\n\
          \n\
          optimize  --layer Conv1 [--levels 3] [--budget-kb 8192] [--target bespoke|diannao|cpu]\n\
+         \x20         [--top 5] [--cache PATH] [--no-cache]   (repeat runs hit the plan cache)\n\
          schedules [--out python/compile/schedules.json]      (step 1 of `make artifacts`)\n\
          figures   [--table1|--table3|--table4|--fig3|--fig5|--fig6|--fig7|--fig8|--fig9|--all]\n\
          cachesim  [--max-macs 20000000]                      (Figs. 3-4 traces)\n\
@@ -61,40 +72,92 @@ fn beam_cfg(args: &Args) -> BeamConfig {
     }
 }
 
+fn check_flags(args: &Args, allowed: &[&str]) -> anyhow::Result<()> {
+    args.reject_unknown(allowed)
+        .map_err(|e| anyhow::anyhow!(e))
+}
+
+fn print_plan(rank: usize, p: &BlockingPlan) {
+    println!(
+        "  #{}: {}  ({}, {:.3} pJ/MAC, area {:.2} mm2, on-chip {})",
+        rank,
+        p.string,
+        energy_pj(p.outcome.total_pj),
+        p.pj_per_mac(),
+        p.outcome.area_mm2,
+        human_bytes(p.outcome.onchip_bytes),
+    );
+}
+
 fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
+    check_flags(
+        args,
+        &[
+            "layer",
+            "levels",
+            "budget-kb",
+            "target",
+            "top",
+            "full-search",
+            "cache",
+            "no-cache",
+        ],
+    )?;
     let layer = args.get_or("layer", "Conv1");
     let bench = by_name(&layer)
         .ok_or_else(|| anyhow::anyhow!("unknown layer '{}' (see `figures --table4`)", layer))?;
     let levels = args.get_u64("levels", 3) as usize;
     let budget = args.get_u64("budget-kb", 8 * 1024) * 1024;
-    let cfg = beam_cfg(args);
-    let t0 = Instant::now();
-    let results = match args.get_or("target", "bespoke").as_str() {
-        "diannao" => optimize(&bench.dims, &FixedTarget::diannao(), levels, &cfg),
-        "cpu" => optimize(&bench.dims, &FixedTarget::cpu(), levels, &cfg),
-        _ => optimize(&bench.dims, &BespokeTarget::new(budget), levels, &cfg),
+    let target = match args.get_or("target", "bespoke").as_str() {
+        "diannao" => Target::DianNao,
+        "cpu" => Target::Cpu,
+        _ => Target::Bespoke {
+            budget_bytes: budget,
+        },
     };
+    let mut planner = Planner::for_named(bench.name, bench.dims)
+        .target(target)
+        .levels(levels)
+        .beam(beam_cfg(args));
+    if !args.has("no-cache") {
+        planner = planner.cache_file(args.get_or("cache", DEFAULT_CACHE));
+    }
+
+    let top = args.get_u64("top", 5).max(1) as usize;
+    // The cache stores only the best plan, so it can answer the default
+    // single-plan query; an explicit --top N > 1 needs a fresh search.
+    if top == 1 || !args.has("top") {
+        if let Some(plan) = planner.cached_plan()? {
+            println!(
+                "{} ({}), {} levels — plan cache hit, search time: 0 ms",
+                bench.name, bench.dims, levels
+            );
+            print_plan(1, &plan);
+            println!(
+                "  (the cache stores the best plan only; pass --top N for a fresh \
+                 ranked search, --no-cache to bypass)"
+            );
+            return Ok(());
+        }
+    }
+    let t0 = Instant::now();
+    let plans = planner.plan_top(top)?;
     println!(
-        "{} ({}), {} levels, {} schedules kept, search took {:?}:",
+        "{} ({}), {} levels, {} plans kept, search took {:?}:",
         bench.name,
         bench.dims,
         levels,
-        results.len(),
+        plans.len(),
         t0.elapsed()
     );
-    for (i, s) in results.iter().take(args.get_u64("top", 5) as usize).enumerate() {
-        println!(
-            "  #{}: {}  ({}, {:.3} pJ/MAC)",
-            i + 1,
-            s.string,
-            energy_pj(s.energy_pj),
-            s.energy_pj / bench.dims.macs() as f64
-        );
+    for (i, p) in plans.iter().enumerate() {
+        print_plan(i + 1, p);
     }
     Ok(())
 }
 
 fn cmd_schedules(args: &Args) -> anyhow::Result<()> {
+    check_flags(args, &["out", "full-search"])?;
     let out = args.get_or("out", "python/compile/schedules.json");
     let cfg = beam_cfg(args);
     let schedules = emit_schedules(&out, &cfg)?;
@@ -109,6 +172,24 @@ fn cmd_schedules(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    check_flags(
+        args,
+        &[
+            "table1",
+            "table3",
+            "table4",
+            "fig3",
+            "fig4",
+            "fig5",
+            "fig6",
+            "fig7",
+            "fig8",
+            "fig9",
+            "all",
+            "full-search",
+            "max-macs",
+        ],
+    )?;
     let cfg = beam_cfg(args);
     let only_sub = args.flags.keys().all(|k| k == "full-search" || k == "max-macs");
     let all = args.has("all") || only_sub;
@@ -154,8 +235,8 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     }
     if all || args.has("fig9") {
         let dims = fig9::conv1_dims();
-        let scheds = fig9::top_schedules(&dims, 4, 8 << 20, &cfg);
-        let cells = fig9::fig9_grid(&dims, &scheds, 8 << 20);
+        let plans = fig9::top_plans(&dims, 4, 8 << 20, &cfg);
+        let cells = fig9::fig9_grid(&plans);
         fig9::render_fig9(&dims, &cells).print();
         println!(
             "takeaway (share the large buffer) holds: {}\n",
@@ -166,6 +247,7 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_cachesim(args: &Args) -> anyhow::Result<()> {
+    check_flags(args, &["max-macs", "full-search"])?;
     let rows = fig3_4::run_all(args.get_u64("max-macs", 20_000_000));
     let (f3, f4) = fig3_4::render(&rows);
     f3.print();
@@ -174,6 +256,7 @@ fn cmd_cachesim(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    check_flags(args, &["requests", "batch", "timeout-ms", "artifacts"])?;
     let cfg = ServerConfig {
         artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")),
         max_batch: args.get_u64("batch", 8) as usize,
@@ -182,7 +265,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let n = args.get_u64("requests", 256) as usize;
     let server = InferenceServer::start(cfg)?;
-    println!("server up; pipeline schedules: {:?}", server.layer_strings);
+    println!("server up; pipeline plans from the artifact manifest:");
+    if server.layer_plans.is_empty() {
+        println!("  (no plan records; raw strings: {:?})", server.layer_strings);
+    }
+    for p in &server.layer_plans {
+        println!(
+            "  {}: {}  ({:.3} pJ/MAC predicted, on-chip {})",
+            p.name,
+            p.string,
+            p.pj_per_mac(),
+            human_bytes(p.outcome.onchip_bytes),
+        );
+    }
     let mut rng = cnn_blocking::util::rng::Rng::new(42);
     let input_len = server.input_len;
     let t0 = Instant::now();
@@ -201,6 +296,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    check_flags(args, &["artifacts"])?;
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let m = Manifest::load(&dir)?;
     let engine = Engine::cpu()?;

@@ -6,10 +6,11 @@
 //! the Fig. 7 energy/area trade-off curve and the Fig. 6 per-benchmark
 //! optimal-architecture energies normalized to DianNao.
 
-use super::beam::{optimize, BeamConfig};
+use super::beam::BeamConfig;
 use super::targets::{BespokeTarget, Evaluator, FixedTarget};
 use crate::model::dims::LayerDims;
 use crate::model::hierarchy::Breakdown;
+use crate::plan::{Planner, Target};
 
 /// One co-designed point.
 #[derive(Debug, Clone)]
@@ -30,12 +31,13 @@ pub fn codesign_layer(
     levels: usize,
     cfg: &BeamConfig,
 ) -> DesignPoint {
-    let target = BespokeTarget::new(budget_bytes);
-    let best = optimize(dims, &target, levels, cfg)
-        .into_iter()
-        .next()
+    let best = Planner::for_named("codesign", *dims)
+        .target(Target::Bespoke { budget_bytes })
+        .levels(levels)
+        .beam(cfg.clone())
+        .plan()
         .expect("search returned candidates");
-    let out = target.eval(&best.string, dims);
+    let out = BespokeTarget::new(budget_bytes).eval(&best.string, dims);
     DesignPoint {
         budget_bytes,
         energy_pj: out.total_pj(),
@@ -76,9 +78,11 @@ pub fn diannao_reference(dims: &LayerDims, cfg: &BeamConfig) -> DiannaoReference
     let target = FixedTarget::diannao();
     let baseline = crate::baselines::diannao::baseline_schedule(dims);
     let base_out = target.eval(&baseline, dims);
-    let best = optimize(dims, &target, 3, cfg)
-        .into_iter()
-        .next()
+    let best = Planner::for_named("diannao-opt", *dims)
+        .target(Target::DianNao)
+        .levels(3)
+        .beam(cfg.clone())
+        .plan()
         .expect("search returned candidates");
     let opt_out = target.eval(&best.string, dims);
     DiannaoReference {

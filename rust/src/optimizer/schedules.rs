@@ -1,19 +1,24 @@
 //! Schedule export: the bridge from the rust optimizer (L3) to the Pallas
 //! kernel build (L1).
 //!
-//! `make artifacts` runs `cnnblk optimize --emit-schedules`, which
-//! optimizes the end-to-end pipeline's layers and writes
-//! `python/compile/schedules.json`; `python/compile/aot.py` reads it and
-//! derives each layer's `pallas_call` grid/BlockSpec from the level-0 tile
-//! of the chosen blocking string — the paper's "integrate this into
-//! Halide" end state, with Pallas in Halide's role.
+//! `make artifacts` runs `cnnblk schedules`, which plans the end-to-end
+//! pipeline's layers through the [`crate::plan::Planner`] facade and
+//! writes `python/compile/schedules.json`; `python/compile/aot.py` reads
+//! it and derives each layer's `pallas_call` grid/BlockSpec from the
+//! level-0 tile of the chosen blocking string — the paper's "integrate
+//! this into Halide" end state, with Pallas in Halide's role.
+//!
+//! This module is now a thin serializer over [`BlockingPlan`]s: planning
+//! happens in `plan::Planner`, and the on-disk `schedules.json` schema is
+//! kept byte-compatible with what aot.py has always read (pinned by the
+//! `schedules_json_schema_golden` test).
 
-use super::beam::{optimize, BeamConfig};
-use super::targets::BespokeTarget;
+use super::beam::BeamConfig;
 use crate::model::dims::LayerDims;
+use crate::plan::{BlockingPlan, Planner, Provenance, Target};
 use crate::util::json::{self, Json};
 
-/// One exported layer schedule.
+/// One exported layer schedule (the `schedules.json` row shape).
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerSchedule {
     pub name: String,
@@ -24,6 +29,39 @@ pub struct LayerSchedule {
     pub string: String,
     /// Model-predicted energy (pJ) on the bespoke 8 MB target.
     pub energy_pj: f64,
+}
+
+impl LayerSchedule {
+    /// Project a plan down to the interchange row.
+    pub fn from_plan(plan: &BlockingPlan) -> LayerSchedule {
+        LayerSchedule {
+            name: plan.name.clone(),
+            dims: plan.dims,
+            tile: plan.tile,
+            string: plan.string.notation(),
+            energy_pj: plan.outcome.total_pj,
+        }
+    }
+
+    /// Rebuild the full plan (re-evaluating on the export target).
+    pub fn to_plan(&self, origin: &str) -> anyhow::Result<BlockingPlan> {
+        let string = crate::model::string::BlockingString::parse(&self.string)
+            .map_err(|e| anyhow::anyhow!("schedule string: {}", e))?
+            .with_window(&self.dims);
+        BlockingPlan::evaluate(
+            &self.name,
+            self.dims,
+            string,
+            Provenance::external(export_target(), origin),
+        )
+    }
+}
+
+/// The target the Pallas export optimizes against (8 MB bespoke).
+pub fn export_target() -> Target {
+    Target::Bespoke {
+        budget_bytes: 8 * 1024 * 1024,
+    }
 }
 
 /// The end-to-end pipeline layers ("AlexNet-mini", DESIGN.md §6): small
@@ -46,21 +84,21 @@ fn mxu_friendly(tile: (u64, u64, u64, u64), dims: &LayerDims) -> bool {
     ok(tile.2, dims.c) && ok(tile.3, dims.k)
 }
 
+/// Plan one layer for export: beam search on the 8 MB bespoke target,
+/// preferring the best MXU-friendly candidate (selection happens on the
+/// candidate strings; only the winner pays full plan evaluation).
+pub fn plan_layer(name: &str, dims: &LayerDims, cfg: &BeamConfig) -> BlockingPlan {
+    Planner::for_named(name, *dims)
+        .target(export_target())
+        .levels(3)
+        .beam(cfg.clone())
+        .plan_matching(|s, d| mxu_friendly(s.level0_tile(d), d))
+        .expect("search returned candidates")
+}
+
 /// Optimize one layer and export its schedule.
 pub fn schedule_layer(name: &str, dims: &LayerDims, cfg: &BeamConfig) -> LayerSchedule {
-    let target = BespokeTarget::new(8 * 1024 * 1024);
-    let results = optimize(dims, &target, 3, cfg);
-    let best = results
-        .iter()
-        .find(|s| mxu_friendly(s.string.level0_tile(dims), dims))
-        .unwrap_or(&results[0]);
-    LayerSchedule {
-        name: name.to_string(),
-        dims: *dims,
-        tile: best.string.level0_tile(dims),
-        string: best.string.notation(),
-        energy_pj: best.energy_pj,
-    }
+    LayerSchedule::from_plan(&plan_layer(name, dims, cfg))
 }
 
 /// Serialize schedules to the JSON interchange format read by aot.py.
@@ -98,6 +136,48 @@ pub fn to_json(schedules: &[LayerSchedule]) -> Json {
     root
 }
 
+/// Serialize plans in the aot.py interchange schema (identical bytes to
+/// [`to_json`] over the projected rows).
+pub fn plans_to_json(plans: &[BlockingPlan]) -> Json {
+    let rows: Vec<LayerSchedule> = plans.iter().map(LayerSchedule::from_plan).collect();
+    to_json(&rows)
+}
+
+/// Parse one schedules.json layer row (also embedded verbatim in the
+/// artifact manifest's "schedules" list).
+pub fn layer_from_json(o: &Json) -> anyhow::Result<LayerSchedule> {
+    let g = |k: &str| -> anyhow::Result<u64> {
+        o.get("dims")
+            .and_then(|d| d.get(k))
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow::anyhow!("missing dims.{}", k))
+    };
+    let tile = o
+        .get("tile")
+        .and_then(|t| t.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("missing tile"))?;
+    let tv = |i: usize| -> anyhow::Result<u64> {
+        tile.get(i)
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow::anyhow!("bad tile[{}]", i))
+    };
+    Ok(LayerSchedule {
+        name: o
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("?")
+            .to_string(),
+        dims: LayerDims::conv(g("x")?, g("y")?, g("c")?, g("k")?, g("fw")?, g("fh")?),
+        tile: (tv(0)?, tv(1)?, tv(2)?, tv(3)?),
+        string: o
+            .get("string")
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string(),
+        energy_pj: o.get("energy_pj").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    })
+}
+
 /// Parse schedules back (used by tests and by the coordinator to report
 /// the schedule compiled into each artifact).
 pub fn from_json(j: &Json) -> anyhow::Result<Vec<LayerSchedule>> {
@@ -105,51 +185,31 @@ pub fn from_json(j: &Json) -> anyhow::Result<Vec<LayerSchedule>> {
         .get("layers")
         .and_then(|l| l.as_arr())
         .ok_or_else(|| anyhow::anyhow!("missing layers"))?;
-    layers
+    layers.iter().map(layer_from_json).collect()
+}
+
+/// Parse a schedules.json document back into full plans (re-evaluated on
+/// the export target, so the placement/outcome fields are populated).
+pub fn plans_from_json(j: &Json) -> anyhow::Result<Vec<BlockingPlan>> {
+    from_json(j)?
         .iter()
-        .map(|o| {
-            let g = |k: &str| -> anyhow::Result<u64> {
-                o.get("dims")
-                    .and_then(|d| d.get(k))
-                    .and_then(|v| v.as_u64())
-                    .ok_or_else(|| anyhow::anyhow!("missing dims.{}", k))
-            };
-            let tile = o
-                .get("tile")
-                .and_then(|t| t.as_arr())
-                .ok_or_else(|| anyhow::anyhow!("missing tile"))?;
-            let tv = |i: usize| -> anyhow::Result<u64> {
-                tile.get(i)
-                    .and_then(|v| v.as_u64())
-                    .ok_or_else(|| anyhow::anyhow!("bad tile[{}]", i))
-            };
-            Ok(LayerSchedule {
-                name: o
-                    .get("name")
-                    .and_then(|v| v.as_str())
-                    .unwrap_or("?")
-                    .to_string(),
-                dims: LayerDims::conv(g("x")?, g("y")?, g("c")?, g("k")?, g("fw")?, g("fh")?),
-                tile: (tv(0)?, tv(1)?, tv(2)?, tv(3)?),
-                string: o
-                    .get("string")
-                    .and_then(|v| v.as_str())
-                    .unwrap_or("")
-                    .to_string(),
-                energy_pj: o.get("energy_pj").and_then(|v| v.as_f64()).unwrap_or(0.0),
-            })
-        })
+        .map(|s| s.to_plan("schedules.json"))
+        .collect()
+}
+
+/// Plan all e2e pipeline layers.
+pub fn emit_plans(cfg: &BeamConfig) -> Vec<BlockingPlan> {
+    e2e_layers()
+        .iter()
+        .map(|(name, dims)| plan_layer(name, dims, cfg))
         .collect()
 }
 
 /// Optimize all e2e layers and write schedules.json.
 pub fn emit_schedules(path: &str, cfg: &BeamConfig) -> anyhow::Result<Vec<LayerSchedule>> {
-    let schedules: Vec<LayerSchedule> = e2e_layers()
-        .iter()
-        .map(|(name, dims)| schedule_layer(name, dims, cfg))
-        .collect();
-    std::fs::write(path, to_json(&schedules).pretty())?;
-    Ok(schedules)
+    let plans = emit_plans(cfg);
+    std::fs::write(path, plans_to_json(&plans).pretty())?;
+    Ok(plans.iter().map(LayerSchedule::from_plan).collect())
 }
 
 #[cfg(test)]
@@ -181,5 +241,22 @@ mod tests {
             assert_eq!(dims.c % s.tile.2, 0, "{}: c tile", name);
             assert_eq!(dims.k % s.tile.3, 0, "{}: k tile", name);
         }
+    }
+
+    #[test]
+    fn plans_and_schedules_serialize_identically() {
+        let cfg = BeamConfig::quick();
+        let (name, dims) = &e2e_layers()[2];
+        let plan = plan_layer(name, dims, &cfg);
+        let via_plan = plans_to_json(&[plan.clone()]).pretty();
+        let via_row = to_json(&[LayerSchedule::from_plan(&plan)]).pretty();
+        assert_eq!(via_plan, via_row);
+        // and the document parses back into an equivalent plan
+        let parsed = crate::util::json::parse(&via_plan).unwrap();
+        let back = plans_from_json(&parsed).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].string, plan.string);
+        assert_eq!(back[0].tile, plan.tile);
+        assert_eq!(back[0].dims, plan.dims);
     }
 }

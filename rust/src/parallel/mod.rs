@@ -3,4 +3,7 @@
 
 pub mod partition;
 
-pub use partition::{evaluate_multicore, MulticoreBreakdown, PartitionScheme};
+pub use partition::{
+    evaluate_multicore, evaluate_plan, partition_plan, MulticoreBreakdown, MulticorePlan,
+    PartitionScheme,
+};

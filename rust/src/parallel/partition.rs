@@ -24,6 +24,7 @@ use crate::model::energy::{best_access_energy_pj, broadcast_energy_pj, DRAM_PJ, 
 use crate::model::hierarchy::{Datapath, OperandMode};
 use crate::model::string::BlockingString;
 use crate::optimizer::targets::BespokeTarget;
+use crate::plan::{BlockingPlan, Target};
 
 /// Which loop family is unrolled across the cores.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -219,6 +220,60 @@ pub fn evaluate_multicore(
     }
 }
 
+/// The SRAM budget a plan's multicore evaluation should assume: the
+/// bespoke budget it was co-designed for, or the paper's 8 MB default
+/// for fixed-hierarchy plans.
+pub fn plan_budget(plan: &BlockingPlan) -> u64 {
+    match plan.provenance.target {
+        Target::Bespoke { budget_bytes } => budget_bytes,
+        _ => 8 << 20,
+    }
+}
+
+/// Evaluate one (plan, cores, scheme) point — the plan-IR entry point
+/// over [`evaluate_multicore`].
+pub fn evaluate_plan(
+    plan: &BlockingPlan,
+    cores: u64,
+    scheme: PartitionScheme,
+) -> MulticoreBreakdown {
+    evaluate_multicore(&plan.string, &plan.dims, cores, scheme, plan_budget(plan))
+}
+
+/// A single-core plan partitioned across cores: the chosen scheme and its
+/// energy breakdown, carrying the source plan for provenance.
+#[derive(Debug, Clone)]
+pub struct MulticorePlan {
+    pub plan: BlockingPlan,
+    pub cores: u64,
+    pub scheme: PartitionScheme,
+    pub breakdown: MulticoreBreakdown,
+}
+
+impl MulticorePlan {
+    pub fn pj_per_mac(&self) -> f64 {
+        self.breakdown.pj_per_mac(&self.plan.dims)
+    }
+}
+
+/// Partition a plan across `cores`, picking whichever scheme (Sec. 3.3)
+/// costs less memory energy.
+pub fn partition_plan(plan: &BlockingPlan, cores: u64) -> MulticorePlan {
+    let kp = evaluate_plan(plan, cores, PartitionScheme::KPartition);
+    let xy = evaluate_plan(plan, cores, PartitionScheme::XYPartition);
+    let (scheme, breakdown) = if xy.memory_pj() <= kp.memory_pj() {
+        (PartitionScheme::XYPartition, xy)
+    } else {
+        (PartitionScheme::KPartition, kp)
+    };
+    MulticorePlan {
+        plan: plan.clone(),
+        cores,
+        scheme,
+        breakdown,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,6 +332,33 @@ mod tests {
         );
         // the shared KB term itself must shrink
         assert!(e8.ll_kb_pj < e1.ll_kb_pj);
+    }
+
+    #[test]
+    fn partition_plan_picks_cheaper_scheme() {
+        use crate::plan::Provenance;
+        let (d, s) = setup();
+        let plan = BlockingPlan::evaluate(
+            "mc",
+            d,
+            s,
+            Provenance::external(
+                Target::Bespoke {
+                    budget_bytes: 8 << 20,
+                },
+                "manual",
+            ),
+        )
+        .unwrap();
+        assert_eq!(plan_budget(&plan), 8 << 20);
+        let best = partition_plan(&plan, 8);
+        assert_eq!(best.cores, 8);
+        for scheme in [PartitionScheme::KPartition, PartitionScheme::XYPartition] {
+            assert!(
+                best.breakdown.memory_pj() <= evaluate_plan(&plan, 8, scheme).memory_pj() + 1e-9
+            );
+        }
+        assert!(best.pj_per_mac() > 0.0);
     }
 
     #[test]

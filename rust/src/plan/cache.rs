@@ -1,0 +1,162 @@
+//! JSON-file-backed plan cache.
+//!
+//! Search is the expensive part of planning (seconds for deep beams on
+//! big layers); the plan itself is a few KB of JSON. The cache maps a
+//! search signature — `(dims, target, levels, beam width)`, see
+//! [`crate::plan::Planner::cache_key`] — to the best plan found, so
+//! repeat `optimize` calls and the serving path skip search entirely.
+
+use super::ir::{BlockingPlan, PLAN_SCHEMA_VERSION};
+use crate::util::json::{self, parse, Json};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct PlanCache {
+    path: PathBuf,
+    entries: BTreeMap<String, BlockingPlan>,
+}
+
+impl PlanCache {
+    /// Open a cache file, loading existing entries; a missing file is an
+    /// empty cache. The cache is purely regenerable, so damage is never
+    /// fatal: a document that fails to parse (truncated write, schema
+    /// drift) resets to empty, and individual entries that no longer
+    /// parse are dropped — both get recomputed and overwritten.
+    pub fn open(path: impl Into<PathBuf>) -> Result<PlanCache> {
+        let path = path.into();
+        let mut entries = BTreeMap::new();
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading plan cache {}", path.display()))?;
+            if let Ok(j) = parse(&text) {
+                if let Some(Json::Obj(m)) = j.get("entries") {
+                    for (k, v) in m {
+                        if let Ok(p) = BlockingPlan::from_json(v) {
+                            entries.insert(k.clone(), p);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(PlanCache { path, entries })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&BlockingPlan> {
+        self.entries.get(key)
+    }
+
+    pub fn put(&mut self, key: String, plan: BlockingPlan) {
+        self.entries.insert(key, plan);
+    }
+
+    /// Write the cache back to its file (creating parent directories).
+    /// The write is atomic (temp file + rename) so an interrupted save
+    /// never leaves a truncated document behind.
+    pub fn save(&self) -> Result<()> {
+        if let Some(parent) = self.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let mut entries = Json::obj();
+        for (k, p) in &self.entries {
+            entries.set(k, p.to_json());
+        }
+        let mut root = Json::obj();
+        root.set("version", json::unum(PLAN_SCHEMA_VERSION));
+        root.set("entries", entries);
+        let tmp = self.path.with_extension("json.tmp");
+        std::fs::write(&tmp, root.pretty())
+            .with_context(|| format!("writing plan cache {}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("replacing plan cache {}", self.path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::dims::LayerDims;
+    use crate::model::string::BlockingString;
+    use crate::plan::ir::{Provenance, Target};
+
+    fn sample_plan() -> BlockingPlan {
+        let d = LayerDims::conv(16, 16, 8, 8, 3, 3);
+        let s = BlockingString::parse("Fw Fh X0=8 Y0=8 C0=8 K0=8 X1=16 Y1=16")
+            .unwrap()
+            .with_window(&d);
+        BlockingPlan::evaluate(
+            "cache-test",
+            d,
+            s,
+            Provenance::external(
+                Target::Bespoke {
+                    budget_bytes: 64 * 1024,
+                },
+                "manual",
+            ),
+        )
+        .unwrap()
+    }
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cnnblk-{}-{}.json", tag, std::process::id()))
+    }
+
+    #[test]
+    fn missing_file_is_empty_cache() {
+        let c = PlanCache::open(temp_path("nonexistent")).unwrap();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn save_and_reload_roundtrips() {
+        let path = temp_path("roundtrip");
+        let plan = sample_plan();
+        let mut c = PlanCache::open(&path).unwrap();
+        c.put("k1".to_string(), plan.clone());
+        c.save().unwrap();
+        let back = PlanCache::open(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.get("k1"), Some(&plan));
+        assert_eq!(back.get("k2"), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_file_resets_to_empty() {
+        // The cache is regenerable: a truncated/corrupt document must not
+        // wedge planning, it just forgets.
+        let path = temp_path("corrupt");
+        std::fs::write(&path, "{not json").unwrap();
+        let c = PlanCache::open(&path).unwrap();
+        assert!(c.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_leaves_no_temp_file() {
+        let path = temp_path("atomic");
+        let mut c = PlanCache::open(&path).unwrap();
+        c.put("k".to_string(), sample_plan());
+        c.save().unwrap();
+        assert!(path.exists());
+        assert!(!path.with_extension("json.tmp").exists());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,572 @@
+//! The `BlockingPlan` intermediate representation.
+//!
+//! A plan is the framework's unit of exchange: the blocking string the
+//! optimizer chose for a layer, the buffer placement and predicted
+//! energy/area that choice implies on its target, and enough provenance
+//! (target, search configuration, model version) to reproduce or audit
+//! it. Every downstream consumer — schedule export to the Pallas build,
+//! the cache simulator, multicore partitioning, the serving coordinator —
+//! speaks plans instead of subsystem internals, and plans serialize to
+//! JSON (via the in-tree `util::json` codec; the offline build image has
+//! no serde_json) so they can be cached on disk and shipped between
+//! processes.
+
+use crate::model::access::AccessProfile;
+use crate::model::area;
+use crate::model::buffers::Tensor;
+use crate::model::dims::LayerDims;
+use crate::model::hierarchy::{self, Breakdown, Hierarchy, Placement};
+use crate::model::string::BlockingString;
+use crate::optimizer::targets::{BespokeTarget, FixedTarget};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, ensure, Result};
+use std::fmt;
+
+/// Version stamp of the plan JSON schema.
+pub const PLAN_SCHEMA_VERSION: u64 = 1;
+
+/// Version stamp of the analytical model that produced the prediction.
+pub const MODEL_VERSION: &str = "cnn-blocking/0.1";
+
+/// What machine a plan is optimized for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// Memory co-design under an SRAM area budget (Sec. 5.2).
+    Bespoke { budget_bytes: u64 },
+    /// The fixed DianNao split-SRAM hierarchy.
+    DianNao,
+    /// The Xeon-like CPU cache hierarchy.
+    Cpu,
+}
+
+impl Target {
+    /// Stable identity string (used in cache keys and JSON).
+    pub fn key(&self) -> String {
+        match self {
+            Target::Bespoke { budget_bytes } => format!("bespoke:{}", budget_bytes),
+            Target::DianNao => "diannao".to_string(),
+            Target::Cpu => "cpu".to_string(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            Target::Bespoke { budget_bytes } => {
+                o.set("kind", json::s("bespoke"));
+                o.set("budget_bytes", json::unum(*budget_bytes));
+            }
+            Target::DianNao => {
+                o.set("kind", json::s("diannao"));
+            }
+            Target::Cpu => {
+                o.set("kind", json::s("cpu"));
+            }
+        }
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Target> {
+        match j.get("kind").and_then(|v| v.as_str()) {
+            Some("bespoke") => Ok(Target::Bespoke {
+                budget_bytes: j
+                    .get("budget_bytes")
+                    .and_then(|v| v.as_u64())
+                    .ok_or_else(|| anyhow!("bespoke target missing budget_bytes"))?,
+            }),
+            Some("diannao") => Ok(Target::DianNao),
+            Some("cpu") => Ok(Target::Cpu),
+            other => Err(anyhow!("unknown target kind {:?}", other)),
+        }
+    }
+
+    /// Evaluate a blocking on this target, returning the full breakdown
+    /// plus the hierarchy/placement that produced it (the pieces a plan
+    /// records).
+    fn full_eval(
+        &self,
+        s: &BlockingString,
+        d: &LayerDims,
+    ) -> (Breakdown, Hierarchy, Placement, AccessProfile, f64, u64) {
+        match self {
+            Target::Bespoke { budget_bytes } => {
+                let t = BespokeTarget::new(*budget_bytes);
+                let (hier, placement, prof) = t.design(s, d);
+                let bd = hierarchy::evaluate(&prof, &hier, &placement, &t.datapath);
+                let sizes: Vec<u64> = hier.levels.iter().filter_map(|l| l.capacity).collect();
+                let onchip: u64 = sizes.iter().sum();
+                let area = area::design_area_mm2(&sizes);
+                (bd, hier, placement, prof, area, onchip)
+            }
+            Target::DianNao | Target::Cpu => {
+                let t = if matches!(self, Target::DianNao) {
+                    FixedTarget::diannao()
+                } else {
+                    FixedTarget::cpu()
+                };
+                let (placement, prof) = t.place(s, d);
+                let bd = hierarchy::evaluate(&prof, &t.hier, &placement, &t.datapath);
+                let sizes: Vec<u64> = t.hier.levels.iter().filter_map(|l| l.capacity).collect();
+                let onchip = t.hier.total_sram_bytes();
+                let area = area::design_area_mm2(&sizes);
+                (bd, t.hier.clone(), placement, prof, area, onchip)
+            }
+        }
+    }
+}
+
+impl fmt::Display for Target {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.key())
+    }
+}
+
+/// Where one virtual buffer of the plan's blocking lives.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanBuffer {
+    pub tensor: Tensor,
+    /// Which-th buffer of this tensor (0 = innermost).
+    pub ordinal: usize,
+    pub size_bytes: u64,
+    /// Physical level name (e.g. `IB0(16KB)`, `L2`, `DRAM`).
+    pub level: String,
+    pub on_chip: bool,
+}
+
+/// Model-predicted outcome of executing the plan on its target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanOutcome {
+    pub total_pj: f64,
+    pub memory_pj: f64,
+    pub mac_pj: f64,
+    pub macs: u64,
+    pub area_mm2: f64,
+    pub onchip_bytes: u64,
+    pub input_pj: f64,
+    pub kernel_pj: f64,
+    pub output_pj: f64,
+    pub dram_pj: f64,
+}
+
+/// How a plan came to be: target, search configuration, model version.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    pub target: Target,
+    /// Blocking levels requested from the optimizer (0 = not searched).
+    pub levels: usize,
+    pub beam_width: usize,
+    pub beam_seed: u64,
+    pub model_version: String,
+    /// How the blocking was chosen: "search" | "manifest" | "autotune" |
+    /// "manual" | "schedules.json". A plan served from the plan cache
+    /// keeps its original origin and sets `cache_hit` instead.
+    pub origin: String,
+    /// Wall-clock search time; 0 when the plan was not searched for
+    /// (cache hit, manifest load, manual evaluation).
+    pub search_ms: u64,
+    pub cache_hit: bool,
+}
+
+impl Provenance {
+    /// Provenance for plans rebuilt from external records (an artifact
+    /// manifest, a hand-written string) rather than a search.
+    pub fn external(target: Target, origin: &str) -> Provenance {
+        Provenance {
+            target,
+            levels: 0,
+            beam_width: 0,
+            beam_seed: 0,
+            model_version: MODEL_VERSION.to_string(),
+            origin: origin.to_string(),
+            search_ms: 0,
+            cache_hit: false,
+        }
+    }
+}
+
+/// A complete blocking schedule for one layer: the public IR every
+/// subsystem exchanges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockingPlan {
+    pub name: String,
+    pub dims: LayerDims,
+    pub string: BlockingString,
+    /// Level-0 tile (x0, y0, c0, k0) — what parameterizes the Pallas
+    /// kernel's BlockSpec.
+    pub tile: (u64, u64, u64, u64),
+    pub buffers: Vec<PlanBuffer>,
+    pub outcome: PlanOutcome,
+    pub provenance: Provenance,
+}
+
+impl BlockingPlan {
+    /// Build a plan by evaluating `string` on the provenance's target.
+    /// The string is validated against `dims` first.
+    pub fn evaluate(
+        name: &str,
+        dims: LayerDims,
+        string: BlockingString,
+        provenance: Provenance,
+    ) -> Result<BlockingPlan> {
+        string
+            .validate(&dims)
+            .map_err(|e| anyhow!("invalid blocking string '{}' for {}: {}", string, dims, e))?;
+        let (bd, hier, placement, prof, area_mm2, onchip_bytes) =
+            provenance.target.full_eval(&string, &dims);
+        let dram = hier.dram_idx();
+        let outcome = PlanOutcome {
+            total_pj: bd.total_pj(),
+            memory_pj: bd.memory_pj(),
+            mac_pj: bd.mac_pj,
+            macs: bd.macs,
+            area_mm2,
+            onchip_bytes,
+            input_pj: bd.tensor_pj(Tensor::Input),
+            kernel_pj: bd.tensor_pj(Tensor::Kernel),
+            output_pj: bd.tensor_pj(Tensor::Output),
+            dram_pj: bd.level_pj(dram),
+        };
+        let mut buffers = Vec::new();
+        for t in Tensor::ALL {
+            for ba in prof.of(t) {
+                let lvl = placement.level_of(t, ba.buffer.ordinal).unwrap_or(dram);
+                buffers.push(PlanBuffer {
+                    tensor: t,
+                    ordinal: ba.buffer.ordinal,
+                    size_bytes: ba.buffer.size_elems * 2,
+                    level: hier.levels[lvl].name.clone(),
+                    on_chip: hier.levels[lvl].capacity.is_some(),
+                });
+            }
+        }
+        let tile = string.level0_tile(&dims);
+        Ok(BlockingPlan {
+            name: name.to_string(),
+            dims,
+            string,
+            tile,
+            buffers,
+            outcome,
+            provenance,
+        })
+    }
+
+    /// Total predicted energy (pJ).
+    pub fn energy_pj(&self) -> f64 {
+        self.outcome.total_pj
+    }
+
+    /// Predicted energy per MAC (pJ/op).
+    pub fn pj_per_mac(&self) -> f64 {
+        self.outcome.total_pj / self.dims.macs() as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("version", json::unum(PLAN_SCHEMA_VERSION));
+        root.set("name", json::s(&self.name));
+        let d = &self.dims;
+        let mut dj = Json::obj();
+        dj.set("x", json::unum(d.x))
+            .set("y", json::unum(d.y))
+            .set("c", json::unum(d.c))
+            .set("k", json::unum(d.k))
+            .set("fw", json::unum(d.fw))
+            .set("fh", json::unum(d.fh))
+            .set("b", json::unum(d.b));
+        root.set("dims", dj);
+        root.set("string", json::s(&self.string.notation()));
+        root.set(
+            "tile",
+            json::arr([
+                json::unum(self.tile.0),
+                json::unum(self.tile.1),
+                json::unum(self.tile.2),
+                json::unum(self.tile.3),
+            ]),
+        );
+        let bufs: Vec<Json> = self
+            .buffers
+            .iter()
+            .map(|b| {
+                let mut o = Json::obj();
+                o.set("tensor", json::s(b.tensor.short()))
+                    .set("ordinal", json::unum(b.ordinal as u64))
+                    .set("size_bytes", json::unum(b.size_bytes))
+                    .set("level", json::s(&b.level))
+                    .set("on_chip", Json::Bool(b.on_chip));
+                o
+            })
+            .collect();
+        root.set("buffers", Json::Arr(bufs));
+        let o = &self.outcome;
+        let mut oj = Json::obj();
+        oj.set("total_pj", json::num(o.total_pj))
+            .set("memory_pj", json::num(o.memory_pj))
+            .set("mac_pj", json::num(o.mac_pj))
+            .set("macs", json::unum(o.macs))
+            .set("area_mm2", json::num(o.area_mm2))
+            .set("onchip_bytes", json::unum(o.onchip_bytes))
+            .set("input_pj", json::num(o.input_pj))
+            .set("kernel_pj", json::num(o.kernel_pj))
+            .set("output_pj", json::num(o.output_pj))
+            .set("dram_pj", json::num(o.dram_pj));
+        root.set("outcome", oj);
+        let p = &self.provenance;
+        let mut pj = Json::obj();
+        pj.set("target", p.target.to_json())
+            .set("levels", json::unum(p.levels as u64))
+            .set("beam_width", json::unum(p.beam_width as u64))
+            .set("beam_seed", json::unum(p.beam_seed))
+            .set("model_version", json::s(&p.model_version))
+            .set("origin", json::s(&p.origin))
+            .set("search_ms", json::unum(p.search_ms))
+            .set("cache_hit", Json::Bool(p.cache_hit));
+        root.set("provenance", pj);
+        root
+    }
+
+    pub fn from_json(j: &Json) -> Result<BlockingPlan> {
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow!("plan missing version"))?;
+        ensure!(
+            version == PLAN_SCHEMA_VERSION,
+            "unsupported plan schema version {} (this build reads {})",
+            version,
+            PLAN_SCHEMA_VERSION
+        );
+        let name = get_str(j, "name")?.to_string();
+        let dj = j.get("dims").ok_or_else(|| anyhow!("plan missing dims"))?;
+        let dims = LayerDims {
+            x: get_u64(dj, "x")?,
+            y: get_u64(dj, "y")?,
+            c: get_u64(dj, "c")?,
+            k: get_u64(dj, "k")?,
+            fw: get_u64(dj, "fw")?,
+            fh: get_u64(dj, "fh")?,
+            b: get_u64(dj, "b")?,
+        };
+        let string = BlockingString::parse(get_str(j, "string")?)
+            .map_err(|e| anyhow!("plan string: {}", e))?
+            .with_window(&dims);
+        // A hand-edited or stale document must not smuggle in a blocking
+        // that violates the divisibility invariants the rest of the code
+        // assumes (every other construction path validates too).
+        string
+            .validate(&dims)
+            .map_err(|e| anyhow!("plan string '{}' invalid for {}: {}", string, dims, e))?;
+        let tj = j
+            .get("tile")
+            .and_then(|t| t.as_arr())
+            .ok_or_else(|| anyhow!("plan missing tile"))?;
+        let tv = |i: usize| -> Result<u64> {
+            tj.get(i)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("bad tile[{}]", i))
+        };
+        let tile = (tv(0)?, tv(1)?, tv(2)?, tv(3)?);
+        let buffers = j
+            .get("buffers")
+            .and_then(|b| b.as_arr())
+            .ok_or_else(|| anyhow!("plan missing buffers"))?
+            .iter()
+            .map(|b| {
+                Ok(PlanBuffer {
+                    tensor: tensor_from_short(get_str(b, "tensor")?)?,
+                    ordinal: get_u64(b, "ordinal")? as usize,
+                    size_bytes: get_u64(b, "size_bytes")?,
+                    level: get_str(b, "level")?.to_string(),
+                    on_chip: get_bool(b, "on_chip")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let oj = j
+            .get("outcome")
+            .ok_or_else(|| anyhow!("plan missing outcome"))?;
+        let outcome = PlanOutcome {
+            total_pj: get_f64(oj, "total_pj")?,
+            memory_pj: get_f64(oj, "memory_pj")?,
+            mac_pj: get_f64(oj, "mac_pj")?,
+            macs: get_u64(oj, "macs")?,
+            area_mm2: get_f64(oj, "area_mm2")?,
+            onchip_bytes: get_u64(oj, "onchip_bytes")?,
+            input_pj: get_f64(oj, "input_pj")?,
+            kernel_pj: get_f64(oj, "kernel_pj")?,
+            output_pj: get_f64(oj, "output_pj")?,
+            dram_pj: get_f64(oj, "dram_pj")?,
+        };
+        let pj = j
+            .get("provenance")
+            .ok_or_else(|| anyhow!("plan missing provenance"))?;
+        let provenance = Provenance {
+            target: Target::from_json(
+                pj.get("target")
+                    .ok_or_else(|| anyhow!("provenance missing target"))?,
+            )?,
+            levels: get_u64(pj, "levels")? as usize,
+            beam_width: get_u64(pj, "beam_width")? as usize,
+            beam_seed: get_u64(pj, "beam_seed")?,
+            model_version: get_str(pj, "model_version")?.to_string(),
+            origin: get_str(pj, "origin")?.to_string(),
+            search_ms: get_u64(pj, "search_ms")?,
+            cache_hit: get_bool(pj, "cache_hit")?,
+        };
+        Ok(BlockingPlan {
+            name,
+            dims,
+            string,
+            tile,
+            buffers,
+            outcome,
+            provenance,
+        })
+    }
+}
+
+impl fmt::Display for BlockingPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} [{}] {}  ({:.3} pJ/MAC on {})",
+            self.name,
+            self.dims,
+            self.string,
+            self.pj_per_mac(),
+            self.provenance.target
+        )
+    }
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow!("missing or non-integer field '{}'", key))
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("missing or non-numeric field '{}'", key))
+}
+
+fn get_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("missing or non-string field '{}'", key))
+}
+
+fn get_bool(j: &Json, key: &str) -> Result<bool> {
+    j.get(key)
+        .and_then(|v| v.as_bool())
+        .ok_or_else(|| anyhow!("missing or non-boolean field '{}'", key))
+}
+
+fn tensor_from_short(s: &str) -> Result<Tensor> {
+    match s {
+        "IB" => Ok(Tensor::Input),
+        "KB" => Ok(Tensor::Kernel),
+        "OB" => Ok(Tensor::Output),
+        other => Err(anyhow!("unknown tensor '{}'", other)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> LayerDims {
+        LayerDims::conv(64, 64, 32, 16, 3, 3)
+    }
+
+    fn string(d: &LayerDims, s: &str) -> BlockingString {
+        let b = BlockingString::parse(s).unwrap().with_window(d);
+        b.validate(d).unwrap();
+        b
+    }
+
+    #[test]
+    fn evaluate_matches_target_eval() {
+        use crate::optimizer::targets::Evaluator;
+        let d = dims();
+        let s = string(&d, "Fw Fh X0=8 Y0=8 C0=8 K0=4 C1=32 K1=16 X1=64 Y1=64");
+        let target = Target::Bespoke {
+            budget_bytes: 256 * 1024,
+        };
+        let plan = BlockingPlan::evaluate("t", d, s.clone(), Provenance::external(target, "manual"))
+            .unwrap();
+        let direct = BespokeTarget::new(256 * 1024).eval(&s, &d);
+        assert!((plan.outcome.total_pj - direct.total_pj()).abs() / direct.total_pj() < 1e-12);
+        assert_eq!(plan.outcome.onchip_bytes, direct.onchip_bytes);
+        assert_eq!(plan.tile, (8, 8, 8, 4));
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let d = dims();
+        let s = string(&d, "Fw Fh X0=8 Y0=8 C0=8 K0=4 C1=32 K1=16 X1=64 Y1=64");
+        for target in [
+            Target::Bespoke {
+                budget_bytes: 64 * 1024,
+            },
+            Target::DianNao,
+            Target::Cpu,
+        ] {
+            let plan =
+                BlockingPlan::evaluate("rt", d, s.clone(), Provenance::external(target, "manual"))
+                    .unwrap();
+            let text = plan.to_json().pretty();
+            let back = BlockingPlan::from_json(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, plan, "roundtrip mismatch for target {}", target);
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_string() {
+        let d = dims();
+        let s = BlockingString::parse("Fw Fh X0=7 Y0=64 C0=32 K0=16 X1=64")
+            .unwrap()
+            .with_window(&d);
+        assert!(BlockingPlan::evaluate(
+            "bad",
+            d,
+            s,
+            Provenance::external(Target::Cpu, "manual")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn buffers_cover_every_virtual_buffer() {
+        let d = dims();
+        let s = string(&d, "Fw Fh X0=8 Y0=8 C0=8 K0=4 C1=32 K1=16 X1=64 Y1=64");
+        let plan = BlockingPlan::evaluate(
+            "b",
+            d,
+            s.clone(),
+            Provenance::external(
+                Target::Bespoke {
+                    budget_bytes: 8 << 20,
+                },
+                "manual",
+            ),
+        )
+        .unwrap();
+        let (_bufs, prof) = crate::model::access::analyze(&s, &d);
+        let expect: usize = Tensor::ALL.iter().map(|&t| prof.of(t).len()).sum();
+        assert_eq!(plan.buffers.len(), expect);
+        assert!(plan.buffers.iter().any(|b| b.on_chip));
+    }
+
+    #[test]
+    fn version_mismatch_is_an_error() {
+        let d = dims();
+        let s = string(&d, "Fw Fh X0=8 Y0=8 C0=8 K0=4 C1=32 K1=16 X1=64 Y1=64");
+        let plan =
+            BlockingPlan::evaluate("v", d, s, Provenance::external(Target::Cpu, "manual")).unwrap();
+        let mut j = plan.to_json();
+        j.set("version", json::unum(99));
+        assert!(BlockingPlan::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! The public planning API: a serializable blocking-schedule IR
+//! ([`BlockingPlan`]), a builder facade that produces plans
+//! ([`Planner`]), and a JSON-file plan cache ([`PlanCache`]).
+//!
+//! The paper's central artifact is the *blocking schedule*: derived once
+//! by the analytical model, then carried to cache simulation, accelerator
+//! execution, and multicore partitioning. This module makes that artifact
+//! a first-class value every subsystem shares — see `plan::ir` for the
+//! data model and `plan::planner` for the entry points.
+
+pub mod cache;
+pub mod ir;
+pub mod planner;
+
+pub use cache::PlanCache;
+pub use ir::{
+    BlockingPlan, PlanBuffer, PlanOutcome, Provenance, Target, MODEL_VERSION, PLAN_SCHEMA_VERSION,
+};
+pub use planner::{NetworkPlanner, Planner};

@@ -1,0 +1,433 @@
+//! The `Planner` facade: the front door to the whole stack.
+//!
+//! ```ignore
+//! let plan = Planner::for_layer(LayerDims::conv(56, 56, 128, 256, 3, 3))
+//!     .target(Target::Bespoke { budget_bytes: 8 << 20 })
+//!     .levels(3)
+//!     .beam(BeamConfig::quick())
+//!     .plan()?;
+//! let all = Planner::for_network("AlexNet")?.plan_all()?;
+//! ```
+//!
+//! `plan()` runs the seeded beam search for the configured target and
+//! wraps the winner in a [`BlockingPlan`]. With a cache file attached
+//! (`cache_file`), a matching prior plan short-circuits the search —
+//! the cached plan comes back with `provenance.cache_hit = true` and
+//! zero search time.
+
+use super::cache::PlanCache;
+use super::ir::{BlockingPlan, Provenance, Target, MODEL_VERSION};
+use crate::model::benchmarks;
+use crate::model::dims::LayerDims;
+use crate::model::networks::{all_networks, LayerKind};
+use crate::model::string::BlockingString;
+use crate::optimizer::beam::{optimize, BeamConfig};
+use crate::optimizer::search::Scored;
+use crate::optimizer::targets::{BespokeTarget, FixedTarget};
+use anyhow::{anyhow, ensure, Result};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Builder-style planner for a single layer.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    name: String,
+    dims: LayerDims,
+    target: Target,
+    levels: usize,
+    beam: BeamConfig,
+    cache_path: Option<PathBuf>,
+}
+
+impl Planner {
+    /// Plan an anonymous layer. Defaults: bespoke 8 MB target, 3 levels,
+    /// quick beam, no cache.
+    pub fn for_layer(dims: LayerDims) -> Planner {
+        Planner::for_named("layer", dims)
+    }
+
+    /// Plan a layer with a name carried into the plan's identity.
+    pub fn for_named(name: &str, dims: LayerDims) -> Planner {
+        Planner {
+            name: name.to_string(),
+            dims,
+            target: Target::Bespoke {
+                budget_bytes: 8 << 20,
+            },
+            levels: 3,
+            beam: BeamConfig::quick(),
+            cache_path: None,
+        }
+    }
+
+    /// Plan one of the Table 4 benchmark layers by name.
+    pub fn for_benchmark(name: &str) -> Result<Planner> {
+        let b = benchmarks::by_name(name)
+            .ok_or_else(|| anyhow!("unknown benchmark layer '{}' (see Table 4)", name))?;
+        Ok(Planner::for_named(b.name, b.dims))
+    }
+
+    /// Plan every conv layer of a named network ("AlexNet", "VGGNet-B",
+    /// "VGGNet-D") or the e2e Pallas pipeline ("AlexNet-mini").
+    pub fn for_network(name: &str) -> Result<NetworkPlanner> {
+        let layers: Vec<(String, LayerDims)> = if name.eq_ignore_ascii_case("alexnet-mini")
+            || name.eq_ignore_ascii_case("e2e")
+        {
+            crate::optimizer::schedules::e2e_layers()
+        } else {
+            let net = all_networks()
+                .into_iter()
+                .find(|n| n.name.eq_ignore_ascii_case(name))
+                .ok_or_else(|| {
+                    anyhow!(
+                        "unknown network '{}' (known: AlexNet, VGGNet-B, VGGNet-D, AlexNet-mini)",
+                        name
+                    )
+                })?;
+            net.layers
+                .iter()
+                .filter(|l| l.kind == LayerKind::Conv)
+                .map(|l| (l.name.clone(), l.dims))
+                .collect()
+        };
+        ensure!(!layers.is_empty(), "network '{}' has no conv layers", name);
+        Ok(NetworkPlanner {
+            network: name.to_string(),
+            layers,
+            template: Planner::for_named("layer", LayerDims::conv(1, 1, 1, 1, 1, 1)),
+        })
+    }
+
+    pub fn target(mut self, target: Target) -> Planner {
+        self.target = target;
+        self
+    }
+
+    pub fn levels(mut self, levels: usize) -> Planner {
+        assert!(levels >= 1, "at least one blocking level");
+        self.levels = levels;
+        self
+    }
+
+    pub fn beam(mut self, cfg: BeamConfig) -> Planner {
+        self.beam = cfg;
+        self
+    }
+
+    /// Attach a JSON plan-cache file; `plan()` will consult it before
+    /// searching and record fresh results into it.
+    pub fn cache_file(mut self, path: impl Into<PathBuf>) -> Planner {
+        self.cache_path = Some(path.into());
+        self
+    }
+
+    /// The cache signature of this planning problem: dims, target,
+    /// levels, and every BeamConfig field that affects the search result
+    /// (the layer *name* is deliberately excluded — identical problems
+    /// share one entry).
+    pub fn cache_key(&self) -> String {
+        let d = &self.dims;
+        let b = &self.beam;
+        format!(
+            "x={} y={} c={} k={} fw={} fh={} b={}|{}|levels={}|beam={}.{}.{}.{}.{:#x}",
+            d.x,
+            d.y,
+            d.c,
+            d.k,
+            d.fw,
+            d.fh,
+            d.b,
+            self.target.key(),
+            self.levels,
+            b.beam_width,
+            b.perturbations,
+            b.outer_orders,
+            b.passes,
+            b.seed,
+        )
+    }
+
+    /// Look up the attached cache without searching. `Ok(None)` when no
+    /// cache is attached or the key is absent.
+    pub fn cached_plan(&self) -> Result<Option<BlockingPlan>> {
+        let path = match &self.cache_path {
+            Some(p) => p,
+            None => return Ok(None),
+        };
+        // The cache is an optimization: an unreadable cache file must not
+        // stop planning, it just means searching again.
+        let cache = match PlanCache::open(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("warning: plan cache unavailable ({:#}); searching", e);
+                return Ok(None);
+            }
+        };
+        Ok(cache
+            .get(&self.cache_key())
+            // A plan predicted by an older analytical model is stale even
+            // though the search problem matches: treat it as a miss so it
+            // gets recomputed (and overwritten) under the current model.
+            .filter(|p| p.provenance.model_version == MODEL_VERSION)
+            .cloned()
+            .map(|mut p| {
+                // The key excludes the layer name, so a same-dims layer
+                // may hit an entry stored under another name: relabel for
+                // this requester.
+                p.name = self.name.clone();
+                p.provenance.cache_hit = true;
+                p.provenance.search_ms = 0;
+                p
+            }))
+    }
+
+    fn search(&self) -> Vec<Scored> {
+        match self.target {
+            Target::Bespoke { budget_bytes } => optimize(
+                &self.dims,
+                &BespokeTarget::new(budget_bytes),
+                self.levels,
+                &self.beam,
+            ),
+            Target::DianNao => {
+                optimize(&self.dims, &FixedTarget::diannao(), self.levels, &self.beam)
+            }
+            Target::Cpu => optimize(&self.dims, &FixedTarget::cpu(), self.levels, &self.beam),
+        }
+    }
+
+    fn provenance(&self, origin: &str, search_ms: u64) -> Provenance {
+        Provenance {
+            target: self.target,
+            levels: self.levels,
+            beam_width: self.beam.beam_width,
+            beam_seed: self.beam.seed,
+            model_version: MODEL_VERSION.to_string(),
+            origin: origin.to_string(),
+            search_ms,
+            cache_hit: false,
+        }
+    }
+
+    /// The best plan for this layer: cache hit if available, otherwise a
+    /// fresh search (recorded into the cache when one is attached).
+    pub fn plan(&self) -> Result<BlockingPlan> {
+        if let Some(hit) = self.cached_plan()? {
+            return Ok(hit);
+        }
+        Ok(self.plan_top(1)?.remove(0))
+    }
+
+    /// The best `n` plans, ranked by predicted energy. Always searches;
+    /// the winner is recorded into the attached cache.
+    pub fn plan_top(&self, n: usize) -> Result<Vec<BlockingPlan>> {
+        ensure!(n >= 1, "plan_top needs n >= 1");
+        let t0 = Instant::now();
+        let scored = self.search();
+        ensure!(
+            !scored.is_empty(),
+            "search produced no valid schedule for {}",
+            self.dims
+        );
+        let search_ms = t0.elapsed().as_millis() as u64;
+        let plans = scored
+            .into_iter()
+            .take(n)
+            .map(|s| {
+                BlockingPlan::evaluate(
+                    &self.name,
+                    self.dims,
+                    s.string,
+                    self.provenance("search", search_ms),
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if let Some(path) = &self.cache_path {
+            // Persisting is best-effort: the search already succeeded and
+            // its result must not be discarded over a cache-write failure
+            // (read-only checkout, full disk, ...).
+            let persist = PlanCache::open(path).and_then(|mut cache| {
+                cache.put(self.cache_key(), plans[0].clone());
+                cache.save()
+            });
+            if let Err(e) = persist {
+                eprintln!("warning: failed to write plan cache: {:#}", e);
+            }
+        }
+        Ok(plans)
+    }
+
+    /// Search and return the top-`n` candidate blocking strings without
+    /// building full plans — for callers that arbitrate between
+    /// candidates by other means (e.g. trace-sim autotuning) and only
+    /// evaluate the winner (via [`Planner::plan_string`]).
+    pub fn candidate_strings(&self, n: usize) -> Result<Vec<BlockingString>> {
+        ensure!(n >= 1, "candidate_strings needs n >= 1");
+        let scored = self.search();
+        ensure!(
+            !scored.is_empty(),
+            "search produced no valid schedule for {}",
+            self.dims
+        );
+        Ok(scored.into_iter().take(n).map(|s| s.string).collect())
+    }
+
+    /// Search, then return the best candidate whose blocking string
+    /// satisfies `pred` (falling back to the overall best). Only the
+    /// selected candidate pays full plan evaluation, and nothing is
+    /// cached — the winner under `pred` is not the answer `plan()`
+    /// promises for this key.
+    pub fn plan_matching(
+        &self,
+        pred: impl Fn(&BlockingString, &LayerDims) -> bool,
+    ) -> Result<BlockingPlan> {
+        let t0 = Instant::now();
+        let scored = self.search();
+        ensure!(
+            !scored.is_empty(),
+            "search produced no valid schedule for {}",
+            self.dims
+        );
+        let search_ms = t0.elapsed().as_millis() as u64;
+        let chosen = scored
+            .iter()
+            .find(|s| pred(&s.string, &self.dims))
+            .unwrap_or(&scored[0]);
+        BlockingPlan::evaluate(
+            &self.name,
+            self.dims,
+            chosen.string.clone(),
+            self.provenance("search", search_ms),
+        )
+    }
+
+    /// Wrap a caller-supplied blocking string in a plan (no search):
+    /// validates it and evaluates it on the configured target.
+    pub fn plan_string(&self, string: &BlockingString) -> Result<BlockingPlan> {
+        BlockingPlan::evaluate(
+            &self.name,
+            self.dims,
+            string.clone(),
+            self.provenance("manual", 0),
+        )
+    }
+}
+
+/// Planner for every (conv) layer of a network.
+#[derive(Debug, Clone)]
+pub struct NetworkPlanner {
+    pub network: String,
+    layers: Vec<(String, LayerDims)>,
+    template: Planner,
+}
+
+impl NetworkPlanner {
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn target(mut self, target: Target) -> NetworkPlanner {
+        self.template = self.template.target(target);
+        self
+    }
+
+    pub fn levels(mut self, levels: usize) -> NetworkPlanner {
+        self.template = self.template.levels(levels);
+        self
+    }
+
+    pub fn beam(mut self, cfg: BeamConfig) -> NetworkPlanner {
+        self.template = self.template.beam(cfg);
+        self
+    }
+
+    pub fn cache_file(mut self, path: impl Into<PathBuf>) -> NetworkPlanner {
+        self.template = self.template.cache_file(path);
+        self
+    }
+
+    /// Plan every layer, in network order. Each layer hits the cache
+    /// independently when one is attached.
+    pub fn plan_all(&self) -> Result<Vec<BlockingPlan>> {
+        self.layers
+            .iter()
+            .map(|(name, dims)| {
+                let mut p = self.template.clone();
+                p.name = name.clone();
+                p.dims = *dims;
+                p.plan()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> LayerDims {
+        LayerDims::conv(16, 16, 8, 8, 3, 3)
+    }
+
+    #[test]
+    fn plan_matches_direct_optimize() {
+        let cfg = BeamConfig::quick();
+        let target = BespokeTarget::new(256 * 1024);
+        let direct = &optimize(&small(), &target, 2, &cfg)[0];
+        let plan = Planner::for_named("t", small())
+            .target(Target::Bespoke {
+                budget_bytes: 256 * 1024,
+            })
+            .levels(2)
+            .beam(cfg)
+            .plan()
+            .unwrap();
+        assert_eq!(plan.string, direct.string);
+        assert!((plan.outcome.total_pj - direct.energy_pj).abs() / direct.energy_pj < 1e-9);
+        assert_eq!(plan.provenance.origin, "search");
+        assert_eq!(plan.provenance.levels, 2);
+    }
+
+    #[test]
+    fn plan_top_is_ranked() {
+        let plans = Planner::for_named("t", small())
+            .levels(2)
+            .plan_top(4)
+            .unwrap();
+        assert!(!plans.is_empty());
+        for w in plans.windows(2) {
+            assert!(w[0].outcome.total_pj <= w[1].outcome.total_pj);
+        }
+        for p in &plans {
+            p.string.validate(&p.dims).unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_names_error() {
+        assert!(Planner::for_benchmark("Conv99").is_err());
+        assert!(Planner::for_network("NoSuchNet").is_err());
+    }
+
+    #[test]
+    fn network_planner_lists_alexnet_convs() {
+        let np = Planner::for_network("AlexNet").unwrap();
+        assert_eq!(np.layer_count(), 5);
+        let mini = Planner::for_network("AlexNet-mini").unwrap();
+        assert_eq!(mini.layer_count(), 3);
+    }
+
+    #[test]
+    fn cache_key_distinguishes_problems() {
+        let a = Planner::for_layer(small());
+        let b = Planner::for_layer(small()).levels(4);
+        let c = Planner::for_layer(small()).target(Target::DianNao);
+        let d = Planner::for_layer(LayerDims::conv(16, 16, 8, 16, 3, 3));
+        let keys = [a.cache_key(), b.cache_key(), c.cache_key(), d.cache_key()];
+        for i in 0..keys.len() {
+            for j in i + 1..keys.len() {
+                assert_ne!(keys[i], keys[j]);
+            }
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Stub PJRT engine, compiled when the `pjrt` cargo feature is off.
+//!
+//! The real engine (`engine.rs`) is the only code that touches the `xla`
+//! crate, which exists only in the offline build image's vendored crate
+//! snapshot (it wraps a local xla_extension install). Building without
+//! `--features pjrt` — e.g. in CI — swaps in this stub: the same API
+//! surface, every entry point returning a clear error, so the rest of the
+//! crate (optimizer, simulators, plan IR, coordinator types) compiles and
+//! tests without PJRT.
+
+use super::manifest::ArtifactSpec;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "built without the `pjrt` feature: PJRT execution needs the offline image's `xla` crate";
+
+/// Stub for the PJRT client owner.
+pub struct Engine;
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-unavailable".to_string()
+    }
+
+    pub fn load(&self, _path: &Path, _spec: &ArtifactSpec) -> Result<Module> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Stub for a compiled executable + its shape contract.
+pub struct Module {
+    pub spec: ArtifactSpec,
+}
+
+impl Module {
+    pub fn run_f32(&self, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = Engine::cpu().err().unwrap();
+        assert!(err.to_string().contains("pjrt"));
+    }
+}

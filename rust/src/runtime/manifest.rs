@@ -1,7 +1,11 @@
 //! Artifact manifest (written by aot.py): shapes per artifact plus the
 //! schedules compiled into each kernel, so the coordinator can report the
-//! blocking it is actually running.
+//! blocking it is actually running. The schedule records are rehydrated
+//! into full [`BlockingPlan`]s (re-evaluated on the export target), so the
+//! serving path speaks the same plan IR as the optimizer that produced
+//! the artifacts.
 
+use crate::plan::BlockingPlan;
 use crate::util::json::{parse, Json};
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -32,6 +36,20 @@ pub struct Manifest {
     pub artifacts: BTreeMap<String, ArtifactSpec>,
     /// Blocking-string notation per pipeline layer (from schedules.json).
     pub layer_strings: Vec<String>,
+    /// The plan that produced each pipeline executable, rehydrated from
+    /// the manifest's schedule records. Empty if the manifest predates
+    /// schedule embedding or *any* record fails to parse — a partial
+    /// list would misattribute plans to layers by position.
+    pub layer_plans: Vec<BlockingPlan>,
+}
+
+/// Rebuild one plan from a manifest schedule record (aot.py embeds the
+/// schedules.json rows verbatim, so this is the schedules-row parser
+/// plus a re-evaluation on the export target).
+fn plan_from_schedule_entry(l: &Json) -> Option<BlockingPlan> {
+    crate::optimizer::schedules::layer_from_json(l)
+        .and_then(|s| s.to_plan("manifest"))
+        .ok()
 }
 
 fn shape_of(j: &Json) -> Result<Vec<usize>> {
@@ -96,10 +114,24 @@ impl Manifest {
                     .collect()
             })
             .unwrap_or_default();
+        // All-or-nothing: a partially parsed list would misalign plans
+        // with pipeline layers, so any bad record empties the whole list
+        // (callers fall back to layer_strings).
+        let layer_plans = j
+            .get("schedules")
+            .and_then(|s| s.as_arr())
+            .and_then(|layers| {
+                layers
+                    .iter()
+                    .map(plan_from_schedule_entry)
+                    .collect::<Option<Vec<_>>>()
+            })
+            .unwrap_or_default();
         Ok(Manifest {
             dir: dir.to_path_buf(),
             artifacts,
             layer_strings,
+            layer_plans,
         })
     }
 
@@ -188,6 +220,12 @@ mod tests {
         assert_eq!(qs.output, vec![8, 8, 8]);
         assert_eq!(m.batch_ladder(), vec![1, 2, 4, 8]);
         assert_eq!(m.layer_strings.len(), 3);
+        // the schedule records rehydrate into full plans
+        assert_eq!(m.layer_plans.len(), 3);
+        for p in &m.layer_plans {
+            p.string.validate(&p.dims).unwrap();
+            assert_eq!(p.provenance.origin, "manifest");
+        }
     }
 
     #[test]

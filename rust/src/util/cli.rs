@@ -79,6 +79,54 @@ impl Args {
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
+
+    /// Reject any flag not in `allowed`. A typo'd flag (e.g. `--budget-mb`
+    /// for `--budget-kb`) errors with the nearest valid flag by edit
+    /// distance; flags nothing close to anything list the valid set.
+    pub fn reject_unknown(&self, allowed: &[&str]) -> Result<(), String> {
+        for key in self.flags.keys() {
+            if allowed.contains(&key.as_str()) {
+                continue;
+            }
+            let nearest = allowed
+                .iter()
+                .min_by_key(|a| levenshtein(key, a))
+                .copied();
+            let suggestion_cutoff = (key.chars().count() / 3).max(2);
+            return Err(match nearest {
+                Some(a) if levenshtein(key, a) <= suggestion_cutoff => {
+                    format!("unknown flag '--{}'; did you mean '--{}'?", key, a)
+                }
+                _ => format!(
+                    "unknown flag '--{}' (valid flags: {})",
+                    key,
+                    allowed
+                        .iter()
+                        .map(|a| format!("--{}", a))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Classic two-row Levenshtein edit distance.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let cost = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + cost);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -119,5 +167,38 @@ mod tests {
     fn bad_int_panics() {
         let a = parse(&["--n", "abc"]);
         a.get_u64("n", 0);
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", ""), 0);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("abc", ""), 3);
+        assert_eq!(levenshtein("budget-mb", "budget-kb"), 1);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn typo_names_the_nearest_flag() {
+        let a = parse(&["optimize", "--budget-mb", "8192"]);
+        let err = a
+            .reject_unknown(&["layer", "levels", "budget-kb", "target"])
+            .unwrap_err();
+        assert!(err.contains("--budget-mb"), "{}", err);
+        assert!(err.contains("--budget-kb"), "{}", err);
+    }
+
+    #[test]
+    fn known_flags_pass() {
+        let a = parse(&["optimize", "--layer", "Conv1", "--levels", "3"]);
+        a.reject_unknown(&["layer", "levels", "budget-kb"]).unwrap();
+    }
+
+    #[test]
+    fn garbage_flag_lists_valid_set() {
+        let a = parse(&["optimize", "--zzzqqq", "1"]);
+        let err = a.reject_unknown(&["layer", "levels"]).unwrap_err();
+        assert!(err.contains("valid flags"), "{}", err);
+        assert!(err.contains("--layer"), "{}", err);
     }
 }

@@ -1,0 +1,186 @@
+//! Public-API tests: the `Planner` facade, `BlockingPlan` JSON
+//! round-trips, the `PlanCache`, and a golden test pinning the
+//! `schedules.json` schema that `python/compile/aot.py` reads.
+
+use cnn_blocking::model::dims::LayerDims;
+use cnn_blocking::optimizer::beam::BeamConfig;
+use cnn_blocking::optimizer::schedules::{to_json, LayerSchedule};
+use cnn_blocking::util::json::parse;
+use cnn_blocking::{BlockingPlan, PlanCache, Planner, Target};
+use std::path::PathBuf;
+
+fn small_dims() -> LayerDims {
+    LayerDims::conv(16, 16, 8, 8, 3, 3)
+}
+
+fn quick_planner() -> Planner {
+    Planner::for_named("toy", small_dims())
+        .target(Target::Bespoke {
+            budget_bytes: 256 * 1024,
+        })
+        .levels(2)
+        .beam(BeamConfig::quick())
+}
+
+#[test]
+fn planner_facade_produces_valid_plan() {
+    let plan = quick_planner().plan().unwrap();
+    plan.string.validate(&plan.dims).unwrap();
+    assert_eq!(plan.dims, small_dims());
+    assert_eq!(plan.name, "toy");
+    assert!(plan.outcome.total_pj > 0.0);
+    assert!(plan.outcome.total_pj >= plan.outcome.mac_pj);
+    assert_eq!(plan.outcome.macs, small_dims().macs());
+    assert_eq!(small_dims().x % plan.tile.0, 0);
+    assert_eq!(small_dims().k % plan.tile.3, 0);
+    assert_eq!(plan.provenance.origin, "search");
+    assert_eq!(plan.provenance.levels, 2);
+    assert!(!plan.provenance.cache_hit);
+    assert!(!plan.buffers.is_empty());
+}
+
+#[test]
+fn plan_json_roundtrip_is_exact() {
+    let plan = quick_planner().plan().unwrap();
+    let text = plan.to_json().pretty();
+    let back = BlockingPlan::from_json(&parse(&text).unwrap()).unwrap();
+    assert_eq!(back, plan);
+}
+
+#[test]
+fn plan_cache_hits_second_time_with_zero_search_time() {
+    let dir: PathBuf =
+        std::env::temp_dir().join(format!("cnnblk-plan-cache-{}", std::process::id()));
+    let path = dir.join("plan-cache.json");
+    let _ = std::fs::remove_file(&path);
+
+    let planner = quick_planner().cache_file(&path);
+    let first = planner.plan().unwrap();
+    assert!(!first.provenance.cache_hit);
+
+    let second = planner.plan().unwrap();
+    assert!(second.provenance.cache_hit, "second plan() must hit the cache");
+    assert_eq!(second.provenance.search_ms, 0, "cache hits report zero search time");
+    assert_eq!(second.string, first.string);
+    assert_eq!(second.outcome, first.outcome);
+
+    // a different problem misses
+    let other = Planner::for_named("toy", LayerDims::conv(16, 16, 8, 16, 3, 3))
+        .levels(2)
+        .cache_file(&path);
+    assert!(other.cached_plan().unwrap().is_none());
+
+    let cache = PlanCache::open(&path).unwrap();
+    assert_eq!(cache.len(), 1);
+
+    // an entry predicted by an older analytical model is a miss
+    let mut stale_cache = PlanCache::open(&path).unwrap();
+    let mut stale = first.clone();
+    stale.provenance.model_version = "cnn-blocking/0.0-stale".to_string();
+    stale_cache.put(planner.cache_key(), stale);
+    stale_cache.save().unwrap();
+    assert!(planner.cached_plan().unwrap().is_none());
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir(&dir);
+}
+
+#[test]
+fn network_facade_plans_every_layer() {
+    let np = Planner::for_network("AlexNet-mini")
+        .unwrap()
+        .levels(2)
+        .beam(BeamConfig::quick());
+    assert_eq!(np.layer_count(), 3);
+    let plans = np.plan_all().unwrap();
+    assert_eq!(plans.len(), 3);
+    let names: Vec<&str> = plans.iter().map(|p| p.name.as_str()).collect();
+    assert_eq!(names, ["mini1", "mini2", "mini3"]);
+    for p in &plans {
+        p.string.validate(&p.dims).unwrap();
+        assert!(p.outcome.total_pj > 0.0);
+    }
+    assert!(Planner::for_network("NoSuchNet").is_err());
+}
+
+#[test]
+fn schedules_json_schema_golden() {
+    // Byte-for-byte pin of the interchange schema `python/compile/aot.py`
+    // reads. If this test breaks, aot.py compatibility broke: bump the
+    // reader AND this golden together, never just the golden.
+    let s = LayerSchedule {
+        name: "mini1".to_string(),
+        dims: LayerDims::conv(32, 32, 8, 16, 5, 5),
+        tile: (8, 8, 8, 8),
+        string: "Fw Fh X0=8 Y0=8 C0=8 K0=8 K1=16 X1=32 Y1=32".to_string(),
+        energy_pj: 12345.5,
+    };
+    let expected = r#"{
+  "layers": [
+    {
+      "dims": {
+        "c": 8,
+        "fh": 5,
+        "fw": 5,
+        "k": 16,
+        "x": 32,
+        "y": 32
+      },
+      "energy_pj": 12345.5,
+      "name": "mini1",
+      "string": "Fw Fh X0=8 Y0=8 C0=8 K0=8 K1=16 X1=32 Y1=32",
+      "tile": [
+        8,
+        8,
+        8,
+        8
+      ]
+    }
+  ],
+  "version": 1
+}"#;
+    assert_eq!(to_json(&[s]).pretty(), expected);
+}
+
+#[test]
+fn emitted_schedules_file_matches_schema() {
+    // End-to-end: emit_schedules writes a document whose layer rows carry
+    // exactly the keys aot.py reads, with b-free conv dims.
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("cnnblk-schedules-{}.json", std::process::id()));
+    let cfg = BeamConfig::quick();
+    let schedules =
+        cnn_blocking::optimizer::schedules::emit_schedules(path.to_str().unwrap(), &cfg).unwrap();
+    assert_eq!(schedules.len(), 3);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = parse(&text).unwrap();
+    assert_eq!(j.get("version").and_then(|v| v.as_u64()), Some(1));
+    let layers = j.get("layers").and_then(|l| l.as_arr()).unwrap();
+    assert_eq!(layers.len(), 3);
+    for l in layers {
+        for key in ["name", "dims", "tile", "string", "energy_pj"] {
+            assert!(l.get(key).is_some(), "layer missing '{}'", key);
+        }
+        for dim_key in ["x", "y", "c", "k", "fw", "fh"] {
+            assert!(
+                l.get("dims").unwrap().get(dim_key).is_some(),
+                "dims missing '{}'",
+                dim_key
+            );
+        }
+        assert_eq!(l.get("tile").and_then(|t| t.as_arr()).unwrap().len(), 4);
+    }
+    // and it parses back into plans
+    let plans = cnn_blocking::optimizer::schedules::plans_from_json(&j).unwrap();
+    assert_eq!(plans.len(), 3);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn plan_top_ranks_and_caches_best() {
+    let plans = quick_planner().plan_top(3).unwrap();
+    assert!(!plans.is_empty() && plans.len() <= 3);
+    for w in plans.windows(2) {
+        assert!(w[0].outcome.total_pj <= w[1].outcome.total_pj);
+    }
+}

@@ -181,6 +181,39 @@ fn more_sram_never_costs_energy() {
 }
 
 #[test]
+fn plan_json_roundtrips_randomly() {
+    // Random valid blockings, wrapped in plans across all three targets:
+    // from_json(to_json(p)) must reproduce p exactly (the PlanCache and
+    // schedule interchange depend on this).
+    use cnn_blocking::{BlockingPlan, Planner, Target};
+    check("plan json roundtrip", Config { cases: 40, ..Default::default() }, |rng| {
+        let dims = random_dims(rng);
+        let s = random_string(rng, &dims);
+        s.validate(&dims).map_err(|e| e.to_string())?;
+        let target = *rng.pick(&[
+            Target::Bespoke {
+                budget_bytes: 64 * 1024,
+            },
+            Target::DianNao,
+            Target::Cpu,
+        ]);
+        let plan = Planner::for_named("prop", dims)
+            .target(target)
+            .levels(2)
+            .plan_string(&s)
+            .map_err(|e| e.to_string())?;
+        let text = plan.to_json().pretty();
+        let parsed = cnn_blocking::util::json::parse(&text).map_err(|e| e.to_string())?;
+        let back = BlockingPlan::from_json(&parsed).map_err(|e| e.to_string())?;
+        if back == plan {
+            Ok(())
+        } else {
+            Err(format!("roundtrip mismatch for {} on {:?}", plan.string, target))
+        }
+    });
+}
+
+#[test]
 fn trace_length_invariant_under_blocking() {
     // The register-filtered trace length may vary, but the un-filtered
     // MAC count served must be identical for every blocking of the same
