@@ -14,13 +14,18 @@ fn main() -> anyhow::Result<()> {
     let cfg = BeamConfig::quick();
     let budget = 1 << 20; // 1 MB on-chip
 
-    // One facade call plans the whole network on the co-design target...
+    // One facade call plans the whole network on the co-design target.
+    // plan_all drives the PlanEngine: unique layer shapes fan out across
+    // the worker pool (`.jobs(0)` = all cores) and repeated shapes — of
+    // which VGG has many; AlexNet's five convs are all distinct — are
+    // searched once.
     let codesigned = Planner::for_network("AlexNet")?
         .target(Target::Bespoke {
             budget_bytes: budget,
         })
         .levels(3)
         .beam(cfg.clone())
+        .jobs(0)
         .plan_all()?;
     // ...and a second pass scores the same layers on fixed DianNao.
     let diannao = Planner::for_network("AlexNet")?

@@ -65,5 +65,21 @@ fn main() -> anyhow::Result<()> {
     // 6. The level-0 tile is what parameterizes the Pallas kernel.
     let (x0, y0, c0, k0) = plan.tile;
     println!("level-0 tile: x0={} y0={} c0={} k0={}", x0, y0, c0, k0);
+
+    // 7. Whole networks route through the PlanEngine: repeated layer
+    //    shapes are deduped and searched once, unique shapes fan out
+    //    across a worker pool, and results flow through the shared plan
+    //    cache. The search driver itself is pluggable — try
+    //    .strategy_named("random") for the Monte-Carlo baseline.
+    let network = Planner::for_network("AlexNet-mini")?
+        .levels(2)
+        .beam(BeamConfig::quick())
+        .strategy_named("beam")?
+        .jobs(4)
+        .plan_all()?;
+    println!("\nAlexNet-mini network plans ({} layers):", network.len());
+    for p in &network {
+        println!("  {}: {}  ({:.3} pJ/MAC)", p.name, p.string, p.pj_per_mac());
+    }
     Ok(())
 }

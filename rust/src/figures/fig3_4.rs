@@ -13,7 +13,7 @@ use crate::model::benchmarks::conv_benchmarks;
 use crate::model::dims::LayerDims;
 use crate::optimizer::beam::BeamConfig;
 use crate::plan::{BlockingPlan, Planner, Target};
-use crate::util::pool::par_map;
+use crate::util::pool::{default_threads, par_map_with, with_thread_cap, WorkerPool};
 use crate::util::table::{eng, Table};
 
 #[derive(Debug, Clone)]
@@ -141,10 +141,18 @@ pub fn run_layer(name: &str, full: &LayerDims, max_macs: u64) -> CacheRow {
     }
 }
 
-/// All five Conv benchmarks (Figs. 3-4 rows), in parallel.
+/// All five Conv benchmarks (Figs. 3-4 rows), fanned out on a worker
+/// pool. Each layer's own search/trace also parallelizes internally, so
+/// the inner width is divided by the pool size to keep total threads at
+/// the configured budget.
 pub fn run_all(max_macs: u64) -> Vec<CacheRow> {
     let benches = conv_benchmarks();
-    par_map(&benches, |b| run_layer(b.name, &b.dims, max_macs))
+    let workers = default_threads().min(benches.len()).max(1);
+    let pool = WorkerPool::new(workers);
+    let inner = (default_threads() / workers).max(1);
+    par_map_with(&pool, benches, move |b| {
+        with_thread_cap(inner, || run_layer(b.name, &b.dims, max_macs))
+    })
 }
 
 pub fn render(rows: &[CacheRow]) -> (Table, Table) {

@@ -7,6 +7,7 @@ use crate::model::dims::LayerDims;
 use crate::optimizer::beam::BeamConfig;
 use crate::parallel::partition::{evaluate_plan, MulticoreBreakdown, PartitionScheme};
 use crate::plan::{BlockingPlan, Planner, Target};
+use crate::util::pool::par_map;
 use crate::util::table::{energy_pj, Table};
 
 #[derive(Debug, Clone)]
@@ -45,21 +46,22 @@ pub fn top_schedules(
 
 /// The full Fig. 9 grid for a layer (default: Conv1). Each plan carries
 /// its own SRAM budget (its bespoke target), so the grid needs only the
-/// plans themselves.
+/// plans themselves; the (plan x scheme x cores) cells are independent
+/// evaluations and run in parallel.
 pub fn fig9_grid(plans: &[BlockingPlan]) -> Vec<Fig9Cell> {
-    let mut out = Vec::new();
+    let mut cells = Vec::new();
     for (i, p) in plans.iter().enumerate() {
         for scheme in [PartitionScheme::XYPartition, PartitionScheme::KPartition] {
             for cores in [1u64, 2, 4, 8] {
-                out.push(Fig9Cell {
-                    schedule_idx: i + 1,
-                    schedule: p.string.notation(),
-                    breakdown: evaluate_plan(p, cores, scheme),
-                });
+                cells.push((i, p, scheme, cores));
             }
         }
     }
-    out
+    par_map(&cells, |(i, p, scheme, cores)| Fig9Cell {
+        schedule_idx: i + 1,
+        schedule: p.string.notation(),
+        breakdown: evaluate_plan(p, *cores, *scheme),
+    })
 }
 
 pub fn conv1_dims() -> LayerDims {

@@ -28,6 +28,14 @@
 //! let network = Planner::for_network("AlexNet")?.plan_all()?;
 //! ```
 //!
+//! Whole-network calls route through the [`PlanEngine`]
+//! (`plan::engine`): identical layer shapes are searched once, unique
+//! shapes fan out across a persistent worker pool, and results resolve
+//! through a process-shared plan cache (merge-on-save, atomic rename).
+//! The search driver itself is pluggable — `optimizer::strategy` defines
+//! the `SearchStrategy` trait with beam / exhaustive / random-sampling
+//! implementations, selectable via `cnnblk optimize --strategy`.
+//!
 //! Plans flow to every consumer: `optimizer::schedules` serializes them
 //! into the `schedules.json` the Pallas AOT build reads,
 //! `cachesim::conv_trace::trace_plan` replays them as address traces,
@@ -62,4 +70,4 @@ pub mod plan;
 pub mod runtime;
 pub mod util;
 
-pub use plan::{BlockingPlan, PlanCache, Planner, Target};
+pub use plan::{BlockingPlan, PlanCache, PlanEngine, Planner, Target};

@@ -53,7 +53,12 @@ fn print_help() {
          USAGE: cnnblk <subcommand> [flags]\n\
          \n\
          optimize  --layer Conv1 [--levels 3] [--budget-kb 8192] [--target bespoke|diannao|cpu]\n\
+         \x20         [--strategy beam|exhaustive|random]      (search driver; default beam)\n\
+         \x20         [--jobs N]                              (thread budget; engine workers\n\
+         \x20         in --network mode, search width otherwise)\n\
          \x20         [--top 5] [--cache PATH] [--no-cache]   (repeat runs hit the plan cache)\n\
+         \x20         --network AlexNet                       (plan a whole network through the\n\
+         \x20         engine: repeated shapes searched once, unique shapes in parallel)\n\
          schedules [--out python/compile/schedules.json]      (step 1 of `make artifacts`)\n\
          figures   [--table1|--table3|--table4|--fig3|--fig5|--fig6|--fig7|--fig8|--fig9|--all]\n\
          cachesim  [--max-macs 20000000]                      (Figs. 3-4 traces)\n\
@@ -94,18 +99,18 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         args,
         &[
             "layer",
+            "network",
             "levels",
             "budget-kb",
             "target",
+            "strategy",
+            "jobs",
             "top",
             "full-search",
             "cache",
             "no-cache",
         ],
     )?;
-    let layer = args.get_or("layer", "Conv1");
-    let bench = by_name(&layer)
-        .ok_or_else(|| anyhow::anyhow!("unknown layer '{}' (see `figures --table4`)", layer))?;
     let levels = args.get_u64("levels", 3) as usize;
     let budget = args.get_u64("budget-kb", 8 * 1024) * 1024;
     let target = match args.get_or("target", "bespoke").as_str() {
@@ -115,10 +120,57 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
             budget_bytes: budget,
         },
     };
+    let strategy = args.get_or("strategy", "beam");
+
+    // Whole-network mode: the PlanEngine dedups repeated layer shapes
+    // and fans unique searches across the worker pool.
+    if let Some(network) = args.get("network") {
+        // The engine plans whole networks, best plan per layer: flags
+        // that only make sense for single-layer mode must not be
+        // silently swallowed.
+        for conflicting in ["layer", "top"] {
+            anyhow::ensure!(
+                !args.has(conflicting),
+                "--{} cannot be combined with --network (the engine reports \
+                 the best plan per layer)",
+                conflicting
+            );
+        }
+        let mut np = Planner::for_network(network)?
+            .target(target)
+            .levels(levels)
+            .beam(beam_cfg(args))
+            .strategy_named(&strategy)?
+            .jobs(args.get_u64("jobs", 0) as usize);
+        if !args.has("no-cache") {
+            np = np.cache_file(args.get_or("cache", DEFAULT_CACHE));
+        }
+        let t0 = Instant::now();
+        let plans = np.plan_all()?;
+        let hits = plans.iter().filter(|p| p.provenance.cache_hit).count();
+        println!(
+            "{}: {} conv layers planned via '{}' strategy in {:?} ({} cache hits):",
+            network,
+            plans.len(),
+            strategy,
+            t0.elapsed(),
+            hits,
+        );
+        for p in &plans {
+            println!("  {} ({}):", p.name, p.dims);
+            print_plan(1, p);
+        }
+        return Ok(());
+    }
+
+    let layer = args.get_or("layer", "Conv1");
+    let bench = by_name(&layer)
+        .ok_or_else(|| anyhow::anyhow!("unknown layer '{}' (see `figures --table4`)", layer))?;
     let mut planner = Planner::for_named(bench.name, bench.dims)
         .target(target)
         .levels(levels)
-        .beam(beam_cfg(args));
+        .beam(beam_cfg(args))
+        .strategy_named(&strategy)?;
     if !args.has("no-cache") {
         planner = planner.cache_file(args.get_or("cache", DEFAULT_CACHE));
     }
@@ -141,7 +193,14 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         }
     }
     let t0 = Instant::now();
-    let plans = planner.plan_top(top)?;
+    // --jobs in single-layer mode budgets the search's own parallelism
+    // (there is no multi-layer fan-out to spread it over).
+    let thread_budget = args.get_u64("jobs", 0) as usize;
+    let plans = if thread_budget > 0 {
+        cnn_blocking::util::pool::with_thread_cap(thread_budget, || planner.plan_top(top))?
+    } else {
+        planner.plan_top(top)?
+    };
     println!(
         "{} ({}), {} levels, {} plans kept, search took {:?}:",
         bench.name,

@@ -57,8 +57,9 @@ impl BeamConfig {
 }
 
 /// Optimize a layer to `levels` blocking levels on `target`; returns the
-/// best candidates, sorted by energy.
-pub fn optimize<E: Evaluator>(
+/// best candidates, sorted by energy. (`E: ?Sized` so strategy objects
+/// can pass `&dyn Evaluator`.)
+pub fn optimize<E: Evaluator + ?Sized>(
     dims: &LayerDims,
     target: &E,
     levels: usize,

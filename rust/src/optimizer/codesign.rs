@@ -10,7 +10,7 @@ use super::beam::BeamConfig;
 use super::targets::{BespokeTarget, Evaluator, FixedTarget};
 use crate::model::dims::LayerDims;
 use crate::model::hierarchy::Breakdown;
-use crate::plan::{Planner, Target};
+use crate::plan::{BlockingPlan, PlanEngine, PlanRequest, Planner, Target};
 
 /// One co-designed point.
 #[derive(Debug, Clone)]
@@ -22,6 +22,19 @@ pub struct DesignPoint {
     pub onchip_bytes: u64,
     pub string: String,
     pub breakdown: Breakdown,
+}
+
+fn point_from_plan(plan: &BlockingPlan, budget_bytes: u64, dims: &LayerDims) -> DesignPoint {
+    let out = BespokeTarget::new(budget_bytes).eval(&plan.string, dims);
+    DesignPoint {
+        budget_bytes,
+        energy_pj: out.total_pj(),
+        memory_pj: out.memory_pj(),
+        area_mm2: out.area_mm2,
+        onchip_bytes: out.onchip_bytes,
+        string: plan.string.notation(),
+        breakdown: out.breakdown,
+    }
 }
 
 /// Co-design a single layer under one SRAM budget.
@@ -37,29 +50,38 @@ pub fn codesign_layer(
         .beam(cfg.clone())
         .plan()
         .expect("search returned candidates");
-    let out = BespokeTarget::new(budget_bytes).eval(&best.string, dims);
-    DesignPoint {
-        budget_bytes,
-        energy_pj: out.total_pj(),
-        memory_pj: out.memory_pj(),
-        area_mm2: out.area_mm2,
-        onchip_bytes: out.onchip_bytes,
-        string: best.string.notation(),
-        breakdown: out.breakdown,
-    }
+    point_from_plan(&best, budget_bytes, dims)
 }
 
 /// Sweep SRAM budgets (Fig. 7's x axis): returns one design point per
-/// budget, each with the schedule re-optimized for that budget.
+/// budget, each with the schedule re-optimized for that budget. The
+/// per-budget searches are independent planning problems, so the sweep
+/// fans them out through the [`PlanEngine`] worker pool.
 pub fn sweep_budgets(
     dims: &LayerDims,
     budgets: &[u64],
     levels: usize,
     cfg: &BeamConfig,
 ) -> Vec<DesignPoint> {
-    budgets
+    let reqs: Vec<PlanRequest> = budgets
         .iter()
-        .map(|&b| codesign_layer(dims, b, levels, cfg))
+        .map(|&b| PlanRequest {
+            name: format!("codesign-{}", b),
+            dims: *dims,
+            target: Target::Bespoke { budget_bytes: b },
+            levels,
+            budget: cfg.clone(),
+        })
+        .collect();
+    // (plan_requests reads levels/budget from each request, so the
+    // engine-level defaults don't need configuring here.)
+    let plans = PlanEngine::new()
+        .plan_requests(&reqs)
+        .expect("search returned candidates");
+    plans
+        .iter()
+        .zip(budgets)
+        .map(|(plan, &b)| point_from_plan(plan, b, dims))
         .collect()
 }
 

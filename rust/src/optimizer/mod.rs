@@ -3,6 +3,10 @@
 //! deep hierarchies, evaluation targets (fixed hierarchies vs bespoke
 //! memory co-design), the Fig. 6/7 co-design sweeps, multi-layer
 //! flexible-memory optimization, and schedule export to the Pallas build.
+//!
+//! Search drivers are pluggable: the [`strategy::SearchStrategy`] trait
+//! fronts `beam`/`search`, and the plan layer's `PlanEngine` dispatches
+//! whole networks through whichever strategy the caller picked.
 
 pub mod beam;
 pub mod codesign;
@@ -10,8 +14,12 @@ pub mod multilayer;
 pub mod schedules;
 pub mod search;
 pub mod sizes;
+pub mod strategy;
 pub mod targets;
 
 pub use beam::{optimize, BeamConfig};
 pub use search::{search_exhaustive, search_orders, Candidate, Scored};
+pub use strategy::{
+    strategy_by_name, BeamSearch, Exhaustive2Level, RandomSampling, SearchBudget, SearchStrategy,
+};
 pub use targets::{BespokeTarget, EvalOutcome, Evaluator, FixedTarget};

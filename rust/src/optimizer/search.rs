@@ -130,7 +130,7 @@ pub fn seed_candidate(dims: &LayerDims, order: Vec<Vec<Dim>>) -> Candidate {
 /// Coordinate descent over the divisor lattice: repeatedly sweep every
 /// (dim, level) coordinate, trying each legal divisor value, keeping the
 /// best. Converges in a few passes; `max_passes` bounds the work.
-pub fn descend<E: Evaluator>(
+pub fn descend<E: Evaluator + ?Sized>(
     cand: &mut Candidate,
     dims: &LayerDims,
     target: &E,
@@ -175,7 +175,7 @@ pub fn descend<E: Evaluator>(
 
 /// Optimize every 2-level order with coordinate descent; return the best
 /// `keep` candidates, sorted by energy (the paper's 2-level base search).
-pub fn search_orders<E: Evaluator>(
+pub fn search_orders<E: Evaluator + ?Sized>(
     dims: &LayerDims,
     target: &E,
     levels: usize,
@@ -252,7 +252,7 @@ pub fn perturb(cand: &Candidate, dims: &LayerDims, rng: &mut Rng) -> Candidate {
 /// problems; panics if the estimated candidate count exceeds `limit`.
 /// Used to validate the heuristic search in tests (the paper's "24 hours
 /// on a Xeon" mode, shrunk to toy sizes).
-pub fn search_exhaustive<E: Evaluator>(
+pub fn search_exhaustive<E: Evaluator + ?Sized>(
     dims: &LayerDims,
     target: &E,
     levels: usize,

@@ -1,16 +1,39 @@
-//! JSON-file-backed plan cache.
+//! JSON-file-backed plan cache, safe to share between processes.
 //!
 //! Search is the expensive part of planning (seconds for deep beams on
 //! big layers); the plan itself is a few KB of JSON. The cache maps a
-//! search signature — `(dims, target, levels, beam width)`, see
-//! [`crate::plan::Planner::cache_key`] — to the best plan found, so
+//! search signature — `(dims, target, levels, beam budget, strategy)`,
+//! see [`crate::plan::Planner::cache_key`] — to the best plan found, so
 //! repeat `optimize` calls and the serving path skip search entirely.
+//!
+//! Two cooperation mechanisms make one cache file a coordination point
+//! for sharded search across processes:
+//!
+//! * **Merge-on-save**: [`PlanCache::save`] re-reads the file and folds
+//!   in entries other writers recorded since this cache loaded, instead
+//!   of clobbering them; the write itself goes through a process-unique
+//!   temp file and an atomic rename, so readers never observe a torn
+//!   document. (Two saves landing in the same instant can still lose
+//!   the race between re-read and rename — no file locking offline —
+//!   but lost entries are regenerable; see `save`.)
+//! * **[`SharedPlanCache`]**: an in-memory shard index (keys hashed
+//!   across independent locks) that a worker pool reads and writes
+//!   concurrently without serializing on one mutex, then folds back into
+//!   the file-backed cache in one save.
 
 use super::ir::{BlockingPlan, PLAN_SCHEMA_VERSION};
 use crate::util::json::{self, parse, Json};
+
+/// Version of the cache *key* format (bump when `plan::engine::job_key`
+/// changes shape). A document written under another key format is
+/// discarded on load: its keys can never be hit again, and without this
+/// check merge-on-save would carry the dead entries along forever. The
+/// cache is regenerable, so discarding is always safe.
+pub const KEY_FORMAT: u64 = 2;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 #[derive(Debug, Clone)]
 pub struct PlanCache {
@@ -26,21 +49,25 @@ impl PlanCache {
     /// parse are dropped — both get recomputed and overwritten.
     pub fn open(path: impl Into<PathBuf>) -> Result<PlanCache> {
         let path = path.into();
-        let mut entries = BTreeMap::new();
-        if path.exists() {
+        let entries = if path.exists() {
             let text = std::fs::read_to_string(&path)
                 .with_context(|| format!("reading plan cache {}", path.display()))?;
-            if let Ok(j) = parse(&text) {
-                if let Some(Json::Obj(m)) = j.get("entries") {
-                    for (k, v) in m {
-                        if let Ok(p) = BlockingPlan::from_json(v) {
-                            entries.insert(k.clone(), p);
-                        }
-                    }
-                }
-            }
-        }
+            parse_entries(&text)
+        } else {
+            BTreeMap::new()
+        };
         Ok(PlanCache { path, entries })
+    }
+
+    /// A cache handle bound to `path` without reading the file — for
+    /// write-only use, where [`PlanCache::save`]'s merge-on-save folds
+    /// in the on-disk entries anyway and an upfront `open` would just
+    /// parse the whole document a second time.
+    pub fn empty_at(path: impl Into<PathBuf>) -> PlanCache {
+        PlanCache {
+            path: path.into(),
+            entries: BTreeMap::new(),
+        }
     }
 
     pub fn path(&self) -> &Path {
@@ -63,9 +90,23 @@ impl PlanCache {
         self.entries.insert(key, plan);
     }
 
+    /// Iterate all entries in key order.
+    pub fn entries(&self) -> impl Iterator<Item = (&String, &BlockingPlan)> {
+        self.entries.iter()
+    }
+
     /// Write the cache back to its file (creating parent directories).
-    /// The write is atomic (temp file + rename) so an interrupted save
-    /// never leaves a truncated document behind.
+    ///
+    /// Cooperates with other savers of the same file: the current
+    /// on-disk document is re-read and merged first (our entries win
+    /// conflicts — they are the freshest computation of their keys), and
+    /// the write lands via a process-unique temp file + atomic rename,
+    /// so readers never see a torn document and sequential savers end
+    /// with the union of their entries. The remaining race — two saves
+    /// whose read-merge-rename windows overlap — can drop the earlier
+    /// writer's fresh entries (no portable file locking offline); that
+    /// only costs a re-search next run, never correctness, because the
+    /// cache is purely regenerable.
     pub fn save(&self) -> Result<()> {
         if let Some(parent) = self.path.parent() {
             if !parent.as_os_str().is_empty() {
@@ -73,18 +114,105 @@ impl PlanCache {
                     .with_context(|| format!("creating {}", parent.display()))?;
             }
         }
-        let mut entries = Json::obj();
+        let mut merged = match std::fs::read_to_string(&self.path) {
+            Ok(text) => parse_entries(&text),
+            Err(_) => BTreeMap::new(), // missing or unreadable: nothing to merge
+        };
         for (k, p) in &self.entries {
+            merged.insert(k.clone(), p.clone());
+        }
+        let mut entries = Json::obj();
+        for (k, p) in &merged {
             entries.set(k, p.to_json());
         }
         let mut root = Json::obj();
         root.set("version", json::unum(PLAN_SCHEMA_VERSION));
+        root.set("key_format", json::unum(KEY_FORMAT));
         root.set("entries", entries);
-        let tmp = self.path.with_extension("json.tmp");
+        let tmp = self
+            .path
+            .with_extension(format!("json.tmp.{}", std::process::id()));
         std::fs::write(&tmp, root.pretty())
             .with_context(|| format!("writing plan cache {}", tmp.display()))?;
         std::fs::rename(&tmp, &self.path)
             .with_context(|| format!("replacing plan cache {}", self.path.display()))
+    }
+}
+
+fn parse_entries(text: &str) -> BTreeMap<String, BlockingPlan> {
+    let mut entries = BTreeMap::new();
+    if let Ok(j) = parse(text) {
+        // A document keyed under another format (or predating key
+        // formats) holds entries no current lookup can ever hit: start
+        // fresh instead of dragging them through every merge.
+        if j.get("key_format").and_then(|v| v.as_u64()) != Some(KEY_FORMAT) {
+            return entries;
+        }
+        if let Some(Json::Obj(m)) = j.get("entries") {
+            for (k, v) in m {
+                if let Ok(p) = BlockingPlan::from_json(v) {
+                    entries.insert(k.clone(), p);
+                }
+            }
+        }
+    }
+    entries
+}
+
+/// Concurrency-safe in-memory plan index: keys are hashed across
+/// independent shard locks so a worker pool can record results without
+/// funneling through one mutex. The plan engine seeds it from a
+/// [`PlanCache`], lets workers `get`/`put` during the fan-out, and folds
+/// it back with [`SharedPlanCache::drain_into`] for one merge-on-save.
+pub struct SharedPlanCache {
+    shards: Vec<Mutex<BTreeMap<String, BlockingPlan>>>,
+}
+
+impl SharedPlanCache {
+    pub fn new(shards: usize) -> SharedPlanCache {
+        let shards = shards.max(1);
+        SharedPlanCache {
+            shards: (0..shards).map(|_| Mutex::new(BTreeMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Mutex<BTreeMap<String, BlockingPlan>> {
+        // FNV-1a: cheap, stable, good enough to spread keys over shards.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in key.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        &self.shards[(h % self.shards.len() as u64) as usize]
+    }
+
+    pub fn get(&self, key: &str) -> Option<BlockingPlan> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
+    pub fn put(&self, key: String, plan: BlockingPlan) {
+        self.shard(&key).lock().unwrap().insert(key, plan);
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.shard(key).lock().unwrap().contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy every entry into a file-backed cache (ahead of its save).
+    pub fn drain_into(&self, cache: &mut PlanCache) {
+        for shard in &self.shards {
+            for (k, p) in shard.lock().unwrap().iter() {
+                cache.put(k.clone(), p.clone());
+            }
+        }
     }
 }
 
@@ -127,6 +255,7 @@ mod tests {
     #[test]
     fn save_and_reload_roundtrips() {
         let path = temp_path("roundtrip");
+        let _ = std::fs::remove_file(&path);
         let plan = sample_plan();
         let mut c = PlanCache::open(&path).unwrap();
         c.put("k1".to_string(), plan.clone());
@@ -152,11 +281,108 @@ mod tests {
     #[test]
     fn save_leaves_no_temp_file() {
         let path = temp_path("atomic");
+        let _ = std::fs::remove_file(&path);
         let mut c = PlanCache::open(&path).unwrap();
         c.put("k".to_string(), sample_plan());
         c.save().unwrap();
         assert!(path.exists());
-        assert!(!path.with_extension("json.tmp").exists());
+        let tmp = path.with_extension(format!("json.tmp.{}", std::process::id()));
+        assert!(!tmp.exists());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn foreign_key_format_resets_to_empty() {
+        // A document written under an older job_key shape holds entries
+        // no lookup can hit; loading it must start fresh rather than
+        // carry the dead entries through every future merge.
+        let path = temp_path("keyformat");
+        let _ = std::fs::remove_file(&path);
+        let mut c = PlanCache::open(&path).unwrap();
+        c.put("pr1-era-key".to_string(), sample_plan());
+        c.save().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"key_format\": 2"));
+        std::fs::write(&path, text.replace("\"key_format\": 2", "\"key_format\": 1")).unwrap();
+        let reloaded = PlanCache::open(&path).unwrap();
+        assert!(reloaded.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn concurrent_writers_merge_instead_of_clobbering() {
+        // Two caches on the same file, both opened before either saved:
+        // the second save must keep the first writer's entries.
+        let path = temp_path("merge");
+        let _ = std::fs::remove_file(&path);
+        let mut a = PlanCache::open(&path).unwrap();
+        let mut b = PlanCache::open(&path).unwrap();
+        a.put("ka".to_string(), sample_plan());
+        a.save().unwrap();
+        b.put("kb".to_string(), sample_plan());
+        b.save().unwrap();
+        let c = PlanCache::open(&path).unwrap();
+        assert_eq!(c.len(), 2, "second save clobbered the first writer");
+        assert!(c.get("ka").is_some());
+        assert!(c.get("kb").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_conflict_prefers_own_entry() {
+        // Same key written by both: the saver's own (freshest) entry wins.
+        let path = temp_path("conflict");
+        let _ = std::fs::remove_file(&path);
+        let mut a = PlanCache::open(&path).unwrap();
+        let mut b = PlanCache::open(&path).unwrap();
+        let mut stale = sample_plan();
+        stale.provenance.model_version = "cnn-blocking/0.0-stale".to_string();
+        a.put("k".to_string(), stale);
+        a.save().unwrap();
+        let fresh = sample_plan();
+        b.put("k".to_string(), fresh.clone());
+        b.save().unwrap();
+        let c = PlanCache::open(&path).unwrap();
+        assert_eq!(c.get("k"), Some(&fresh));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn shared_cache_basics() {
+        let shared = SharedPlanCache::new(8);
+        assert!(shared.is_empty());
+        let plan = sample_plan();
+        for i in 0..64 {
+            shared.put(format!("key-{}", i), plan.clone());
+        }
+        assert_eq!(shared.len(), 64);
+        assert!(shared.contains("key-0"));
+        assert!(!shared.contains("key-64"));
+        assert_eq!(shared.get("key-63").as_ref(), Some(&plan));
+
+        let path = temp_path("shared-drain");
+        let _ = std::fs::remove_file(&path);
+        let mut file = PlanCache::open(&path).unwrap();
+        shared.drain_into(&mut file);
+        assert_eq!(file.len(), 64);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn shared_cache_concurrent_puts() {
+        let shared = std::sync::Arc::new(SharedPlanCache::new(4));
+        let plan = sample_plan();
+        std::thread::scope(|scope| {
+            for t in 0..8usize {
+                let shared = std::sync::Arc::clone(&shared);
+                let plan = plan.clone();
+                scope.spawn(move || {
+                    for i in 0..32 {
+                        shared.put(format!("t{}-{}", t, i), plan.clone());
+                    }
+                });
+            }
+        });
+        assert_eq!(shared.len(), 8 * 32);
     }
 }

@@ -1,0 +1,524 @@
+//! Network-scale planning engine.
+//!
+//! `Planner::plan()` answers one layer at a time; the engine answers a
+//! whole network (or any batch of planning problems) the way the model
+//! itself says to: identical problems are solved once, independent
+//! problems are solved concurrently, and every result flows through a
+//! cache that cooperating processes can share.
+//!
+//! Pipeline for a batch of [`PlanRequest`]s:
+//!
+//! 1. **Dedup** — requests are keyed by [`job_key`] (dims + target +
+//!    levels + budget + strategy; layer *names* are excluded), so
+//!    VGG's repeated 512-channel conv shape is searched once no matter
+//!    how many layers carry it.
+//! 2. **Cache** — when a cache file is attached, prior plans (current
+//!    model version only) resolve jobs with zero search time.
+//! 3. **Fan-out** — remaining unique jobs run on a persistent
+//!    [`WorkerPool`] through the configured [`SearchStrategy`]. Results
+//!    land in a [`SharedPlanCache`] (sharded locks, no single-mutex
+//!    funnel).
+//! 4. **Persist** — the shared index folds back into the file cache,
+//!    whose merge-on-save + atomic-rename write lets multiple processes
+//!    share one `.cnnblk/plan-cache.json` without clobbering each other.
+//!
+//! Engine output is deterministic: strategies are pure functions of
+//! their inputs and batch plans record `search_ms = 0`, so the same
+//! request batch produces byte-identical plan JSON at any worker count.
+
+use super::cache::{PlanCache, SharedPlanCache};
+use super::ir::{BlockingPlan, Provenance, Target, MODEL_VERSION};
+use crate::model::dims::LayerDims;
+use crate::optimizer::beam::BeamConfig;
+use crate::optimizer::strategy::{default_strategy, strategy_by_name, SearchStrategy};
+use crate::optimizer::targets::{BespokeTarget, FixedTarget};
+use crate::util::pool::{default_threads, par_map_with, with_thread_cap, WorkerPool};
+use anyhow::{anyhow, ensure, Result};
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// One planning problem: a named layer plus everything that determines
+/// its answer. Batches of requests may mix targets/levels/budgets (the
+/// co-design sweep plans one layer under many SRAM budgets).
+#[derive(Debug, Clone)]
+pub struct PlanRequest {
+    pub name: String,
+    pub dims: LayerDims,
+    pub target: Target,
+    pub levels: usize,
+    pub budget: BeamConfig,
+}
+
+/// The cache/dedup signature of a planning problem. Everything that can
+/// change the search answer is in here — dims, target, levels, every
+/// budget field, and the strategy name — and nothing else (layer names
+/// are presentation, so identical problems share one entry).
+pub fn job_key(
+    dims: &LayerDims,
+    target: &Target,
+    levels: usize,
+    budget: &BeamConfig,
+    strategy: &str,
+) -> String {
+    format!(
+        "x={} y={} c={} k={} fw={} fh={} b={}|{}|levels={}|beam={}.{}.{}.{}.{:#x}|strat={}",
+        dims.x,
+        dims.y,
+        dims.c,
+        dims.k,
+        dims.fw,
+        dims.fh,
+        dims.b,
+        target.key(),
+        levels,
+        budget.beam_width,
+        budget.perturbations,
+        budget.outer_orders,
+        budget.passes,
+        budget.seed,
+        strategy,
+    )
+}
+
+/// Run a strategy against the evaluator a [`Target`] denotes — the one
+/// place the Target-to-Evaluator dispatch lives (`Planner::search` and
+/// the engine both call it).
+pub(crate) fn run_strategy(
+    strategy: &dyn SearchStrategy,
+    dims: &LayerDims,
+    target: &Target,
+    levels: usize,
+    budget: &BeamConfig,
+) -> Vec<crate::optimizer::search::Scored> {
+    match target {
+        Target::Bespoke { budget_bytes } => {
+            strategy.search(dims, &BespokeTarget::new(*budget_bytes), levels, budget)
+        }
+        Target::DianNao => strategy.search(dims, &FixedTarget::diannao(), levels, budget),
+        Target::Cpu => strategy.search(dims, &FixedTarget::cpu(), levels, budget),
+    }
+}
+
+/// Solve one planning problem through a strategy (no cache involved).
+/// Batch provenance: origin "search", `search_ms` pinned to 0 so plan
+/// bytes do not depend on scheduling.
+fn solve(strategy: &dyn SearchStrategy, req: &PlanRequest) -> Result<BlockingPlan> {
+    let scored = run_strategy(strategy, &req.dims, &req.target, req.levels, &req.budget);
+    ensure!(
+        !scored.is_empty(),
+        "strategy '{}' produced no valid schedule for {}",
+        strategy.name(),
+        req.dims
+    );
+    let best = scored.into_iter().next().unwrap();
+    BlockingPlan::evaluate(
+        &req.name,
+        req.dims,
+        best.string,
+        Provenance::searched(req.target, req.levels, &req.budget, 0),
+    )
+}
+
+/// How many shard locks the in-memory index uses — enough that 16
+/// workers rarely collide on one lock.
+const INDEX_SHARDS: usize = 32;
+
+/// Whole-network planning driver: dedup + worker-pool fan-out + shared
+/// plan cache. Construct with [`PlanEngine::new`], configure with the
+/// builder methods, then call [`plan_network`](PlanEngine::plan_network),
+/// [`plan_layers`](PlanEngine::plan_layers), or the fully general
+/// [`plan_requests`](PlanEngine::plan_requests).
+///
+/// `Planner::for_network(..).plan_all()` is sugar for this engine.
+#[derive(Clone)]
+pub struct PlanEngine {
+    target: Target,
+    levels: usize,
+    budget: BeamConfig,
+    strategy: Arc<dyn SearchStrategy>,
+    cache_path: Option<PathBuf>,
+    workers: usize,
+    /// Lazily-spawned worker pool, kept alive (and shared by clones)
+    /// across batches so repeated `plan_requests` calls pay thread
+    /// spawn cost once.
+    pool: Arc<Mutex<Option<Arc<WorkerPool>>>>,
+}
+
+impl std::fmt::Debug for PlanEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanEngine")
+            .field("target", &self.target)
+            .field("levels", &self.levels)
+            .field("budget", &self.budget)
+            .field("strategy", &self.strategy.name())
+            .field("cache_path", &self.cache_path)
+            .field("workers", &self.workers)
+            .finish()
+    }
+}
+
+impl Default for PlanEngine {
+    fn default() -> Self {
+        PlanEngine::new()
+    }
+}
+
+impl PlanEngine {
+    /// Engine with the `Planner` defaults: bespoke 8 MB target, 3 levels,
+    /// quick beam, beam strategy, no cache, worker count from
+    /// CNNBLK_THREADS/available parallelism.
+    pub fn new() -> PlanEngine {
+        PlanEngine {
+            target: Target::Bespoke {
+                budget_bytes: 8 << 20,
+            },
+            levels: 3,
+            budget: BeamConfig::quick(),
+            strategy: default_strategy(),
+            cache_path: None,
+            workers: 0,
+            pool: Arc::new(Mutex::new(None)),
+        }
+    }
+
+    /// The persistent pool: spawned on first use, reused while its
+    /// thread count still matches the configuration.
+    fn worker_pool(&self) -> Arc<WorkerPool> {
+        let want = if self.workers == 0 {
+            default_threads()
+        } else {
+            self.workers
+        };
+        let mut slot = self.pool.lock().unwrap();
+        if let Some(p) = slot.as_ref() {
+            if p.threads() == want {
+                return Arc::clone(p);
+            }
+        }
+        let p = Arc::new(WorkerPool::new(want));
+        *slot = Some(Arc::clone(&p));
+        p
+    }
+
+    pub fn target(mut self, target: Target) -> PlanEngine {
+        self.target = target;
+        self
+    }
+
+    pub fn levels(mut self, levels: usize) -> PlanEngine {
+        assert!(levels >= 1, "at least one blocking level");
+        self.levels = levels;
+        self
+    }
+
+    pub fn budget(mut self, budget: BeamConfig) -> PlanEngine {
+        self.budget = budget;
+        self
+    }
+
+    pub fn strategy(mut self, strategy: Arc<dyn SearchStrategy>) -> PlanEngine {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Resolve a strategy by CLI name ("beam", "exhaustive", "random").
+    pub fn strategy_named(self, name: &str) -> Result<PlanEngine> {
+        let s = strategy_by_name(name)?;
+        Ok(self.strategy(s))
+    }
+
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    /// Attach a JSON plan-cache file shared with other planners and
+    /// processes.
+    pub fn cache_file(mut self, path: impl Into<PathBuf>) -> PlanEngine {
+        self.cache_path = Some(path.into());
+        self
+    }
+
+    /// Worker threads for the fan-out; 0 (the default) means
+    /// [`default_threads()`](crate::util::pool::default_threads). Plans
+    /// are identical at any worker count — this only changes wall time.
+    pub fn jobs(mut self, workers: usize) -> PlanEngine {
+        self.workers = workers;
+        self
+    }
+
+    /// Plan every conv layer of a named network (same names
+    /// `Planner::for_network` accepts).
+    pub fn plan_network(&self, network: &str) -> Result<Vec<BlockingPlan>> {
+        let np = super::planner::Planner::for_network(network)?;
+        self.plan_layers(np.layers())
+    }
+
+    /// Plan a batch of named layers under the engine's shared
+    /// target/levels/budget.
+    pub fn plan_layers(&self, layers: &[(String, LayerDims)]) -> Result<Vec<BlockingPlan>> {
+        let reqs: Vec<PlanRequest> = layers
+            .iter()
+            .map(|(name, dims)| PlanRequest {
+                name: name.clone(),
+                dims: *dims,
+                target: self.target,
+                levels: self.levels,
+                budget: self.budget.clone(),
+            })
+            .collect();
+        self.plan_requests(&reqs)
+    }
+
+    /// The engine core: resolve every request, returning plans in
+    /// request order (relabeled with each request's name).
+    pub fn plan_requests(&self, reqs: &[PlanRequest]) -> Result<Vec<BlockingPlan>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let strategy_name = self.strategy.name();
+        let keys: Vec<String> = reqs
+            .iter()
+            .map(|r| job_key(&r.dims, &r.target, r.levels, &r.budget, strategy_name))
+            .collect();
+        let needed: BTreeSet<&str> = keys.iter().map(|s| s.as_str()).collect();
+
+        // Seed the shared index from the file cache — only the keys this
+        // batch needs (a long-lived shared cache can dwarf the batch),
+        // and only current-model-version plans (stale predictions are
+        // recomputed, same policy as Planner::cached_plan). An
+        // unreadable cache file must not stop planning.
+        let shared = Arc::new(SharedPlanCache::new(INDEX_SHARDS));
+        let mut from_disk: BTreeSet<String> = BTreeSet::new();
+        if let Some(path) = &self.cache_path {
+            match PlanCache::open(path) {
+                Ok(cache) => {
+                    for (k, p) in cache.entries() {
+                        if needed.contains(k.as_str())
+                            && p.provenance.model_version == MODEL_VERSION
+                        {
+                            shared.put(k.clone(), p.clone());
+                            from_disk.insert(k.clone());
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("warning: plan cache unavailable ({:#}); searching", e);
+                }
+            }
+        }
+
+        // Dedup: first occurrence of each unsolved signature becomes a
+        // job; later occurrences just share its answer.
+        let mut seen: BTreeSet<String> = BTreeSet::new();
+        let mut jobs: Vec<(String, PlanRequest)> = Vec::new();
+        for (r, key) in reqs.iter().zip(&keys) {
+            if seen.insert(key.clone()) && !shared.contains(key) {
+                jobs.push((key.clone(), r.clone()));
+            }
+        }
+        let fresh_keys: Vec<String> = jobs.iter().map(|(k, _)| k.clone()).collect();
+
+        // Fan unique jobs out across the persistent pool. Workers write
+        // straight into the shard index; errors come back to the caller.
+        let searched_fresh = !jobs.is_empty();
+        if searched_fresh {
+            let pool = self.worker_pool();
+            // Each worker's strategy parallelizes internally; divide the
+            // inner width so W workers don't run W x default threads.
+            let inner = (default_threads() / pool.threads()).max(1);
+            let strategy = Arc::clone(&self.strategy);
+            let index = Arc::clone(&shared);
+            let errors: Vec<Option<anyhow::Error>> =
+                par_map_with(&pool, jobs, move |(key, req)| {
+                    match with_thread_cap(inner, || solve(strategy.as_ref(), &req)) {
+                        Ok(plan) => {
+                            index.put(key, plan);
+                            None
+                        }
+                        Err(e) => Some(e.context(format!("planning layer '{}'", req.name))),
+                    }
+                });
+            if let Some(e) = errors.into_iter().flatten().next() {
+                return Err(e);
+            }
+        }
+
+        // Persist before assembling output: fresh entries merge into the
+        // shared file. Skipped on all-hit runs (nothing new to write —
+        // rewriting would just churn the file and race other writers)
+        // and best-effort otherwise: the plans exist regardless.
+        if searched_fresh {
+            if let Some(path) = &self.cache_path {
+                // Persist only the freshly-searched entries through a
+                // write-only handle: save()'s merge-on-save folds in the
+                // on-disk document, so re-writing disk-seeded entries
+                // (or parsing the file a second time here) is wasted work.
+                let mut cache = PlanCache::empty_at(path.clone());
+                for k in &fresh_keys {
+                    if let Some(p) = shared.get(k) {
+                        cache.put(k.clone(), p);
+                    }
+                }
+                if let Err(e) = cache.save() {
+                    eprintln!("warning: failed to write plan cache: {:#}", e);
+                }
+            }
+        }
+
+        // Assemble in request order, relabeling shared answers per
+        // requester (the key excludes names) and marking disk hits.
+        reqs.iter()
+            .zip(&keys)
+            .map(|(r, key)| {
+                let mut plan = shared
+                    .get(key)
+                    .ok_or_else(|| anyhow!("engine lost the plan for layer '{}'", r.name))?;
+                plan.name = r.name.clone();
+                if from_disk.contains(key) {
+                    plan.provenance.cache_hit = true;
+                    plan.provenance.search_ms = 0;
+                }
+                Ok(plan)
+            })
+            .collect()
+    }
+
+    /// Unique-job count a batch of requests would fan out (after dedup,
+    /// before cache hits).
+    pub fn unique_jobs(&self, reqs: &[PlanRequest]) -> usize {
+        reqs.iter()
+            .map(|r| job_key(&r.dims, &r.target, r.levels, &r.budget, self.strategy.name()))
+            .collect::<BTreeSet<String>>()
+            .len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::strategy::RandomSampling;
+
+    fn small() -> LayerDims {
+        LayerDims::conv(16, 16, 8, 8, 3, 3)
+    }
+
+    fn small2() -> LayerDims {
+        LayerDims::conv(16, 16, 8, 16, 3, 3)
+    }
+
+    fn quick_engine() -> PlanEngine {
+        PlanEngine::new()
+            .target(Target::Bespoke {
+                budget_bytes: 256 * 1024,
+            })
+            .levels(2)
+    }
+
+    #[test]
+    fn engine_matches_planner_single_layer() {
+        let plans = quick_engine()
+            .plan_layers(&[("t".to_string(), small())])
+            .unwrap();
+        assert_eq!(plans.len(), 1);
+        let direct = super::super::planner::Planner::for_named("t", small())
+            .target(Target::Bespoke {
+                budget_bytes: 256 * 1024,
+            })
+            .levels(2)
+            .plan()
+            .unwrap();
+        assert_eq!(plans[0].string, direct.string);
+        assert_eq!(plans[0].outcome, direct.outcome);
+    }
+
+    #[test]
+    fn duplicate_dims_share_one_answer() {
+        let layers = vec![
+            ("a".to_string(), small()),
+            ("b".to_string(), small()),
+            ("c".to_string(), small2()),
+        ];
+        let plans = quick_engine().plan_layers(&layers).unwrap();
+        assert_eq!(plans.len(), 3);
+        assert_eq!(plans[0].name, "a");
+        assert_eq!(plans[1].name, "b");
+        assert_eq!(plans[2].name, "c");
+        assert_eq!(plans[0].string, plans[1].string);
+        assert_eq!(plans[0].outcome, plans[1].outcome);
+    }
+
+    #[test]
+    fn mixed_target_requests_resolve_independently() {
+        let cfg = BeamConfig::quick();
+        let reqs: Vec<PlanRequest> = [64 * 1024u64, 512 * 1024]
+            .iter()
+            .map(|&b| PlanRequest {
+                name: format!("b{}", b),
+                dims: small(),
+                target: Target::Bespoke { budget_bytes: b },
+                levels: 2,
+                budget: cfg.clone(),
+            })
+            .collect();
+        let engine = PlanEngine::new();
+        assert_eq!(engine.unique_jobs(&reqs), 2);
+        let plans = engine.plan_requests(&reqs).unwrap();
+        assert_eq!(plans.len(), 2);
+        assert!(
+            plans[1].outcome.total_pj <= plans[0].outcome.total_pj * 1.001,
+            "more SRAM should not cost energy"
+        );
+    }
+
+    #[test]
+    fn strategy_changes_cache_identity() {
+        let a = job_key(&small(), &Target::Cpu, 2, &BeamConfig::quick(), "beam");
+        let b = job_key(&small(), &Target::Cpu, 2, &BeamConfig::quick(), "random");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn random_strategy_plans_through_engine() {
+        let plans = quick_engine()
+            .strategy(Arc::new(RandomSampling::default()))
+            .plan_layers(&[("r".to_string(), small())])
+            .unwrap();
+        plans[0].string.validate(&plans[0].dims).unwrap();
+        assert!(plans[0].outcome.total_pj > 0.0);
+    }
+
+    #[test]
+    fn engine_cache_file_round_trip() {
+        let dir = std::env::temp_dir().join(format!("cnnblk-engine-{}", std::process::id()));
+        let path = dir.join("plan-cache.json");
+        let _ = std::fs::remove_file(&path);
+
+        let engine = quick_engine().cache_file(&path);
+        let layers = vec![("t".to_string(), small())];
+        let first = engine.plan_requests(
+            &layers
+                .iter()
+                .map(|(n, d)| PlanRequest {
+                    name: n.clone(),
+                    dims: *d,
+                    target: Target::Bespoke {
+                        budget_bytes: 256 * 1024,
+                    },
+                    levels: 2,
+                    budget: BeamConfig::quick(),
+                })
+                .collect::<Vec<_>>(),
+        );
+        let first = first.unwrap();
+        assert!(!first[0].provenance.cache_hit);
+
+        let second = engine.plan_layers(&layers).unwrap();
+        assert!(second[0].provenance.cache_hit, "second run must hit the cache");
+        assert_eq!(second[0].provenance.search_ms, 0);
+        assert_eq!(second[0].string, first[0].string);
+
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

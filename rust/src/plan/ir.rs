@@ -17,6 +17,7 @@ use crate::model::buffers::Tensor;
 use crate::model::dims::LayerDims;
 use crate::model::hierarchy::{self, Breakdown, Hierarchy, Placement};
 use crate::model::string::BlockingString;
+use crate::optimizer::beam::BeamConfig;
 use crate::optimizer::targets::{BespokeTarget, FixedTarget};
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, ensure, Result};
@@ -162,12 +163,34 @@ pub struct Provenance {
     /// keeps its original origin and sets `cache_hit` instead.
     pub origin: String,
     /// Wall-clock search time; 0 when the plan was not searched for
-    /// (cache hit, manifest load, manual evaluation).
+    /// (cache hit, manifest load, manual evaluation) and for batch plans
+    /// from the `PlanEngine`, which pins it so plan bytes never depend
+    /// on scheduling.
     pub search_ms: u64,
     pub cache_hit: bool,
 }
 
 impl Provenance {
+    /// Provenance for a plan produced by a search under `budget` — the
+    /// one constructor `Planner` and the `PlanEngine` share.
+    pub fn searched(
+        target: Target,
+        levels: usize,
+        budget: &BeamConfig,
+        search_ms: u64,
+    ) -> Provenance {
+        Provenance {
+            target,
+            levels,
+            beam_width: budget.beam_width,
+            beam_seed: budget.seed,
+            model_version: MODEL_VERSION.to_string(),
+            origin: "search".to_string(),
+            search_ms,
+            cache_hit: false,
+        }
+    }
+
     /// Provenance for plans rebuilt from external records (an artifact
     /// manifest, a hand-written string) rather than a search.
     pub fn external(target: Target, origin: &str) -> Provenance {

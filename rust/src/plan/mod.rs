@@ -1,18 +1,24 @@
 //! The public planning API: a serializable blocking-schedule IR
 //! ([`BlockingPlan`]), a builder facade that produces plans
-//! ([`Planner`]), and a JSON-file plan cache ([`PlanCache`]).
+//! ([`Planner`]), a network-scale parallel engine ([`PlanEngine`]), and
+//! a JSON-file plan cache ([`PlanCache`]) safe to share across
+//! processes.
 //!
 //! The paper's central artifact is the *blocking schedule*: derived once
 //! by the analytical model, then carried to cache simulation, accelerator
 //! execution, and multicore partitioning. This module makes that artifact
 //! a first-class value every subsystem shares — see `plan::ir` for the
-//! data model and `plan::planner` for the entry points.
+//! data model, `plan::planner` for the entry points, and `plan::engine`
+//! for the dedup + worker-pool + shared-cache batch driver behind
+//! `plan_all`.
 
 pub mod cache;
+pub mod engine;
 pub mod ir;
 pub mod planner;
 
-pub use cache::PlanCache;
+pub use cache::{PlanCache, SharedPlanCache};
+pub use engine::{job_key, PlanEngine, PlanRequest};
 pub use ir::{
     BlockingPlan, PlanBuffer, PlanOutcome, Provenance, Target, MODEL_VERSION, PLAN_SCHEMA_VERSION,
 };

@@ -9,34 +9,54 @@
 //! let all = Planner::for_network("AlexNet")?.plan_all()?;
 //! ```
 //!
-//! `plan()` runs the seeded beam search for the configured target and
-//! wraps the winner in a [`BlockingPlan`]. With a cache file attached
-//! (`cache_file`), a matching prior plan short-circuits the search —
-//! the cached plan comes back with `provenance.cache_hit = true` and
-//! zero search time.
+//! `plan()` runs the configured search strategy (the paper's seeded beam
+//! by default) for the configured target and wraps the winner in a
+//! [`BlockingPlan`]. With a cache file attached (`cache_file`), a
+//! matching prior plan short-circuits the search — the cached plan comes
+//! back with `provenance.cache_hit = true` and zero search time.
+//! Whole-network planning (`plan_all`) routes through the
+//! [`PlanEngine`](super::engine::PlanEngine): unique layer shapes are
+//! searched once, in parallel, through the shared plan cache.
 
 use super::cache::PlanCache;
+use super::engine::{job_key, PlanEngine};
 use super::ir::{BlockingPlan, Provenance, Target, MODEL_VERSION};
 use crate::model::benchmarks;
 use crate::model::dims::LayerDims;
 use crate::model::networks::{all_networks, LayerKind};
 use crate::model::string::BlockingString;
-use crate::optimizer::beam::{optimize, BeamConfig};
+use crate::optimizer::beam::BeamConfig;
 use crate::optimizer::search::Scored;
-use crate::optimizer::targets::{BespokeTarget, FixedTarget};
+use crate::optimizer::strategy::{default_strategy, strategy_by_name, SearchStrategy};
 use anyhow::{anyhow, ensure, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Builder-style planner for a single layer.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct Planner {
     name: String,
     dims: LayerDims,
     target: Target,
     levels: usize,
     beam: BeamConfig,
+    strategy: Arc<dyn SearchStrategy>,
     cache_path: Option<PathBuf>,
+}
+
+impl std::fmt::Debug for Planner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Planner")
+            .field("name", &self.name)
+            .field("dims", &self.dims)
+            .field("target", &self.target)
+            .field("levels", &self.levels)
+            .field("beam", &self.beam)
+            .field("strategy", &self.strategy.name())
+            .field("cache_path", &self.cache_path)
+            .finish()
+    }
 }
 
 impl Planner {
@@ -56,6 +76,7 @@ impl Planner {
             },
             levels: 3,
             beam: BeamConfig::quick(),
+            strategy: default_strategy(),
             cache_path: None,
         }
     }
@@ -95,6 +116,7 @@ impl Planner {
             network: name.to_string(),
             layers,
             template: Planner::for_named("layer", LayerDims::conv(1, 1, 1, 1, 1, 1)),
+            workers: 0,
         })
     }
 
@@ -114,6 +136,19 @@ impl Planner {
         self
     }
 
+    /// Swap the search driver (default: the paper's seeded beam). See
+    /// [`crate::optimizer::strategy`] for the built-in strategies.
+    pub fn strategy(mut self, strategy: Arc<dyn SearchStrategy>) -> Planner {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Resolve a strategy by CLI name ("beam", "exhaustive", "random").
+    pub fn strategy_named(self, name: &str) -> Result<Planner> {
+        let s = strategy_by_name(name)?;
+        Ok(self.strategy(s))
+    }
+
     /// Attach a JSON plan-cache file; `plan()` will consult it before
     /// searching and record fresh results into it.
     pub fn cache_file(mut self, path: impl Into<PathBuf>) -> Planner {
@@ -122,28 +157,17 @@ impl Planner {
     }
 
     /// The cache signature of this planning problem: dims, target,
-    /// levels, and every BeamConfig field that affects the search result
-    /// (the layer *name* is deliberately excluded — identical problems
-    /// share one entry).
+    /// levels, every BeamConfig field that affects the search result,
+    /// and the strategy name (the layer *name* is deliberately excluded
+    /// — identical problems share one entry). Same keys the
+    /// [`PlanEngine`] uses, so planner and engine share cache files.
     pub fn cache_key(&self) -> String {
-        let d = &self.dims;
-        let b = &self.beam;
-        format!(
-            "x={} y={} c={} k={} fw={} fh={} b={}|{}|levels={}|beam={}.{}.{}.{}.{:#x}",
-            d.x,
-            d.y,
-            d.c,
-            d.k,
-            d.fw,
-            d.fh,
-            d.b,
-            self.target.key(),
+        job_key(
+            &self.dims,
+            &self.target,
             self.levels,
-            b.beam_width,
-            b.perturbations,
-            b.outer_orders,
-            b.passes,
-            b.seed,
+            &self.beam,
+            self.strategy.name(),
         )
     }
 
@@ -182,31 +206,19 @@ impl Planner {
     }
 
     fn search(&self) -> Vec<Scored> {
-        match self.target {
-            Target::Bespoke { budget_bytes } => optimize(
-                &self.dims,
-                &BespokeTarget::new(budget_bytes),
-                self.levels,
-                &self.beam,
-            ),
-            Target::DianNao => {
-                optimize(&self.dims, &FixedTarget::diannao(), self.levels, &self.beam)
-            }
-            Target::Cpu => optimize(&self.dims, &FixedTarget::cpu(), self.levels, &self.beam),
-        }
+        super::engine::run_strategy(
+            self.strategy.as_ref(),
+            &self.dims,
+            &self.target,
+            self.levels,
+            &self.beam,
+        )
     }
 
     fn provenance(&self, origin: &str, search_ms: u64) -> Provenance {
-        Provenance {
-            target: self.target,
-            levels: self.levels,
-            beam_width: self.beam.beam_width,
-            beam_seed: self.beam.seed,
-            model_version: MODEL_VERSION.to_string(),
-            origin: origin.to_string(),
-            search_ms,
-            cache_hit: false,
-        }
+        let mut p = Provenance::searched(self.target, self.levels, &self.beam, search_ms);
+        p.origin = origin.to_string();
+        p
     }
 
     /// The best plan for this layer: cache hit if available, otherwise a
@@ -245,12 +257,11 @@ impl Planner {
         if let Some(path) = &self.cache_path {
             // Persisting is best-effort: the search already succeeded and
             // its result must not be discarded over a cache-write failure
-            // (read-only checkout, full disk, ...).
-            let persist = PlanCache::open(path).and_then(|mut cache| {
-                cache.put(self.cache_key(), plans[0].clone());
-                cache.save()
-            });
-            if let Err(e) = persist {
+            // (read-only checkout, full disk, ...). Write-only handle:
+            // save()'s merge-on-save folds in the on-disk entries.
+            let mut cache = PlanCache::empty_at(path.clone());
+            cache.put(self.cache_key(), plans[0].clone());
+            if let Err(e) = cache.save() {
                 eprintln!("warning: failed to write plan cache: {:#}", e);
             }
         }
@@ -313,17 +324,27 @@ impl Planner {
     }
 }
 
-/// Planner for every (conv) layer of a network.
+/// Planner for every (conv) layer of a network. `plan_all` is sugar for
+/// the [`PlanEngine`]: unique layer shapes are searched once, unique
+/// jobs run in parallel on a persistent worker pool, and an attached
+/// cache file is consulted and updated with merge-on-save.
 #[derive(Debug, Clone)]
 pub struct NetworkPlanner {
     pub network: String,
     layers: Vec<(String, LayerDims)>,
     template: Planner,
+    workers: usize,
 }
 
 impl NetworkPlanner {
     pub fn layer_count(&self) -> usize {
         self.layers.len()
+    }
+
+    /// The `(name, dims)` layer list this planner will plan, in network
+    /// order.
+    pub fn layers(&self) -> &[(String, LayerDims)] {
+        &self.layers
     }
 
     pub fn target(mut self, target: Target) -> NetworkPlanner {
@@ -341,29 +362,59 @@ impl NetworkPlanner {
         self
     }
 
+    /// Swap the search driver for every layer.
+    pub fn strategy(mut self, strategy: Arc<dyn SearchStrategy>) -> NetworkPlanner {
+        self.template = self.template.strategy(strategy);
+        self
+    }
+
+    /// Resolve a strategy by CLI name ("beam", "exhaustive", "random").
+    pub fn strategy_named(mut self, name: &str) -> Result<NetworkPlanner> {
+        self.template = self.template.strategy_named(name)?;
+        Ok(self)
+    }
+
     pub fn cache_file(mut self, path: impl Into<PathBuf>) -> NetworkPlanner {
         self.template = self.template.cache_file(path);
         self
     }
 
-    /// Plan every layer, in network order. Each layer hits the cache
-    /// independently when one is attached.
+    /// Worker threads for the engine fan-out; 0 (default) respects
+    /// CNNBLK_THREADS / available parallelism. Plans are identical at
+    /// any worker count.
+    pub fn jobs(mut self, workers: usize) -> NetworkPlanner {
+        self.workers = workers;
+        self
+    }
+
+    /// The configured [`PlanEngine`] this planner drives — exposed so
+    /// callers can reuse it for further batches against the same cache.
+    pub fn engine(&self) -> PlanEngine {
+        let t = &self.template;
+        let mut engine = PlanEngine::new()
+            .target(t.target)
+            .levels(t.levels)
+            .budget(t.beam.clone())
+            .strategy(Arc::clone(&t.strategy))
+            .jobs(self.workers);
+        if let Some(path) = &t.cache_path {
+            engine = engine.cache_file(path.clone());
+        }
+        engine
+    }
+
+    /// Plan every layer, in network order, through the engine: repeated
+    /// layer shapes are searched once and unique shapes in parallel.
     pub fn plan_all(&self) -> Result<Vec<BlockingPlan>> {
-        self.layers
-            .iter()
-            .map(|(name, dims)| {
-                let mut p = self.template.clone();
-                p.name = name.clone();
-                p.dims = *dims;
-                p.plan()
-            })
-            .collect()
+        self.engine().plan_layers(&self.layers)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optimizer::beam::optimize;
+    use crate::optimizer::targets::BespokeTarget;
 
     fn small() -> LayerDims {
         LayerDims::conv(16, 16, 8, 8, 3, 3)

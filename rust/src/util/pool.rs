@@ -1,14 +1,49 @@
-//! Scoped parallel-map over OS threads (rayon is not available offline).
+//! Scoped parallel-map and a persistent worker pool over OS threads
+//! (rayon is not available offline).
 //!
 //! The optimizer evaluates many independent candidate schedules; the cache
 //! simulator runs independent layer traces. Both use `par_map` to spread
 //! work across cores with `std::thread::scope`, chunking work items to
-//! amortize spawn cost.
+//! amortize spawn cost. The plan engine instead keeps a [`WorkerPool`]
+//! alive across batches of planning jobs and feeds it through
+//! [`par_map_with`], so a whole-network plan pays thread-spawn cost once.
 
-/// Number of worker threads to use: respects CNNBLK_THREADS, defaults to
-/// available parallelism (capped at 16 — the workloads saturate memory
-/// bandwidth well before that).
+use std::cell::Cell;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+thread_local! {
+    /// Per-thread override of the parallel-map width; 0 = no override.
+    static THREAD_CAP: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Run `f` with this thread's `default_threads()` pinned to `cap`.
+///
+/// Used by callers that are themselves one of several parallel workers
+/// (the plan engine's pool jobs): without the cap, W outer workers each
+/// spawning a default-width inner `par_map` would transiently run
+/// W x default threads, oversubscribing the cores the 16-thread cap is
+/// there to protect. The cap applies to this thread only and is
+/// restored when `f` returns.
+pub fn with_thread_cap<R>(cap: usize, f: impl FnOnce() -> R) -> R {
+    THREAD_CAP.with(|c| {
+        let prev = c.replace(cap.max(1));
+        let out = f();
+        c.set(prev);
+        out
+    })
+}
+
+/// Number of worker threads to use: a `with_thread_cap` override if one
+/// is active on this thread, else CNNBLK_THREADS, else available
+/// parallelism (capped at 16 — the workloads saturate memory bandwidth
+/// well before that).
 pub fn default_threads() -> usize {
+    let cap = THREAD_CAP.with(|c| c.get());
+    if cap != 0 {
+        return cap;
+    }
     if let Ok(v) = std::env::var("CNNBLK_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
             return n.max(1);
@@ -28,7 +63,10 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
-    let nthreads = default_threads().min(items.len().max(1));
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let nthreads = default_threads().min(items.len());
     if nthreads <= 1 || items.len() < 2 {
         return items.iter().map(&f).collect();
     }
@@ -38,7 +76,6 @@ where
 
     std::thread::scope(|scope| {
         let mut rest: &mut [Option<R>] = &mut results;
-        let mut offset = 0usize;
         for chunk_items in items.chunks(chunk) {
             let (head, tail) = rest.split_at_mut(chunk_items.len());
             rest = tail;
@@ -48,11 +85,119 @@ where
                     *slot = Some(fref(item));
                 }
             });
-            offset += chunk_items.len();
         }
-        debug_assert_eq!(offset, items.len());
     });
     results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent pool of worker threads consuming boxed jobs from a shared
+/// queue. Unlike `par_map` (which spawns scoped threads per call), a pool
+/// lives across many [`par_map_with`] batches — the plan engine keeps one
+/// for a whole network's planning jobs. Dropping the pool closes the queue
+/// and joins every worker.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (clamped to at least 1). Pass
+    /// [`default_threads()`] to respect CNNBLK_THREADS.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || worker_loop(&rx))
+            })
+            .collect();
+        WorkerPool {
+            tx: Some(tx),
+            handles,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    fn submit(&self, job: Job) {
+        self.tx
+            .as_ref()
+            .expect("pool queue open while pool is alive")
+            .send(job)
+            .expect("workers alive while pool is alive");
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        // Hold the lock only to dequeue; run the job unlocked so pickup
+        // serializes but execution does not.
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return, // a sibling panicked while dequeuing
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => return, // queue closed: pool dropped
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue so workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Parallel map over owned items on a persistent [`WorkerPool`],
+/// preserving input order. Items and the function are moved into jobs
+/// (the pool's workers are `'static`), so this suits coarse-grained work
+/// like the plan engine's per-layer searches; for fine-grained borrowed
+/// maps use [`par_map`].
+///
+/// Panics if a job panics (its result never arrives).
+pub fn par_map_with<T, R, F>(pool: &WorkerPool, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    if pool.threads() <= 1 || items.len() == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let f = Arc::new(f);
+    let (rtx, rrx) = channel::<(usize, R)>();
+    for (i, item) in items.into_iter().enumerate() {
+        let f = Arc::clone(&f);
+        let rtx = rtx.clone();
+        pool.submit(Box::new(move || {
+            let r = f(item);
+            let _ = rtx.send((i, r));
+        }));
+    }
+    drop(rtx);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    for _ in 0..n {
+        let (i, r) = rrx
+            .recv()
+            .expect("a pool job panicked before returning its result");
+        out[i] = Some(r);
+    }
+    out.into_iter().map(|r| r.unwrap()).collect()
 }
 
 #[cfg(test)]
@@ -85,5 +230,53 @@ mod tests {
             acc
         });
         assert_eq!(out.len(), 64);
+    }
+
+    #[test]
+    fn pool_maps_in_order() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let items: Vec<u64> = (0..100).collect();
+        let out = par_map_with(&pool, items, |x| x * 3);
+        assert_eq!(out, (0..100).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_survives_many_batches() {
+        // The point of the pool: reuse across batches without respawning.
+        let pool = WorkerPool::new(3);
+        for round in 0..20u64 {
+            let items: Vec<u64> = (0..17).collect();
+            let out = par_map_with(&pool, items, move |x| x + round);
+            assert_eq!(out[16], 16 + round);
+        }
+    }
+
+    #[test]
+    fn pool_empty_and_single_thread() {
+        let pool = WorkerPool::new(1);
+        let none: Vec<u32> = vec![];
+        assert!(par_map_with(&pool, none, |x: u32| x).is_empty());
+        assert_eq!(par_map_with(&pool, vec![5u32], |x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn pool_zero_threads_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(par_map_with(&pool, vec![1, 2, 3], |x| x * x), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn thread_cap_overrides_and_restores() {
+        let outside = default_threads();
+        let (inside, nested) =
+            with_thread_cap(2, || (default_threads(), with_thread_cap(1, default_threads)));
+        assert_eq!(inside, 2);
+        assert_eq!(nested, 1);
+        assert_eq!(default_threads(), outside, "cap must not leak");
+        // par_map still correct under a cap of 1 (serial path).
+        let out = with_thread_cap(1, || par_map(&[1u64, 2, 3], |x| x + 1));
+        assert_eq!(out, vec![2, 3, 4]);
     }
 }

@@ -1,0 +1,189 @@
+//! Planning-engine integration tests: worker-count determinism, job
+//! dedup (counted through a custom `SearchStrategy`), and cross-engine
+//! cooperation through one shared plan-cache file.
+
+use cnn_blocking::model::dims::LayerDims;
+use cnn_blocking::optimizer::beam::BeamConfig;
+use cnn_blocking::optimizer::strategy::{BeamSearch, SearchBudget, SearchStrategy};
+use cnn_blocking::optimizer::targets::Evaluator;
+use cnn_blocking::optimizer::Scored;
+use cnn_blocking::plan::{PlanEngine, Planner, Target};
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Delegates to the paper's beam, counting invocations — proves how many
+/// actual searches a batch paid for.
+struct CountingStrategy {
+    inner: BeamSearch,
+    calls: AtomicUsize,
+}
+
+impl CountingStrategy {
+    fn new() -> Arc<CountingStrategy> {
+        Arc::new(CountingStrategy {
+            inner: BeamSearch,
+            calls: AtomicUsize::new(0),
+        })
+    }
+
+    fn calls(&self) -> usize {
+        self.calls.load(Ordering::SeqCst)
+    }
+}
+
+impl SearchStrategy for CountingStrategy {
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+
+    fn search(
+        &self,
+        dims: &LayerDims,
+        evaluator: &dyn Evaluator,
+        levels: usize,
+        budget: &SearchBudget,
+    ) -> Vec<Scored> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.inner.search(dims, evaluator, levels, budget)
+    }
+}
+
+fn temp_cache(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "cnnblk-engine-test-{}-{}.json",
+        tag,
+        std::process::id()
+    ))
+}
+
+#[test]
+fn alexnet_plans_are_byte_identical_at_any_worker_count() {
+    // The acceptance bar for the parallel engine: the fan-out must be a
+    // pure performance knob. Serial (1 worker) and saturated (8 workers)
+    // planning of real AlexNet must serialize to the same bytes.
+    let json_at = |jobs: usize| -> String {
+        let plans = Planner::for_network("AlexNet")
+            .unwrap()
+            .levels(2)
+            .beam(BeamConfig::quick())
+            .jobs(jobs)
+            .plan_all()
+            .unwrap();
+        plans
+            .iter()
+            .map(|p| p.to_json().pretty())
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let serial = json_at(1);
+    let parallel = json_at(8);
+    assert!(!serial.is_empty());
+    assert_eq!(serial, parallel, "plan JSON depends on worker count");
+}
+
+#[test]
+fn engine_dedups_repeated_layer_dims() {
+    let d = LayerDims::conv(16, 16, 8, 8, 3, 3);
+    let d2 = LayerDims::conv(16, 16, 8, 16, 3, 3);
+    let strategy = CountingStrategy::new();
+    let layers = vec![
+        ("a".to_string(), d),
+        ("b".to_string(), d),
+        ("c".to_string(), d2),
+        ("d".to_string(), d),
+    ];
+    let plans = PlanEngine::new()
+        .target(Target::Bespoke {
+            budget_bytes: 256 * 1024,
+        })
+        .levels(2)
+        .strategy(strategy.clone() as Arc<dyn SearchStrategy>)
+        .jobs(4)
+        .plan_layers(&layers)
+        .unwrap();
+    assert_eq!(plans.len(), 4);
+    assert_eq!(
+        strategy.calls(),
+        2,
+        "4 layers with 2 unique shapes must pay exactly 2 searches"
+    );
+    // Shared answers, per-request names.
+    let names: Vec<&str> = plans.iter().map(|p| p.name.as_str()).collect();
+    assert_eq!(names, ["a", "b", "c", "d"]);
+    assert_eq!(plans[0].string, plans[1].string);
+    assert_eq!(plans[0].outcome, plans[3].outcome);
+    assert_ne!(plans[0].dims, plans[2].dims);
+}
+
+#[test]
+fn plan_all_routes_through_engine_and_dedups() {
+    // The facade path: NetworkPlanner::plan_all must dispatch through
+    // the engine (the counting strategy observes the searches) and pay
+    // one search per unique layer shape.
+    let strategy = CountingStrategy::new();
+    let np = Planner::for_network("AlexNet-mini")
+        .unwrap()
+        .levels(2)
+        .beam(BeamConfig::quick())
+        .strategy(strategy.clone() as Arc<dyn SearchStrategy>)
+        .jobs(2);
+    let unique: BTreeSet<String> = np
+        .layers()
+        .iter()
+        .map(|(_, d)| format!("{}", d))
+        .collect();
+    let plans = np.plan_all().unwrap();
+    assert_eq!(plans.len(), np.layer_count());
+    assert_eq!(
+        strategy.calls(),
+        unique.len(),
+        "plan_all must search once per unique layer shape"
+    );
+    for p in &plans {
+        p.string.validate(&p.dims).unwrap();
+    }
+}
+
+#[test]
+fn engines_cooperate_through_one_cache_file() {
+    // Two engine runs (stand-ins for two processes) write disjoint
+    // entries to one cache file; merge-on-save must keep both, and a
+    // third run covering the union must answer fully from cache with
+    // zero new searches.
+    let path = temp_cache("coop");
+    let _ = std::fs::remove_file(&path);
+    let d1 = LayerDims::conv(16, 16, 8, 8, 3, 3);
+    let d2 = LayerDims::conv(16, 16, 8, 16, 3, 3);
+    let strategy = CountingStrategy::new();
+    let engine = || {
+        PlanEngine::new()
+            .target(Target::Bespoke {
+                budget_bytes: 256 * 1024,
+            })
+            .levels(2)
+            .strategy(strategy.clone() as Arc<dyn SearchStrategy>)
+            .cache_file(&path)
+    };
+
+    engine().plan_layers(&[("a".to_string(), d1)]).unwrap();
+    assert_eq!(strategy.calls(), 1);
+    engine().plan_layers(&[("b".to_string(), d2)]).unwrap();
+    assert_eq!(strategy.calls(), 2);
+
+    let both = engine()
+        .plan_layers(&[("a".to_string(), d1), ("b".to_string(), d2)])
+        .unwrap();
+    assert_eq!(
+        strategy.calls(),
+        2,
+        "the union run must be answered entirely from the shared cache"
+    );
+    for p in &both {
+        assert!(p.provenance.cache_hit, "{} should be a cache hit", p.name);
+        assert_eq!(p.provenance.search_ms, 0);
+    }
+
+    let _ = std::fs::remove_file(&path);
+}
