@@ -1,5 +1,7 @@
-//! Quickstart: plan a layer through the `Planner` facade and inspect the
-//! resulting `BlockingPlan` — the 60-second tour of the public API.
+//! Quickstart: plan a layer through the `Planner` facade, inspect the
+//! resulting `BlockingPlan`, and *execute* it on a real backend — the
+//! 60-second tour of the public API. (The `Planner`/plan layer is the
+//! front door; the lower-level `optimizer::*` modules are internals.)
 //!
 //!     cargo run --release --example quickstart
 
@@ -7,7 +9,7 @@ use cnn_blocking::model::dims::LayerDims;
 use cnn_blocking::model::string::BlockingString;
 use cnn_blocking::optimizer::beam::BeamConfig;
 use cnn_blocking::util::table::energy_pj;
-use cnn_blocking::{BlockingPlan, Planner, Target};
+use cnn_blocking::{BlockingPlan, ConvInputs, Planner, Target};
 
 fn main() -> anyhow::Result<()> {
     // 1. Describe a convolutional layer (VGG conv4, Table 4 of the paper).
@@ -80,6 +82,27 @@ fn main() -> anyhow::Result<()> {
     println!("\nAlexNet-mini network plans ({} layers):", network.len());
     for p in &network {
         println!("  {}: {}  ({:.3} pJ/MAC)", p.name, p.string, p.pj_per_mac());
+    }
+
+    // 8. Plans are runnable: the backend layer executes the planned loop
+    //    nest over real tensors and *measures* per-level access counts
+    //    (see `cnnblk run` for the full measured-vs-predicted table).
+    //    Execute on dims scaled down for interpretation — full Table 4
+    //    layers are ~10^12 MACs.
+    let exec_dims = layer.scaled_for_sim(500_000);
+    let exec_plan = Planner::for_named("vgg_conv4_mini", exec_dims)
+        .levels(2)
+        .beam(BeamConfig::quick())
+        .plan()?;
+    let run = exec_plan.execute(&ConvInputs::synthetic(exec_dims, 42))?;
+    println!(
+        "\nexecuted {} on the '{}' backend: {} MACs, measured traffic per level:",
+        exec_dims,
+        run.counters.backend,
+        run.counters.macs
+    );
+    for (level, t) in run.counters.per_level() {
+        println!("  {:>10}: {} loads, {} stores", level, t.loads, t.stores);
     }
     Ok(())
 }

@@ -21,13 +21,18 @@ use crate::model::dims::LayerDims;
 
 /// MKL/GotoBLAS-like panel parameters (16-bit elements).
 pub const MKL_KC: u64 = 256;
+/// MKL-like M-panel height.
 pub const MKL_MC: u64 = 128;
+/// MKL-like register-tile rows.
 pub const MKL_MR: u64 = 8;
+/// MKL-like register-tile columns.
 pub const MKL_NR: u64 = 8;
 
 /// ATLAS-like square block edge (L1-sized: 3 * NB^2 * 2B <= 32 KB).
 pub const ATLAS_NB: u64 = 64;
+/// ATLAS-like register-tile rows.
 pub const ATLAS_MU: u64 = 4;
+/// ATLAS-like register-tile columns.
 pub const ATLAS_NU: u64 = 4;
 
 /// Convolution as im2col + MKL-like GEMM: returns (lowering refs emitted

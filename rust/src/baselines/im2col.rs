@@ -26,10 +26,12 @@ pub struct LoweredGemm {
     pub b_base: u64,
     /// Base of the output matrix C (reuses the output tensor storage).
     pub c_base: u64,
+    /// Bytes per element (16-bit words).
     pub elem_bytes: u64,
 }
 
 impl LoweredGemm {
+    /// GEMM shape and addresses of the im2col lowering of `dims`.
     pub fn new(dims: &LayerDims, layout: &Layout) -> LoweredGemm {
         LoweredGemm {
             m: dims.x * dims.y * dims.b,

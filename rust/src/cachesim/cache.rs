@@ -9,6 +9,7 @@
 /// associativity is small (<= 16) so linear scans beat fancier structures.
 #[derive(Debug, Clone)]
 pub struct Cache {
+    /// Display name (`L1`, `L2`, `L3`).
     pub name: &'static str,
     line_shift: u32,
     /// Number of sets; power-of-two uses a mask, otherwise modulo (the
@@ -22,19 +23,25 @@ pub struct Cache {
     stamps: Vec<u32>,
     dirty: Vec<bool>,
     clock: u32,
+    /// Running access/miss/writeback counters.
     pub stats: CacheStats,
 }
 
+/// Access counters of one cache level.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
+    /// References served (reads + writes).
     pub accesses: u64,
+    /// References that missed.
     pub misses: u64,
+    /// Dirty lines evicted to the next level.
     pub writebacks: u64,
 }
 
 /// Result of one access.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AccessResult {
+    /// Whether the reference hit.
     pub hit: bool,
     /// Dirty line evicted (must be written to the next level).
     pub writeback: Option<u64>,
@@ -63,6 +70,7 @@ impl Cache {
     }
 
     #[inline]
+    /// The line index a byte address falls in.
     pub fn line_of(&self, addr: u64) -> u64 {
         addr >> self.line_shift
     }
@@ -130,6 +138,7 @@ impl Cache {
         }
     }
 
+    /// Zero the counters (tags keep their state).
     pub fn reset_stats(&mut self) {
         self.stats = CacheStats::default();
     }

@@ -14,9 +14,13 @@ use crate::model::string::BlockingString;
 /// Byte layout of the three tensors in the simulated address space.
 #[derive(Debug, Clone, Copy)]
 pub struct Layout {
+    /// Base byte address of the input tensor.
     pub input_base: u64,
+    /// Base byte address of the kernel tensor.
     pub kernel_base: u64,
+    /// Base byte address of the output tensor.
     pub output_base: u64,
+    /// Bytes per element (16-bit words).
     pub elem_bytes: u64,
     xw: u64, // input row pitch (elements)
     yh: u64,
@@ -29,6 +33,7 @@ pub struct Layout {
 }
 
 impl Layout {
+    /// Lay the three tensors out back-to-back for `dims`.
     pub fn new(dims: &LayerDims) -> Layout {
         let elem = 2u64;
         let xw = dims.x + dims.fw - 1;

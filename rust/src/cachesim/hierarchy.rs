@@ -5,17 +5,21 @@
 
 use super::cache::{Cache, CacheStats};
 
+/// Cache line size used throughout the simulated hierarchy.
 pub const LINE_BYTES: u64 = 64;
 
 /// A memory reference sink. Trace generators push references here.
 pub trait Sink {
+    /// Push one byte-address reference into the sink.
     fn access(&mut self, addr: u64, write: bool);
 }
 
 /// Counting sink that just tallies references (for trace-length asserts).
 #[derive(Default, Debug)]
 pub struct CountingSink {
+    /// Read references seen.
     pub reads: u64,
+    /// Write references seen.
     pub writes: u64,
 }
 
@@ -32,9 +36,13 @@ impl Sink for CountingSink {
 
 /// The simulated hierarchy.
 pub struct CacheHierarchy {
+    /// First-level data cache.
     pub l1: Cache,
+    /// Second-level cache.
     pub l2: Cache,
+    /// Last-level cache.
     pub l3: Cache,
+    /// Line transfers that reached DRAM (L3 misses + writebacks).
     pub dram_accesses: u64,
 }
 
@@ -49,6 +57,7 @@ impl CacheHierarchy {
         }
     }
 
+    /// Snapshot the per-level counters.
     pub fn stats(&self) -> HierarchyStats {
         HierarchyStats {
             l1: self.l1.stats,
@@ -59,11 +68,16 @@ impl CacheHierarchy {
     }
 }
 
+/// Per-level counter snapshot of a [`CacheHierarchy`].
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct HierarchyStats {
+    /// L1 counters.
     pub l1: CacheStats,
+    /// L2 counters.
     pub l2: CacheStats,
+    /// L3 counters.
     pub l3: CacheStats,
+    /// Line transfers that reached DRAM.
     pub dram_accesses: u64,
 }
 

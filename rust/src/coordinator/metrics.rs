@@ -4,32 +4,42 @@
 
 use std::time::Duration;
 
+/// Serving counters the executor records and `report` summarizes.
 #[derive(Debug, Default)]
 pub struct Metrics {
     latencies_us: Vec<u64>,
     batch_sizes: Vec<usize>,
+    /// Requests completed (success only).
     pub requests: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Ladder slots filled with zero padding.
     pub padded_slots: u64,
+    /// Requests that returned an error.
     pub errors: u64,
 }
 
 impl Metrics {
+    /// Record one completed request and its latency.
     pub fn record_request(&mut self, latency: Duration) {
         self.requests += 1;
         self.latencies_us.push(latency.as_micros() as u64);
     }
 
+    /// Record one executed batch (`formed` real requests in an
+    /// `executed`-slot execution).
     pub fn record_batch(&mut self, formed: usize, executed: usize) {
         self.batches += 1;
         self.batch_sizes.push(formed);
         self.padded_slots += (executed - formed) as u64;
     }
 
+    /// Record one failed request.
     pub fn record_error(&mut self) {
         self.errors += 1;
     }
 
+    /// Exact latency percentile (`q` in [0, 1]) over all requests.
     pub fn latency_percentile(&self, q: f64) -> Duration {
         if self.latencies_us.is_empty() {
             return Duration::ZERO;
@@ -40,6 +50,7 @@ impl Metrics {
         Duration::from_micros(v[idx])
     }
 
+    /// Mean formed-batch size.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batch_sizes.is_empty() {
             return 0.0;
@@ -47,6 +58,7 @@ impl Metrics {
         self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
     }
 
+    /// One-line serving summary for a run of `wall` duration.
     pub fn report(&self, wall: Duration) -> String {
         format!(
             "requests={} batches={} mean_batch={:.2} padded={} errors={} \

@@ -1,10 +1,13 @@
 //! Layer-3 coordinator: the threaded batching inference server that runs
-//! the AOT-compiled pipeline through PJRT, plus the rust-native numeric
-//! oracle and serving metrics.
+//! the AOT-compiled pipeline through PJRT — or, in interpreted mode,
+//! through the plan [`Backend`](crate::runtime::backend::Backend)
+//! registry — plus the rust-native numeric oracle and serving metrics.
 
 pub mod metrics;
 pub mod naive_conv;
+pub mod pipeline;
 pub mod server;
 
 pub use metrics::Metrics;
-pub use server::{InferenceServer, ServerConfig};
+pub use pipeline::InterpretedPipeline;
+pub use server::{Execution, InferenceServer, ServerConfig};

@@ -1,0 +1,241 @@
+//! The interpreted serving pipeline: AlexNet-mini executed through the
+//! plan [`Backend`] registry instead of PJRT.
+//!
+//! The PJRT path serves AOT-compiled HLO artifacts with baked-in
+//! weights; it needs `make artifacts` and the offline image's `xla`
+//! crate. This module is the backend-registry route the coordinator
+//! falls back on (and CI exercises): each conv layer is a
+//! [`BlockingPlan`] executed by a named backend ("naive" or "blocked"),
+//! chained with the same ReLU / 2x2-max-pool structure as
+//! `python/compile/model.py`, over deterministic synthetic weights.
+//! Numerics are self-consistent (server output == direct pipeline run)
+//! rather than golden-checked — the PJRT artifacts bake different
+//! weights.
+
+use super::naive_conv::{maxpool2, relu};
+use crate::optimizer::beam::BeamConfig;
+use crate::plan::BlockingPlan;
+use crate::runtime::backend::{backend_by_name, Backend, ConvInputs};
+use crate::runtime::Manifest;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+
+/// One conv layer of the interpreted pipeline: its plan plus the
+/// synthetic weights it executes with.
+#[derive(Clone)]
+pub struct PipelineLayer {
+    /// The blocking plan executed for this layer.
+    pub plan: BlockingPlan,
+    /// Deterministic synthetic weights, `(K, C, Fh, Fw)` row-major.
+    pub weights: Vec<f32>,
+    /// Whether a 2x2/stride-2 max-pool follows this layer (derived from
+    /// how the next layer's input shape chains).
+    pub pool_after: bool,
+}
+
+/// A conv→ReLU(→pool) chain executed through a plan backend.
+pub struct InterpretedPipeline {
+    /// The layers, in execution order.
+    pub layers: Vec<PipelineLayer>,
+    backend: Arc<dyn Backend>,
+}
+
+impl InterpretedPipeline {
+    /// Build a pipeline from per-layer plans (network order), inferring
+    /// the pool structure from how consecutive layer shapes chain and
+    /// generating deterministic weights from `seed`.
+    pub fn from_plans(
+        plans: Vec<BlockingPlan>,
+        backend: &str,
+        seed: u64,
+    ) -> Result<InterpretedPipeline> {
+        ensure!(!plans.is_empty(), "pipeline needs at least one layer");
+        let backend = backend_by_name(backend)?;
+        let mut layers = Vec::with_capacity(plans.len());
+        let mut rng = Rng::new(seed);
+        for (i, plan) in plans.iter().enumerate() {
+            let d = plan.dims;
+            ensure!(d.b == 1, "pipeline layers are per-image (b = 1), got {}", d);
+            let pool_after = match plans.get(i + 1) {
+                None => false,
+                Some(next) => {
+                    let nd = next.dims;
+                    ensure!(
+                        nd.c == d.k,
+                        "layer {} produces {} channels but layer {} consumes {}",
+                        plan.name,
+                        d.k,
+                        next.name,
+                        nd.c
+                    );
+                    let (in_h, in_w) = (nd.y + nd.fh - 1, nd.x + nd.fw - 1);
+                    if in_h == d.y && in_w == d.x {
+                        false
+                    } else if in_h == d.y / 2 && in_w == d.x / 2 {
+                        // matches maxpool2's floor(y/2) x floor(x/2) output
+                        true
+                    } else {
+                        anyhow::bail!(
+                            "layer {} output {}x{} does not chain into {} input {}x{} \
+                             (with or without a 2x2 pool)",
+                            plan.name,
+                            d.y,
+                            d.x,
+                            next.name,
+                            in_h,
+                            in_w
+                        );
+                    }
+                }
+            };
+            // He-style scale keeps activations bounded through the chain.
+            let scale = (2.0 / (d.c * d.fh * d.fw) as f64).sqrt();
+            let weights = (0..d.kernel_elems())
+                .map(|_| ((rng.f64() - 0.5) * 2.0 * scale) as f32)
+                .collect();
+            layers.push(PipelineLayer {
+                plan: plan.clone(),
+                weights,
+                pool_after,
+            });
+        }
+        Ok(InterpretedPipeline { layers, backend })
+    }
+
+    /// Pipeline from an artifact manifest's rehydrated plans — the same
+    /// layers the PJRT executables were compiled from, executed through
+    /// the backend registry instead.
+    pub fn from_manifest(m: &Manifest, backend: &str, seed: u64) -> Result<InterpretedPipeline> {
+        ensure!(
+            !m.layer_plans.is_empty(),
+            "manifest has no rehydratable schedule records"
+        );
+        InterpretedPipeline::from_plans(m.layer_plans.clone(), backend, seed)
+    }
+
+    /// Plan the default e2e pipeline (AlexNet-mini) fresh and wrap it —
+    /// the no-artifacts path CI runs.
+    pub fn plan_default(cfg: &BeamConfig, backend: &str, seed: u64) -> Result<InterpretedPipeline> {
+        let plans = crate::optimizer::schedules::e2e_layers()
+            .iter()
+            .map(|(name, dims)| crate::optimizer::schedules::plan_layer(name, dims, cfg))
+            .collect();
+        InterpretedPipeline::from_plans(plans, backend, seed)
+            .context("planning the default e2e pipeline")
+    }
+
+    /// The backend executing each conv layer.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Flat input length for one image: `C x (Y+Fh-1) x (X+Fw-1)` of the
+    /// first layer.
+    pub fn input_len(&self) -> usize {
+        let d = self.layers[0].plan.dims;
+        (d.c * (d.y + d.fh - 1) * (d.x + d.fw - 1)) as usize
+    }
+
+    /// Flat output length for one image: `K x Y x X` of the last layer.
+    pub fn output_len(&self) -> usize {
+        let d = self.layers.last().unwrap().plan.dims;
+        (d.k * d.y * d.x) as usize
+    }
+
+    /// Run one image through the chain: per layer, the plan backend's
+    /// conv, then ReLU, then (where the shapes chain that way) a 2x2
+    /// max-pool — mirroring `python/compile/model.py` minus the bias.
+    pub fn run_image(&self, image: &[f32]) -> Result<Vec<f32>> {
+        ensure!(
+            image.len() == self.input_len(),
+            "image has {} elements, pipeline expects {}",
+            image.len(),
+            self.input_len()
+        );
+        let mut h = image.to_vec();
+        for layer in &self.layers {
+            let d = layer.plan.dims;
+            let inputs = ConvInputs::new(d, h, layer.weights.clone())?;
+            let out = self.backend.execute(&layer.plan, &inputs)?;
+            h = out.output;
+            relu(&mut h);
+            if layer.pool_after {
+                let (pooled, _) = maxpool2(&h, (d.k as usize, d.y as usize, d.x as usize));
+                h = pooled;
+            }
+        }
+        Ok(h)
+    }
+
+    /// Run `b` images stored flat back-to-back; output is flat too.
+    pub fn run_batch(&self, flat: &[f32], b: usize) -> Result<Vec<f32>> {
+        let per = self.input_len();
+        ensure!(
+            flat.len() == b * per,
+            "batch of {} images needs {} elements, got {}",
+            b,
+            b * per,
+            flat.len()
+        );
+        let mut out = Vec::with_capacity(b * self.output_len());
+        for i in 0..b {
+            out.extend(self.run_image(&flat[i * per..(i + 1) * per])?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> InterpretedPipeline {
+        InterpretedPipeline::plan_default(&BeamConfig::quick(), "naive", 0).unwrap()
+    }
+
+    #[test]
+    fn default_pipeline_chains_alexnet_mini() {
+        let p = quick();
+        assert_eq!(p.layers.len(), 3);
+        assert_eq!(p.input_len(), 8 * 36 * 36);
+        assert_eq!(p.output_len(), 32 * 5 * 5);
+        assert!(p.layers[0].pool_after);
+        assert!(p.layers[1].pool_after);
+        assert!(!p.layers[2].pool_after);
+    }
+
+    #[test]
+    fn run_is_deterministic_and_relu_clamped() {
+        let p = quick();
+        let mut rng = Rng::new(42);
+        let img: Vec<f32> = (0..p.input_len()).map(|_| rng.f64() as f32 - 0.5).collect();
+        let a = p.run_image(&img).unwrap();
+        let b = p.run_image(&img).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), p.output_len());
+        assert!(a.iter().all(|&v| v >= 0.0), "ReLU output must be >= 0");
+        assert!(a.iter().any(|&v| v > 0.0), "all-zero output is suspicious");
+    }
+
+    #[test]
+    fn batch_equals_per_image() {
+        let p = quick();
+        let mut rng = Rng::new(7);
+        let per = p.input_len();
+        let flat: Vec<f32> = (0..2 * per).map(|_| rng.f64() as f32 - 0.5).collect();
+        let batch = p.run_batch(&flat, 2).unwrap();
+        let solo0 = p.run_image(&flat[..per]).unwrap();
+        let solo1 = p.run_image(&flat[per..]).unwrap();
+        assert_eq!(&batch[..solo0.len()], &solo0[..]);
+        assert_eq!(&batch[solo0.len()..], &solo1[..]);
+    }
+
+    #[test]
+    fn bad_shapes_are_clean_errors() {
+        let p = quick();
+        assert!(p.run_image(&[0.0; 3]).is_err());
+        assert!(p.run_batch(&[0.0; 3], 2).is_err());
+        assert!(backend_by_name("cuda").is_err());
+    }
+}

@@ -1,18 +1,26 @@
 //! The L3 inference coordinator: a threaded request loop with dynamic
-//! batching over the AOT-compiled pipeline executables.
+//! batching over the pipeline — AOT-compiled PJRT executables by
+//! default, or the plan [`Backend`](crate::runtime::backend::Backend)
+//! registry in interpreted mode.
 //!
 //! Architecture (vLLM-router-like, shrunk to one node):
 //!  * clients submit single-image requests through a bounded channel;
 //!  * the batcher collects up to `max_batch` requests or until
 //!    `batch_timeout` expires from the first queued request;
-//!  * the executor owns the PJRT engine (created on its own thread — the
-//!    client is not Send) and a ladder of compiled executables, one per
-//!    batch size {1,2,4,8}; a formed batch runs on the smallest ladder
-//!    entry that fits, padding with zeros;
+//!  * in PJRT mode the executor owns the PJRT engine (created on its
+//!    own thread — the client is not Send) and a ladder of compiled
+//!    executables, one per batch size {1,2,4,8}; a formed batch runs on
+//!    the smallest ladder entry that fits, padding with zeros;
+//!  * in interpreted mode ([`Execution::Interpreted`]) the executor runs
+//!    each layer's [`crate::plan::BlockingPlan`] through the backend
+//!    registry (`coordinator::pipeline`) — no artifacts or `xla` crate
+//!    needed, so this path also serves as the CI-visible server test;
 //!  * responses flow back through per-request channels; metrics capture
 //!    latency percentiles, batch occupancy and padding waste.
 
 use super::metrics::Metrics;
+use super::pipeline::InterpretedPipeline;
+use crate::optimizer::beam::BeamConfig;
 use crate::runtime::{Engine, Manifest, Module};
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -21,13 +29,38 @@ use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSend
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// How the executor thread runs the pipeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Execution {
+    /// AOT-compiled HLO artifacts through the PJRT engine (default;
+    /// needs `make artifacts` and the `pjrt` feature).
+    Pjrt,
+    /// Per-layer plans executed through the backend registry
+    /// (`"naive"` or `"blocked"`) with deterministic synthetic weights —
+    /// see [`InterpretedPipeline`].
+    Interpreted {
+        /// Backend name, resolved via
+        /// [`crate::runtime::backend::backend_by_name`].
+        backend: String,
+    },
+}
+
+/// Configuration for [`InferenceServer::start`].
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Directory holding `manifest.json` + HLO artifacts. Interpreted
+    /// mode uses it only to recover the compiled plans; when no
+    /// manifest exists at all it plans the default pipeline instead
+    /// (a present-but-unreadable manifest is an error).
     pub artifacts_dir: PathBuf,
+    /// Most requests batched into one execution.
     pub max_batch: usize,
+    /// How long the batcher waits for more requests after the first.
     pub batch_timeout: Duration,
     /// Request queue depth before submitters block (backpressure).
     pub queue_depth: usize,
+    /// PJRT artifacts or the interpreted plan backend.
+    pub execution: Execution,
 }
 
 impl Default for ServerConfig {
@@ -37,6 +70,7 @@ impl Default for ServerConfig {
             max_batch: 8,
             batch_timeout: Duration::from_millis(2),
             queue_depth: 64,
+            execution: Execution::Pjrt,
         }
     }
 }
@@ -51,9 +85,13 @@ struct Request {
 pub struct InferenceServer {
     tx: Option<SyncSender<Request>>,
     handle: Option<std::thread::JoinHandle<()>>,
+    /// Shared serving counters.
     pub metrics: Arc<Mutex<Metrics>>,
+    /// Flat per-image input length the pipeline expects.
     pub input_len: usize,
+    /// Flat per-image output length the pipeline produces.
     pub output_len: usize,
+    /// Blocking-string notation per pipeline layer.
     pub layer_strings: Vec<String>,
     /// The plan behind each pipeline executable (from the manifest's
     /// schedule records), so the server can report exactly what blocking
@@ -62,9 +100,67 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Start the server: loads the manifest, spins the executor thread,
-    /// compiles the batch ladder, and blocks until ready.
+    /// Start the server per `cfg.execution`: the PJRT path loads the
+    /// manifest, spins the executor thread, compiles the batch ladder
+    /// and blocks until ready; the interpreted path plans (or recovers)
+    /// the pipeline, then spins a backend-registry executor.
     pub fn start(cfg: ServerConfig) -> Result<InferenceServer> {
+        match cfg.execution.clone() {
+            Execution::Pjrt => InferenceServer::start_pjrt(cfg),
+            Execution::Interpreted { backend } => InferenceServer::start_interpreted(cfg, backend),
+        }
+    }
+
+    /// The interpreted path: recover the compiled plans from the
+    /// artifact manifest when present (so we serve exactly what the
+    /// artifacts were built from), or plan the default e2e pipeline
+    /// fresh when there is no manifest at all; then execute every layer
+    /// through the backend registry. A manifest that exists but cannot
+    /// be rehydrated is an error, not a silent fallback — serving
+    /// different plans than the operator's artifacts would misreport
+    /// what runs.
+    fn start_interpreted(cfg: ServerConfig, backend: String) -> Result<InferenceServer> {
+        let manifest_path = cfg.artifacts_dir.join("manifest.json");
+        let pipeline = if manifest_path.exists() {
+            let m = Manifest::load(&cfg.artifacts_dir)?;
+            InterpretedPipeline::from_manifest(&m, &backend, 0).with_context(|| {
+                format!(
+                    "rehydrating the pipeline from {} (pass a different \
+                     --artifacts dir, or remove it to serve freshly-planned \
+                     default layers)",
+                    manifest_path.display()
+                )
+            })?
+        } else {
+            InterpretedPipeline::plan_default(&BeamConfig::quick(), &backend, 0)?
+        };
+        let input_len = pipeline.input_len();
+        let output_len = pipeline.output_len();
+        let layer_plans: Vec<crate::plan::BlockingPlan> =
+            pipeline.layers.iter().map(|l| l.plan.clone()).collect();
+        let layer_strings = layer_plans.iter().map(|p| p.string.notation()).collect();
+
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics2 = metrics.clone();
+        let handle = std::thread::Builder::new()
+            .name("cnnblk-interp".into())
+            .spawn(move || interpreted_loop(cfg, pipeline, rx, metrics2, input_len))
+            .context("spawning interpreted executor")?;
+
+        Ok(InferenceServer {
+            tx: Some(tx),
+            handle: Some(handle),
+            metrics,
+            input_len,
+            output_len,
+            layer_strings,
+            layer_plans,
+        })
+    }
+
+    /// The PJRT path (the original server).
+    fn start_pjrt(cfg: ServerConfig) -> Result<InferenceServer> {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let ladder = manifest.batch_ladder();
         if ladder.is_empty() {
@@ -190,24 +286,10 @@ fn executor_loop(
     let _ = ready_tx.send(Ok(()));
 
     loop {
-        // block for the first request of the batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders dropped: shutdown
+        let batch = match collect_batch(&rx, cfg.batch_timeout, cfg.max_batch.min(max_ladder)) {
+            Some(b) => b,
+            None => return, // all senders dropped: shutdown
         };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.batch_timeout;
-        while batch.len() < cfg.max_batch.min(max_ladder) {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
 
         // route to the smallest ladder executable that fits
         let formed = batch.len();
@@ -224,25 +306,84 @@ fn executor_loop(
         flat.resize(exec_size * input_len, 0.0); // zero-pad
 
         let result = module.run_f32(&[&flat]);
-        {
-            let mut m = metrics.lock().unwrap();
-            m.record_batch(formed, exec_size);
+        metrics.lock().unwrap().record_batch(formed, exec_size);
+        deliver(batch, result, &metrics, output_len);
+    }
+}
+
+/// Executor loop for interpreted mode: the same batcher, with the
+/// formed batch run through the plan backend (no ladder, no padding).
+fn interpreted_loop(
+    cfg: ServerConfig,
+    pipeline: InterpretedPipeline,
+    rx: Receiver<Request>,
+    metrics: Arc<Mutex<Metrics>>,
+    input_len: usize,
+) {
+    let output_len = pipeline.output_len();
+    loop {
+        let batch = match collect_batch(&rx, cfg.batch_timeout, cfg.max_batch.max(1)) {
+            Some(b) => b,
+            None => return,
+        };
+        let formed = batch.len();
+        let mut flat = Vec::with_capacity(formed * input_len);
+        for r in &batch {
+            flat.extend_from_slice(&r.input);
         }
-        match result {
-            Ok(out) => {
-                for (i, r) in batch.into_iter().enumerate() {
-                    let slice = out[i * output_len..(i + 1) * output_len].to_vec();
-                    let latency = r.submitted.elapsed();
-                    metrics.lock().unwrap().record_request(latency);
-                    let _ = r.resp.send(Ok(slice));
-                }
+        let result = pipeline.run_batch(&flat, formed);
+        metrics.lock().unwrap().record_batch(formed, formed);
+        deliver(batch, result, &metrics, output_len);
+    }
+}
+
+/// Collect one batch: block for the first request, then keep accepting
+/// until `cap` requests are queued or `timeout` expires. `None` means
+/// every sender dropped (shutdown).
+fn collect_batch(
+    rx: &Receiver<Request>,
+    timeout: Duration,
+    cap: usize,
+) -> Option<Vec<Request>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + timeout;
+    while batch.len() < cap {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => batch.push(r),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+/// Slice a batch result back to per-request responses (or fan the error
+/// out to every requester), recording metrics.
+fn deliver(
+    batch: Vec<Request>,
+    result: Result<Vec<f32>>,
+    metrics: &Arc<Mutex<Metrics>>,
+    output_len: usize,
+) {
+    match result {
+        Ok(out) => {
+            for (i, r) in batch.into_iter().enumerate() {
+                let slice = out[i * output_len..(i + 1) * output_len].to_vec();
+                let latency = r.submitted.elapsed();
+                metrics.lock().unwrap().record_request(latency);
+                let _ = r.resp.send(Ok(slice));
             }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for r in batch {
-                    metrics.lock().unwrap().record_error();
-                    let _ = r.resp.send(Err(msg.clone()));
-                }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for r in batch {
+                metrics.lock().unwrap().record_error();
+                let _ = r.resp.send(Err(msg.clone()));
             }
         }
     }
@@ -267,7 +408,89 @@ mod tests {
             max_batch: 8,
             batch_timeout: Duration::from_millis(5),
             queue_depth: 64,
+            execution: Execution::Pjrt,
         }
+    }
+
+    /// Interpreted-mode config pointed away from any artifacts, so the
+    /// server plans the default pipeline — this is the path CI runs
+    /// (no artifacts, no PJRT).
+    fn interp_config(backend: &str) -> ServerConfig {
+        ServerConfig {
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(5),
+            queue_depth: 16,
+            execution: Execution::Interpreted {
+                backend: backend.to_string(),
+            },
+        }
+    }
+
+    fn test_image(pipeline: &InterpretedPipeline, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..pipeline.input_len())
+            .map(|_| rng.f64() as f32 - 0.5)
+            .collect()
+    }
+
+    #[test]
+    fn interpreted_server_matches_direct_pipeline() {
+        let server = InferenceServer::start(interp_config("naive")).unwrap();
+        let pipeline =
+            InterpretedPipeline::plan_default(&BeamConfig::quick(), "naive", 0).unwrap();
+        assert_eq!(server.input_len, pipeline.input_len());
+        assert_eq!(server.output_len, pipeline.output_len());
+        assert_eq!(server.layer_plans.len(), pipeline.layers.len());
+        let img = test_image(&pipeline, 3);
+        let got = server.infer(img.clone()).unwrap();
+        assert_eq!(got, pipeline.run_image(&img).unwrap());
+        server.shutdown();
+    }
+
+    #[test]
+    fn interpreted_server_batches_requests() {
+        let server = InferenceServer::start(interp_config("naive")).unwrap();
+        let pipeline =
+            InterpretedPipeline::plan_default(&BeamConfig::quick(), "naive", 0).unwrap();
+        let img = test_image(&pipeline, 9);
+        let want = pipeline.run_image(&img).unwrap();
+        let rxs: Vec<_> = (0..6)
+            .map(|_| server.submit(img.clone()).unwrap())
+            .collect();
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().unwrap(), want);
+        }
+        let m = server.metrics.lock().unwrap();
+        assert_eq!(m.requests, 6);
+        assert!(m.batches <= 6);
+        drop(m);
+        server.shutdown();
+    }
+
+    #[test]
+    fn interpreted_server_runs_the_blocked_backend() {
+        // One image through the blocked loop-nest interpreter: the
+        // serving path really executes plans, not just the oracle.
+        let server = InferenceServer::start(interp_config("blocked")).unwrap();
+        let naive =
+            InterpretedPipeline::plan_default(&BeamConfig::quick(), "naive", 0).unwrap();
+        let img = test_image(&naive, 21);
+        let got = server.infer(img.clone()).unwrap();
+        let want = naive.run_image(&img).unwrap();
+        assert_eq!(got.len(), want.len());
+        // blocked and naive reassociate f32 sums differently; compare
+        // with the same tolerance rust/tests/backend.rs pins.
+        for (a, b) in got.iter().zip(&want) {
+            let rel = (a - b).abs() / a.abs().max(b.abs()).max(1.0);
+            assert!(rel < 1e-3, "{} vs {}", a, b);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn interpreted_server_rejects_bad_backend() {
+        assert!(InferenceServer::start(interp_config("tpu")).is_err());
     }
 
     #[test]

@@ -16,16 +16,27 @@ use crate::plan::{BlockingPlan, Planner, Target};
 use crate::util::pool::{default_threads, par_map_with, with_thread_cap, WorkerPool};
 use crate::util::table::{eng, Table};
 
+/// One Figs. 3-4 row: simulated cache accesses for our schedule vs the
+/// BLAS-style baselines on one (scaled) benchmark layer.
 #[derive(Debug, Clone)]
 pub struct CacheRow {
+    /// Benchmark layer name.
     pub name: String,
+    /// The (scaled) dims that were trace-simulated.
     pub dims: LayerDims,
+    /// Our chosen blocking string (notation).
     pub ours_string: String,
+    /// L2 accesses under our schedule.
     pub ours_l2: u64,
+    /// L2 accesses under the ATLAS-like baseline.
     pub atlas_l2: u64,
+    /// L2 accesses under the MKL-like baseline.
     pub mkl_l2: u64,
+    /// L3 accesses under our schedule.
     pub ours_l3: u64,
+    /// L3 accesses under the ATLAS-like baseline.
     pub atlas_l3: u64,
+    /// L3 accesses under the MKL-like baseline.
     pub mkl_l3: u64,
 }
 
@@ -155,6 +166,7 @@ pub fn run_all(max_macs: u64) -> Vec<CacheRow> {
     })
 }
 
+/// Render the rows as the paper's Figure 3 and Figure 4 tables.
 pub fn render(rows: &[CacheRow]) -> (Table, Table) {
     let mut f3 = Table::new(
         "Figure 3 — L2 cache accesses (lower is better)",

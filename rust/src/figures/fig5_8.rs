@@ -18,17 +18,29 @@ use crate::optimizer::codesign::{codesign_layer, diannao_reference, fig7_budgets
 use crate::util::pool::par_map;
 use crate::util::table::{energy_pj, Table};
 
+/// One Fig. 5 row: DianNao energy under its baseline schedule vs the
+/// optimizer's best schedule on the same hardware.
 #[derive(Debug, Clone)]
 pub struct Fig5Row {
+    /// Benchmark layer name.
     pub name: String,
+    /// Input-buffer energy, baseline schedule (pJ).
     pub base_ib: f64,
+    /// Kernel-buffer energy, baseline schedule (pJ).
     pub base_kb: f64,
+    /// Output-buffer energy, baseline schedule (pJ).
     pub base_ob: f64,
+    /// Total energy, baseline schedule (pJ).
     pub base_total: f64,
+    /// Input-buffer energy, optimal schedule (pJ).
     pub opt_ib: f64,
+    /// Kernel-buffer energy, optimal schedule (pJ).
     pub opt_kb: f64,
+    /// Output-buffer energy, optimal schedule (pJ).
     pub opt_ob: f64,
+    /// Total energy, optimal schedule (pJ).
     pub opt_total: f64,
+    /// The optimal blocking string (notation).
     pub opt_string: String,
 }
 
@@ -51,6 +63,7 @@ pub fn fig5_rows(benches: &[Benchmark], cfg: &BeamConfig) -> Vec<Fig5Row> {
     })
 }
 
+/// Render the Fig. 5 comparison table.
 pub fn render_fig5(rows: &[Fig5Row]) -> Table {
     let mut t = Table::new(
         "Figure 5 — DianNao energy: baseline schedule vs optimal schedule",
@@ -76,15 +89,19 @@ pub fn render_fig5(rows: &[Fig5Row]) -> Table {
     t
 }
 
+/// One Fig. 6 row: the co-designed optimal architecture for a layer.
 #[derive(Debug, Clone)]
 pub struct Fig6Row {
+    /// Benchmark layer name.
     pub name: String,
+    /// The co-designed point (8 MB budget).
     pub point: DesignPoint,
     /// DianNao-with-optimal-schedule total (the normalization base).
     pub diannao_opt_pj: f64,
 }
 
 impl Fig6Row {
+    /// Energy normalized to DianNao with its optimal schedule.
     pub fn normalized(&self) -> f64 {
         self.point.energy_pj / self.diannao_opt_pj
     }
@@ -104,6 +121,7 @@ pub fn fig6_rows(cfg: &BeamConfig, budget: u64, levels: usize) -> Vec<Fig6Row> {
     })
 }
 
+/// Render the Fig. 6 normalized-energy table.
 pub fn render_fig6(rows: &[Fig6Row]) -> Table {
     let mut t = Table::new(
         "Figure 6 — optimal architecture energy, normalized to DianNao + optimal schedule",
@@ -122,8 +140,10 @@ pub fn render_fig6(rows: &[Fig6Row]) -> Table {
     t
 }
 
+/// One Fig. 7 row: the energy/area pareto point at one SRAM budget.
 #[derive(Debug, Clone)]
 pub struct Fig7Row {
+    /// SRAM budget of the sweep point.
     pub budget_bytes: u64,
     /// Geomean over Conv1-5 of energy normalized to DianNao+opt-schedule.
     pub energy_norm: f64,
@@ -163,6 +183,7 @@ pub fn fig7_rows(cfg: &BeamConfig, levels: usize) -> Vec<Fig7Row> {
         .collect()
 }
 
+/// Render the Fig. 7 budget-sweep table.
 pub fn render_fig7(rows: &[Fig7Row]) -> Table {
     let mut t = Table::new(
         "Figure 7 — energy & area vs SRAM budget (geomean of Conv1-5, normalized to DianNao)",
@@ -179,11 +200,16 @@ pub fn render_fig7(rows: &[Fig7Row]) -> Table {
     t
 }
 
+/// One Fig. 8 row: memory vs compute energy on the optimal system.
 #[derive(Debug, Clone)]
 pub struct Fig8Row {
+    /// Benchmark layer name.
     pub name: String,
+    /// Memory-access energy (pJ).
     pub memory_pj: f64,
+    /// MAC energy (pJ).
     pub mac_pj: f64,
+    /// Memory-to-MAC energy ratio.
     pub ratio: f64,
 }
 
@@ -210,6 +236,7 @@ pub fn fig8_rows(cfg: &BeamConfig, levels: usize) -> Vec<Fig8Row> {
     })
 }
 
+/// Render the Fig. 8 memory-vs-compute table.
 pub fn render_fig8(rows: &[Fig8Row]) -> Table {
     let mut t = Table::new(
         "Figure 8 — memory vs MAC energy on the optimal 8MB system",

@@ -10,10 +10,14 @@ use crate::plan::{BlockingPlan, Planner, Target};
 use crate::util::pool::par_map;
 use crate::util::table::{energy_pj, Table};
 
+/// One Fig. 9 grid cell: a schedule evaluated at one core count.
 #[derive(Debug, Clone)]
 pub struct Fig9Cell {
+    /// Index into the candidate-schedule list.
     pub schedule_idx: usize,
+    /// The schedule's blocking string (notation).
     pub schedule: String,
+    /// Multicore energy breakdown at the cell's core count.
     pub breakdown: MulticoreBreakdown,
 }
 
@@ -64,10 +68,12 @@ pub fn fig9_grid(plans: &[BlockingPlan]) -> Vec<Fig9Cell> {
     })
 }
 
+/// Conv1's dims (the layer Fig. 9 studies).
 pub fn conv1_dims() -> LayerDims {
     by_name("Conv1").unwrap().dims
 }
 
+/// Render the Fig. 9 scaling grid.
 pub fn render_fig9(dims: &LayerDims, cells: &[Fig9Cell]) -> Table {
     let mut t = Table::new(
         "Figure 9 — multicore on-chip memory energy scaling (Conv1)",

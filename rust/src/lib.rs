@@ -43,21 +43,47 @@
 //! coordinator reports the plan compiled into each serving artifact, and
 //! a [`PlanCache`] lets repeat searches be answered from disk.
 //!
+//! Plans are also directly *runnable*: the [`runtime::backend`] layer
+//! executes a plan on real tensors — [`Backend`] dispatched from
+//! `provenance.target`, with a naive Algorithm 1 oracle and a blocked
+//! loop-nest interpreter that measures per-level access counts as it
+//! runs — and `rust/tests/backend.rs` pins measured counts against the
+//! model's predictions:
+//!
+//! ```ignore
+//! use cnn_blocking::{ConvInputs, Planner};
+//!
+//! let plan = Planner::for_benchmark("Conv4")?.plan()?;
+//! let run = plan.execute(&ConvInputs::synthetic(plan.dims, 42))?;
+//! assert_eq!(run.output.len() as u64, plan.dims.output_elems());
+//! println!("{:?}", run.counters.per_level());
+//! ```
+//!
 //! ## Layout
 //!
-//! * [`plan`] — the `BlockingPlan` IR, `Planner` facade, `PlanCache`.
+//! * [`plan`] — the `BlockingPlan` IR, `Planner` facade, `PlanEngine`,
+//!   `PlanCache`.
 //! * [`model`] — blocking strings, Table 2 buffers, Eq. 1 accesses,
 //!   Table 3 energy, Table 1/4 networks and benchmarks.
-//! * [`optimizer`] — exhaustive + seeded-beam schedule search, hierarchy
-//!   packing, memory co-design, multi-layer flexible-memory optimization.
+//! * [`optimizer`] — pluggable search strategies (beam / exhaustive /
+//!   random), hierarchy packing, memory co-design, multi-layer
+//!   flexible-memory optimization, schedule export.
 //! * [`cachesim`] — set-associative cache hierarchy + address traces
 //!   (replaces the paper's PAPI measurements).
 //! * [`baselines`] — im2col+GEMM (MKL/ATLAS-like) and DianNao models.
 //! * [`parallel`] — multicore partitioning (Sec. 3.3 / Fig. 9).
-//! * [`runtime`] — PJRT client wrapper (load + run AOT HLO artifacts).
-//! * [`coordinator`] — threaded batching inference driver (L3).
+//! * [`runtime`] — executable plan backends (naive oracle + blocked
+//!   interpreter with measured access counters) and the PJRT client
+//!   wrapper (load + run AOT HLO artifacts).
+//! * [`coordinator`] — threaded batching inference driver (L3), PJRT or
+//!   interpreted through the backend registry.
 //! * [`figures`] — harness that regenerates each paper table/figure.
 //! * [`util`] — offline substrates (JSON, CLI, RNG, bench, threads).
+//!
+//! See `docs/ARCHITECTURE.md` for the paper-section → module map and the
+//! data-flow diagram, and `docs/CLI.md` for the `cnnblk` front end.
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod cachesim;
@@ -71,3 +97,4 @@ pub mod runtime;
 pub mod util;
 
 pub use plan::{BlockingPlan, PlanCache, PlanEngine, Planner, Target};
+pub use runtime::backend::{AccessCounters, Backend, ConvInputs, ConvOutput};

@@ -8,21 +8,26 @@
 //!
 //! Subcommands:
 //!   optimize   plan a benchmark layer (cache-aware)
+//!   run        execute a planned layer on a backend; measured-vs-predicted
 //!   schedules  plan the e2e pipeline layers and emit schedules.json
 //!   figures    regenerate the paper's tables/figures (see --help text)
 //!   cachesim   run the Fig. 3/4 cache-trace comparison
 //!   serve      run the batching inference server on synthetic requests
 //!   validate   PJRT round-trip checks against goldens and the native conv
+//!
+//! docs/CLI.md documents every subcommand and flag; `print_help` below
+//! must stay in agreement with it.
 
-use cnn_blocking::coordinator::{InferenceServer, ServerConfig};
+use cnn_blocking::coordinator::{Execution, InferenceServer, ServerConfig};
 use cnn_blocking::figures::{fig3_4, fig5_8, fig9, tables};
 use cnn_blocking::model::benchmarks::{all_benchmarks, by_name};
 use cnn_blocking::model::hierarchy::human_bytes;
 use cnn_blocking::optimizer::beam::BeamConfig;
 use cnn_blocking::optimizer::schedules::emit_schedules;
+use cnn_blocking::runtime::backend::{backend_by_name, predicted_counters, ConvInputs};
 use cnn_blocking::runtime::{Engine, Golden, Manifest};
 use cnn_blocking::util::cli::Args;
-use cnn_blocking::util::table::energy_pj;
+use cnn_blocking::util::table::{energy_pj, eng, Table};
 use cnn_blocking::{BlockingPlan, Planner, Target};
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
@@ -34,6 +39,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     match args.subcommand() {
         Some("optimize") => cmd_optimize(&args),
+        Some("run") => cmd_run(&args),
         Some("schedules") => cmd_schedules(&args),
         Some("figures") => cmd_figures(&args),
         Some("cachesim") => cmd_cachesim(&args),
@@ -59,10 +65,17 @@ fn print_help() {
          \x20         [--top 5] [--cache PATH] [--no-cache]   (repeat runs hit the plan cache)\n\
          \x20         --network AlexNet                       (plan a whole network through the\n\
          \x20         engine: repeated shapes searched once, unique shapes in parallel)\n\
+         run       --benchmark Conv1 [--backend naive|blocked] (execute the planned layer and\n\
+         \x20         print measured-vs-predicted access counts; default backend blocked)\n\
+         \x20         [--levels 3] [--budget-kb 8192] [--target bespoke|diannao|cpu]\n\
+         \x20         [--strategy beam|exhaustive|random] [--cache PATH] [--no-cache]\n\
+         \x20         [--max-macs 2000000]                    (scale the layer for execution)\n\
+         \x20         [--seed 42] [--verify]                  (--verify cross-checks vs naive)\n\
          schedules [--out python/compile/schedules.json]      (step 1 of `make artifacts`)\n\
          figures   [--table1|--table3|--table4|--fig3|--fig5|--fig6|--fig7|--fig8|--fig9|--all]\n\
          cachesim  [--max-macs 20000000]                      (Figs. 3-4 traces)\n\
          serve     [--requests 256] [--batch 8] [--timeout-ms 2] [--artifacts artifacts]\n\
+         \x20         [--interpret naive|blocked]             (plan-backend serving, no PJRT)\n\
          validate  [--artifacts artifacts]                    (PJRT round-trip checks)\n\
          \n\
          add --full-search for the paper-width beam (128 seeds) instead of the quick one"
@@ -74,6 +87,23 @@ fn beam_cfg(args: &Args) -> BeamConfig {
         BeamConfig::default()
     } else {
         BeamConfig::quick()
+    }
+}
+
+/// Resolve `--target` (+ `--budget-kb` for bespoke), rejecting unknown
+/// names instead of silently defaulting.
+fn parse_target(args: &Args) -> anyhow::Result<Target> {
+    let budget = args.get_u64("budget-kb", 8 * 1024) * 1024;
+    match args.get_or("target", "bespoke").as_str() {
+        "bespoke" => Ok(Target::Bespoke {
+            budget_bytes: budget,
+        }),
+        "diannao" => Ok(Target::DianNao),
+        "cpu" => Ok(Target::Cpu),
+        other => Err(anyhow::anyhow!(
+            "unknown target '{}' (known: bespoke, diannao, cpu)",
+            other
+        )),
     }
 }
 
@@ -112,14 +142,7 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         ],
     )?;
     let levels = args.get_u64("levels", 3) as usize;
-    let budget = args.get_u64("budget-kb", 8 * 1024) * 1024;
-    let target = match args.get_or("target", "bespoke").as_str() {
-        "diannao" => Target::DianNao,
-        "cpu" => Target::Cpu,
-        _ => Target::Bespoke {
-            budget_bytes: budget,
-        },
-    };
+    let target = parse_target(args)?;
     let strategy = args.get_or("strategy", "beam");
 
     // Whole-network mode: the PlanEngine dedups repeated layer shapes
@@ -212,6 +235,188 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     for (i, p) in plans.iter().enumerate() {
         print_plan(i + 1, p);
     }
+    Ok(())
+}
+
+/// `cnnblk run`: plan a Table 4 layer, execute the plan on a real
+/// backend, and print the measured-vs-predicted access table — the
+/// executable form of the paper's Sec. 5 access-count claim.
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    check_flags(
+        args,
+        &[
+            "benchmark",
+            "backend",
+            "target",
+            "budget-kb",
+            "levels",
+            "strategy",
+            "max-macs",
+            "seed",
+            "verify",
+            "full-search",
+            "cache",
+            "no-cache",
+        ],
+    )?;
+    let name = args.get_or("benchmark", "Conv1");
+    let bench = by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{}' (see `figures --table4`)", name))?;
+    // Executing an interpreter over a full-size Table 4 layer (up to
+    // ~10^12 MACs) is not realistic; scale the dims the same way the
+    // trace-based cache simulator does (access ratios are scale-stable).
+    let max_macs = args.get_u64("max-macs", 2_000_000);
+    let dims = bench.dims.scaled_for_sim(max_macs);
+    if dims != bench.dims {
+        println!(
+            "{}: scaled {} -> {} for execution (--max-macs {})",
+            bench.name, bench.dims, dims, max_macs
+        );
+    }
+    let target = parse_target(args)?;
+    let mut planner = Planner::for_named(bench.name, dims)
+        .target(target)
+        .levels(args.get_u64("levels", 3) as usize)
+        .beam(beam_cfg(args))
+        .strategy_named(&args.get_or("strategy", "beam"))?;
+    if !args.has("no-cache") {
+        planner = planner.cache_file(args.get_or("cache", DEFAULT_CACHE));
+    }
+    let plan = planner.plan()?;
+    println!("plan:  {}", plan);
+
+    let backend_name = args.get_or("backend", "blocked");
+    let backend = backend_by_name(&backend_name)?;
+    let inputs = ConvInputs::synthetic(dims, args.get_u64("seed", 42));
+    let t0 = Instant::now();
+    let out = backend.execute(&plan, &inputs)?;
+    let wall = t0.elapsed();
+    let rate = out.counters.macs as f64 / wall.as_secs_f64().max(1e-9);
+    println!(
+        "ran {} MACs on '{}' in {:?} ({} MAC/s)",
+        eng(out.counters.macs as f64),
+        backend_name,
+        wall,
+        eng(rate)
+    );
+
+    if args.has("verify") {
+        let oracle = backend_by_name("naive")?.execute(&plan, &inputs)?;
+        let mut max_rel = 0.0f32;
+        for (a, b) in out.output.iter().zip(&oracle.output) {
+            max_rel = max_rel.max((a - b).abs() / a.abs().max(b.abs()).max(1.0));
+        }
+        println!("verify vs naive oracle: max rel err {:.2e}", max_rel);
+        anyhow::ensure!(
+            max_rel < 1e-3,
+            "backend output diverged from the naive oracle"
+        );
+    }
+
+    let pred = predicted_counters(&plan);
+    if backend_name == "naive" {
+        // The naive nest has no reuse buffers; show its memory-rate
+        // traffic against what the blocked plan predicts — the paper's
+        // headline contrast.
+        let naive_dram = (out.counters.dram.input_loads
+            + out.counters.dram.kernel_loads
+            + out.counters.dram.output_stores) as f64;
+        let blocked_dram = pred.dram_input_loads + pred.dram_kernel_loads
+            + pred.dram_output_loads
+            + pred.dram_output_stores;
+        let mut t = Table::new(
+            "naive (unblocked) DRAM traffic vs the blocked plan's prediction",
+            &["stream", "naive measured", "blocked predicted"],
+        );
+        t.row(vec![
+            "input loads".into(),
+            eng(out.counters.dram.input_loads as f64),
+            eng(pred.dram_input_loads),
+        ]);
+        t.row(vec![
+            "kernel loads".into(),
+            eng(out.counters.dram.kernel_loads as f64),
+            eng(pred.dram_kernel_loads),
+        ]);
+        t.row(vec![
+            "output stores".into(),
+            eng(out.counters.dram.output_stores as f64),
+            eng(pred.dram_output_loads + pred.dram_output_stores),
+        ]);
+        t.print();
+        println!(
+            "blocking cuts DRAM traffic {:.1}x on this layer (run --backend blocked \
+             to see it measured)\n",
+            naive_dram / blocked_dram.max(1.0)
+        );
+        return Ok(());
+    }
+
+    // Blocked backend: the full measured-vs-predicted report.
+    let mut t = Table::new(
+        "measured vs predicted accesses (blocked backend)",
+        &["buffer", "level", "fills meas", "fills pred", "elems meas", "elems pred", "rel err"],
+    );
+    let rel = |meas: f64, pred: f64| -> String {
+        if pred == 0.0 && meas == 0.0 {
+            "0".to_string()
+        } else {
+            format!("{:.1e}", (meas - pred).abs() / pred.abs().max(1e-12))
+        }
+    };
+    for (m, p) in out.counters.buffers.iter().zip(&pred.buffers) {
+        t.row(vec![
+            format!("{}{}", m.tensor, m.ordinal),
+            m.level.clone(),
+            eng(m.fill_events as f64),
+            eng(p.fill_events),
+            eng(m.fill_elems as f64),
+            eng(p.fill_elems),
+            rel(m.fill_elems as f64, p.fill_elems),
+        ]);
+    }
+    let d = &out.counters.dram;
+    for (label, meas, predv) in [
+        ("DRAM in", d.input_loads, pred.dram_input_loads),
+        ("DRAM kern", d.kernel_loads, pred.dram_kernel_loads),
+        ("DRAM out r", d.output_loads, pred.dram_output_loads),
+        ("DRAM out w", d.output_stores, pred.dram_output_stores),
+    ] {
+        t.row(vec![
+            label.to_string(),
+            "DRAM".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            eng(meas as f64),
+            eng(predv),
+            rel(meas as f64, predv),
+        ]);
+    }
+    t.print();
+
+    let mut lv = Table::new(
+        "measured traffic per hierarchy level",
+        &["level", "loads", "stores", "total"],
+    );
+    for (level, traffic) in out.counters.per_level() {
+        lv.row(vec![
+            level,
+            eng(traffic.loads as f64),
+            eng(traffic.stores as f64),
+            eng(traffic.total() as f64),
+        ]);
+    }
+    lv.print();
+    let op = &out.counters.operand;
+    println!(
+        "operand traffic (MAC rate): input {} @ {}, kernel {} @ {}, output {} @ {}",
+        eng(op.input_reads as f64),
+        op.input_level,
+        eng(op.kernel_reads as f64),
+        op.kernel_level,
+        eng(op.output_accesses as f64),
+        op.output_level,
+    );
     Ok(())
 }
 
@@ -315,16 +520,26 @@ fn cmd_cachesim(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    check_flags(args, &["requests", "batch", "timeout-ms", "artifacts"])?;
+    check_flags(args, &["requests", "batch", "timeout-ms", "artifacts", "interpret"])?;
+    let execution = match args.get("interpret") {
+        Some(backend) => Execution::Interpreted {
+            backend: backend.to_string(),
+        },
+        None => Execution::Pjrt,
+    };
     let cfg = ServerConfig {
         artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")),
         max_batch: args.get_u64("batch", 8) as usize,
         batch_timeout: Duration::from_millis(args.get_u64("timeout-ms", 2)),
         queue_depth: 64,
+        execution,
     };
     let n = args.get_u64("requests", 256) as usize;
     let server = InferenceServer::start(cfg)?;
-    println!("server up; pipeline plans from the artifact manifest:");
+    match args.get("interpret") {
+        Some(b) => println!("server up (interpreted via '{}' backend); pipeline plans:", b),
+        None => println!("server up; pipeline plans from the artifact manifest:"),
+    }
     if server.layer_plans.is_empty() {
         println!("  (no plan records; raw strings: {:?})", server.layer_strings);
     }

@@ -31,6 +31,7 @@ use super::string::BlockingString;
 /// Per-virtual-buffer access counts.
 #[derive(Debug, Clone)]
 pub struct BufferAccesses {
+    /// The Table 2 virtual buffer these counts describe.
     pub buffer: VirtualBuffer,
     /// Accesses served by this buffer over the whole layer.
     pub reads: f64,
@@ -44,7 +45,9 @@ pub struct BufferAccesses {
 /// hardware broadcast/reduction factors are applied).
 #[derive(Debug, Clone, Copy)]
 pub struct OperandTraffic {
+    /// Input operand reads (one per MAC).
     pub input_reads: f64,
+    /// Kernel operand reads (one per MAC).
     pub kernel_reads: f64,
     /// Output accumulate = read + write per MAC.
     pub output_accesses: f64,
@@ -53,19 +56,27 @@ pub struct OperandTraffic {
 /// Complete access profile of a blocking.
 #[derive(Debug, Clone)]
 pub struct AccessProfile {
+    /// Input-buffer chain accesses, innermost first.
     pub input: Vec<BufferAccesses>,
+    /// Kernel-buffer chain accesses, innermost first.
     pub kernel: Vec<BufferAccesses>,
+    /// Output-buffer chain accesses, innermost first.
     pub output: Vec<BufferAccesses>,
     /// DRAM terminal traffic: fill traffic of the outermost input/kernel
     /// buffers plus the final output writeback.
     pub dram_input_reads: f64,
+    /// Kernel elements read from DRAM (outermost-buffer fills).
     pub dram_kernel_reads: f64,
+    /// Output elements written to DRAM (the final writeback).
     pub dram_output_writes: f64,
+    /// MAC-rate operand traffic.
     pub operand: OperandTraffic,
+    /// Total multiply-accumulates of the layer.
     pub macs: u64,
 }
 
 impl AccessProfile {
+    /// The per-buffer access chain of one tensor, innermost first.
     pub fn of(&self, t: Tensor) -> &[BufferAccesses] {
         match t {
             Tensor::Input => &self.input,

@@ -7,9 +7,12 @@
 
 use super::dims::LayerDims;
 
+/// One Table 4 benchmark row: a named layer shape and its source.
 #[derive(Debug, Clone)]
 pub struct Benchmark {
+    /// Table 4 row name (e.g. `Conv1`).
     pub name: &'static str,
+    /// The layer's problem dimensions.
     pub dims: LayerDims,
     /// Source network, for reporting.
     pub source: &'static str,
@@ -90,6 +93,7 @@ pub fn all_benchmarks() -> Vec<Benchmark> {
     v
 }
 
+/// Look up any Table 4 row (conv, FC, or aux) by name.
 pub fn by_name(name: &str) -> Option<Benchmark> {
     all_benchmarks()
         .into_iter()

@@ -23,14 +23,19 @@ use std::fmt;
 /// Which tensor a buffer holds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Tensor {
+    /// Input activations (`IB`).
     Input,
+    /// Kernel weights (`KB`).
     Kernel,
+    /// Output partial sums (`OB`).
     Output,
 }
 
 impl Tensor {
+    /// All three tensors, in (input, kernel, output) order.
     pub const ALL: [Tensor; 3] = [Tensor::Input, Tensor::Kernel, Tensor::Output];
 
+    /// Two-letter buffer prefix (`IB`/`KB`/`OB`).
     pub fn short(self) -> &'static str {
         match self {
             Tensor::Input => "IB",
@@ -49,6 +54,7 @@ impl fmt::Display for Tensor {
 /// A buffer the blocking implies, before placement in a physical hierarchy.
 #[derive(Debug, Clone, PartialEq)]
 pub struct VirtualBuffer {
+    /// Which tensor the buffer holds.
     pub tensor: Tensor,
     /// Index of the loop level (in the blocking string) that created it.
     pub created_at: usize,
@@ -64,12 +70,16 @@ pub struct VirtualBuffer {
 /// All virtual buffers of a blocking, grouped per tensor, innermost first.
 #[derive(Debug, Clone, Default)]
 pub struct BufferSet {
+    /// Input-tensor buffers, innermost first.
     pub input: Vec<VirtualBuffer>,
+    /// Kernel-tensor buffers, innermost first.
     pub kernel: Vec<VirtualBuffer>,
+    /// Output-tensor buffers, innermost first.
     pub output: Vec<VirtualBuffer>,
 }
 
 impl BufferSet {
+    /// The chain of one tensor, innermost first.
     pub fn of(&self, t: Tensor) -> &[VirtualBuffer] {
         match t {
             Tensor::Input => &self.input,
@@ -86,10 +96,12 @@ impl BufferSet {
         }
     }
 
+    /// Every buffer, input then kernel then output chains.
     pub fn all(&self) -> impl Iterator<Item = &VirtualBuffer> {
         self.input.iter().chain(&self.kernel).chain(&self.output)
     }
 
+    /// Total buffer count across the three chains.
     pub fn total_count(&self) -> usize {
         self.input.len() + self.kernel.len() + self.output.len()
     }

@@ -28,12 +28,14 @@ pub enum Dim {
 }
 
 impl Dim {
+    /// Every dim, innermost-natural order (`Fw Fh X Y C K B`).
     pub const ALL: [Dim; 7] = [Dim::Fw, Dim::Fh, Dim::X, Dim::Y, Dim::C, Dim::K, Dim::B];
 
     /// The dims the optimizer is allowed to split ( Fw/Fh stay innermost,
     /// see DESIGN.md §4 ).
     pub const SPLITTABLE: [Dim; 5] = [Dim::X, Dim::Y, Dim::C, Dim::K, Dim::B];
 
+    /// The dim's notation letter (`"Fw"`, `"X"`, ...).
     pub fn letter(self) -> &'static str {
         match self {
             Dim::Fw => "Fw",
@@ -46,6 +48,7 @@ impl Dim {
         }
     }
 
+    /// Parse a notation letter back to a dim.
     pub fn from_letter(s: &str) -> Option<Dim> {
         match s {
             "Fw" => Some(Dim::Fw),
@@ -69,17 +72,24 @@ impl fmt::Display for Dim {
 /// Layer problem dimensions (Table 4 of the paper).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct LayerDims {
+    /// Output image width.
     pub x: u64,
+    /// Output image height.
     pub y: u64,
+    /// Input channels (the reduction dim).
     pub c: u64,
+    /// Output channels / kernel count.
     pub k: u64,
+    /// Kernel window width.
     pub fw: u64,
+    /// Kernel window height.
     pub fh: u64,
     /// Batch size (number of images). 1 unless batch blocking is studied.
     pub b: u64,
 }
 
 impl LayerDims {
+    /// Convolutional layer dims (batch 1).
     pub fn conv(x: u64, y: u64, c: u64, k: u64, fw: u64, fh: u64) -> LayerDims {
         LayerDims {
             x,
@@ -105,11 +115,13 @@ impl LayerDims {
         }
     }
 
+    /// The same layer over a batch of `b` images.
     pub fn with_batch(mut self, b: u64) -> LayerDims {
         self.b = b;
         self
     }
 
+    /// Full problem extent of one dim.
     pub fn extent(&self, d: Dim) -> u64 {
         match d {
             Dim::Fw => self.fw,
@@ -149,6 +161,7 @@ impl LayerDims {
         self.input_elems() + self.kernel_elems() + self.output_elems()
     }
 
+    /// Whether this is the degenerate fully-connected shape.
     pub fn is_fc(&self) -> bool {
         self.x == 1 && self.y == 1 && self.fw == 1 && self.fh == 1
     }

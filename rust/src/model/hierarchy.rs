@@ -16,6 +16,7 @@ use std::collections::BTreeMap;
 /// One physical memory level.
 #[derive(Debug, Clone)]
 pub struct PhysLevel {
+    /// Display name (e.g. `L1`, `M0(64KB)`, `DRAM`).
     pub name: String,
     /// Capacity in bytes; `None` = unbounded (DRAM).
     pub capacity: Option<u64>,
@@ -26,10 +27,12 @@ pub struct PhysLevel {
 /// An ordered physical hierarchy; `levels[last]` must be the DRAM level.
 #[derive(Debug, Clone)]
 pub struct Hierarchy {
+    /// Levels innermost → outermost; the last is DRAM.
     pub levels: Vec<PhysLevel>,
 }
 
 impl Hierarchy {
+    /// Wrap an ordered level list (the last level must be DRAM).
     pub fn new(levels: Vec<PhysLevel>) -> Hierarchy {
         assert!(!levels.is_empty());
         assert!(levels.last().unwrap().capacity.is_none(), "last level must be DRAM");
@@ -85,15 +88,18 @@ impl Hierarchy {
         Hierarchy::new(levels)
     }
 
+    /// Index of the DRAM level (always the last).
     pub fn dram_idx(&self) -> usize {
         self.levels.len() - 1
     }
 
+    /// Total on-chip capacity across all bounded levels.
     pub fn total_sram_bytes(&self) -> u64 {
         self.levels.iter().filter_map(|l| l.capacity).sum()
     }
 }
 
+/// Render a byte count as `B`/`KB`/`MB` for display.
 pub fn human_bytes(b: u64) -> String {
     if b >= 1024 * 1024 {
         format!("{}MB", b / (1024 * 1024))
@@ -112,6 +118,7 @@ pub struct Placement {
 }
 
 impl Placement {
+    /// Physical level a virtual buffer was assigned to, if placed.
     pub fn level_of(&self, t: Tensor, ordinal: usize) -> Option<usize> {
         self.assign.get(&(t, ordinal)).copied()
     }
@@ -174,8 +181,11 @@ pub fn pack_dedicated(
 /// DianNao-style dedicated buffer capacities.
 #[derive(Debug, Clone, Copy)]
 pub struct DedicatedCaps {
+    /// Input-buffer SRAM capacity.
     pub ib_bytes: u64,
+    /// Kernel-buffer SRAM capacity.
     pub kb_bytes: u64,
+    /// Output-buffer SRAM capacity.
     pub ob_bytes: u64,
 }
 
@@ -222,8 +232,11 @@ pub fn dedicated_hierarchy(caps: &DedicatedCaps) -> Hierarchy {
 /// products in an adder tree before the accumulator is touched.
 #[derive(Debug, Clone, Copy)]
 pub struct Datapath {
+    /// Kernel lanes one fetched input broadcasts across.
     pub k_par: u64,
+    /// Products reduced per accumulator access (adder tree).
     pub c_par: u64,
+    /// Where MAC-rate operand reads are served from.
     pub mode: OperandMode,
 }
 
@@ -248,6 +261,7 @@ impl Datapath {
         }
     }
 
+    /// Scalar CPU datapath: operands from architectural registers.
     pub fn cpu() -> Datapath {
         Datapath {
             k_par: 1,
@@ -264,16 +278,20 @@ pub struct Breakdown {
     pub accesses: BTreeMap<(Tensor, usize), f64>,
     /// (tensor, level) -> pJ.
     pub energy_pj: BTreeMap<(Tensor, usize), f64>,
+    /// Total MAC energy.
     pub mac_pj: f64,
+    /// Multiply-accumulates of the layer.
     pub macs: u64,
 }
 
 impl Breakdown {
+    /// Charge `accesses` of tensor `t` at `level` with per-access `epj`.
     pub fn add(&mut self, t: Tensor, level: usize, accesses: f64, epj: f64) {
         *self.accesses.entry((t, level)).or_insert(0.0) += accesses;
         *self.energy_pj.entry((t, level)).or_insert(0.0) += accesses * epj;
     }
 
+    /// Memory energy attributed to one tensor across all levels.
     pub fn tensor_pj(&self, t: Tensor) -> f64 {
         self.energy_pj
             .iter()
@@ -282,6 +300,7 @@ impl Breakdown {
             .sum()
     }
 
+    /// Memory energy spent at one physical level.
     pub fn level_pj(&self, level: usize) -> f64 {
         self.energy_pj
             .iter()
@@ -290,6 +309,7 @@ impl Breakdown {
             .sum()
     }
 
+    /// Accesses that landed at one physical level.
     pub fn level_accesses(&self, level: usize) -> f64 {
         self.accesses
             .iter()
@@ -298,10 +318,12 @@ impl Breakdown {
             .sum()
     }
 
+    /// Total memory energy (all tensors, all levels).
     pub fn memory_pj(&self) -> f64 {
         self.energy_pj.values().sum()
     }
 
+    /// Memory plus MAC energy.
     pub fn total_pj(&self) -> f64 {
         self.memory_pj() + self.mac_pj
     }

@@ -8,24 +8,36 @@
 
 use super::dims::LayerDims;
 
+/// One layer of a Table 1 network.
 #[derive(Debug, Clone)]
 pub struct NetLayer {
+    /// Layer name as the source paper labels it.
     pub name: String,
+    /// The layer's problem dimensions.
     pub dims: LayerDims,
+    /// Layer type (conv / FC / pool / LRN).
     pub kind: LayerKind,
 }
 
+/// The layer types Table 1 distinguishes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LayerKind {
+    /// Convolutional layer.
     Conv,
+    /// Fully-connected layer.
     Fc,
+    /// Pooling layer.
     Pool,
+    /// Local response normalization.
     Lrn,
 }
 
+/// A named network: its ordered layer list.
 #[derive(Debug, Clone)]
 pub struct Network {
+    /// Network name (`AlexNet`, `VGGNet-B`, `VGGNet-D`).
     pub name: &'static str,
+    /// Layers in forward order.
     pub layers: Vec<NetLayer>,
 }
 
@@ -112,7 +124,9 @@ pub fn vggnet_d() -> Network {
 /// Table 1 row: (MACs, memory bytes at 16 bits/word) for a layer subset.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct NetStats {
+    /// Total multiply-accumulates.
     pub macs: u64,
+    /// Total memory footprint in bytes (16-bit words).
     pub mem_bytes: u64,
 }
 
@@ -138,6 +152,7 @@ pub fn network_stats(net: &Network, kind: LayerKind) -> NetStats {
     s
 }
 
+/// The three Table 1 networks.
 pub fn all_networks() -> Vec<Network> {
     vec![alexnet(), vggnet_b(), vggnet_d()]
 }

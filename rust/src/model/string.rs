@@ -15,6 +15,7 @@ use std::fmt;
 /// One loop level: dim + cumulative covered range.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Level {
+    /// The loop's dimension.
     pub dim: Dim,
     /// Covered data extent of `dim` after this loop completes.
     pub range: u64,
@@ -23,27 +24,35 @@ pub struct Level {
 /// A full blocking of one layer: loops innermost -> outermost.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct BlockingString {
+    /// Loop levels, innermost first.
     pub levels: Vec<Level>,
 }
 
 /// Validation failure for a blocking string against a layer's dims.
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum StringError {
+    /// A dim's outermost range stops short of the problem extent.
     #[error("dim {0} never reaches its full extent ({1} < {2})")]
     Incomplete(Dim, u64, u64),
+    /// A required dim never appears.
     #[error("dim {0} missing from string")]
     Missing(Dim),
+    /// A range does not divide the next range of the same dim.
     #[error("range {1} of dim {0} does not divide enclosing range {2}")]
     NonDividing(Dim, u64, u64),
+    /// A split that does not grow the covered extent.
     #[error("range {1} of dim {0} not larger than inner range {2} (useless split)")]
     NonIncreasing(Dim, u64, u64),
+    /// A range larger than the problem extent.
     #[error("range {1} of dim {0} exceeds problem extent {2}")]
     TooLarge(Dim, u64, u64),
+    /// `Fw`/`Fh` split or missing (they must appear exactly once).
     #[error("window dim {0} must appear exactly once (appears {1} times)")]
     WindowSplit(Dim, usize),
 }
 
 impl BlockingString {
+    /// Wrap a level list (no validation; see [`BlockingString::validate`]).
     pub fn new(levels: Vec<Level>) -> BlockingString {
         BlockingString { levels }
     }
@@ -141,6 +150,7 @@ impl BlockingString {
         self.levels.len()
     }
 
+    /// True when the string has no levels.
     pub fn is_empty(&self) -> bool {
         self.levels.is_empty()
     }
@@ -233,11 +243,13 @@ impl StringBuilder {
         StringBuilder { levels }
     }
 
+    /// Append an outer split of `dim` covering `range`.
     pub fn push(&mut self, dim: Dim, range: u64) -> &mut Self {
         self.levels.push(Level { dim, range });
         self
     }
 
+    /// Finish into a [`BlockingString`].
     pub fn build(&self) -> BlockingString {
         BlockingString::new(self.levels.clone())
     }

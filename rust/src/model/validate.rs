@@ -22,7 +22,9 @@ use std::collections::HashSet;
 /// Measured stats for one virtual buffer.
 #[derive(Debug, Clone)]
 pub struct SimBuffer {
+    /// Which tensor the measured buffer holds.
     pub tensor: Tensor,
+    /// Position in the tensor's buffer chain (0 = innermost).
     pub ordinal: usize,
     /// Fills under model semantics (every outer-loop iteration refills).
     pub model_fills: u64,

@@ -17,6 +17,7 @@ use crate::model::dims::LayerDims;
 use crate::util::pool::par_map;
 use crate::util::rng::Rng;
 
+/// Search budget for the Sec. 3.5 beam procedure.
 #[derive(Debug, Clone)]
 pub struct BeamConfig {
     /// Seeds carried between levels (paper: 128).
@@ -26,6 +27,7 @@ pub struct BeamConfig {
     /// Outer-level orders tried when a level is added (rotations of the
     /// best inner orders plus this many random permutations).
     pub outer_orders: usize,
+    /// RNG seed for perturbations (searches are deterministic).
     pub seed: u64,
     /// Coordinate-descent passes per candidate.
     pub passes: usize,

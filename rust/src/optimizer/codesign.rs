@@ -15,12 +15,19 @@ use crate::plan::{BlockingPlan, PlanEngine, PlanRequest, Planner, Target};
 /// One co-designed point.
 #[derive(Debug, Clone)]
 pub struct DesignPoint {
+    /// SRAM budget the point was designed under.
     pub budget_bytes: u64,
+    /// Total energy (memory + MAC).
     pub energy_pj: f64,
+    /// Memory-access energy alone.
     pub memory_pj: f64,
+    /// Die area of the designed SRAMs.
     pub area_mm2: f64,
+    /// On-chip bytes the design actually uses.
     pub onchip_bytes: u64,
+    /// The winning blocking string (notation).
     pub string: String,
+    /// Full per-(tensor, level) energy breakdown.
     pub breakdown: Breakdown,
 }
 
@@ -89,13 +96,19 @@ pub fn sweep_budgets(
 /// DianNao hierarchy with (a) its baseline schedule and (b) the best
 /// schedule our optimizer finds for that fixed hierarchy.
 pub struct DiannaoReference {
+    /// Energy of DianNao's own schedule on its hierarchy.
     pub baseline_pj: f64,
+    /// Breakdown of the baseline schedule.
     pub baseline_breakdown: Breakdown,
+    /// Energy of our best schedule on the same fixed hierarchy.
     pub optimized_pj: f64,
+    /// Breakdown of the optimized schedule.
     pub optimized_breakdown: Breakdown,
+    /// The optimized blocking string (notation).
     pub optimized_string: String,
 }
 
+/// Compute both DianNao reference points for one layer.
 pub fn diannao_reference(dims: &LayerDims, cfg: &BeamConfig) -> DiannaoReference {
     let target = FixedTarget::diannao();
     let baseline = crate::baselines::diannao::baseline_schedule(dims);

@@ -17,14 +17,17 @@ use crate::model::hierarchy::{Datapath, Hierarchy};
 /// A candidate shared memory design: on-chip level sizes in bytes.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct MemoryShape {
+    /// On-chip level sizes in bytes, innermost first.
     pub level_bytes: Vec<u64>,
 }
 
 impl MemoryShape {
+    /// Die area of this shape's SRAM levels.
     pub fn area_mm2(&self) -> f64 {
         design_area_mm2(&self.level_bytes)
     }
 
+    /// Materialize the shape as a physical hierarchy (plus DRAM).
     pub fn hierarchy(&self) -> Hierarchy {
         Hierarchy::custom(&self.level_bytes)
     }
@@ -45,8 +48,11 @@ impl MemoryShape {
 /// Per-layer design point: a shape and the energy the layer achieves on it.
 #[derive(Debug, Clone)]
 pub struct LayerPoint {
+    /// The memory design the layer was optimized for.
     pub shape: MemoryShape,
+    /// Energy the layer achieves on that shape.
     pub energy_pj: f64,
+    /// The winning blocking string (notation).
     pub string: String,
 }
 
@@ -94,9 +100,13 @@ pub fn per_layer_points(
 /// Result of the shared-design search.
 #[derive(Debug, Clone)]
 pub struct SharedDesign {
+    /// The winning shared memory shape.
     pub shape: MemoryShape,
+    /// Energy per layer on the shared shape, in layer order.
     pub per_layer_pj: Vec<f64>,
+    /// Total energy across layers.
     pub total_pj: f64,
+    /// Die area of the shared shape.
     pub area_mm2: f64,
 }
 

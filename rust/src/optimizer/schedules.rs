@@ -21,7 +21,9 @@ use crate::util::json::{self, Json};
 /// One exported layer schedule (the `schedules.json` row shape).
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerSchedule {
+    /// Layer name (matches the plan and the artifact name).
     pub name: String,
+    /// The layer's problem dimensions.
     pub dims: LayerDims,
     /// Level-0 tile (x0, y0, c0, k0) — the Pallas block shape.
     pub tile: (u64, u64, u64, u64),

@@ -32,6 +32,7 @@ pub struct Candidate {
 }
 
 impl Candidate {
+    /// Number of blocking levels in the candidate.
     pub fn levels(&self) -> usize {
         self.order.len()
     }
@@ -60,8 +61,11 @@ impl Candidate {
 /// Scored candidate.
 #[derive(Debug, Clone)]
 pub struct Scored {
+    /// The search-space point that produced the string.
     pub candidate: Candidate,
+    /// The materialized blocking string.
     pub string: BlockingString,
+    /// Objective value on the evaluated target.
     pub energy_pj: f64,
 }
 

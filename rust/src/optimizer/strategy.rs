@@ -44,6 +44,8 @@ pub trait SearchStrategy: Send + Sync {
     /// CLI `--strategy` value.
     fn name(&self) -> &'static str;
 
+    /// Search `levels`-deep blockings of `dims`, scored by `evaluator`,
+    /// under `budget`; returns candidates ranked best-first.
     fn search(
         &self,
         dims: &LayerDims,

@@ -22,6 +22,7 @@ use crate::model::string::BlockingString;
 /// Outcome of evaluating one blocking on a target.
 #[derive(Debug, Clone)]
 pub struct EvalOutcome {
+    /// Per-(tensor, level) access/energy breakdown.
     pub breakdown: Breakdown,
     /// Total silicon area of the design (bespoke targets; fixed targets
     /// report their constant area).
@@ -31,10 +32,12 @@ pub struct EvalOutcome {
 }
 
 impl EvalOutcome {
+    /// Total energy (memory + MAC).
     pub fn total_pj(&self) -> f64 {
         self.breakdown.total_pj()
     }
 
+    /// Memory-access energy alone.
     pub fn memory_pj(&self) -> f64 {
         self.breakdown.memory_pj()
     }
@@ -42,6 +45,7 @@ impl EvalOutcome {
 
 /// Anything that can score a blocking string.
 pub trait Evaluator: Sync {
+    /// Full evaluation of one blocking on this target.
     fn eval(&self, s: &BlockingString, d: &LayerDims) -> EvalOutcome;
 
     /// Scalar objective (lower is better).
@@ -54,12 +58,16 @@ pub trait Evaluator: Sync {
 /// dedicated per-tensor SRAMs (DianNao).
 #[derive(Debug, Clone)]
 pub struct FixedTarget {
+    /// The physical hierarchy (last level DRAM).
     pub hier: Hierarchy,
+    /// Per-tensor SRAM capacities when packing is dedicated.
     pub dedicated: Option<DedicatedCaps>,
+    /// Datapath operand-reuse geometry.
     pub datapath: Datapath,
 }
 
 impl FixedTarget {
+    /// The Xeon-like CPU cache hierarchy (Sec. 4.1/5.1).
     pub fn cpu() -> FixedTarget {
         FixedTarget {
             hier: Hierarchy::cpu_xeon(),
@@ -68,6 +76,7 @@ impl FixedTarget {
         }
     }
 
+    /// The DianNao split-SRAM accelerator (Sec. 5.2).
     pub fn diannao() -> FixedTarget {
         let caps = DedicatedCaps::diannao();
         FixedTarget {
@@ -77,6 +86,7 @@ impl FixedTarget {
         }
     }
 
+    /// Pack the blocking's buffers onto this target's levels.
     pub fn place(&self, s: &BlockingString, d: &LayerDims) -> (Placement, crate::model::access::AccessProfile) {
         let (_bufs, prof) = analyze(s, d);
         let placement = match &self.dedicated {
@@ -112,11 +122,14 @@ impl Evaluator for FixedTarget {
 /// access-count order while the cumulative footprint fits `sram_budget`.
 #[derive(Debug, Clone)]
 pub struct BespokeTarget {
+    /// Total on-chip SRAM budget.
     pub sram_budget_bytes: u64,
+    /// Datapath operand-reuse geometry.
     pub datapath: Datapath,
 }
 
 impl BespokeTarget {
+    /// A bespoke target with the paper's 256-MAC datapath.
     pub fn new(sram_budget_bytes: u64) -> BespokeTarget {
         BespokeTarget {
             sram_budget_bytes,

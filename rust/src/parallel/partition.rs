@@ -36,6 +36,7 @@ pub enum PartitionScheme {
 }
 
 impl PartitionScheme {
+    /// Human-readable scheme label (used in Fig. 9 rendering).
     pub fn name(self) -> &'static str {
         match self {
             PartitionScheme::KPartition => "shared-IB (K part.)",
@@ -47,20 +48,28 @@ impl PartitionScheme {
 /// Fig. 9's energy components.
 #[derive(Debug, Clone)]
 pub struct MulticoreBreakdown {
+    /// Core count evaluated.
     pub cores: u64,
+    /// The partition scheme the breakdown assumes.
     pub scheme: PartitionScheme,
     /// Total energy spent inside the cores (inner buffers + operands).
     pub private_pj: f64,
+    /// Shared last-level input-buffer energy.
     pub ll_ib_pj: f64,
+    /// Shared last-level kernel-buffer energy.
     pub ll_kb_pj: f64,
+    /// Shared last-level output-buffer energy.
     pub ll_ob_pj: f64,
+    /// DRAM energy.
     pub dram_pj: f64,
     /// Restoring the memory layout after the layer completes.
     pub shuffle_pj: f64,
+    /// MAC (arithmetic) energy.
     pub mac_pj: f64,
 }
 
 impl MulticoreBreakdown {
+    /// Total memory energy (private + shared + DRAM + shuffle).
     pub fn memory_pj(&self) -> f64 {
         self.private_pj
             + self.ll_ib_pj
@@ -70,6 +79,7 @@ impl MulticoreBreakdown {
             + self.shuffle_pj
     }
 
+    /// Memory plus MAC energy.
     pub fn total_pj(&self) -> f64 {
         self.memory_pj() + self.mac_pj
     }
@@ -244,13 +254,18 @@ pub fn evaluate_plan(
 /// energy breakdown, carrying the source plan for provenance.
 #[derive(Debug, Clone)]
 pub struct MulticorePlan {
+    /// The single-core plan that was partitioned.
     pub plan: BlockingPlan,
+    /// Core count.
     pub cores: u64,
+    /// The cheaper of the two Sec. 3.3 schemes.
     pub scheme: PartitionScheme,
+    /// Energy breakdown under that scheme.
     pub breakdown: MulticoreBreakdown,
 }
 
 impl MulticorePlan {
+    /// Energy per MAC of the partitioned execution.
     pub fn pj_per_mac(&self) -> f64 {
         self.breakdown.pj_per_mac(&self.plan.dims)
     }

@@ -35,6 +35,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
+/// File-backed plan cache: search-signature keys to best plans.
 #[derive(Debug, Clone)]
 pub struct PlanCache {
     path: PathBuf,
@@ -70,22 +71,27 @@ impl PlanCache {
         }
     }
 
+    /// The cache file this handle reads and writes.
     pub fn path(&self) -> &Path {
         &self.path
     }
 
+    /// Number of in-memory entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when no entries are loaded or recorded.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// Look up the plan recorded under a search signature.
     pub fn get(&self, key: &str) -> Option<&BlockingPlan> {
         self.entries.get(key)
     }
 
+    /// Record (or replace) the plan for a search signature.
     pub fn put(&mut self, key: String, plan: BlockingPlan) {
         self.entries.insert(key, plan);
     }
@@ -169,6 +175,7 @@ pub struct SharedPlanCache {
 }
 
 impl SharedPlanCache {
+    /// An empty index spread over `shards` independent locks.
     pub fn new(shards: usize) -> SharedPlanCache {
         let shards = shards.max(1);
         SharedPlanCache {
@@ -186,22 +193,27 @@ impl SharedPlanCache {
         &self.shards[(h % self.shards.len() as u64) as usize]
     }
 
+    /// Clone out the plan recorded under `key`, if any.
     pub fn get(&self, key: &str) -> Option<BlockingPlan> {
         self.shard(key).lock().unwrap().get(key).cloned()
     }
 
+    /// Record a plan (last writer wins within its shard).
     pub fn put(&self, key: String, plan: BlockingPlan) {
         self.shard(&key).lock().unwrap().insert(key, plan);
     }
 
+    /// Whether `key` has been recorded.
     pub fn contains(&self, key: &str) -> bool {
         self.shard(key).lock().unwrap().contains_key(key)
     }
 
+    /// Total entries across shards.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
+    /// True when no shard holds an entry.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

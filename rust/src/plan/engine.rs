@@ -43,10 +43,15 @@ use std::sync::{Arc, Mutex};
 /// co-design sweep plans one layer under many SRAM budgets).
 #[derive(Debug, Clone)]
 pub struct PlanRequest {
+    /// Layer name carried into the plan (presentation only).
     pub name: String,
+    /// The layer to plan.
     pub dims: LayerDims,
+    /// Machine model to optimize for.
     pub target: Target,
+    /// Blocking levels to search.
     pub levels: usize,
+    /// Search budget.
     pub budget: BeamConfig,
 }
 
@@ -201,22 +206,26 @@ impl PlanEngine {
         p
     }
 
+    /// Set the machine model every request in a batch defaults to.
     pub fn target(mut self, target: Target) -> PlanEngine {
         self.target = target;
         self
     }
 
+    /// Set the blocking levels to search (>= 1).
     pub fn levels(mut self, levels: usize) -> PlanEngine {
         assert!(levels >= 1, "at least one blocking level");
         self.levels = levels;
         self
     }
 
+    /// Set the search budget.
     pub fn budget(mut self, budget: BeamConfig) -> PlanEngine {
         self.budget = budget;
         self
     }
 
+    /// Swap the search driver (default: the paper's seeded beam).
     pub fn strategy(mut self, strategy: Arc<dyn SearchStrategy>) -> PlanEngine {
         self.strategy = strategy;
         self
@@ -228,6 +237,7 @@ impl PlanEngine {
         Ok(self.strategy(s))
     }
 
+    /// Name of the configured search driver.
     pub fn strategy_name(&self) -> &'static str {
         self.strategy.name()
     }

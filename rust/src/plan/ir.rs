@@ -50,6 +50,7 @@ impl Target {
         }
     }
 
+    /// Serialize the target for plan JSON / cache keys.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         match self {
@@ -67,6 +68,7 @@ impl Target {
         o
     }
 
+    /// Parse a target serialized by [`Target::to_json`].
     pub fn from_json(j: &Json) -> Result<Target> {
         match j.get("kind").and_then(|v| v.as_str()) {
             Some("bespoke") => Ok(Target::Bespoke {
@@ -125,38 +127,55 @@ impl fmt::Display for Target {
 /// Where one virtual buffer of the plan's blocking lives.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlanBuffer {
+    /// Which tensor the buffer holds.
     pub tensor: Tensor,
     /// Which-th buffer of this tensor (0 = innermost).
     pub ordinal: usize,
+    /// Footprint in bytes (16-bit elements).
     pub size_bytes: u64,
     /// Physical level name (e.g. `IB0(16KB)`, `L2`, `DRAM`).
     pub level: String,
+    /// Whether the level is a bounded on-chip SRAM/cache.
     pub on_chip: bool,
 }
 
 /// Model-predicted outcome of executing the plan on its target.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlanOutcome {
+    /// Total predicted energy (memory + MAC), pJ.
     pub total_pj: f64,
+    /// Memory-access energy, pJ.
     pub memory_pj: f64,
+    /// MAC (arithmetic) energy, pJ.
     pub mac_pj: f64,
+    /// Multiply-accumulates of the layer.
     pub macs: u64,
+    /// Die area of the designed SRAMs, mm².
     pub area_mm2: f64,
+    /// Total on-chip SRAM the plan uses, bytes.
     pub onchip_bytes: u64,
+    /// Energy attributed to input-tensor traffic, pJ.
     pub input_pj: f64,
+    /// Energy attributed to kernel-tensor traffic, pJ.
     pub kernel_pj: f64,
+    /// Energy attributed to output-tensor traffic, pJ.
     pub output_pj: f64,
+    /// Energy spent at the DRAM level, pJ.
     pub dram_pj: f64,
 }
 
 /// How a plan came to be: target, search configuration, model version.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Provenance {
+    /// The machine model the plan was optimized for.
     pub target: Target,
     /// Blocking levels requested from the optimizer (0 = not searched).
     pub levels: usize,
+    /// Beam width of the search budget (0 = not searched).
     pub beam_width: usize,
+    /// RNG seed of the search budget.
     pub beam_seed: u64,
+    /// Analytical-model version that produced the prediction.
     pub model_version: String,
     /// How the blocking was chosen: "search" | "manifest" | "autotune" |
     /// "manual" | "schedules.json". A plan served from the plan cache
@@ -167,6 +186,7 @@ pub struct Provenance {
     /// from the `PlanEngine`, which pins it so plan bytes never depend
     /// on scheduling.
     pub search_ms: u64,
+    /// Whether this plan was served from a plan cache.
     pub cache_hit: bool,
 }
 
@@ -211,14 +231,20 @@ impl Provenance {
 /// subsystem exchanges.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BlockingPlan {
+    /// Layer name the plan was made for.
     pub name: String,
+    /// The layer's problem dimensions.
     pub dims: LayerDims,
+    /// The chosen blocking (loop order + block ranges).
     pub string: BlockingString,
     /// Level-0 tile (x0, y0, c0, k0) — what parameterizes the Pallas
     /// kernel's BlockSpec.
     pub tile: (u64, u64, u64, u64),
+    /// Every Table 2 buffer and the physical level it landed on.
     pub buffers: Vec<PlanBuffer>,
+    /// Model-predicted energy/area/access outcome.
     pub outcome: PlanOutcome,
+    /// How the plan came to be.
     pub provenance: Provenance,
 }
 
@@ -284,6 +310,8 @@ impl BlockingPlan {
         self.outcome.total_pj / self.dims.macs() as f64
     }
 
+    /// Serialize to the versioned plan JSON document (exact
+    /// round-trip with [`BlockingPlan::from_json`]).
     pub fn to_json(&self) -> Json {
         let mut root = Json::obj();
         root.set("version", json::unum(PLAN_SCHEMA_VERSION));
@@ -349,6 +377,7 @@ impl BlockingPlan {
         root
     }
 
+    /// Parse and re-validate a plan JSON document.
     pub fn from_json(j: &Json) -> Result<BlockingPlan> {
         let version = j
             .get("version")

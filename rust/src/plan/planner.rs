@@ -120,17 +120,20 @@ impl Planner {
         })
     }
 
+    /// Set the machine model the plan optimizes for.
     pub fn target(mut self, target: Target) -> Planner {
         self.target = target;
         self
     }
 
+    /// Set the blocking levels to search (>= 1).
     pub fn levels(mut self, levels: usize) -> Planner {
         assert!(levels >= 1, "at least one blocking level");
         self.levels = levels;
         self
     }
 
+    /// Set the search budget.
     pub fn beam(mut self, cfg: BeamConfig) -> Planner {
         self.beam = cfg;
         self
@@ -330,6 +333,7 @@ impl Planner {
 /// cache file is consulted and updated with merge-on-save.
 #[derive(Debug, Clone)]
 pub struct NetworkPlanner {
+    /// The network being planned (presentation only).
     pub network: String,
     layers: Vec<(String, LayerDims)>,
     template: Planner,
@@ -337,6 +341,7 @@ pub struct NetworkPlanner {
 }
 
 impl NetworkPlanner {
+    /// Number of (conv) layers this planner will plan.
     pub fn layer_count(&self) -> usize {
         self.layers.len()
     }
@@ -347,16 +352,19 @@ impl NetworkPlanner {
         &self.layers
     }
 
+    /// Set the machine model every layer optimizes for.
     pub fn target(mut self, target: Target) -> NetworkPlanner {
         self.template = self.template.target(target);
         self
     }
 
+    /// Set the blocking levels to search for every layer.
     pub fn levels(mut self, levels: usize) -> NetworkPlanner {
         self.template = self.template.levels(levels);
         self
     }
 
+    /// Set the search budget for every layer.
     pub fn beam(mut self, cfg: BeamConfig) -> NetworkPlanner {
         self.template = self.template.beam(cfg);
         self
@@ -374,6 +382,7 @@ impl NetworkPlanner {
         Ok(self)
     }
 
+    /// Attach a JSON plan-cache file shared with other planners.
     pub fn cache_file(mut self, path: impl Into<PathBuf>) -> NetworkPlanner {
         self.template = self.template.cache_file(path);
         self

@@ -1,0 +1,494 @@
+//! Executable backends: run a [`BlockingPlan`] on a real loop nest.
+//!
+//! Everything upstream of this module *predicts* — Table 2 buffers,
+//! Eq. 1 access counts, Table 3 energy. A [`Backend`] closes the loop by
+//! actually executing a planned convolution over real `f32` tensors and
+//! *measuring* the memory traffic as it runs, so the analytical model's
+//! access counts (the paper's Sec. 5 claim: up to 90% fewer accesses
+//! than BLAS-style baselines) become a checkable, enforced property
+//! (`rust/tests/backend.rs`) instead of a printed number.
+//!
+//! Two backends ship:
+//!
+//! * [`NaiveBackend`] — Algorithm 1 reference semantics, wrapping
+//!   [`crate::coordinator::naive_conv`]: the unblocked `FwFhXYCK` nest
+//!   with no reuse buffers, so every operand fetch is memory traffic.
+//!   It is the numeric oracle the blocked backend is checked against.
+//! * [`BlockedCpuBackend`] — a loop-nest interpreter that walks the
+//!   plan's [`BlockingString`](crate::model::string::BlockingString)
+//!   innermost→outermost order, allocates one real buffer per Table 2
+//!   virtual buffer (placed on the physical level the plan chose), fills
+//!   blocks from the parent level under the paper's model semantics
+//!   (a buffer refills whenever *any* enclosing loop iterates), and
+//!   counts loads/stores per hierarchy level as it executes.
+//!
+//! Dispatch keys off [`BlockingPlan::provenance`]`.target` — every
+//! target executes through the blocked interpreter, the naive oracle is
+//! selected explicitly by name — so `Planner`/`PlanEngine` outputs are
+//! directly runnable:
+//!
+//! ```ignore
+//! use cnn_blocking::runtime::backend::ConvInputs;
+//! let plan = Planner::for_benchmark("Conv4")?.plan()?;
+//! let out = plan.execute(&ConvInputs::synthetic(plan.dims, 42))?;
+//! println!("{:?}", out.counters.per_level());
+//! ```
+//!
+//! The CLI front end is `cnnblk run --benchmark Conv1 --backend blocked`,
+//! which prints the measured-vs-predicted access table (see docs/CLI.md).
+
+mod blocked;
+mod naive;
+
+pub use blocked::BlockedCpuBackend;
+pub use naive::NaiveBackend;
+
+use crate::model::access;
+use crate::model::buffers::Tensor;
+use crate::model::dims::LayerDims;
+use crate::plan::{BlockingPlan, Target};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// The two backend names [`backend_by_name`] resolves, in CLI order.
+pub const BACKEND_NAMES: [&str; 2] = ["naive", "blocked"];
+
+/// An executor for planned convolutions: turns a [`BlockingPlan`] plus
+/// real tensors into an output tensor and a measured access report.
+pub trait Backend: Send + Sync {
+    /// Stable name ("naive", "blocked") used by the CLI and registry.
+    fn name(&self) -> &'static str;
+
+    /// Execute `plan` over `inputs`, returning the output tensor and the
+    /// [`AccessCounters`] measured while running. Implementations must
+    /// validate that `inputs` matches `plan.dims` and fail cleanly on
+    /// mismatch — never panic on user data.
+    fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput>;
+}
+
+/// Resolve a backend by CLI name ("naive" or "blocked").
+pub fn backend_by_name(name: &str) -> Result<Arc<dyn Backend>> {
+    match name {
+        "naive" => Ok(Arc::new(NaiveBackend)),
+        "blocked" => Ok(Arc::new(BlockedCpuBackend)),
+        other => Err(anyhow!(
+            "unknown backend '{}' (known: {})",
+            other,
+            BACKEND_NAMES.join(", ")
+        )),
+    }
+}
+
+/// The backend a plan's target executes on. Every target — bespoke,
+/// DianNao, CPU — runs through the [`BlockedCpuBackend`] interpreter
+/// (what differs per target is the buffer *placement* already recorded
+/// in the plan); the [`NaiveBackend`] oracle is only ever selected
+/// explicitly, by name.
+pub fn backend_for_target(target: &Target) -> Arc<dyn Backend> {
+    match target {
+        Target::Bespoke { .. } | Target::DianNao | Target::Cpu => Arc::new(BlockedCpuBackend),
+    }
+}
+
+impl BlockingPlan {
+    /// Execute this plan on the backend its `provenance.target` maps to
+    /// (see [`backend_for_target`]). This is what makes `Planner` and
+    /// `PlanEngine` outputs directly runnable.
+    pub fn execute(&self, inputs: &ConvInputs) -> Result<ConvOutput> {
+        backend_for_target(&self.provenance.target).execute(self, inputs)
+    }
+}
+
+/// Input tensors for one layer execution, in the layouts the rest of the
+/// stack uses (model.py / `naive_conv`): input `(B, C, H, W)` with
+/// `H = Y + Fh - 1`, `W = X + Fw - 1` ("valid" convolution producing
+/// `Y x X` outputs), weights `(K, C, Fh, Fw)`, all `f32` row-major.
+#[derive(Debug, Clone)]
+pub struct ConvInputs {
+    /// The layer shape these tensors are sized for.
+    pub dims: LayerDims,
+    /// Input activations, `(B, C, H, W)` row-major.
+    pub input: Vec<f32>,
+    /// Kernel weights, `(K, C, Fh, Fw)` row-major.
+    pub weights: Vec<f32>,
+}
+
+impl ConvInputs {
+    /// Wrap caller-provided tensors, validating their lengths.
+    pub fn new(dims: LayerDims, input: Vec<f32>, weights: Vec<f32>) -> Result<ConvInputs> {
+        ensure!(
+            input.len() as u64 == dims.input_elems(),
+            "input has {} elements, {} needs {}",
+            input.len(),
+            dims,
+            dims.input_elems()
+        );
+        ensure!(
+            weights.len() as u64 == dims.kernel_elems(),
+            "weights have {} elements, {} needs {}",
+            weights.len(),
+            dims,
+            dims.kernel_elems()
+        );
+        Ok(ConvInputs {
+            dims,
+            input,
+            weights,
+        })
+    }
+
+    /// Deterministic synthetic tensors (values in [-0.5, 0.5)) for a
+    /// layer — what `cnnblk run`, the tests, and the examples execute.
+    pub fn synthetic(dims: LayerDims, seed: u64) -> ConvInputs {
+        let mut rng = Rng::new(seed);
+        let input = (0..dims.input_elems())
+            .map(|_| rng.f64() as f32 - 0.5)
+            .collect();
+        let weights = (0..dims.kernel_elems())
+            .map(|_| rng.f64() as f32 - 0.5)
+            .collect();
+        ConvInputs {
+            dims,
+            input,
+            weights,
+        }
+    }
+
+    /// Output tensor length `(B, K, Y, X)` for these dims.
+    pub fn output_len(&self) -> usize {
+        self.dims.output_elems() as usize
+    }
+}
+
+/// Result of executing a plan: the output tensor plus the access traffic
+/// measured while computing it.
+#[derive(Debug, Clone)]
+pub struct ConvOutput {
+    /// Output activations, `(B, K, Y, X)` row-major.
+    pub output: Vec<f32>,
+    /// Memory traffic measured during execution.
+    pub counters: AccessCounters,
+}
+
+/// Measured per-buffer traffic for one Table 2 virtual buffer as the
+/// blocked interpreter ran it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BufferCounters {
+    /// Which tensor the buffer holds.
+    pub tensor: Tensor,
+    /// Position in the tensor's buffer chain (0 = innermost).
+    pub ordinal: usize,
+    /// Physical level the plan placed this buffer on (e.g. `L2`,
+    /// `M0(64KB)`, `DRAM`).
+    pub level: String,
+    /// Buffer capacity in elements (the Table 2 footprint).
+    pub size_elems: u64,
+    /// Times the buffer was (re)filled — one per iteration of any
+    /// enclosing loop, the paper's model semantics.
+    pub fill_events: u64,
+    /// Elements copied into the buffer across all fills.
+    pub fill_elems: u64,
+    /// Elements written back to the parent level (output buffers only;
+    /// zero for input/kernel buffers, which are read-only).
+    pub writeback_elems: u64,
+}
+
+/// Block-transfer traffic that reached DRAM (fills whose parent is DRAM
+/// and output writebacks that land there). Operand-rate traffic is
+/// reported separately in [`OperandCounters`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DramCounters {
+    /// Input elements loaded from DRAM into the outermost input buffer.
+    pub input_loads: u64,
+    /// Kernel elements loaded from DRAM into the outermost kernel buffer.
+    pub kernel_loads: u64,
+    /// Output partial sums re-read from DRAM into the outermost output
+    /// buffer (model semantics round-trips partials on every refill).
+    pub output_loads: u64,
+    /// Output elements written back to DRAM (includes the final
+    /// writeback).
+    pub output_stores: u64,
+}
+
+/// MAC-rate operand traffic: what the innermost compute loop read per
+/// multiply-accumulate, and which level served it (the innermost placed
+/// buffer of each tensor, or DRAM when the tensor has no buffer at all).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OperandCounters {
+    /// Input operand reads (one per MAC).
+    pub input_reads: u64,
+    /// Kernel operand reads (one per MAC).
+    pub kernel_reads: u64,
+    /// Output accumulator accesses (read + write per MAC).
+    pub output_accesses: u64,
+    /// Level that served input operands.
+    pub input_level: String,
+    /// Level that served kernel operands.
+    pub kernel_level: String,
+    /// Level that served output accumulation.
+    pub output_level: String,
+}
+
+impl Default for OperandCounters {
+    fn default() -> OperandCounters {
+        OperandCounters {
+            input_reads: 0,
+            kernel_reads: 0,
+            output_accesses: 0,
+            input_level: "DRAM".to_string(),
+            kernel_level: "DRAM".to_string(),
+            output_level: "DRAM".to_string(),
+        }
+    }
+}
+
+/// Loads/stores aggregated at one physical level (see
+/// [`AccessCounters::per_level`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LevelTraffic {
+    /// Elements read from the level.
+    pub loads: u64,
+    /// Elements written to the level.
+    pub stores: u64,
+}
+
+impl LevelTraffic {
+    /// Total accesses (loads + stores).
+    pub fn total(&self) -> u64 {
+        self.loads + self.stores
+    }
+}
+
+/// The complete access report a backend measures while executing a plan.
+#[derive(Debug, Clone)]
+pub struct AccessCounters {
+    /// Name of the backend that produced the report.
+    pub backend: String,
+    /// Multiply-accumulates executed (always `dims.macs()`).
+    pub macs: u64,
+    /// Per-virtual-buffer traffic, grouped per tensor innermost-first in
+    /// `(Input, Kernel, Output)` order. Empty for the naive backend,
+    /// which has no reuse buffers.
+    pub buffers: Vec<BufferCounters>,
+    /// Block-transfer traffic that reached DRAM.
+    pub dram: DramCounters,
+    /// MAC-rate operand traffic and the levels that served it.
+    pub operand: OperandCounters,
+}
+
+impl AccessCounters {
+    /// The buffer chain of one tensor, innermost first.
+    pub fn chain(&self, t: Tensor) -> Vec<&BufferCounters> {
+        self.buffers.iter().filter(|b| b.tensor == t).collect()
+    }
+
+    /// Aggregate the measured traffic by physical level name: buffer
+    /// fills charge loads at the parent level (the next-outer buffer of
+    /// the same tensor, else DRAM) and stores at the buffer's own level;
+    /// output writebacks the reverse; operand traffic lands at the level
+    /// that served it.
+    pub fn per_level(&self) -> BTreeMap<String, LevelTraffic> {
+        let mut map: BTreeMap<String, LevelTraffic> = BTreeMap::new();
+        let mut bump = |name: &str, loads: u64, stores: u64| {
+            let e = map.entry(name.to_string()).or_default();
+            e.loads += loads;
+            e.stores += stores;
+        };
+        for t in Tensor::ALL {
+            let chain = self.chain(t);
+            for (j, b) in chain.iter().enumerate() {
+                let parent = chain
+                    .get(j + 1)
+                    .map(|p| p.level.as_str())
+                    .unwrap_or("DRAM");
+                bump(parent, b.fill_elems, 0);
+                bump(&b.level, 0, b.fill_elems);
+                if b.writeback_elems > 0 {
+                    bump(&b.level, b.writeback_elems, 0);
+                    bump(parent, 0, b.writeback_elems);
+                }
+            }
+        }
+        let op = &self.operand;
+        bump(&op.input_level, op.input_reads, 0);
+        bump(&op.kernel_level, op.kernel_reads, 0);
+        bump(&op.output_level, op.output_accesses / 2, op.output_accesses / 2);
+        map
+    }
+
+    /// Total measured element traffic (loads + stores) across all levels.
+    pub fn total_accesses(&self) -> u64 {
+        self.per_level().values().map(|t| t.total()).sum()
+    }
+}
+
+/// What the analytical model (`model::access`, Eq. 1 / Table 2) predicts
+/// the blocked interpreter's [`AccessCounters`] should measure for a
+/// plan. Produced by [`predicted_counters`]; `rust/tests/backend.rs`
+/// pins measured == predicted within [`ACCESS_REL_TOL`].
+#[derive(Debug, Clone)]
+pub struct PredictedCounters {
+    /// Per-buffer predictions, same order as the measured `buffers` list.
+    pub buffers: Vec<PredictedBuffer>,
+    /// Predicted input elements loaded from DRAM (fill traffic of the
+    /// outermost input buffer; 0 when the string creates no input buffer
+    /// — the cold stream then rides the operand traffic).
+    pub dram_input_loads: f64,
+    /// Predicted kernel elements loaded from DRAM (same convention).
+    pub dram_kernel_loads: f64,
+    /// Predicted output partials re-read from DRAM (fill traffic of the
+    /// outermost output buffer; 0 without one).
+    pub dram_output_loads: f64,
+    /// Predicted output elements written back to DRAM: the outermost
+    /// output buffer's round-trip traffic (its writebacks mirror its
+    /// fills, final writeback included). 0 when the string creates no
+    /// output buffer — accumulation then happens in place at DRAM and
+    /// is operand traffic, like the bufferless input/kernel streams.
+    pub dram_output_stores: f64,
+    /// MACs (operand traffic is one input read, one kernel read and two
+    /// output accesses per MAC).
+    pub macs: u64,
+}
+
+/// One buffer's predicted fill behaviour.
+#[derive(Debug, Clone)]
+pub struct PredictedBuffer {
+    /// Which tensor the buffer holds.
+    pub tensor: Tensor,
+    /// Position in the tensor's chain (0 = innermost).
+    pub ordinal: usize,
+    /// Table 2 footprint in elements.
+    pub size_elems: u64,
+    /// Predicted fill events (product of enclosing trip counts).
+    pub fill_events: f64,
+    /// Predicted fill traffic (`fill_events x size_elems`).
+    pub fill_elems: f64,
+}
+
+/// Relative tolerance within which measured access counts must match the
+/// model's predictions (`rust/tests/backend.rs` enforces it). The
+/// interpreter implements the model's fill semantics exactly and Table 2
+/// blocks never clip at image edges (the halo'd input is exactly
+/// `(X+Fw-1) x (Y+Fh-1)`), so the only expected deviation is f64
+/// rounding in the model's trip-count products.
+pub const ACCESS_REL_TOL: f64 = 1e-9;
+
+/// Compute the model-side prediction of what executing `plan` on the
+/// blocked interpreter should measure.
+pub fn predicted_counters(plan: &BlockingPlan) -> PredictedCounters {
+    let (_bufs, prof) = access::analyze(&plan.string, &plan.dims);
+    let mut buffers = Vec::new();
+    for t in Tensor::ALL {
+        for ba in prof.of(t) {
+            buffers.push(PredictedBuffer {
+                tensor: t,
+                ordinal: ba.buffer.ordinal,
+                size_elems: ba.buffer.size_elems,
+                fill_events: ba.fill_events,
+                fill_elems: ba.fill_elems,
+            });
+        }
+    }
+    let outer = |t: Tensor| prof.of(t).last().map(|ba| ba.fill_elems).unwrap_or(0.0);
+    PredictedCounters {
+        dram_input_loads: outer(Tensor::Input),
+        dram_kernel_loads: outer(Tensor::Kernel),
+        dram_output_loads: outer(Tensor::Output),
+        dram_output_stores: outer(Tensor::Output),
+        buffers,
+        macs: plan.dims.macs(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{Planner, Target};
+
+    fn small_plan() -> BlockingPlan {
+        Planner::for_named("t", LayerDims::conv(8, 8, 4, 4, 3, 3))
+            .target(Target::Bespoke {
+                budget_bytes: 64 * 1024,
+            })
+            .levels(2)
+            .plan()
+            .unwrap()
+    }
+
+    #[test]
+    fn registry_resolves_both_backends() {
+        for name in BACKEND_NAMES {
+            assert_eq!(backend_by_name(name).unwrap().name(), name);
+        }
+        assert!(backend_by_name("vulkan").is_err());
+    }
+
+    #[test]
+    fn every_target_dispatches_to_blocked() {
+        for t in [
+            Target::Bespoke { budget_bytes: 1024 },
+            Target::DianNao,
+            Target::Cpu,
+        ] {
+            assert_eq!(backend_for_target(&t).name(), "blocked");
+        }
+    }
+
+    #[test]
+    fn synthetic_inputs_are_deterministic_and_sized() {
+        let d = LayerDims::conv(8, 8, 4, 4, 3, 3);
+        let a = ConvInputs::synthetic(d, 7);
+        let b = ConvInputs::synthetic(d, 7);
+        assert_eq!(a.input, b.input);
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.input.len() as u64, d.input_elems());
+        assert_eq!(a.weights.len() as u64, d.kernel_elems());
+        let c = ConvInputs::synthetic(d, 8);
+        assert_ne!(a.input, c.input);
+    }
+
+    #[test]
+    fn new_rejects_wrong_sizes() {
+        let d = LayerDims::conv(8, 8, 4, 4, 3, 3);
+        assert!(ConvInputs::new(d, vec![0.0; 3], vec![0.0; 3]).is_err());
+        let ok = ConvInputs::new(
+            d,
+            vec![0.0; d.input_elems() as usize],
+            vec![0.0; d.kernel_elems() as usize],
+        );
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn plan_execute_dispatches_from_target() {
+        let plan = small_plan();
+        let inputs = ConvInputs::synthetic(plan.dims, 1);
+        let out = plan.execute(&inputs).unwrap();
+        assert_eq!(out.counters.backend, "blocked");
+        assert_eq!(out.output.len(), inputs.output_len());
+    }
+
+    #[test]
+    fn predicted_counters_cover_every_plan_buffer() {
+        let plan = small_plan();
+        let pred = predicted_counters(&plan);
+        assert_eq!(pred.buffers.len(), plan.buffers.len());
+        assert_eq!(pred.macs, plan.dims.macs());
+        assert!(pred.dram_output_stores > 0.0);
+    }
+
+    #[test]
+    fn per_level_conserves_fill_traffic() {
+        let plan = small_plan();
+        let out = plan
+            .execute(&ConvInputs::synthetic(plan.dims, 3))
+            .unwrap();
+        let per = out.counters.per_level();
+        let total: u64 = per.values().map(|t| t.total()).sum();
+        let fills: u64 = out.counters.buffers.iter().map(|b| b.fill_elems).sum();
+        assert!(total >= fills, "aggregation dropped traffic");
+        assert_eq!(total, out.counters.total_accesses());
+    }
+}

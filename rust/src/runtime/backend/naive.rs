@@ -1,0 +1,131 @@
+//! The Algorithm 1 reference backend: the unblocked `FwFhXYCK` loop nest
+//! with no reuse buffers, wrapping the rust-native
+//! [`crate::coordinator::naive_conv`] oracle. Its numeric output defines
+//! correctness for every other backend; its access report is what an
+//! unblocked implementation pays — every operand fetch is memory
+//! traffic, which is exactly the baseline the paper's blocked schedules
+//! are measured against.
+
+use super::{AccessCounters, Backend, ConvInputs, ConvOutput, DramCounters, OperandCounters};
+use crate::coordinator::naive_conv::conv_valid;
+use crate::plan::BlockingPlan;
+use anyhow::{ensure, Result};
+
+/// Reference executor: unblocked semantics, no reuse buffers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NaiveBackend;
+
+impl Backend for NaiveBackend {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    /// Runs the plan's layer with the unblocked nest (the blocking
+    /// string is ignored apart from validation — naive semantics do not
+    /// block). Counters report the unblocked cost: input and kernel
+    /// operands read from DRAM at MAC rate, one output store per output
+    /// element (the accumulator lives in a register).
+    fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput> {
+        let d = plan.dims;
+        ensure!(
+            inputs.dims == d,
+            "inputs are for {} but the plan is for {}",
+            inputs.dims,
+            d
+        );
+        ensure!(
+            inputs.input.len() as u64 == d.input_elems()
+                && inputs.weights.len() as u64 == d.kernel_elems(),
+            "input/weight tensors do not match {}",
+            d
+        );
+        let (h, w) = ((d.y + d.fh - 1) as usize, (d.x + d.fw - 1) as usize);
+        let (c, k) = (d.c as usize, d.k as usize);
+        let (fh, fw) = (d.fh as usize, d.fw as usize);
+        let image = c * h * w;
+        let per_out = (d.k * d.y * d.x) as usize;
+        let mut output = Vec::with_capacity((d.b as usize) * per_out);
+        for b in 0..d.b as usize {
+            let img = &inputs.input[b * image..(b + 1) * image];
+            output.extend(conv_valid(img, (c, h, w), &inputs.weights, (k, c, fh, fw)));
+        }
+        let macs = d.macs();
+        let counters = AccessCounters {
+            backend: "naive".to_string(),
+            macs,
+            buffers: Vec::new(),
+            dram: DramCounters {
+                input_loads: macs,
+                kernel_loads: macs,
+                output_loads: 0,
+                output_stores: d.output_elems(),
+            },
+            operand: OperandCounters {
+                input_reads: macs,
+                kernel_reads: macs,
+                // read+write per MAC in the model's accounting; the
+                // register accumulator makes the writes free here, so
+                // only the final stores (in `dram`) are real traffic.
+                output_accesses: 2 * macs,
+                input_level: "DRAM".to_string(),
+                kernel_level: "DRAM".to_string(),
+                output_level: "DRAM".to_string(),
+            },
+        };
+        Ok(ConvOutput { output, counters })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::dims::LayerDims;
+    use crate::plan::{Planner, Target};
+
+    fn plan_for(d: LayerDims) -> BlockingPlan {
+        Planner::for_named("t", d)
+            .target(Target::Cpu)
+            .levels(2)
+            .plan()
+            .unwrap()
+    }
+
+    #[test]
+    fn matches_conv_valid_per_image() {
+        let d = LayerDims::conv(6, 6, 3, 4, 3, 3);
+        let plan = plan_for(d);
+        let inputs = ConvInputs::synthetic(d, 11);
+        let got = NaiveBackend.execute(&plan, &inputs).unwrap();
+        let want = conv_valid(&inputs.input, (3, 8, 8), &inputs.weights, (4, 3, 3, 3));
+        assert_eq!(got.output, want);
+        assert_eq!(got.counters.macs, d.macs());
+        assert_eq!(got.counters.dram.input_loads, d.macs());
+        assert_eq!(got.counters.dram.output_stores, d.output_elems());
+        assert!(got.counters.buffers.is_empty());
+    }
+
+    #[test]
+    fn batch_images_are_independent() {
+        let d = LayerDims::conv(4, 4, 2, 2, 3, 3).with_batch(2);
+        let plan = plan_for(d);
+        let inputs = ConvInputs::synthetic(d, 5);
+        let out = NaiveBackend.execute(&plan, &inputs).unwrap();
+        assert_eq!(out.output.len() as u64, d.output_elems());
+        // image 1 alone must reproduce the second half of the batch
+        let image = (d.c * (d.y + d.fh - 1) * (d.x + d.fw - 1)) as usize;
+        let solo = conv_valid(
+            &inputs.input[image..],
+            (2, 6, 6),
+            &inputs.weights,
+            (2, 2, 3, 3),
+        );
+        assert_eq!(&out.output[out.output.len() / 2..], &solo[..]);
+    }
+
+    #[test]
+    fn rejects_mismatched_inputs() {
+        let plan = plan_for(LayerDims::conv(6, 6, 3, 4, 3, 3));
+        let other = ConvInputs::synthetic(LayerDims::conv(8, 8, 3, 4, 3, 3), 1);
+        assert!(NaiveBackend.execute(&plan, &other).is_err());
+    }
+}

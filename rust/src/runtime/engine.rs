@@ -11,11 +11,13 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Create the CPU PJRT client.
     pub fn cpu() -> Result<Engine> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {:?}", e))?;
         Ok(Engine { client })
     }
 
+    /// Platform name the client reports (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -40,6 +42,7 @@ impl Engine {
 /// A compiled executable + its shape contract.
 pub struct Module {
     exe: xla::PjRtLoadedExecutable,
+    /// Shape contract from the artifact manifest.
     pub spec: ArtifactSpec,
 }
 

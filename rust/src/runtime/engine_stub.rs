@@ -19,14 +19,17 @@ const UNAVAILABLE: &str =
 pub struct Engine;
 
 impl Engine {
+    /// Always fails: PJRT is unavailable without the `pjrt` feature.
     pub fn cpu() -> Result<Engine> {
         bail!(UNAVAILABLE)
     }
 
+    /// Reports `pjrt-unavailable`.
     pub fn platform(&self) -> String {
         "pjrt-unavailable".to_string()
     }
 
+    /// Always fails: PJRT is unavailable without the `pjrt` feature.
     pub fn load(&self, _path: &Path, _spec: &ArtifactSpec) -> Result<Module> {
         bail!(UNAVAILABLE)
     }
@@ -34,10 +37,12 @@ impl Engine {
 
 /// Stub for a compiled executable + its shape contract.
 pub struct Module {
+    /// Shape contract from the artifact manifest.
     pub spec: ArtifactSpec,
 }
 
 impl Module {
+    /// Always fails: PJRT is unavailable without the `pjrt` feature.
     pub fn run_f32(&self, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
         bail!(UNAVAILABLE)
     }

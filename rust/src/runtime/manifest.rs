@@ -11,8 +11,10 @@ use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+/// Shape contract of one compiled artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Artifact name (file stem of the HLO text).
     pub name: String,
     /// Input shapes (row-major dims), all f32.
     pub inputs: Vec<Vec<usize>>,
@@ -21,18 +23,23 @@ pub struct ArtifactSpec {
 }
 
 impl ArtifactSpec {
+    /// Flat element count of input `i`.
     pub fn input_len(&self, i: usize) -> usize {
         self.inputs[i].iter().product()
     }
 
+    /// Flat element count of the output.
     pub fn output_len(&self) -> usize {
         self.output.iter().product()
     }
 }
 
+/// The artifact manifest `aot.py` writes next to the HLO files.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest (and artifacts) live in.
     pub dir: PathBuf,
+    /// Shape contract per artifact name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
     /// Blocking-string notation per pipeline layer (from schedules.json).
     pub layer_strings: Vec<String>,
@@ -68,6 +75,7 @@ fn shape_of(j: &Json) -> Result<Vec<usize>> {
 }
 
 impl Manifest {
+    /// Read and parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
@@ -135,12 +143,14 @@ impl Manifest {
         })
     }
 
+    /// Shape contract of a named artifact.
     pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)
             .ok_or_else(|| anyhow!("artifact '{}' not in manifest", name))
     }
 
+    /// Path of a named artifact's HLO text file.
     pub fn hlo_path(&self, name: &str) -> PathBuf {
         self.dir.join(format!("{}.hlo.txt", name))
     }
@@ -161,13 +171,18 @@ impl Manifest {
 /// Load the golden input/output pair exported by aot.py.
 #[derive(Debug, Clone)]
 pub struct Golden {
+    /// Shape of the golden input tensor.
     pub input_shape: Vec<usize>,
+    /// Golden input, row-major.
     pub input: Vec<f32>,
+    /// Shape of the golden output tensor.
     pub output_shape: Vec<usize>,
+    /// Golden output, row-major.
     pub output: Vec<f32>,
 }
 
 impl Golden {
+    /// Read and parse `<dir>/golden.json`.
     pub fn load(dir: &Path) -> Result<Golden> {
         let text = std::fs::read_to_string(dir.join("golden.json"))
             .context("reading golden.json (run `make artifacts`)")?;

@@ -1,12 +1,15 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
-//! PJRT client — the only place the `xla` crate is touched. Python never
-//! runs here; the artifacts are self-contained (weights baked in as HLO
-//! constants by `python/compile/aot.py`).
+//! Execution runtimes: the plan-level [`backend`] executors (naive
+//! reference + blocked loop-nest interpreter with measured access
+//! counters) and the PJRT engine that loads AOT HLO-text artifacts onto
+//! the CPU PJRT client — the only place the `xla` crate is touched.
+//! Python never runs here; the artifacts are self-contained (weights
+//! baked in as HLO constants by `python/compile/aot.py`).
 //!
 //! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
+pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 #[cfg(not(feature = "pjrt"))]
@@ -14,5 +17,6 @@ pub mod engine;
 pub mod engine;
 pub mod manifest;
 
+pub use backend::{AccessCounters, Backend, BlockedCpuBackend, ConvInputs, ConvOutput, NaiveBackend};
 pub use engine::{Engine, Module};
 pub use manifest::{ArtifactSpec, Golden, Manifest};

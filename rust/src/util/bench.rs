@@ -8,18 +8,25 @@
 
 use std::time::{Duration, Instant};
 
+/// One benchmark's timing summary.
 #[derive(Debug, Clone)]
 pub struct Sample {
+    /// Benchmark name.
     pub name: String,
+    /// Median sample time.
     pub median: Duration,
+    /// 10th-percentile sample time.
     pub p10: Duration,
+    /// 90th-percentile sample time.
     pub p90: Duration,
+    /// Iterations folded into each sample.
     pub iters_per_sample: u64,
     /// Optional throughput numerator (e.g. simulated accesses per iter).
     pub items_per_iter: f64,
 }
 
 impl Sample {
+    /// Items per second at the median, when items were reported.
     pub fn throughput(&self) -> Option<f64> {
         if self.items_per_iter > 0.0 {
             Some(self.items_per_iter / self.median.as_secs_f64())
@@ -28,6 +35,7 @@ impl Sample {
         }
     }
 
+    /// One aligned report line.
     pub fn report(&self) -> String {
         let tp = match self.throughput() {
             Some(t) => format!("  ({} items/s)", super::table::eng(t)),
@@ -40,8 +48,11 @@ impl Sample {
     }
 }
 
+/// Wall-clock micro-benchmark driver: warmup then N timed samples.
 pub struct Bench {
+    /// Untimed warmup iterations.
     pub warmup: usize,
+    /// Timed samples taken.
     pub samples: usize,
 }
 
@@ -55,6 +66,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Smaller budget for CI and smoke runs.
     pub fn quick() -> Bench {
         Bench {
             warmup: 1,

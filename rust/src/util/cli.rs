@@ -5,12 +5,16 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: positionals plus `--key[=value]` flags.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Positional arguments, in order.
     pub positional: Vec<String>,
+    /// Flag values (`true` for bare boolean flags).
     pub flags: BTreeMap<String, String>,
 }
 
+/// Value stored for bare boolean flags.
 pub const FLAG_SET: &str = "true";
 
 impl Args {
@@ -42,22 +46,27 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether a flag was passed at all.
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
+    /// A flag's raw value, if passed.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// A flag's value, or `default` when absent.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Integer flag value (panics with a clear message on non-integers).
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key)
             .map(|v| {
@@ -67,6 +76,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Numeric flag value (panics with a clear message on non-numbers).
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key)
             .map(|v| {
@@ -76,6 +86,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// The first positional, by convention the subcommand.
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }

@@ -13,19 +13,27 @@ use std::fmt;
 /// deterministic, which keeps `make artifacts` idempotent.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys kept sorted).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// An empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Insert `key = val` (no-op on non-objects); chainable.
     pub fn set(&mut self, key: &str, val: Json) -> &mut Self {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), val);
@@ -33,6 +41,7 @@ impl Json {
         self
     }
 
+    /// Object field lookup (`None` on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -40,6 +49,7 @@ impl Json {
         }
     }
 
+    /// Array element lookup (`None` on non-arrays).
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(v) => v.get(i),
@@ -47,6 +57,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -54,6 +65,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integer value, if this is a whole number.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
@@ -61,6 +73,7 @@ impl Json {
         }
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -68,6 +81,7 @@ impl Json {
         }
     }
 
+    /// Array contents, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -75,6 +89,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -173,10 +188,13 @@ fn write_escaped(out: &mut String, s: &str) {
 #[derive(Debug, thiserror::Error)]
 #[error("json parse error at byte {offset}: {msg}")]
 pub struct ParseError {
+    /// Byte offset the parser stopped at.
     pub offset: usize,
+    /// What went wrong there.
     pub msg: String,
 }
 
+/// Parse a complete JSON document.
 pub fn parse(input: &str) -> Result<Json, ParseError> {
     let mut p = Parser {
         bytes: input.as_bytes(),
@@ -385,12 +403,15 @@ impl fmt::Display for Json {
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
+/// A number value from an unsigned integer.
 pub fn unum(n: u64) -> Json {
     Json::Num(n as f64)
 }
+/// A string value.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
+/// An array value from an iterator.
 pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
     Json::Arr(items.into_iter().collect())
 }

@@ -121,6 +121,7 @@ impl WorkerPool {
         }
     }
 
+    /// Number of worker threads in the pool.
     pub fn threads(&self) -> usize {
         self.handles.len()
     }

@@ -8,8 +8,11 @@
 
 use super::rng::Rng;
 
+/// Property-test budget.
 pub struct Config {
+    /// Independent cases to run.
     pub cases: usize,
+    /// Base seed cases derive from.
     pub seed: u64,
 }
 

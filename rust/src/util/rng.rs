@@ -5,11 +5,13 @@
 //! reproducible from its seed.
 
 #[derive(Debug, Clone)]
+/// Deterministic xoshiro256** generator.
 pub struct Rng {
     s: [u64; 4],
 }
 
 impl Rng {
+    /// Seed the generator (SplitMix64-expanded).
     pub fn new(seed: u64) -> Rng {
         // SplitMix64 expansion of the seed, per Vigna's recommendation.
         let mut sm = seed;
@@ -25,6 +27,7 @@ impl Rng {
         }
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -59,10 +62,12 @@ impl Rng {
         lo + self.below((hi - lo + 1) as u64) as usize
     }
 
+    /// Uniform in [0, 1) with 53 bits of precision.
     pub fn f64(&mut self) -> f64 {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// True with probability `p`.
     pub fn chance(&mut self, p: f64) -> bool {
         self.f64() < p
     }

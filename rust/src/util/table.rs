@@ -1,14 +1,19 @@
 //! ASCII table pretty-printer used by the figure/benchmark harness so the
 //! regenerated tables read like the paper's (rows + aligned columns).
 
+/// A titled table with a header row and aligned data rows.
 #[derive(Debug, Default)]
 pub struct Table {
+    /// Table title (printed as a `##` heading).
     pub title: String,
+    /// Column headers.
     pub header: Vec<String>,
+    /// Data rows (each as wide as the header).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given title and columns.
     pub fn new(title: &str, header: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -17,6 +22,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(
             cells.len(),
@@ -28,6 +34,7 @@ impl Table {
         self
     }
 
+    /// Render with aligned columns.
     pub fn render(&self) -> String {
         let ncols = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
@@ -64,6 +71,7 @@ impl Table {
         out
     }
 
+    /// Render to stdout.
     pub fn print(&self) {
         println!("{}", self.render());
     }

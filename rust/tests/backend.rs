@@ -1,0 +1,276 @@
+//! Executable-backend integration tests: the paper's Sec. 5 access-count
+//! story as enforced properties.
+//!
+//! (a) `BlockedCpuBackend` output equals the `NaiveBackend` oracle on
+//!     every Table 4 benchmark layer (scaled for execution the same way
+//!     the trace simulator scales — access *ratios* are scale-stable);
+//! (b) the access counters the blocked interpreter measures while
+//!     running match the `model::access` predictions within the pinned
+//!     tolerance — the analytical model is checked against a real
+//!     executed loop nest, not just against itself.
+
+use cnn_blocking::model::benchmarks::{all_benchmarks, aux_benchmarks};
+use cnn_blocking::model::buffers::Tensor;
+use cnn_blocking::model::dims::LayerDims;
+use cnn_blocking::model::string::BlockingString;
+use cnn_blocking::optimizer::beam::BeamConfig;
+use cnn_blocking::runtime::backend::{
+    backend_by_name, predicted_counters, BlockedCpuBackend, ConvInputs, NaiveBackend,
+    ACCESS_REL_TOL,
+};
+use cnn_blocking::runtime::Backend;
+use cnn_blocking::{BlockingPlan, Planner, Target};
+
+/// Pinned output tolerance: blocked and naive accumulate f32 partial
+/// sums in different orders, so outputs agree up to reassociation
+/// rounding. At the scaled reduction depths here (<= ~500 terms) the
+/// observed error is ~1e-5; 1e-3 is pinned headroom, not slack for
+/// semantic drift (an indexing bug produces O(1) errors).
+const OUT_REL_TOL: f32 = 1e-3;
+
+/// MAC budget the Table 4 layers are scaled to before execution.
+const EXEC_MACS: u64 = 250_000;
+
+fn assert_outputs_close(name: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{}: output length", name);
+    let mut max_rel = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        max_rel = max_rel.max((x - y).abs() / x.abs().max(y.abs()).max(1.0));
+    }
+    assert!(
+        max_rel < OUT_REL_TOL,
+        "{}: blocked vs naive max rel err {} exceeds pinned {}",
+        name,
+        max_rel,
+        OUT_REL_TOL
+    );
+}
+
+fn planned(name: &str, dims: LayerDims, levels: usize) -> BlockingPlan {
+    Planner::for_named(name, dims)
+        .target(Target::Bespoke {
+            budget_bytes: 8 << 20,
+        })
+        .levels(levels)
+        .beam(BeamConfig::quick())
+        .plan()
+        .expect("search produced a plan")
+}
+
+fn close(meas: f64, pred: f64, what: &str) {
+    let rel = (meas - pred).abs() / pred.abs().max(1.0);
+    assert!(
+        rel <= ACCESS_REL_TOL,
+        "{}: measured {} vs predicted {} (rel {})",
+        what,
+        meas,
+        pred,
+        rel
+    );
+}
+
+#[test]
+fn blocked_equals_naive_on_all_table4_benchmark_layers() {
+    for (i, b) in all_benchmarks().into_iter().enumerate() {
+        let dims = b.dims.scaled_for_sim(EXEC_MACS);
+        let plan = planned(b.name, dims, 3);
+        let inputs = ConvInputs::synthetic(dims, 1000 + i as u64);
+        let naive = NaiveBackend.execute(&plan, &inputs).unwrap();
+        let blocked = BlockedCpuBackend.execute(&plan, &inputs).unwrap();
+        assert_outputs_close(b.name, &blocked.output, &naive.output);
+        assert_eq!(blocked.counters.macs, dims.macs(), "{}: MAC count", b.name);
+    }
+}
+
+#[test]
+fn blocked_equals_naive_on_aux_table4_layers() {
+    // Pool and LRN are the degenerate Table 4 rows (C = 1: no output
+    // reuse buffer at all); execute them from the validated unblocked
+    // string so the no-buffer paths are exercised too.
+    for (i, b) in aux_benchmarks().into_iter().enumerate() {
+        let dims = b.dims.scaled_for_sim(EXEC_MACS);
+        let plan = Planner::for_named(b.name, dims)
+            .plan_string(&BlockingString::unblocked(&dims))
+            .unwrap();
+        let inputs = ConvInputs::synthetic(dims, 2000 + i as u64);
+        let naive = NaiveBackend.execute(&plan, &inputs).unwrap();
+        let blocked = BlockedCpuBackend.execute(&plan, &inputs).unwrap();
+        assert_outputs_close(b.name, &blocked.output, &naive.output);
+        assert!(
+            blocked.counters.chain(Tensor::Output).is_empty(),
+            "{}: C=1 must create no output buffer",
+            b.name
+        );
+    }
+}
+
+#[test]
+fn measured_access_counts_match_model_predictions() {
+    // The enforced form of the paper's analytical claim: per virtual
+    // buffer, the fills the interpreter performed equal the model's
+    // Eq. 1 fill events and traffic, and the DRAM terminals agree.
+    let cases: Vec<(String, LayerDims, usize)> = vec![
+        (
+            "Conv3".to_string(),
+            cnn_blocking::model::benchmarks::by_name("Conv3")
+                .unwrap()
+                .dims
+                .scaled_for_sim(EXEC_MACS),
+            3,
+        ),
+        (
+            "Conv4".to_string(),
+            cnn_blocking::model::benchmarks::by_name("Conv4")
+                .unwrap()
+                .dims
+                .scaled_for_sim(EXEC_MACS),
+            3,
+        ),
+        (
+            "FC1".to_string(),
+            cnn_blocking::model::benchmarks::by_name("FC1").unwrap().dims,
+            2,
+        ),
+        (
+            "mini2".to_string(),
+            LayerDims::conv(14, 14, 16, 32, 3, 3),
+            3,
+        ),
+    ];
+    for (name, dims, levels) in cases {
+        let plan = planned(&name, dims, levels);
+        let out = BlockedCpuBackend
+            .execute(&plan, &ConvInputs::synthetic(dims, 7))
+            .unwrap();
+        let pred = predicted_counters(&plan);
+        assert_eq!(
+            out.counters.buffers.len(),
+            pred.buffers.len(),
+            "{}: buffer count",
+            name
+        );
+        for (m, p) in out.counters.buffers.iter().zip(&pred.buffers) {
+            assert_eq!((m.tensor, m.ordinal), (p.tensor, p.ordinal));
+            assert_eq!(m.size_elems, p.size_elems, "{}: {}{} size", name, m.tensor, m.ordinal);
+            close(
+                m.fill_events as f64,
+                p.fill_events,
+                &format!("{}: {}{} fill events", name, m.tensor, m.ordinal),
+            );
+            close(
+                m.fill_elems as f64,
+                p.fill_elems,
+                &format!("{}: {}{} fill elems", name, m.tensor, m.ordinal),
+            );
+        }
+        let d = &out.counters.dram;
+        close(d.input_loads as f64, pred.dram_input_loads, &format!("{}: DRAM input", name));
+        close(d.kernel_loads as f64, pred.dram_kernel_loads, &format!("{}: DRAM kernel", name));
+        close(d.output_loads as f64, pred.dram_output_loads, &format!("{}: DRAM out loads", name));
+        close(d.output_stores as f64, pred.dram_output_stores, &format!("{}: DRAM out stores", name));
+        let op = &out.counters.operand;
+        assert_eq!(op.input_reads, dims.macs());
+        assert_eq!(op.kernel_reads, dims.macs());
+        assert_eq!(op.output_accesses, 2 * dims.macs());
+    }
+}
+
+#[test]
+fn counters_carry_the_plans_buffer_placement() {
+    // Per-level counters must be labelled with the physical levels the
+    // plan chose — including a dedicated-SRAM (DianNao) placement.
+    let dims = LayerDims::conv(16, 16, 8, 8, 3, 3);
+    for target in [
+        Target::Bespoke {
+            budget_bytes: 256 * 1024,
+        },
+        Target::DianNao,
+        Target::Cpu,
+    ] {
+        let plan = Planner::for_named("t", dims)
+            .target(target)
+            .levels(2)
+            .plan()
+            .unwrap();
+        let out = plan.execute(&ConvInputs::synthetic(dims, 5)).unwrap();
+        assert_eq!(out.counters.backend, "blocked");
+        for m in &out.counters.buffers {
+            let pb = plan
+                .buffers
+                .iter()
+                .find(|b| b.tensor == m.tensor && b.ordinal == m.ordinal)
+                .unwrap_or_else(|| panic!("{}: no plan buffer {}{}", target, m.tensor, m.ordinal));
+            assert_eq!(m.level, pb.level, "{}: {}{} level", target, m.tensor, m.ordinal);
+        }
+        let per = out.counters.per_level();
+        assert!(
+            per.keys().any(|l| l != "DRAM"),
+            "{}: some traffic must land on-chip",
+            target
+        );
+    }
+}
+
+#[test]
+fn naive_backend_reports_unblocked_memory_traffic() {
+    let dims = LayerDims::conv(8, 8, 4, 4, 3, 3);
+    let plan = planned("t", dims, 2);
+    let out = NaiveBackend.execute(&plan, &ConvInputs::synthetic(dims, 3)).unwrap();
+    assert!(out.counters.buffers.is_empty());
+    assert_eq!(out.counters.dram.input_loads, dims.macs());
+    assert_eq!(out.counters.dram.kernel_loads, dims.macs());
+    assert_eq!(out.counters.dram.output_stores, dims.output_elems());
+}
+
+#[test]
+fn blocking_cuts_measured_dram_traffic_on_conv1() {
+    // The acceptance-path flow of `cnnblk run --benchmark Conv1
+    // --backend blocked`: the blocked execution's measured DRAM traffic
+    // must be far below the naive nest's memory-rate traffic (the
+    // paper's up-to-90%-fewer-accesses headline, here as a measured,
+    // not predicted, property).
+    let bench = cnn_blocking::model::benchmarks::by_name("Conv1").unwrap();
+    let dims = bench.dims.scaled_for_sim(2_000_000);
+    let plan = planned("Conv1", dims, 3);
+    let inputs = ConvInputs::synthetic(dims, 42);
+    let blocked = BlockedCpuBackend.execute(&plan, &inputs).unwrap();
+    let naive = NaiveBackend.execute(&plan, &inputs).unwrap();
+    let blocked_dram = blocked.counters.dram.input_loads
+        + blocked.counters.dram.kernel_loads
+        + blocked.counters.dram.output_loads
+        + blocked.counters.dram.output_stores;
+    let naive_dram = naive.counters.dram.input_loads
+        + naive.counters.dram.kernel_loads
+        + naive.counters.dram.output_stores;
+    assert!(
+        (blocked_dram as f64) * 5.0 < naive_dram as f64,
+        "blocked DRAM {} not clearly below naive {}",
+        blocked_dram,
+        naive_dram
+    );
+}
+
+#[test]
+fn plan_engine_outputs_are_directly_runnable() {
+    // Whole-network plans from the PlanEngine execute as-is through the
+    // target-dispatched backend.
+    let plans = Planner::for_network("AlexNet-mini")
+        .unwrap()
+        .levels(2)
+        .beam(BeamConfig::quick())
+        .plan_all()
+        .unwrap();
+    let smallest = plans.last().unwrap(); // mini3: 5x5x32 -> 32
+    let inputs = ConvInputs::synthetic(smallest.dims, 11);
+    let out = smallest.execute(&inputs).unwrap();
+    assert_eq!(out.output.len() as u64, smallest.dims.output_elems());
+    assert_eq!(out.counters.macs, smallest.dims.macs());
+}
+
+#[test]
+fn backend_registry_round_trips_names() {
+    for name in ["naive", "blocked"] {
+        assert_eq!(backend_by_name(name).unwrap().name(), name);
+    }
+    assert!(backend_by_name("pallas").is_err());
+}
