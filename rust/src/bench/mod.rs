@@ -1,0 +1,492 @@
+//! The `cnnblk bench` performance harness: naive vs blocked vs tiled on
+//! the Table 4 layers, machine-readable output.
+//!
+//! The paper's x86 result (Sec. 6) is that optimal blockings cut memory
+//! accesses *in real programs*; PR 3 made plans executable and this
+//! harness makes the execution speed a tracked number. For each
+//! requested Table 4 layer it plans once (quick beam by default), scales
+//! the dims with `LayerDims::scaled_for_sim`, then times every requested
+//! backend with the in-tree timer — untimed warmup iterations followed
+//! by `reps` timed repetitions, summarized as **median + MAD** (median
+//! absolute deviation; both are robust to scheduler noise, which is why
+//! they are used instead of mean ± stddev). Each run reports MAC/s and,
+//! from the backend's measured [`AccessCounters`]
+//! (deterministic across repetitions), **bytes/s per hierarchy level**
+//! (element traffic x 4 bytes — the executors move `f32` — over the
+//! median wall time).
+//!
+//! [`BenchReport::save`] writes the whole report as JSON (`BENCH_4.json`
+//! by convention — the repo's benchmark trajectory file; CI regenerates
+//! a smoke-sized one per commit and uploads it as an artifact). In smoke
+//! mode ([`BenchConfig::smoke`], CI's configuration) the harness also
+//! *enforces* the perf claim: it fails if the tiled backend is not at
+//! least as fast as the per-MAC interpreter on the smoke layer.
+//!
+//! [`AccessCounters`]: crate::runtime::backend::AccessCounters
+
+use crate::model::benchmarks::by_name;
+use crate::model::dims::LayerDims;
+use crate::optimizer::beam::BeamConfig;
+use crate::plan::{Planner, Target};
+use crate::runtime::backend::{backend_by_name, ConvInputs, ConvOutput};
+use crate::util::json::{self, Json};
+use crate::util::table::{eng, Table};
+use anyhow::{anyhow, ensure, Result};
+use std::time::Instant;
+
+/// Bytes per element the executing backends actually move (`f32`).
+pub const ELEM_BYTES: u64 = 4;
+
+/// What to benchmark and how hard.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Table 4 layer names to run (default: Conv1–Conv5).
+    pub layers: Vec<String>,
+    /// Backend names to time, in report order.
+    pub backends: Vec<String>,
+    /// MAC budget each layer is scaled to before execution.
+    pub max_macs: u64,
+    /// Untimed warmup iterations per backend.
+    pub warmup: usize,
+    /// Timed repetitions per backend.
+    pub reps: usize,
+    /// Synthetic input/weight seed.
+    pub seed: u64,
+    /// Blocking levels to plan with.
+    pub levels: usize,
+    /// SRAM budget for the bespoke planning target.
+    pub budget_bytes: u64,
+    /// Use the paper-width beam instead of the quick one.
+    pub full_search: bool,
+    /// Smoke mode: also fail if tiled is slower than the interpreter.
+    pub smoke: bool,
+}
+
+impl Default for BenchConfig {
+    fn default() -> BenchConfig {
+        BenchConfig {
+            layers: ["Conv1", "Conv2", "Conv3", "Conv4", "Conv5"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            backends: crate::runtime::backend::BACKEND_NAMES
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            max_macs: 2_000_000,
+            warmup: 1,
+            reps: 5,
+            seed: 42,
+            levels: 3,
+            budget_bytes: 8 << 20,
+            full_search: false,
+            smoke: false,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// CI-sized configuration: one small layer, tiny dims, a single
+    /// timed rep, and the tiled-not-slower-than-interpreter gate armed.
+    pub fn smoke() -> BenchConfig {
+        BenchConfig {
+            layers: vec!["Conv4".to_string()],
+            max_macs: 200_000,
+            reps: 1,
+            smoke: true,
+            ..BenchConfig::default()
+        }
+    }
+}
+
+/// Measured traffic rate at one hierarchy level.
+#[derive(Debug, Clone)]
+pub struct LevelRate {
+    /// Physical level name (`DRAM`, `L2`, `M0(64KB)`, ...).
+    pub level: String,
+    /// Elements loaded from the level during one execution.
+    pub loads: u64,
+    /// Elements stored to the level during one execution.
+    pub stores: u64,
+    /// Sustained traffic at the median wall time, bytes per second.
+    pub bytes_per_s: f64,
+}
+
+/// One backend's timing on one layer.
+#[derive(Debug, Clone)]
+pub struct BackendRun {
+    /// Backend name.
+    pub backend: String,
+    /// MACs per execution (the scaled layer's total).
+    pub macs: u64,
+    /// Timed repetitions taken.
+    pub reps: usize,
+    /// Median wall time per execution, seconds.
+    pub median_s: f64,
+    /// Median absolute deviation of the wall times, seconds.
+    pub mad_s: f64,
+    /// Throughput at the median: MACs per second.
+    pub mac_per_s: f64,
+    /// This backend's MAC/s over the naive backend's (when naive ran).
+    pub speedup_vs_naive: Option<f64>,
+    /// Measured traffic per hierarchy level, with sustained bytes/s.
+    pub per_level: Vec<LevelRate>,
+}
+
+/// All backend runs for one (scaled) benchmark layer.
+#[derive(Debug, Clone)]
+pub struct LayerBench {
+    /// Table 4 layer name.
+    pub name: String,
+    /// The scaled dims that were executed.
+    pub dims: LayerDims,
+    /// The blocking string every backend executed.
+    pub plan_string: String,
+    /// Per-backend timings, in `BenchConfig::backends` order.
+    pub runs: Vec<BackendRun>,
+}
+
+impl LayerBench {
+    /// The run of one backend, if it was requested.
+    pub fn run_of(&self, backend: &str) -> Option<&BackendRun> {
+        self.runs.iter().find(|r| r.backend == backend)
+    }
+}
+
+/// A complete bench invocation: config echo + per-layer results.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    /// The configuration that produced this report.
+    pub config: BenchConfig,
+    /// Per-layer results, in `config.layers` order.
+    pub layers: Vec<LayerBench>,
+    /// Geometric-mean tiled-over-blocked MAC/s ratio across layers
+    /// where both backends ran.
+    pub tiled_vs_blocked: Option<f64>,
+}
+
+/// Median and median-absolute-deviation of a sample set.
+fn median_mad(times: &[f64]) -> (f64, f64) {
+    let med = |xs: &mut Vec<f64>| -> f64 {
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let n = xs.len();
+        if n % 2 == 1 {
+            xs[n / 2]
+        } else {
+            0.5 * (xs[n / 2 - 1] + xs[n / 2])
+        }
+    };
+    let mut xs = times.to_vec();
+    let m = med(&mut xs);
+    let mut dev: Vec<f64> = times.iter().map(|t| (t - m).abs()).collect();
+    (m, med(&mut dev))
+}
+
+/// Time one backend on one planned layer: warmup + `reps` timed
+/// executions, per-level rates from the (deterministic) counters.
+fn time_backend(
+    cfg: &BenchConfig,
+    plan: &crate::plan::BlockingPlan,
+    inputs: &ConvInputs,
+    backend: &str,
+) -> Result<BackendRun> {
+    let be = backend_by_name(backend)?;
+    let mut last: Option<ConvOutput> = None;
+    for _ in 0..cfg.warmup {
+        std::hint::black_box(be.execute(plan, inputs)?);
+    }
+    let mut times = Vec::with_capacity(cfg.reps.max(1));
+    for _ in 0..cfg.reps.max(1) {
+        let t0 = Instant::now();
+        let out = std::hint::black_box(be.execute(plan, inputs)?);
+        times.push(t0.elapsed().as_secs_f64());
+        last = Some(out);
+    }
+    let out = last.expect("at least one timed rep");
+    let (median_s, mad_s) = median_mad(&times);
+    let per_level = out
+        .counters
+        .per_level()
+        .into_iter()
+        .map(|(level, t)| LevelRate {
+            level,
+            loads: t.loads,
+            stores: t.stores,
+            bytes_per_s: (t.total() * ELEM_BYTES) as f64 / median_s.max(1e-12),
+        })
+        .collect();
+    Ok(BackendRun {
+        backend: backend.to_string(),
+        macs: out.counters.macs,
+        reps: times.len(),
+        median_s,
+        mad_s,
+        mac_per_s: out.counters.macs as f64 / median_s.max(1e-12),
+        speedup_vs_naive: None, // filled once the naive run exists
+        per_level,
+    })
+}
+
+/// Run the whole benchmark matrix. In smoke mode this fails when the
+/// tiled backend is slower than the interpreter on any layer — the CI
+/// gate that keeps the fast path actually fast.
+pub fn run_bench(cfg: &BenchConfig) -> Result<BenchReport> {
+    ensure!(!cfg.layers.is_empty(), "no layers to bench");
+    ensure!(!cfg.backends.is_empty(), "no backends to bench");
+    if cfg.smoke {
+        // The gate must fail closed: comparing nothing is not a pass.
+        for required in ["blocked", "tiled"] {
+            ensure!(
+                cfg.backends.iter().any(|b| b == required),
+                "smoke mode enforces tiled >= blocked, so both must be \
+                 benched (missing '{}' from --backends)",
+                required
+            );
+        }
+    }
+    let mut layers = Vec::new();
+    for name in &cfg.layers {
+        let bench = by_name(name)
+            .ok_or_else(|| anyhow!("unknown layer '{}' (see `figures --table4`)", name))?;
+        let dims = bench.dims.scaled_for_sim(cfg.max_macs);
+        let beam = if cfg.full_search {
+            BeamConfig::default()
+        } else {
+            BeamConfig::quick()
+        };
+        let plan = Planner::for_named(bench.name, dims)
+            .target(Target::Bespoke {
+                budget_bytes: cfg.budget_bytes,
+            })
+            .levels(cfg.levels)
+            .beam(beam)
+            .plan()?;
+        let inputs = ConvInputs::synthetic(dims, cfg.seed);
+        let mut runs = Vec::new();
+        for backend in &cfg.backends {
+            runs.push(time_backend(cfg, &plan, &inputs, backend)?);
+        }
+        if let Some(naive_rate) = runs
+            .iter()
+            .find(|r| r.backend == "naive")
+            .map(|r| r.mac_per_s)
+        {
+            for r in &mut runs {
+                r.speedup_vs_naive = Some(r.mac_per_s / naive_rate.max(1e-12));
+            }
+        }
+        let layer = LayerBench {
+            name: bench.name.to_string(),
+            dims,
+            plan_string: plan.string.notation(),
+            runs,
+        };
+        if cfg.smoke {
+            if let (Some(tiled), Some(blocked)) =
+                (layer.run_of("tiled"), layer.run_of("blocked"))
+            {
+                ensure!(
+                    tiled.mac_per_s >= blocked.mac_per_s,
+                    "smoke gate: tiled ({} MAC/s) is slower than the interpreter \
+                     ({} MAC/s) on {}",
+                    eng(tiled.mac_per_s),
+                    eng(blocked.mac_per_s),
+                    layer.name
+                );
+            }
+        }
+        layers.push(layer);
+    }
+    let ratios: Vec<f64> = layers
+        .iter()
+        .filter_map(|l| {
+            Some(l.run_of("tiled")?.mac_per_s / l.run_of("blocked")?.mac_per_s.max(1e-12))
+        })
+        .collect();
+    let tiled_vs_blocked = if ratios.is_empty() {
+        None
+    } else {
+        Some((ratios.iter().map(|r| r.ln()).sum::<f64>() / ratios.len() as f64).exp())
+    };
+    Ok(BenchReport {
+        config: cfg.clone(),
+        layers,
+        tiled_vs_blocked,
+    })
+}
+
+impl BenchReport {
+    /// Print the human-readable tables.
+    pub fn print(&self) {
+        for layer in &self.layers {
+            let mut t = Table::new(
+                &format!("{} ({}) — {}", layer.name, layer.dims, layer.plan_string),
+                &["backend", "median", "MAD", "MAC/s", "vs naive", "DRAM B/s"],
+            );
+            for r in &layer.runs {
+                let dram = r
+                    .per_level
+                    .iter()
+                    .find(|l| l.level == "DRAM")
+                    .map(|l| eng(l.bytes_per_s))
+                    .unwrap_or_else(|| "-".to_string());
+                t.row(vec![
+                    r.backend.clone(),
+                    format!("{:.3} ms", r.median_s * 1e3),
+                    format!("{:.3} ms", r.mad_s * 1e3),
+                    eng(r.mac_per_s),
+                    r.speedup_vs_naive
+                        .map(|s| format!("{:.2}x", s))
+                        .unwrap_or_else(|| "-".to_string()),
+                    dram,
+                ]);
+            }
+            t.print();
+        }
+        if let Some(s) = self.tiled_vs_blocked {
+            println!("tiled vs blocked (geomean MAC/s across layers): {:.1}x", s);
+        }
+    }
+
+    /// Serialize the report as the `BENCH_4.json` document.
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("kind", json::s("cnnblk-bench"));
+        root.set("version", json::unum(1));
+        let c = &self.config;
+        let mut cj = Json::obj();
+        cj.set("max_macs", json::unum(c.max_macs))
+            .set("warmup", json::unum(c.warmup as u64))
+            .set("reps", json::unum(c.reps as u64))
+            .set("seed", json::unum(c.seed))
+            .set("levels", json::unum(c.levels as u64))
+            .set("budget_bytes", json::unum(c.budget_bytes))
+            .set("full_search", Json::Bool(c.full_search))
+            .set("smoke", Json::Bool(c.smoke));
+        root.set("config", cj);
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut lj = Json::obj();
+                lj.set("name", json::s(&l.name));
+                let d = &l.dims;
+                let mut dj = Json::obj();
+                dj.set("x", json::unum(d.x))
+                    .set("y", json::unum(d.y))
+                    .set("c", json::unum(d.c))
+                    .set("k", json::unum(d.k))
+                    .set("fw", json::unum(d.fw))
+                    .set("fh", json::unum(d.fh))
+                    .set("b", json::unum(d.b));
+                lj.set("dims", dj);
+                lj.set("plan", json::s(&l.plan_string));
+                let runs: Vec<Json> = l
+                    .runs
+                    .iter()
+                    .map(|r| {
+                        let mut rj = Json::obj();
+                        rj.set("backend", json::s(&r.backend))
+                            .set("macs", json::unum(r.macs))
+                            .set("reps", json::unum(r.reps as u64))
+                            .set("median_s", json::num(r.median_s))
+                            .set("mad_s", json::num(r.mad_s))
+                            .set("mac_per_s", json::num(r.mac_per_s))
+                            .set(
+                                "speedup_vs_naive",
+                                r.speedup_vs_naive.map(json::num).unwrap_or(Json::Null),
+                            );
+                        let levels: Vec<Json> = r
+                            .per_level
+                            .iter()
+                            .map(|lv| {
+                                let mut j = Json::obj();
+                                j.set("level", json::s(&lv.level))
+                                    .set("loads", json::unum(lv.loads))
+                                    .set("stores", json::unum(lv.stores))
+                                    .set("bytes_per_s", json::num(lv.bytes_per_s));
+                                j
+                            })
+                            .collect();
+                        rj.set("per_level", Json::Arr(levels));
+                        rj
+                    })
+                    .collect();
+                lj.set("runs", Json::Arr(runs));
+                lj
+            })
+            .collect();
+        root.set("layers", Json::Arr(layers));
+        let mut sj = Json::obj();
+        sj.set(
+            "tiled_vs_blocked_geomean",
+            self.tiled_vs_blocked.map(json::num).unwrap_or(Json::Null),
+        );
+        root.set("summary", sj);
+        root
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty() + "\n")
+            .map_err(|e| anyhow!("writing {}: {}", path, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> BenchConfig {
+        BenchConfig {
+            layers: vec!["Conv4".to_string()],
+            backends: vec!["naive".to_string(), "tiled".to_string()],
+            max_macs: 30_000,
+            warmup: 0,
+            reps: 1,
+            ..BenchConfig::default()
+        }
+    }
+
+    #[test]
+    fn median_mad_is_robust() {
+        let (m, mad) = median_mad(&[1.0, 1.1, 0.9, 1.05, 50.0]);
+        assert!((m - 1.05).abs() < 1e-12, "median {}", m);
+        assert!(mad < 0.2, "MAD {} blew up on the outlier", mad);
+        let (m2, mad2) = median_mad(&[2.0, 4.0]);
+        assert_eq!(m2, 3.0);
+        assert_eq!(mad2, 1.0);
+    }
+
+    #[test]
+    fn bench_runs_and_serializes() {
+        let report = run_bench(&tiny()).unwrap();
+        assert_eq!(report.layers.len(), 1);
+        let layer = &report.layers[0];
+        assert_eq!(layer.runs.len(), 2);
+        for r in &layer.runs {
+            assert!(r.macs > 0);
+            assert!(r.mac_per_s > 0.0);
+            assert!(!r.per_level.is_empty());
+            assert!(r.speedup_vs_naive.is_some());
+        }
+        let j = report.to_json();
+        assert_eq!(j.get("kind").and_then(|k| k.as_str()), Some("cnnblk-bench"));
+        let text = j.pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("layers").and_then(|l| l.as_arr()).unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn unknown_layer_or_backend_is_a_clean_error() {
+        let mut cfg = tiny();
+        cfg.layers = vec!["Conv99".to_string()];
+        assert!(run_bench(&cfg).is_err());
+        let mut cfg = tiny();
+        cfg.backends = vec!["cuda".to_string()];
+        assert!(run_bench(&cfg).is_err());
+    }
+}

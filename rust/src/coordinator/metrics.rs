@@ -17,6 +17,12 @@ pub struct Metrics {
     pub padded_slots: u64,
     /// Requests that returned an error.
     pub errors: u64,
+    /// Multiply-accumulates executed by the serving backend (interpreted
+    /// mode; 0 on the PJRT path, which does not expose MAC counts).
+    pub macs: u64,
+    /// Name of the backend serving the pipeline (labels the MAC/s line;
+    /// empty when unknown).
+    pub backend: String,
 }
 
 impl Metrics {
@@ -39,6 +45,11 @@ impl Metrics {
         self.errors += 1;
     }
 
+    /// Record MACs executed by a batch (interpreted serving).
+    pub fn record_macs(&mut self, macs: u64) {
+        self.macs += macs;
+    }
+
     /// Exact latency percentile (`q` in [0, 1]) over all requests.
     pub fn latency_percentile(&self, q: f64) -> Duration {
         if self.latencies_us.is_empty() {
@@ -58,9 +69,11 @@ impl Metrics {
         self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
     }
 
-    /// One-line serving summary for a run of `wall` duration.
+    /// One-line serving summary for a run of `wall` duration. When the
+    /// executor recorded MAC counts (interpreted serving), appends the
+    /// per-backend compute throughput.
     pub fn report(&self, wall: Duration) -> String {
-        format!(
+        let mut line = format!(
             "requests={} batches={} mean_batch={:.2} padded={} errors={} \
              p50={:?} p90={:?} p99={:?} throughput={:.1} req/s",
             self.requests,
@@ -72,7 +85,21 @@ impl Metrics {
             self.latency_percentile(0.90),
             self.latency_percentile(0.99),
             self.requests as f64 / wall.as_secs_f64().max(1e-9),
-        )
+        );
+        if self.macs > 0 {
+            let label = if self.backend.is_empty() {
+                "?".to_string()
+            } else {
+                self.backend.clone()
+            };
+            line.push_str(&format!(
+                " backend={} macs={} mac_per_s={}",
+                label,
+                crate::util::table::eng(self.macs as f64),
+                crate::util::table::eng(self.macs as f64 / wall.as_secs_f64().max(1e-9)),
+            ));
+        }
+        line
     }
 }
 
@@ -110,5 +137,21 @@ mod tests {
         assert_eq!(m.mean_batch_size(), 0.0);
         let r = m.report(Duration::from_secs(1));
         assert!(r.contains("requests=0"));
+        // no MAC counts recorded -> no mac_per_s clutter
+        assert!(!r.contains("mac_per_s"));
+    }
+
+    #[test]
+    fn mac_throughput_reported_per_backend() {
+        let mut m = Metrics {
+            backend: "tiled".to_string(),
+            ..Metrics::default()
+        };
+        m.record_macs(500);
+        m.record_macs(1_500);
+        assert_eq!(m.macs, 2_000);
+        let r = m.report(Duration::from_secs(2));
+        assert!(r.contains("backend=tiled"), "{}", r);
+        assert!(r.contains("mac_per_s=1.00K"), "{}", r);
     }
 }

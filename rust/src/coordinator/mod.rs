@@ -9,5 +9,5 @@ pub mod pipeline;
 pub mod server;
 
 pub use metrics::Metrics;
-pub use pipeline::InterpretedPipeline;
+pub use pipeline::{InterpretedPipeline, PipelineRun};
 pub use server::{Execution, InferenceServer, ServerConfig};

@@ -5,21 +5,31 @@
 //! weights; it needs `make artifacts` and the offline image's `xla`
 //! crate. This module is the backend-registry route the coordinator
 //! falls back on (and CI exercises): each conv layer is a
-//! [`BlockingPlan`] executed by a named backend ("naive" or "blocked"),
-//! chained with the same ReLU / 2x2-max-pool structure as
+//! [`BlockingPlan`] executed by a named backend ("naive", "blocked" or
+//! "tiled"), chained with the same ReLU / 2x2-max-pool structure as
 //! `python/compile/model.py`, over deterministic synthetic weights.
 //! Numerics are self-consistent (server output == direct pipeline run)
 //! rather than golden-checked — the PJRT artifacts bake different
 //! weights.
+//!
+//! Batches run **in parallel**: [`InterpretedPipeline::run_batch`] fans
+//! the images of a batch across the shared
+//! [`crate::util::pool::WorkerPool`] (width from `CNNBLK_THREADS` /
+//! `with_thread_cap`, pool kept alive across batches). Images are
+//! independent — each is a fixed chain of f32 executions — so outputs
+//! and summed [`AccessCounters`](crate::runtime::backend::AccessCounters)
+//! are byte-identical at any worker count (pinned by a test below and
+//! by CI's two-thread-count runs).
 
 use super::naive_conv::{maxpool2, relu};
 use crate::optimizer::beam::BeamConfig;
 use crate::plan::BlockingPlan;
 use crate::runtime::backend::{backend_by_name, Backend, ConvInputs};
 use crate::runtime::Manifest;
+use crate::util::pool::{default_threads, par_map_with, WorkerPool};
 use crate::util::rng::Rng;
 use anyhow::{ensure, Context, Result};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// One conv layer of the interpreted pipeline: its plan plus the
 /// synthetic weights it executes with.
@@ -34,11 +44,33 @@ pub struct PipelineLayer {
     pub pool_after: bool,
 }
 
+/// The outcome of running images through the pipeline: the flat output
+/// activations plus counters summed across every layer execution (and,
+/// for a batch, across every image).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineRun {
+    /// Flat output activations (per-image outputs back to back).
+    pub output: Vec<f32>,
+    /// Multiply-accumulates executed.
+    pub macs: u64,
+    /// DRAM element traffic (loads + stores) the backends measured.
+    pub dram_elems: u64,
+}
+
+/// The immutable, shareable part of the pipeline: what pool workers
+/// execute against.
+struct PipelineInner {
+    layers: Vec<PipelineLayer>,
+    backend: Arc<dyn Backend>,
+}
+
 /// A conv→ReLU(→pool) chain executed through a plan backend.
 pub struct InterpretedPipeline {
-    /// The layers, in execution order.
-    pub layers: Vec<PipelineLayer>,
-    backend: Arc<dyn Backend>,
+    inner: Arc<PipelineInner>,
+    /// Lazily-created worker pool for batch fan-out, kept across
+    /// batches; re-created when the requested width changes
+    /// (`CNNBLK_THREADS` / `with_thread_cap`).
+    pool: Mutex<Option<Arc<WorkerPool>>>,
 }
 
 impl InterpretedPipeline {
@@ -100,7 +132,10 @@ impl InterpretedPipeline {
                 pool_after,
             });
         }
-        Ok(InterpretedPipeline { layers, backend })
+        Ok(InterpretedPipeline {
+            inner: Arc::new(PipelineInner { layers, backend }),
+            pool: Mutex::new(None),
+        })
     }
 
     /// Pipeline from an artifact manifest's rehydrated plans — the same
@@ -125,51 +160,55 @@ impl InterpretedPipeline {
             .context("planning the default e2e pipeline")
     }
 
+    /// The layers, in execution order.
+    pub fn layers(&self) -> &[PipelineLayer] {
+        &self.inner.layers
+    }
+
     /// The backend executing each conv layer.
     pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
+        self.inner.backend.name()
     }
 
     /// Flat input length for one image: `C x (Y+Fh-1) x (X+Fw-1)` of the
     /// first layer.
     pub fn input_len(&self) -> usize {
-        let d = self.layers[0].plan.dims;
-        (d.c * (d.y + d.fh - 1) * (d.x + d.fw - 1)) as usize
+        self.inner.input_len()
     }
 
     /// Flat output length for one image: `K x Y x X` of the last layer.
     pub fn output_len(&self) -> usize {
-        let d = self.layers.last().unwrap().plan.dims;
+        let d = self.inner.layers.last().unwrap().plan.dims;
         (d.k * d.y * d.x) as usize
+    }
+
+    /// Total MACs one image costs across the conv layers (fixed by the
+    /// plans, independent of the data).
+    pub fn macs_per_image(&self) -> u64 {
+        self.inner.layers.iter().map(|l| l.plan.dims.macs()).sum()
     }
 
     /// Run one image through the chain: per layer, the plan backend's
     /// conv, then ReLU, then (where the shapes chain that way) a 2x2
     /// max-pool — mirroring `python/compile/model.py` minus the bias.
     pub fn run_image(&self, image: &[f32]) -> Result<Vec<f32>> {
-        ensure!(
-            image.len() == self.input_len(),
-            "image has {} elements, pipeline expects {}",
-            image.len(),
-            self.input_len()
-        );
-        let mut h = image.to_vec();
-        for layer in &self.layers {
-            let d = layer.plan.dims;
-            let inputs = ConvInputs::new(d, h, layer.weights.clone())?;
-            let out = self.backend.execute(&layer.plan, &inputs)?;
-            h = out.output;
-            relu(&mut h);
-            if layer.pool_after {
-                let (pooled, _) = maxpool2(&h, (d.k as usize, d.y as usize, d.x as usize));
-                h = pooled;
-            }
-        }
-        Ok(h)
+        Ok(self.inner.run_image_counted(image)?.output)
     }
 
     /// Run `b` images stored flat back-to-back; output is flat too.
+    /// Convenience wrapper over [`InterpretedPipeline::run_batch_counted`]
+    /// (which the serving loop calls directly with an owned buffer).
     pub fn run_batch(&self, flat: &[f32], b: usize) -> Result<Vec<f32>> {
+        Ok(self.run_batch_counted(flat.to_vec(), b)?.output)
+    }
+
+    /// Run a batch and report the summed counters. Images fan out
+    /// across the worker pool; per-image work is untouched by the
+    /// parallelism, so outputs and counters are byte-identical at any
+    /// worker count. Takes the batch by value so the serving hot path
+    /// hands its buffer straight to the `'static` pool jobs without an
+    /// extra copy.
+    pub fn run_batch_counted(&self, flat: Vec<f32>, b: usize) -> Result<PipelineRun> {
         let per = self.input_len();
         ensure!(
             flat.len() == b * per,
@@ -178,17 +217,93 @@ impl InterpretedPipeline {
             b * per,
             flat.len()
         );
-        let mut out = Vec::with_capacity(b * self.output_len());
-        for i in 0..b {
-            out.extend(self.run_image(&flat[i * per..(i + 1) * per])?);
+        let runs: Vec<Result<PipelineRun>> = if b <= 1 || default_threads() <= 1 {
+            (0..b)
+                .map(|i| self.inner.run_image_counted(&flat[i * per..(i + 1) * per]))
+                .collect()
+        } else {
+            // Share the batch across the pool's 'static jobs; workers
+            // index their image out of the one buffer.
+            let shared: Arc<Vec<f32>> = Arc::new(flat);
+            let inner = Arc::clone(&self.inner);
+            par_map_with(&self.pool(), (0..b).collect::<Vec<usize>>(), move |i| {
+                inner.run_image_counted(&shared[i * per..(i + 1) * per])
+            })
+        };
+        let mut out = PipelineRun {
+            output: Vec::with_capacity(b * self.output_len()),
+            macs: 0,
+            dram_elems: 0,
+        };
+        for run in runs {
+            let run = run?;
+            out.output.extend(run.output);
+            out.macs += run.macs;
+            out.dram_elems += run.dram_elems;
         }
         Ok(out)
+    }
+
+    /// The batch pool, created on first use and re-created when the
+    /// requested worker count changes.
+    fn pool(&self) -> Arc<WorkerPool> {
+        let mut guard = self.pool.lock().unwrap();
+        let want = default_threads();
+        if let Some(p) = guard.as_ref() {
+            if p.threads() == want {
+                return Arc::clone(p);
+            }
+        }
+        let p = Arc::new(WorkerPool::new(want));
+        *guard = Some(Arc::clone(&p));
+        p
+    }
+}
+
+impl PipelineInner {
+    fn input_len(&self) -> usize {
+        let d = self.layers[0].plan.dims;
+        (d.c * (d.y + d.fh - 1) * (d.x + d.fw - 1)) as usize
+    }
+
+    /// One image through the conv→ReLU(→pool) chain, accumulating the
+    /// backends' measured counters.
+    fn run_image_counted(&self, image: &[f32]) -> Result<PipelineRun> {
+        ensure!(
+            image.len() == self.input_len(),
+            "image has {} elements, pipeline expects {}",
+            image.len(),
+            self.input_len()
+        );
+        let mut h = image.to_vec();
+        let mut macs = 0u64;
+        let mut dram_elems = 0u64;
+        for layer in &self.layers {
+            let d = layer.plan.dims;
+            let inputs = ConvInputs::new(d, h, layer.weights.clone())?;
+            let out = self.backend.execute(&layer.plan, &inputs)?;
+            macs += out.counters.macs;
+            let dc = &out.counters.dram;
+            dram_elems += dc.input_loads + dc.kernel_loads + dc.output_loads + dc.output_stores;
+            h = out.output;
+            relu(&mut h);
+            if layer.pool_after {
+                let (pooled, _) = maxpool2(&h, (d.k as usize, d.y as usize, d.x as usize));
+                h = pooled;
+            }
+        }
+        Ok(PipelineRun {
+            output: h,
+            macs,
+            dram_elems,
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::pool::with_thread_cap;
 
     fn quick() -> InterpretedPipeline {
         InterpretedPipeline::plan_default(&BeamConfig::quick(), "naive", 0).unwrap()
@@ -197,12 +312,12 @@ mod tests {
     #[test]
     fn default_pipeline_chains_alexnet_mini() {
         let p = quick();
-        assert_eq!(p.layers.len(), 3);
+        assert_eq!(p.layers().len(), 3);
         assert_eq!(p.input_len(), 8 * 36 * 36);
         assert_eq!(p.output_len(), 32 * 5 * 5);
-        assert!(p.layers[0].pool_after);
-        assert!(p.layers[1].pool_after);
-        assert!(!p.layers[2].pool_after);
+        assert!(p.layers()[0].pool_after);
+        assert!(p.layers()[1].pool_after);
+        assert!(!p.layers()[2].pool_after);
     }
 
     #[test]
@@ -229,6 +344,50 @@ mod tests {
         let solo1 = p.run_image(&flat[per..]).unwrap();
         assert_eq!(&batch[..solo0.len()], &solo0[..]);
         assert_eq!(&batch[solo0.len()..], &solo1[..]);
+    }
+
+    #[test]
+    fn parallel_batch_is_identical_across_worker_counts() {
+        // The parallel-serving correctness pin: the same batch through
+        // the same pipeline at 1 vs 4 workers must produce byte-identical
+        // outputs and identical summed counters. (CI additionally runs
+        // the whole suite under CNNBLK_THREADS=1 and =4.)
+        let p = quick();
+        let mut rng = Rng::new(11);
+        let per = p.input_len();
+        let n = 5;
+        let flat: Vec<f32> = (0..n * per).map(|_| rng.f64() as f32 - 0.5).collect();
+        let serial = with_thread_cap(1, || p.run_batch_counted(flat.clone(), n).unwrap());
+        let parallel = with_thread_cap(4, || p.run_batch_counted(flat.clone(), n).unwrap());
+        assert_eq!(serial.output, parallel.output, "outputs diverged");
+        assert_eq!(serial.macs, parallel.macs, "summed MACs diverged");
+        assert_eq!(
+            serial.dram_elems, parallel.dram_elems,
+            "summed DRAM counters diverged"
+        );
+        assert_eq!(serial.macs, (n as u64) * p.macs_per_image());
+        assert!(serial.dram_elems > 0);
+    }
+
+    #[test]
+    fn tiled_backend_serves_the_pipeline() {
+        // The serving default: the same images through "tiled" must
+        // match the naive-backend pipeline within the backend tolerance.
+        let naive = quick();
+        let tiled =
+            InterpretedPipeline::plan_default(&BeamConfig::quick(), "tiled", 0).unwrap();
+        assert_eq!(tiled.backend_name(), "tiled");
+        let mut rng = Rng::new(5);
+        let img: Vec<f32> = (0..naive.input_len())
+            .map(|_| rng.f64() as f32 - 0.5)
+            .collect();
+        let a = naive.run_image(&img).unwrap();
+        let b = tiled.run_image(&img).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            let rel = (x - y).abs() / x.abs().max(y.abs()).max(1.0);
+            assert!(rel < 1e-3, "{} vs {}", x, y);
+        }
     }
 
     #[test]

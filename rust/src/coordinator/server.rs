@@ -36,7 +36,8 @@ pub enum Execution {
     /// needs `make artifacts` and the `pjrt` feature).
     Pjrt,
     /// Per-layer plans executed through the backend registry
-    /// (`"naive"` or `"blocked"`) with deterministic synthetic weights —
+    /// (`"naive"`, `"blocked"` or `"tiled"` — the tiled fast path is
+    /// the serving default) with deterministic synthetic weights —
     /// see [`InterpretedPipeline`].
     Interpreted {
         /// Backend name, resolved via
@@ -137,11 +138,14 @@ impl InferenceServer {
         let input_len = pipeline.input_len();
         let output_len = pipeline.output_len();
         let layer_plans: Vec<crate::plan::BlockingPlan> =
-            pipeline.layers.iter().map(|l| l.plan.clone()).collect();
+            pipeline.layers().iter().map(|l| l.plan.clone()).collect();
         let layer_strings = layer_plans.iter().map(|p| p.string.notation()).collect();
 
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics = Arc::new(Mutex::new(Metrics {
+            backend: backend.clone(),
+            ..Metrics::default()
+        }));
         let metrics2 = metrics.clone();
         let handle = std::thread::Builder::new()
             .name("cnnblk-interp".into())
@@ -312,7 +316,9 @@ fn executor_loop(
 }
 
 /// Executor loop for interpreted mode: the same batcher, with the
-/// formed batch run through the plan backend (no ladder, no padding).
+/// formed batch fanned across the pipeline's worker pool (no ladder,
+/// no padding). Records the executed MACs so `Metrics` can report the
+/// serving backend's MAC/s.
 fn interpreted_loop(
     cfg: ServerConfig,
     pipeline: InterpretedPipeline,
@@ -331,9 +337,15 @@ fn interpreted_loop(
         for r in &batch {
             flat.extend_from_slice(&r.input);
         }
-        let result = pipeline.run_batch(&flat, formed);
-        metrics.lock().unwrap().record_batch(formed, formed);
-        deliver(batch, result, &metrics, output_len);
+        let result = pipeline.run_batch_counted(flat, formed);
+        {
+            let mut m = metrics.lock().unwrap();
+            m.record_batch(formed, formed);
+            if let Ok(run) = &result {
+                m.record_macs(run.macs);
+            }
+        }
+        deliver(batch, result.map(|run| run.output), &metrics, output_len);
     }
 }
 
@@ -441,7 +453,7 @@ mod tests {
             InterpretedPipeline::plan_default(&BeamConfig::quick(), "naive", 0).unwrap();
         assert_eq!(server.input_len, pipeline.input_len());
         assert_eq!(server.output_len, pipeline.output_len());
-        assert_eq!(server.layer_plans.len(), pipeline.layers.len());
+        assert_eq!(server.layer_plans.len(), pipeline.layers().len());
         let img = test_image(&pipeline, 3);
         let got = server.infer(img.clone()).unwrap();
         assert_eq!(got, pipeline.run_image(&img).unwrap());
@@ -464,6 +476,10 @@ mod tests {
         let m = server.metrics.lock().unwrap();
         assert_eq!(m.requests, 6);
         assert!(m.batches <= 6);
+        // serving MAC/s accounting: 6 images worth of pipeline MACs
+        assert_eq!(m.macs, 6 * pipeline.macs_per_image());
+        assert_eq!(m.backend, "naive");
+        assert!(m.report(Duration::from_secs(1)).contains("mac_per_s"));
         drop(m);
         server.shutdown();
     }

@@ -45,9 +45,10 @@
 //!
 //! Plans are also directly *runnable*: the [`runtime::backend`] layer
 //! executes a plan on real tensors — [`Backend`] dispatched from
-//! `provenance.target`, with a naive Algorithm 1 oracle and a blocked
-//! loop-nest interpreter that measures per-level access counts as it
-//! runs — and `rust/tests/backend.rs` pins measured counts against the
+//! `provenance.target` (the tiled SIMD fast path by default), with a
+//! naive Algorithm 1 oracle and a blocked per-MAC interpreter
+//! selectable by name, all measuring per-level access counts as they
+//! run — and `rust/tests/backend.rs` pins measured counts against the
 //! model's predictions:
 //!
 //! ```ignore
@@ -78,6 +79,9 @@
 //! * [`coordinator`] — threaded batching inference driver (L3), PJRT or
 //!   interpreted through the backend registry.
 //! * [`figures`] — harness that regenerates each paper table/figure.
+//! * [`bench`] — the `cnnblk bench` perf harness: naive vs blocked vs
+//!   tiled MAC/s and per-level bytes/s on the Table 4 layers, written
+//!   to the machine-readable `BENCH_4.json` trajectory file.
 //! * [`util`] — offline substrates (JSON, CLI, RNG, bench, threads).
 //!
 //! See `docs/ARCHITECTURE.md` for the paper-section → module map and the
@@ -86,6 +90,7 @@
 #![warn(missing_docs)]
 
 pub mod baselines;
+pub mod bench;
 pub mod cachesim;
 pub mod coordinator;
 pub mod figures;

@@ -9,6 +9,7 @@
 //! Subcommands:
 //!   optimize   plan a benchmark layer (cache-aware)
 //!   run        execute a planned layer on a backend; measured-vs-predicted
+//!   bench      time naive vs blocked vs tiled on the Table 4 layers
 //!   schedules  plan the e2e pipeline layers and emit schedules.json
 //!   figures    regenerate the paper's tables/figures (see --help text)
 //!   cachesim   run the Fig. 3/4 cache-trace comparison
@@ -18,6 +19,7 @@
 //! docs/CLI.md documents every subcommand and flag; `print_help` below
 //! must stay in agreement with it.
 
+use cnn_blocking::bench::{run_bench, BenchConfig};
 use cnn_blocking::coordinator::{Execution, InferenceServer, ServerConfig};
 use cnn_blocking::figures::{fig3_4, fig5_8, fig9, tables};
 use cnn_blocking::model::benchmarks::{all_benchmarks, by_name};
@@ -40,6 +42,7 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand() {
         Some("optimize") => cmd_optimize(&args),
         Some("run") => cmd_run(&args),
+        Some("bench") => cmd_bench(&args),
         Some("schedules") => cmd_schedules(&args),
         Some("figures") => cmd_figures(&args),
         Some("cachesim") => cmd_cachesim(&args),
@@ -65,17 +68,23 @@ fn print_help() {
          \x20         [--top 5] [--cache PATH] [--no-cache]   (repeat runs hit the plan cache)\n\
          \x20         --network AlexNet                       (plan a whole network through the\n\
          \x20         engine: repeated shapes searched once, unique shapes in parallel)\n\
-         run       --benchmark Conv1 [--backend naive|blocked] (execute the planned layer and\n\
-         \x20         print measured-vs-predicted access counts; default backend blocked)\n\
+         run       --benchmark Conv1 [--backend naive|blocked|tiled] (execute the planned layer\n\
+         \x20         and print measured-vs-predicted access counts; default backend tiled)\n\
          \x20         [--levels 3] [--budget-kb 8192] [--target bespoke|diannao|cpu]\n\
          \x20         [--strategy beam|exhaustive|random] [--cache PATH] [--no-cache]\n\
          \x20         [--max-macs 2000000]                    (scale the layer for execution)\n\
-         \x20         [--seed 42] [--verify]                  (--verify cross-checks vs naive)\n\
+         \x20         [--seed 42] [--verify]                  (--verify cross-checks vs naive\n\
+         \x20         and prints the tiled-vs-blocked wall-time speedup)\n\
+         bench     [--layers Conv1,..,Conv5] [--backends naive,blocked,tiled]\n\
+         \x20         [--max-macs 2000000] [--reps 5] [--warmup 1] [--seed 42]\n\
+         \x20         [--levels 3] [--budget-kb 8192] [--out BENCH_4.json]\n\
+         \x20         [--smoke]    (tiny dims, 1 rep; fails if tiled is slower than blocked)\n\
          schedules [--out python/compile/schedules.json]      (step 1 of `make artifacts`)\n\
          figures   [--table1|--table3|--table4|--fig3|--fig5|--fig6|--fig7|--fig8|--fig9|--all]\n\
          cachesim  [--max-macs 20000000]                      (Figs. 3-4 traces)\n\
          serve     [--requests 256] [--batch 8] [--timeout-ms 2] [--artifacts artifacts]\n\
-         \x20         [--interpret naive|blocked]             (plan-backend serving, no PJRT)\n\
+         \x20         [--interpret [naive|blocked|tiled]]     (plan-backend serving, no PJRT;\n\
+         \x20         bare --interpret serves the tiled fast path)\n\
          validate  [--artifacts artifacts]                    (PJRT round-trip checks)\n\
          \n\
          add --full-search for the paper-width beam (128 seeds) instead of the quick one"
@@ -285,7 +294,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let plan = planner.plan()?;
     println!("plan:  {}", plan);
 
-    let backend_name = args.get_or("backend", "blocked");
+    let backend_name = args.get_or("backend", "tiled");
     let backend = backend_by_name(&backend_name)?;
     let inputs = ConvInputs::synthetic(dims, args.get_u64("seed", 42));
     let t0 = Instant::now();
@@ -311,6 +320,21 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             max_rel < 1e-3,
             "backend output diverged from the naive oracle"
         );
+        // Make the fast path's win visible without the bench harness:
+        // time whichever of tiled/blocked was not the main run.
+        let time_of = |name: &str| -> anyhow::Result<Duration> {
+            let t0 = Instant::now();
+            plan.execute_on(name, &inputs)?;
+            Ok(t0.elapsed())
+        };
+        let blocked_wall = if backend_name == "blocked" { wall } else { time_of("blocked")? };
+        let tiled_wall = if backend_name == "tiled" { wall } else { time_of("tiled")? };
+        println!(
+            "speedup: tiled {:?} vs blocked {:?} — {:.1}x",
+            tiled_wall,
+            blocked_wall,
+            blocked_wall.as_secs_f64() / tiled_wall.as_secs_f64().max(1e-9)
+        );
     }
 
     let pred = predicted_counters(&plan);
@@ -320,6 +344,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         // headline contrast.
         let naive_dram = (out.counters.dram.input_loads
             + out.counters.dram.kernel_loads
+            + out.counters.dram.output_loads
             + out.counters.dram.output_stores) as f64;
         let blocked_dram = pred.dram_input_loads + pred.dram_kernel_loads
             + pred.dram_output_loads
@@ -339,8 +364,8 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             eng(pred.dram_kernel_loads),
         ]);
         t.row(vec![
-            "output stores".into(),
-            eng(out.counters.dram.output_stores as f64),
+            "output r+w".into(),
+            eng((out.counters.dram.output_loads + out.counters.dram.output_stores) as f64),
             eng(pred.dram_output_loads + pred.dram_output_stores),
         ]);
         t.print();
@@ -352,9 +377,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
 
-    // Blocked backend: the full measured-vs-predicted report.
+    // Blocked/tiled backends: the full measured-vs-predicted report.
     let mut t = Table::new(
-        "measured vs predicted accesses (blocked backend)",
+        &format!("measured vs predicted accesses ({} backend)", backend_name),
         &["buffer", "level", "fills meas", "fills pred", "elems meas", "elems pred", "rel err"],
     );
     let rel = |meas: f64, pred: f64| -> String {
@@ -417,6 +442,60 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         eng(op.output_accesses as f64),
         op.output_level,
     );
+    Ok(())
+}
+
+/// `cnnblk bench`: time the executing backends on (scaled) Table 4
+/// layers and write the machine-readable `BENCH_4.json` report — the
+/// repo's benchmark trajectory file. `--smoke` is the CI configuration:
+/// tiny dims, one rep, and a hard failure when the tiled fast path is
+/// slower than the per-MAC interpreter.
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    check_flags(
+        args,
+        &[
+            "layers",
+            "backends",
+            "max-macs",
+            "reps",
+            "warmup",
+            "seed",
+            "levels",
+            "budget-kb",
+            "out",
+            "smoke",
+            "full-search",
+        ],
+    )?;
+    let mut cfg = if args.has("smoke") {
+        BenchConfig::smoke()
+    } else {
+        BenchConfig::default()
+    };
+    let list = |v: &str| -> Vec<String> {
+        v.split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+    if let Some(layers) = args.get("layers") {
+        cfg.layers = list(layers);
+    }
+    if let Some(backends) = args.get("backends") {
+        cfg.backends = list(backends);
+    }
+    cfg.max_macs = args.get_u64("max-macs", cfg.max_macs);
+    cfg.reps = args.get_u64("reps", cfg.reps as u64) as usize;
+    cfg.warmup = args.get_u64("warmup", cfg.warmup as u64) as usize;
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.levels = args.get_u64("levels", cfg.levels as u64) as usize;
+    cfg.budget_bytes = args.get_u64("budget-kb", cfg.budget_bytes / 1024) * 1024;
+    cfg.full_search = args.has("full-search");
+    let report = run_bench(&cfg)?;
+    report.print();
+    let out = args.get_or("out", "BENCH_4.json");
+    report.save(&out)?;
+    println!("wrote {}", out);
     Ok(())
 }
 
@@ -521,10 +600,17 @@ fn cmd_cachesim(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     check_flags(args, &["requests", "batch", "timeout-ms", "artifacts", "interpret"])?;
-    let execution = match args.get("interpret") {
-        Some(backend) => Execution::Interpreted {
-            backend: backend.to_string(),
-        },
+    // A bare `--interpret` (no backend name) serves the tiled fast
+    // path — the interpreted-serving default.
+    let interpret = args.get("interpret").map(|b| {
+        if b == cnn_blocking::util::cli::FLAG_SET {
+            "tiled".to_string()
+        } else {
+            b.to_string()
+        }
+    });
+    let execution = match interpret.clone() {
+        Some(backend) => Execution::Interpreted { backend },
         None => Execution::Pjrt,
     };
     let cfg = ServerConfig {
@@ -536,7 +622,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let n = args.get_u64("requests", 256) as usize;
     let server = InferenceServer::start(cfg)?;
-    match args.get("interpret") {
+    match &interpret {
         Some(b) => println!("server up (interpreted via '{}' backend); pipeline plans:", b),
         None => println!("server up; pipeline plans from the artifact manifest:"),
     }

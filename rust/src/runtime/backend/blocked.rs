@@ -1,4 +1,5 @@
-//! The blocked CPU backend: a loop-nest interpreter for blocking plans.
+//! The blocked CPU backend: a per-MAC loop-nest interpreter for
+//! blocking plans.
 //!
 //! [`BlockedCpuBackend`] executes a plan exactly the way the paper's
 //! model reasons about it: the blocking string *is* the loop nest
@@ -12,6 +13,15 @@
 //! load partials from the parent on fill and write them back on exit,
 //! so accumulation is numerically exact across refills.
 //!
+//! The nest machinery (buffer geometry, fills, writebacks, walker,
+//! counters) lives in [`super::nest`] and is shared with the
+//! [`super::TiledCpuBackend`] fast path; what makes this backend the
+//! *interpreter* is its leaf: it recurses through every loop level and
+//! executes one multiply-accumulate per innermost point
+//! (`Nest::mac_at`), materializing every Table 2 buffer. That makes it
+//! the slowest backend (~tens of ns per MAC) and the most literal one —
+//! the per-MAC oracle the tiled path's tile kernel is checked against.
+//!
 //! Because fills follow model semantics and Table 2 input blocks never
 //! clip at image edges (the halo'd input is exactly
 //! `(X+Fw-1) x (Y+Fh-1)` — every block, including the last along each
@@ -22,21 +32,17 @@
 //!
 //! Cost: `dims.macs()` interpreted MAC steps plus the block-copy
 //! traffic (roughly the predicted fill totals). Meant for the scaled
-//! benchmark dims (`LayerDims::scaled_for_sim`) and the e2e pipeline
-//! layers; executing a full-size Table 4 layer (10^12 MACs) through an
-//! interpreter is not realistic — `cnnblk run` scales dims down before
-//! planning for exactly this reason.
+//! benchmark dims (`LayerDims::scaled_for_sim`) and as the oracle in
+//! tests/benches; for anything throughput-sensitive (`cnnblk run` at
+//! large `--max-macs`, serving) use the tiled backend, which is the
+//! dispatch default.
 
-use super::{
-    AccessCounters, Backend, BufferCounters, ConvInputs, ConvOutput, DramCounters,
-    OperandCounters,
-};
-use crate::model::buffers::{allocate, Tensor};
-use crate::model::dims::Dim;
+use super::nest::Nest;
+use super::{Backend, ConvInputs, ConvOutput};
 use crate::plan::BlockingPlan;
-use anyhow::{anyhow, ensure, Result};
+use anyhow::Result;
 
-/// Loop-nest interpreter backend (see module docs).
+/// Per-MAC loop-nest interpreter backend (see module docs).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BlockedCpuBackend;
 
@@ -46,465 +52,11 @@ impl Backend for BlockedCpuBackend {
     }
 
     fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput> {
-        let d = plan.dims;
-        ensure!(
-            inputs.dims == d,
-            "inputs are for {} but the plan is for {}",
-            inputs.dims,
-            d
-        );
-        plan.string
-            .validate(&d)
-            .map_err(|e| anyhow!("plan string '{}' invalid for {}: {}", plan.string, d, e))?;
-        ensure!(
-            inputs.input.len() as u64 == d.input_elems()
-                && inputs.weights.len() as u64 == d.kernel_elems(),
-            "input/weight tensors do not match {}",
-            d
-        );
-        let mut interp = Interp::new(plan, inputs)?;
-        interp.run();
-        interp.finish(&d)
-    }
-}
-
-/// One real buffer backing a Table 2 virtual buffer during execution.
-/// (Its creation position lives in `Interp::by_pos`.)
-struct Block {
-    tensor: Tensor,
-    ordinal: usize,
-    /// Physical level the plan placed it on (counter label only).
-    level: String,
-    /// Block extents in the tensor's axis order (see `axes of` below).
-    dims4: [u64; 4],
-    /// Global origin of the currently-held block, same axis order.
-    origin: [u64; 4],
-    data: Vec<f32>,
-    fill_events: u64,
-    fill_elems: u64,
-    writeback_elems: u64,
-}
-
-/// One loop level of the nest, precomputed from the blocking string.
-struct LoopLevel {
-    dim: Dim,
-    trip: u64,
-    /// Step of the dim's global offset per iteration (covered extent of
-    /// the dim strictly below this position).
-    stride: u64,
-}
-
-/// Axis order per tensor, chosen to match the DRAM layouts so the DRAM
-/// "parent" is just a block with full extents and origin zero:
-/// input `(B, C, H, W)`, kernel `(K, C, Fh, Fw)`, output `(B, K, Y, X)`.
-fn block_geometry(t: Tensor, cov: &[u64; 7]) -> [u64; 4] {
-    let g = |d: Dim| cov[d as usize];
-    match t {
-        Tensor::Input => [
-            g(Dim::B),
-            g(Dim::C),
-            g(Dim::Y) + g(Dim::Fh) - 1,
-            g(Dim::X) + g(Dim::Fw) - 1,
-        ],
-        Tensor::Kernel => [g(Dim::K), g(Dim::C), g(Dim::Fh), g(Dim::Fw)],
-        Tensor::Output => [g(Dim::B), g(Dim::K), g(Dim::Y), g(Dim::X)],
-    }
-}
-
-/// Global block origin for a tensor given the enclosing-loop offsets.
-/// Input rows/cols fold the window offset in (`h = y + fh`).
-fn block_origin(t: Tensor, off: &[u64; 7]) -> [u64; 4] {
-    let o = |d: Dim| off[d as usize];
-    match t {
-        Tensor::Input => [
-            o(Dim::B),
-            o(Dim::C),
-            o(Dim::Y) + o(Dim::Fh),
-            o(Dim::X) + o(Dim::Fw),
-        ],
-        Tensor::Kernel => [o(Dim::K), o(Dim::C), o(Dim::Fh), o(Dim::Fw)],
-        Tensor::Output => [o(Dim::B), o(Dim::K), o(Dim::Y), o(Dim::X)],
-    }
-}
-
-/// Flat index of global coordinate `g` inside an array of extents
-/// `dims4` whose element [0,0,0,0] sits at global `origin`.
-#[inline]
-fn idx4(dims4: &[u64; 4], origin: &[u64; 4], g: &[u64; 4]) -> usize {
-    let l0 = g[0] - origin[0];
-    let l1 = g[1] - origin[1];
-    let l2 = g[2] - origin[2];
-    let l3 = g[3] - origin[3];
-    debug_assert!(
-        l0 < dims4[0] && l1 < dims4[1] && l2 < dims4[2] && l3 < dims4[3],
-        "coordinate {:?} outside block {:?}@{:?}",
-        g,
-        dims4,
-        origin
-    );
-    (((l0 * dims4[1] + l1) * dims4[2] + l2) * dims4[3] + l3) as usize
-}
-
-/// Copy the whole `region`-sized block at global origin `gorg` from
-/// `(src, sdims, sorg)` into `(dst, ddims, dorg)`; returns elements
-/// moved. Rows (the last axis) are copied contiguously.
-#[allow(clippy::too_many_arguments)] // (array, dims, origin) x2 + region
-fn copy_region(
-    src: &[f32],
-    sdims: &[u64; 4],
-    sorg: &[u64; 4],
-    dst: &mut [f32],
-    ddims: &[u64; 4],
-    dorg: &[u64; 4],
-    region: &[u64; 4],
-    gorg: &[u64; 4],
-) -> u64 {
-    let w = region[3] as usize;
-    for a0 in 0..region[0] {
-        for a1 in 0..region[1] {
-            for a2 in 0..region[2] {
-                let g = [gorg[0] + a0, gorg[1] + a1, gorg[2] + a2, gorg[3]];
-                let si = idx4(sdims, sorg, &g);
-                let di = idx4(ddims, dorg, &g);
-                dst[di..di + w].copy_from_slice(&src[si..si + w]);
-            }
-        }
-    }
-    region[0] * region[1] * region[2] * region[3]
-}
-
-/// Refill buffer `i` of `chain` at `origin`: copy its block from the
-/// next-outer buffer, or from the DRAM-resident tensor (bumping that
-/// tensor's DRAM-load counter) when `i` is the outermost.
-fn fill_chain(
-    chain: &mut [Block],
-    i: usize,
-    origin: [u64; 4],
-    dram_src: &[f32],
-    dram_dims: &[u64; 4],
-    dram_loads: &mut u64,
-) {
-    let (child, parent) = chain.split_at_mut(i + 1);
-    let b = &mut child[i];
-    b.origin = origin;
-    let n = match parent.first() {
-        Some(par) => copy_region(
-            &par.data, &par.dims4, &par.origin, &mut b.data, &b.dims4, &b.origin, &b.dims4,
-            &b.origin,
-        ),
-        None => {
-            let n = copy_region(
-                dram_src, dram_dims, &[0; 4], &mut b.data, &b.dims4, &b.origin, &b.dims4,
-                &b.origin,
-            );
-            *dram_loads += n;
-            n
-        }
-    };
-    b.fill_events += 1;
-    b.fill_elems += n;
-}
-
-struct Interp<'a> {
-    levels: Vec<LoopLevel>,
-    /// Buffers created at each string position, as (tensor, chain index).
-    by_pos: Vec<Vec<(Tensor, usize)>>,
-    input_chain: Vec<Block>,
-    kernel_chain: Vec<Block>,
-    output_chain: Vec<Block>,
-    dram_in: &'a [f32],
-    dram_w: &'a [f32],
-    dram_out: Vec<f32>,
-    in_dims: [u64; 4],
-    w_dims: [u64; 4],
-    out_dims: [u64; 4],
-    dram: DramCounters,
-    macs_done: u64,
-}
-
-impl<'a> Interp<'a> {
-    fn new(plan: &BlockingPlan, inputs: &'a ConvInputs) -> Result<Interp<'a>> {
-        let d = plan.dims;
-        let s = &plan.string;
-        let n = s.len();
-
-        // Table 2 sizes a buffer created at-or-below a hoisted window
-        // loop *without* the window extent that loop sweeps (the model
-        // charges the re-reads through the refetch-rate chain instead),
-        // so such a buffer physically cannot serve the window's reads —
-        // executing it would index outside the block. The optimizer
-        // never hoists Fw/Fh (they stay innermost); reject the rare
-        // hand-written string that does.
-        let first_nonwindow = s
-            .levels
-            .iter()
-            .position(|l| !matches!(l.dim, Dim::Fw | Dim::Fh))
-            .unwrap_or(n);
-        if let Some(hoisted) = s.levels[first_nonwindow.min(n)..]
-            .iter()
-            .find(|l| matches!(l.dim, Dim::Fw | Dim::Fh) && l.range > 1)
-        {
-            return Err(anyhow!(
-                "blocked backend cannot execute '{}': window loop {} is hoisted \
-                 above other loops (Fw/Fh must be innermost)",
-                s,
-                hoisted.dim
-            ));
-        }
-
-        let mut levels = Vec::with_capacity(n);
-        for i in 0..n {
-            let dim = s.levels[i].dim;
-            let stride = s.covered_below(i)[dim as usize];
-            levels.push(LoopLevel {
-                dim,
-                trip: s.trip(i),
-                stride,
-            });
-        }
-
-        let bufs = allocate(s, &d);
-        let mut by_pos: Vec<Vec<(Tensor, usize)>> = vec![Vec::new(); n];
-        let mut chains: [Vec<Block>; 3] = [Vec::new(), Vec::new(), Vec::new()];
-        for (ci, t) in Tensor::ALL.into_iter().enumerate() {
-            for vb in bufs.of(t) {
-                let cov = s.covered_below(vb.created_at);
-                let dims4 = block_geometry(t, &cov);
-                let elems = dims4.iter().product::<u64>();
-                ensure!(
-                    elems == vb.size_elems,
-                    "internal: {}{} block {:?} ({} elems) disagrees with Table 2 size {}",
-                    t,
-                    vb.ordinal,
-                    dims4,
-                    elems,
-                    vb.size_elems
-                );
-                let level = plan
-                    .buffers
-                    .iter()
-                    .find(|b| b.tensor == t && b.ordinal == vb.ordinal)
-                    .map(|b| b.level.clone())
-                    .ok_or_else(|| {
-                        anyhow!(
-                            "plan has no placement for {}{} — plan and string disagree",
-                            t,
-                            vb.ordinal
-                        )
-                    })?;
-                by_pos[vb.created_at].push((t, chains[ci].len()));
-                chains[ci].push(Block {
-                    tensor: t,
-                    ordinal: vb.ordinal,
-                    level,
-                    dims4,
-                    origin: [0; 4],
-                    data: vec![0.0; elems as usize],
-                    fill_events: 0,
-                    fill_elems: 0,
-                    writeback_elems: 0,
-                });
-            }
-        }
-        let [input_chain, kernel_chain, output_chain] = chains;
-
-        Ok(Interp {
-            levels,
-            by_pos,
-            input_chain,
-            kernel_chain,
-            output_chain,
-            dram_in: &inputs.input,
-            dram_w: &inputs.weights,
-            dram_out: vec![0.0; d.output_elems() as usize],
-            in_dims: [d.b, d.c, d.y + d.fh - 1, d.x + d.fw - 1],
-            w_dims: [d.k, d.c, d.fh, d.fw],
-            out_dims: [d.b, d.k, d.y, d.x],
-            dram: DramCounters::default(),
-            macs_done: 0,
-        })
-    }
-
-    fn run(&mut self) {
-        self.subtree(self.levels.len(), [0u64; 7]);
-    }
-
-    /// Execute the sub-nest of the innermost `p` loop levels with the
-    /// enclosing loops fixed at the offsets in `off`. On entry, buffers
-    /// created by loop `p - 1` are (re)filled; on exit, output buffers
-    /// created there write their partials back — the model's "refill on
-    /// every enclosing iteration" semantics.
-    fn subtree(&mut self, p: usize, off: [u64; 7]) {
-        if p == 0 {
-            self.mac(&off);
-            return;
-        }
-        let pos = p - 1;
-        let nbufs = self.by_pos[pos].len();
-        for bi in 0..nbufs {
-            let (t, i) = self.by_pos[pos][bi];
-            self.fill(t, i, &off);
-        }
-        let (dim, trip, stride) = {
-            let l = &self.levels[pos];
-            (l.dim as usize, l.trip, l.stride)
-        };
-        let base = off[dim];
-        let mut inner = off;
-        for it in 0..trip {
-            inner[dim] = base + it * stride;
-            self.subtree(pos, inner);
-        }
-        for bi in 0..nbufs {
-            let (t, i) = self.by_pos[pos][bi];
-            if t == Tensor::Output {
-                self.writeback(i);
-            }
-        }
-    }
-
-    /// (Re)fill buffer `i` of tensor `t`'s chain from its parent (the
-    /// next-outer buffer of the same tensor, or the DRAM tensor). For
-    /// output buffers this loads the current partial sums, so
-    /// accumulation continues exactly where it left off.
-    fn fill(&mut self, t: Tensor, i: usize, off: &[u64; 7]) {
-        let origin = block_origin(t, off);
-        match t {
-            Tensor::Input => fill_chain(
-                &mut self.input_chain,
-                i,
-                origin,
-                self.dram_in,
-                &self.in_dims,
-                &mut self.dram.input_loads,
-            ),
-            Tensor::Kernel => fill_chain(
-                &mut self.kernel_chain,
-                i,
-                origin,
-                self.dram_w,
-                &self.w_dims,
-                &mut self.dram.kernel_loads,
-            ),
-            Tensor::Output => fill_chain(
-                &mut self.output_chain,
-                i,
-                origin,
-                &self.dram_out,
-                &self.out_dims,
-                &mut self.dram.output_loads,
-            ),
-        }
-    }
-
-    /// Write output buffer `i`'s partials back to its parent.
-    fn writeback(&mut self, i: usize) {
-        let (child, parent) = self.output_chain.split_at_mut(i + 1);
-        let b = &mut child[i];
-        let n = match parent.first_mut() {
-            Some(par) => copy_region(
-                &b.data, &b.dims4, &b.origin, &mut par.data, &par.dims4, &par.origin, &b.dims4,
-                &b.origin,
-            ),
-            None => {
-                let n = copy_region(
-                    &b.data,
-                    &b.dims4,
-                    &b.origin,
-                    &mut self.dram_out,
-                    &self.out_dims,
-                    &[0; 4],
-                    &b.dims4,
-                    &b.origin,
-                );
-                self.dram.output_stores += n;
-                n
-            }
-        };
-        b.writeback_elems += n;
-    }
-
-    /// One multiply-accumulate at the innermost point: operands come
-    /// from each tensor's innermost buffer, or straight from DRAM when
-    /// the blocking creates none (e.g. kernels in an FC layer with
-    /// B = 1 — the paper's no-reuse case).
-    #[inline]
-    fn mac(&mut self, off: &[u64; 7]) {
-        let o = |d: Dim| off[d as usize];
-        let gi = [
-            o(Dim::B),
-            o(Dim::C),
-            o(Dim::Y) + o(Dim::Fh),
-            o(Dim::X) + o(Dim::Fw),
-        ];
-        let gw = [o(Dim::K), o(Dim::C), o(Dim::Fh), o(Dim::Fw)];
-        let go = [o(Dim::B), o(Dim::K), o(Dim::Y), o(Dim::X)];
-        let iv = match self.input_chain.first() {
-            Some(b) => b.data[idx4(&b.dims4, &b.origin, &gi)],
-            None => self.dram_in[idx4(&self.in_dims, &[0; 4], &gi)],
-        };
-        let wv = match self.kernel_chain.first() {
-            Some(b) => b.data[idx4(&b.dims4, &b.origin, &gw)],
-            None => self.dram_w[idx4(&self.w_dims, &[0; 4], &gw)],
-        };
-        match self.output_chain.first_mut() {
-            Some(b) => {
-                let i = idx4(&b.dims4, &b.origin, &go);
-                b.data[i] += iv * wv;
-            }
-            None => {
-                let i = idx4(&self.out_dims, &[0; 4], &go);
-                self.dram_out[i] += iv * wv;
-            }
-        }
-        self.macs_done += 1;
-    }
-
-    fn finish(self, d: &crate::model::dims::LayerDims) -> Result<ConvOutput> {
-        ensure!(
-            self.macs_done == d.macs(),
-            "internal: executed {} MACs, layer has {}",
-            self.macs_done,
-            d.macs()
-        );
-        let level_of = |chain: &[Block]| {
-            chain
-                .first()
-                .map(|b| b.level.clone())
-                .unwrap_or_else(|| "DRAM".to_string())
-        };
-        let operand = OperandCounters {
-            input_reads: self.macs_done,
-            kernel_reads: self.macs_done,
-            output_accesses: 2 * self.macs_done,
-            input_level: level_of(&self.input_chain),
-            kernel_level: level_of(&self.kernel_chain),
-            output_level: level_of(&self.output_chain),
-        };
-        let mut buffers = Vec::new();
-        for chain in [&self.input_chain, &self.kernel_chain, &self.output_chain] {
-            for b in chain {
-                buffers.push(BufferCounters {
-                    tensor: b.tensor,
-                    ordinal: b.ordinal,
-                    level: b.level.clone(),
-                    size_elems: b.dims4.iter().product(),
-                    fill_events: b.fill_events,
-                    fill_elems: b.fill_elems,
-                    writeback_elems: b.writeback_elems,
-                });
-            }
-        }
-        Ok(ConvOutput {
-            output: self.dram_out,
-            counters: AccessCounters {
-                backend: "blocked".to_string(),
-                macs: self.macs_done,
-                buffers,
-                dram: self.dram,
-                operand,
-            },
-        })
+        // Boundary 0: every loop level is walked, every buffer is
+        // materialized, and the leaf is a single interpreted MAC.
+        let mut nest = Nest::new(plan, inputs, 0)?;
+        nest.run(&mut |n, off| n.mac_at(off));
+        nest.finish(&plan.dims, "blocked")
     }
 }
 
@@ -512,6 +64,7 @@ impl<'a> Interp<'a> {
 mod tests {
     use super::*;
     use crate::coordinator::naive_conv::conv_valid;
+    use crate::model::buffers::{allocate, Tensor};
     use crate::model::dims::LayerDims;
     use crate::model::string::BlockingString;
     use crate::plan::{Planner, Provenance, Target};

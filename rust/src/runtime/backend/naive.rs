@@ -8,12 +8,51 @@
 
 use super::{AccessCounters, Backend, ConvInputs, ConvOutput, DramCounters, OperandCounters};
 use crate::coordinator::naive_conv::conv_valid;
+use crate::model::dims::LayerDims;
 use crate::plan::BlockingPlan;
 use anyhow::{ensure, Result};
 
 /// Reference executor: unblocked semantics, no reuse buffers.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct NaiveBackend;
+
+/// Memory-rate traffic of the unblocked Algorithm 1 nest, derived from
+/// the model's operand semantics (`model::access`): the datapath issues
+/// one input read, one kernel read and an output read+write per MAC,
+/// and only reuse carried by the *innermost window registers* is free
+/// (Table 2 allocates no buffer for innermost `Fw`/`Fh` — "their reuse
+/// is served by the operand window registers").
+///
+/// In the `FwFhXYCK` order the window loops are innermost, so of the
+/// three streams only the output accumulator enjoys window-register
+/// reuse: each output element folds its `Fw x Fh` window in a register
+/// and touches memory once per window position — a read+write per
+/// `(x, y, c, k, b)` point, i.e. `2 * MACs / (Fw*Fh)` accesses,
+/// `MACs / (Fw*Fh)` of them partial-sum re-reads and as many stores.
+/// Input and kernel operands index a fresh element on every window step
+/// (the window *slides* over the input; each weight is distinct), so
+/// their memory-rate reads stay at one per MAC. With no reuse buffers
+/// anywhere, every one of those accesses is DRAM traffic.
+fn unblocked_traffic(d: &LayerDims) -> (OperandCounters, DramCounters) {
+    let macs = d.macs();
+    let window = d.fw * d.fh;
+    let out_points = macs / window; // (x, y, c, k, b) combinations
+    let operand = OperandCounters {
+        input_reads: macs,
+        kernel_reads: macs,
+        output_accesses: 2 * out_points,
+        input_level: "DRAM".to_string(),
+        kernel_level: "DRAM".to_string(),
+        output_level: "DRAM".to_string(),
+    };
+    let dram = DramCounters {
+        input_loads: macs,
+        kernel_loads: macs,
+        output_loads: out_points,
+        output_stores: out_points,
+    };
+    (operand, dram)
+}
 
 impl Backend for NaiveBackend {
     fn name(&self) -> &'static str {
@@ -22,9 +61,8 @@ impl Backend for NaiveBackend {
 
     /// Runs the plan's layer with the unblocked nest (the blocking
     /// string is ignored apart from validation — naive semantics do not
-    /// block). Counters report the unblocked cost: input and kernel
-    /// operands read from DRAM at MAC rate, one output store per output
-    /// element (the accumulator lives in a register).
+    /// block). Counters report the unblocked memory-rate cost derived
+    /// in [`unblocked_traffic`].
     fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput> {
         let d = plan.dims;
         ensure!(
@@ -49,28 +87,13 @@ impl Backend for NaiveBackend {
             let img = &inputs.input[b * image..(b + 1) * image];
             output.extend(conv_valid(img, (c, h, w), &inputs.weights, (k, c, fh, fw)));
         }
-        let macs = d.macs();
+        let (operand, dram) = unblocked_traffic(&d);
         let counters = AccessCounters {
             backend: "naive".to_string(),
-            macs,
+            macs: d.macs(),
             buffers: Vec::new(),
-            dram: DramCounters {
-                input_loads: macs,
-                kernel_loads: macs,
-                output_loads: 0,
-                output_stores: d.output_elems(),
-            },
-            operand: OperandCounters {
-                input_reads: macs,
-                kernel_reads: macs,
-                // read+write per MAC in the model's accounting; the
-                // register accumulator makes the writes free here, so
-                // only the final stores (in `dram`) are real traffic.
-                output_accesses: 2 * macs,
-                input_level: "DRAM".to_string(),
-                kernel_level: "DRAM".to_string(),
-                output_level: "DRAM".to_string(),
-            },
+            dram,
+            operand,
         };
         Ok(ConvOutput { output, counters })
     }
@@ -100,8 +123,49 @@ mod tests {
         assert_eq!(got.output, want);
         assert_eq!(got.counters.macs, d.macs());
         assert_eq!(got.counters.dram.input_loads, d.macs());
-        assert_eq!(got.counters.dram.output_stores, d.output_elems());
+        // one store per (x, y, c, k) point: the window accumulator is
+        // the only register reuse the unblocked nest has
+        assert_eq!(got.counters.dram.output_stores, d.macs() / (d.fw * d.fh));
         assert!(got.counters.buffers.is_empty());
+    }
+
+    #[test]
+    fn memory_rate_counters_follow_model_semantics() {
+        // The satellite pin: naive counters must be derived from the
+        // model's operand semantics (`model::access`), not flat MAC
+        // multiples. Input/kernel streams have no window-register reuse
+        // (fresh element per window step) and stay at MAC rate; the
+        // output accumulator folds the Fw x Fh window in a register, so
+        // its memory-rate accesses are the model's 2/MAC divided by the
+        // window size.
+        let d = LayerDims::conv(8, 8, 4, 4, 3, 3);
+        let plan = plan_for(d);
+        let out = NaiveBackend
+            .execute(&plan, &ConvInputs::synthetic(d, 9))
+            .unwrap();
+        let prof = crate::model::access::analyze(
+            &crate::model::string::BlockingString::unblocked(&d),
+            &d,
+        )
+        .1;
+        let window = d.fw * d.fh;
+        let op = &out.counters.operand;
+        assert_eq!(op.input_reads as f64, prof.operand.input_reads);
+        assert_eq!(op.kernel_reads as f64, prof.operand.kernel_reads);
+        assert_eq!(
+            op.output_accesses as f64,
+            prof.operand.output_accesses / window as f64
+        );
+        // removing the window-register reuse recovers the MAC rate
+        assert_eq!(op.output_accesses * window, 2 * d.macs());
+        // every access is DRAM traffic: no reuse buffers anywhere
+        assert_eq!(op.input_level, "DRAM");
+        assert_eq!(out.counters.dram.input_loads, op.input_reads);
+        assert_eq!(out.counters.dram.kernel_loads, op.kernel_reads);
+        assert_eq!(
+            out.counters.dram.output_loads + out.counters.dram.output_stores,
+            op.output_accesses
+        );
     }
 
     #[test]

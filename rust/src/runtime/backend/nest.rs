@@ -1,0 +1,570 @@
+//! Shared loop-nest machinery for the plan-executing CPU backends.
+//!
+//! Both the per-MAC interpreter ([`super::BlockedCpuBackend`]) and the
+//! tiled fast path ([`super::TiledCpuBackend`]) execute a plan the same
+//! way: walk the blocking string outermost→innermost, keep one real
+//! `f32` buffer per *materialized* Table 2 virtual buffer, refill a
+//! buffer from its parent (the next-outer buffer of the same tensor, or
+//! DRAM) every time an enclosing loop iterates, and write output
+//! partials back on loop exit — the model semantics `model::access`
+//! charges analytically. This module owns that machinery ([`Nest`]):
+//! buffer geometry, the `fill_chain`/`copy_region`/writeback transfers,
+//! the recursive walker, and the counter bookkeeping.
+//!
+//! What differs per backend is the **leaf**: how far down the walker
+//! recurses before handing control to compute. The interpreter walks
+//! every level and executes one MAC per leaf (`boundary == 0`); the
+//! tiled backend stops at the level-0 tile boundary and runs a compiled
+//! kernel over the whole tile (`boundary == tile_boundary(..)`). Table 2
+//! buffers created *inside* the leaf region are "virtualized": they are
+//! never materialized (the kernel reads operands from the innermost
+//! materialized buffer instead), and their fill/writeback counters are
+//! derived analytically — the exact trip-count products the interpreter
+//! would measure — so measured == predicted stays an exact invariant for
+//! every backend driving a [`Nest`].
+
+use super::{
+    AccessCounters, BufferCounters, ConvInputs, ConvOutput, DramCounters, OperandCounters,
+};
+use crate::model::buffers::{allocate, Tensor};
+use crate::model::dims::{Dim, LayerDims};
+use crate::plan::BlockingPlan;
+use anyhow::{anyhow, ensure, Result};
+
+/// One real buffer backing a materialized Table 2 virtual buffer during
+/// execution. (Its creation position lives in `Nest::by_pos`.)
+pub(super) struct Block {
+    pub(super) tensor: Tensor,
+    pub(super) ordinal: usize,
+    /// Physical level the plan placed it on (counter label only).
+    pub(super) level: String,
+    /// Block extents in the tensor's axis order (see `block_geometry`).
+    pub(super) dims4: [u64; 4],
+    /// Global origin of the currently-held block, same axis order.
+    pub(super) origin: [u64; 4],
+    pub(super) data: Vec<f32>,
+    pub(super) fill_events: u64,
+    pub(super) fill_elems: u64,
+    pub(super) writeback_elems: u64,
+}
+
+/// One loop level of the nest, precomputed from the blocking string.
+struct LoopLevel {
+    dim: Dim,
+    trip: u64,
+    /// Step of the dim's global offset per iteration (covered extent of
+    /// the dim strictly below this position).
+    stride: u64,
+}
+
+/// Axis order per tensor, chosen to match the DRAM layouts so the DRAM
+/// "parent" is just a block with full extents and origin zero:
+/// input `(B, C, H, W)`, kernel `(K, C, Fh, Fw)`, output `(B, K, Y, X)`.
+fn block_geometry(t: Tensor, cov: &[u64; 7]) -> [u64; 4] {
+    let g = |d: Dim| cov[d as usize];
+    match t {
+        Tensor::Input => [
+            g(Dim::B),
+            g(Dim::C),
+            g(Dim::Y) + g(Dim::Fh) - 1,
+            g(Dim::X) + g(Dim::Fw) - 1,
+        ],
+        Tensor::Kernel => [g(Dim::K), g(Dim::C), g(Dim::Fh), g(Dim::Fw)],
+        Tensor::Output => [g(Dim::B), g(Dim::K), g(Dim::Y), g(Dim::X)],
+    }
+}
+
+/// Global block origin for a tensor given the enclosing-loop offsets.
+/// Input rows/cols fold the window offset in (`h = y + fh`).
+fn block_origin(t: Tensor, off: &[u64; 7]) -> [u64; 4] {
+    let o = |d: Dim| off[d as usize];
+    match t {
+        Tensor::Input => [
+            o(Dim::B),
+            o(Dim::C),
+            o(Dim::Y) + o(Dim::Fh),
+            o(Dim::X) + o(Dim::Fw),
+        ],
+        Tensor::Kernel => [o(Dim::K), o(Dim::C), o(Dim::Fh), o(Dim::Fw)],
+        Tensor::Output => [o(Dim::B), o(Dim::K), o(Dim::Y), o(Dim::X)],
+    }
+}
+
+/// Flat index of global coordinate `g` inside an array of extents
+/// `dims4` whose element [0,0,0,0] sits at global `origin`.
+#[inline]
+pub(super) fn idx4(dims4: &[u64; 4], origin: &[u64; 4], g: &[u64; 4]) -> usize {
+    let l0 = g[0] - origin[0];
+    let l1 = g[1] - origin[1];
+    let l2 = g[2] - origin[2];
+    let l3 = g[3] - origin[3];
+    debug_assert!(
+        l0 < dims4[0] && l1 < dims4[1] && l2 < dims4[2] && l3 < dims4[3],
+        "coordinate {:?} outside block {:?}@{:?}",
+        g,
+        dims4,
+        origin
+    );
+    (((l0 * dims4[1] + l1) * dims4[2] + l2) * dims4[3] + l3) as usize
+}
+
+/// Copy the whole `region`-sized block at global origin `gorg` from
+/// `(src, sdims, sorg)` into `(dst, ddims, dorg)`; returns elements
+/// moved. Rows (the last axis) are copied contiguously.
+#[allow(clippy::too_many_arguments)] // (array, dims, origin) x2 + region
+fn copy_region(
+    src: &[f32],
+    sdims: &[u64; 4],
+    sorg: &[u64; 4],
+    dst: &mut [f32],
+    ddims: &[u64; 4],
+    dorg: &[u64; 4],
+    region: &[u64; 4],
+    gorg: &[u64; 4],
+) -> u64 {
+    let w = region[3] as usize;
+    for a0 in 0..region[0] {
+        for a1 in 0..region[1] {
+            for a2 in 0..region[2] {
+                let g = [gorg[0] + a0, gorg[1] + a1, gorg[2] + a2, gorg[3]];
+                let si = idx4(sdims, sorg, &g);
+                let di = idx4(ddims, dorg, &g);
+                dst[di..di + w].copy_from_slice(&src[si..si + w]);
+            }
+        }
+    }
+    region[0] * region[1] * region[2] * region[3]
+}
+
+/// Refill buffer `i` of `chain` at `origin`: copy its block from the
+/// next-outer buffer, or from the DRAM-resident tensor (bumping that
+/// tensor's DRAM-load counter) when `i` is the outermost.
+fn fill_chain(
+    chain: &mut [Block],
+    i: usize,
+    origin: [u64; 4],
+    dram_src: &[f32],
+    dram_dims: &[u64; 4],
+    dram_loads: &mut u64,
+) {
+    let (child, parent) = chain.split_at_mut(i + 1);
+    let b = &mut child[i];
+    b.origin = origin;
+    let n = match parent.first() {
+        Some(par) => copy_region(
+            &par.data, &par.dims4, &par.origin, &mut b.data, &b.dims4, &b.origin, &b.dims4,
+            &b.origin,
+        ),
+        None => {
+            let n = copy_region(
+                dram_src, dram_dims, &[0; 4], &mut b.data, &b.dims4, &b.origin, &b.dims4,
+                &b.origin,
+            );
+            *dram_loads += n;
+            n
+        }
+    };
+    b.fill_events += 1;
+    b.fill_elems += n;
+}
+
+/// A live loop nest executing one plan: the walker state, the
+/// materialized buffer chains, the DRAM-resident tensors, and every
+/// counter. Backends drive it via [`Nest::run`] with a leaf callback and
+/// collect the result with [`Nest::finish`].
+pub(super) struct Nest<'a> {
+    levels: Vec<LoopLevel>,
+    /// Materialized buffers created at each string position, as
+    /// (tensor, index into that tensor's materialized chain).
+    by_pos: Vec<Vec<(Tensor, usize)>>,
+    /// Positions below `boundary` are executed by the leaf; buffers
+    /// created there are virtualized (analytic counters, no storage).
+    boundary: usize,
+    pub(super) input_chain: Vec<Block>,
+    pub(super) kernel_chain: Vec<Block>,
+    pub(super) output_chain: Vec<Block>,
+    pub(super) dram_in: &'a [f32],
+    pub(super) dram_w: &'a [f32],
+    pub(super) dram_out: Vec<f32>,
+    pub(super) in_dims: [u64; 4],
+    pub(super) w_dims: [u64; 4],
+    pub(super) out_dims: [u64; 4],
+    pub(super) dram: DramCounters,
+    pub(super) macs_done: u64,
+    /// Analytically-derived counters for virtualized buffers, per tensor
+    /// in `Tensor::ALL` order, innermost first.
+    virtualized: [Vec<BufferCounters>; 3],
+    /// Level label serving each tensor's MAC-rate operand stream (the
+    /// plan's innermost buffer, materialized or not; DRAM when none).
+    operand_levels: [String; 3],
+}
+
+impl<'a> Nest<'a> {
+    /// Validate `plan` against `inputs` and set up the nest. Buffers
+    /// created at string positions `< boundary` are virtualized: their
+    /// fill/writeback counters are the exact trip-count products the
+    /// interpreter would measure, charged up front; the leaf is expected
+    /// to execute those loops itself. `boundary == 0` materializes
+    /// everything (the interpreter configuration).
+    pub(super) fn new(plan: &BlockingPlan, inputs: &'a ConvInputs, boundary: usize) -> Result<Nest<'a>> {
+        let d = plan.dims;
+        ensure!(
+            inputs.dims == d,
+            "inputs are for {} but the plan is for {}",
+            inputs.dims,
+            d
+        );
+        plan.string
+            .validate(&d)
+            .map_err(|e| anyhow!("plan string '{}' invalid for {}: {}", plan.string, d, e))?;
+        ensure!(
+            inputs.input.len() as u64 == d.input_elems()
+                && inputs.weights.len() as u64 == d.kernel_elems(),
+            "input/weight tensors do not match {}",
+            d
+        );
+        let s = &plan.string;
+        let n = s.len();
+        ensure!(boundary <= n, "internal: boundary {} beyond string", boundary);
+
+        // Table 2 sizes a buffer created at-or-below a hoisted window
+        // loop *without* the window extent that loop sweeps (the model
+        // charges the re-reads through the refetch-rate chain instead),
+        // so such a buffer physically cannot serve the window's reads —
+        // executing it would index outside the block. The optimizer
+        // never hoists Fw/Fh (they stay innermost); reject the rare
+        // hand-written string that does.
+        let first_nonwindow = s
+            .levels
+            .iter()
+            .position(|l| !matches!(l.dim, Dim::Fw | Dim::Fh))
+            .unwrap_or(n);
+        if let Some(hoisted) = s.levels[first_nonwindow.min(n)..]
+            .iter()
+            .find(|l| matches!(l.dim, Dim::Fw | Dim::Fh) && l.range > 1)
+        {
+            return Err(anyhow!(
+                "backend cannot execute '{}': window loop {} is hoisted \
+                 above other loops (Fw/Fh must be innermost)",
+                s,
+                hoisted.dim
+            ));
+        }
+
+        let mut levels = Vec::with_capacity(n);
+        for i in 0..n {
+            let dim = s.levels[i].dim;
+            let stride = s.covered_below(i)[dim as usize];
+            levels.push(LoopLevel {
+                dim,
+                trip: s.trip(i),
+                stride,
+            });
+        }
+        // trips_above[p] = product of trip counts at positions >= p —
+        // the fill count of a buffer created at position p - 1.
+        let mut trips_above = vec![1u64; n + 1];
+        for p in (0..n).rev() {
+            trips_above[p] = trips_above[p + 1] * levels[p].trip;
+        }
+
+        let bufs = allocate(s, &d);
+        let mut by_pos: Vec<Vec<(Tensor, usize)>> = vec![Vec::new(); n];
+        let mut chains: [Vec<Block>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        let mut virtualized: [Vec<BufferCounters>; 3] = Default::default();
+        let mut dram = DramCounters::default();
+        let mut operand_levels = [
+            "DRAM".to_string(),
+            "DRAM".to_string(),
+            "DRAM".to_string(),
+        ];
+        for (ci, t) in Tensor::ALL.into_iter().enumerate() {
+            let chain_len = bufs.of(t).len();
+            for vb in bufs.of(t) {
+                let cov = s.covered_below(vb.created_at);
+                let dims4 = block_geometry(t, &cov);
+                let elems = dims4.iter().product::<u64>();
+                ensure!(
+                    elems == vb.size_elems,
+                    "internal: {}{} block {:?} ({} elems) disagrees with Table 2 size {}",
+                    t,
+                    vb.ordinal,
+                    dims4,
+                    elems,
+                    vb.size_elems
+                );
+                let level = plan
+                    .buffers
+                    .iter()
+                    .find(|b| b.tensor == t && b.ordinal == vb.ordinal)
+                    .map(|b| b.level.clone())
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "plan has no placement for {}{} — plan and string disagree",
+                            t,
+                            vb.ordinal
+                        )
+                    })?;
+                if vb.ordinal == 0 {
+                    operand_levels[ci] = level.clone();
+                }
+                if vb.created_at < boundary {
+                    // Virtualized: the leaf executes the loops that would
+                    // fill this buffer. Its measured counters are the
+                    // trip-count products the interpreter realizes — one
+                    // fill per iteration of every enclosing loop, each
+                    // fill paired with a writeback for output partials.
+                    let fill_events = trips_above[vb.created_at + 1];
+                    let fill_elems = fill_events * vb.size_elems;
+                    let writeback_elems = if t == Tensor::Output { fill_elems } else { 0 };
+                    if vb.ordinal + 1 == chain_len {
+                        // Outermost buffer of its chain: its fills (and
+                        // writebacks) are DRAM traffic.
+                        match t {
+                            Tensor::Input => dram.input_loads += fill_elems,
+                            Tensor::Kernel => dram.kernel_loads += fill_elems,
+                            Tensor::Output => {
+                                dram.output_loads += fill_elems;
+                                dram.output_stores += writeback_elems;
+                            }
+                        }
+                    }
+                    virtualized[ci].push(BufferCounters {
+                        tensor: t,
+                        ordinal: vb.ordinal,
+                        level,
+                        size_elems: vb.size_elems,
+                        fill_events,
+                        fill_elems,
+                        writeback_elems,
+                    });
+                } else {
+                    by_pos[vb.created_at].push((t, chains[ci].len()));
+                    chains[ci].push(Block {
+                        tensor: t,
+                        ordinal: vb.ordinal,
+                        level,
+                        dims4,
+                        origin: [0; 4],
+                        data: vec![0.0; elems as usize],
+                        fill_events: 0,
+                        fill_elems: 0,
+                        writeback_elems: 0,
+                    });
+                }
+            }
+        }
+        let [input_chain, kernel_chain, output_chain] = chains;
+
+        Ok(Nest {
+            levels,
+            by_pos,
+            boundary,
+            input_chain,
+            kernel_chain,
+            output_chain,
+            dram_in: &inputs.input,
+            dram_w: &inputs.weights,
+            dram_out: vec![0.0; d.output_elems() as usize],
+            in_dims: [d.b, d.c, d.y + d.fh - 1, d.x + d.fw - 1],
+            w_dims: [d.k, d.c, d.fh, d.fw],
+            out_dims: [d.b, d.k, d.y, d.x],
+            dram,
+            macs_done: 0,
+            virtualized,
+            operand_levels,
+        })
+    }
+
+    /// Walk the nest from the outermost loop down to the boundary,
+    /// refilling/writing back materialized buffers per model semantics,
+    /// and invoke `leaf` once per boundary-level iteration point.
+    pub(super) fn run<F>(&mut self, leaf: &mut F)
+    where
+        F: FnMut(&mut Nest<'a>, &[u64; 7]),
+    {
+        self.subtree(self.levels.len(), [0u64; 7], leaf);
+    }
+
+    /// Execute the sub-nest of the innermost `p` loop levels with the
+    /// enclosing loops fixed at the offsets in `off`. On entry, buffers
+    /// created by loop `p - 1` are (re)filled; on exit, output buffers
+    /// created there write their partials back — the model's "refill on
+    /// every enclosing iteration" semantics.
+    fn subtree<F>(&mut self, p: usize, off: [u64; 7], leaf: &mut F)
+    where
+        F: FnMut(&mut Nest<'a>, &[u64; 7]),
+    {
+        if p == self.boundary {
+            leaf(self, &off);
+            return;
+        }
+        let pos = p - 1;
+        let nbufs = self.by_pos[pos].len();
+        for bi in 0..nbufs {
+            let (t, i) = self.by_pos[pos][bi];
+            self.fill(t, i, &off);
+        }
+        let (dim, trip, stride) = {
+            let l = &self.levels[pos];
+            (l.dim as usize, l.trip, l.stride)
+        };
+        let base = off[dim];
+        let mut inner = off;
+        for it in 0..trip {
+            inner[dim] = base + it * stride;
+            self.subtree(pos, inner, leaf);
+        }
+        for bi in 0..nbufs {
+            let (t, i) = self.by_pos[pos][bi];
+            if t == Tensor::Output {
+                self.writeback(i);
+            }
+        }
+    }
+
+    /// (Re)fill buffer `i` of tensor `t`'s chain from its parent (the
+    /// next-outer buffer of the same tensor, or the DRAM tensor). For
+    /// output buffers this loads the current partial sums, so
+    /// accumulation continues exactly where it left off.
+    fn fill(&mut self, t: Tensor, i: usize, off: &[u64; 7]) {
+        let origin = block_origin(t, off);
+        match t {
+            Tensor::Input => fill_chain(
+                &mut self.input_chain,
+                i,
+                origin,
+                self.dram_in,
+                &self.in_dims,
+                &mut self.dram.input_loads,
+            ),
+            Tensor::Kernel => fill_chain(
+                &mut self.kernel_chain,
+                i,
+                origin,
+                self.dram_w,
+                &self.w_dims,
+                &mut self.dram.kernel_loads,
+            ),
+            Tensor::Output => fill_chain(
+                &mut self.output_chain,
+                i,
+                origin,
+                &self.dram_out,
+                &self.out_dims,
+                &mut self.dram.output_loads,
+            ),
+        }
+    }
+
+    /// Write output buffer `i`'s partials back to its parent.
+    fn writeback(&mut self, i: usize) {
+        let (child, parent) = self.output_chain.split_at_mut(i + 1);
+        let b = &mut child[i];
+        let n = match parent.first_mut() {
+            Some(par) => copy_region(
+                &b.data, &b.dims4, &b.origin, &mut par.data, &par.dims4, &par.origin, &b.dims4,
+                &b.origin,
+            ),
+            None => {
+                let n = copy_region(
+                    &b.data,
+                    &b.dims4,
+                    &b.origin,
+                    &mut self.dram_out,
+                    &self.out_dims,
+                    &[0; 4],
+                    &b.dims4,
+                    &b.origin,
+                );
+                self.dram.output_stores += n;
+                n
+            }
+        };
+        b.writeback_elems += n;
+    }
+
+    /// One multiply-accumulate at an innermost point: operands come
+    /// from each tensor's innermost buffer, or straight from DRAM when
+    /// the blocking creates none (e.g. kernels in an FC layer with
+    /// B = 1 — the paper's no-reuse case). The interpreter's leaf.
+    #[inline]
+    pub(super) fn mac_at(&mut self, off: &[u64; 7]) {
+        let o = |d: Dim| off[d as usize];
+        let gi = [
+            o(Dim::B),
+            o(Dim::C),
+            o(Dim::Y) + o(Dim::Fh),
+            o(Dim::X) + o(Dim::Fw),
+        ];
+        let gw = [o(Dim::K), o(Dim::C), o(Dim::Fh), o(Dim::Fw)];
+        let go = [o(Dim::B), o(Dim::K), o(Dim::Y), o(Dim::X)];
+        let iv = match self.input_chain.first() {
+            Some(b) => b.data[idx4(&b.dims4, &b.origin, &gi)],
+            None => self.dram_in[idx4(&self.in_dims, &[0; 4], &gi)],
+        };
+        let wv = match self.kernel_chain.first() {
+            Some(b) => b.data[idx4(&b.dims4, &b.origin, &gw)],
+            None => self.dram_w[idx4(&self.w_dims, &[0; 4], &gw)],
+        };
+        match self.output_chain.first_mut() {
+            Some(b) => {
+                let i = idx4(&b.dims4, &b.origin, &go);
+                b.data[i] += iv * wv;
+            }
+            None => {
+                let i = idx4(&self.out_dims, &[0; 4], &go);
+                self.dram_out[i] += iv * wv;
+            }
+        }
+        self.macs_done += 1;
+    }
+
+    /// Collect the output tensor and the full access report: measured
+    /// counters from the materialized chains merged (innermost first)
+    /// with the analytic counters of any virtualized buffers.
+    pub(super) fn finish(self, d: &LayerDims, backend: &str) -> Result<ConvOutput> {
+        ensure!(
+            self.macs_done == d.macs(),
+            "internal: executed {} MACs, layer has {}",
+            self.macs_done,
+            d.macs()
+        );
+        let operand = OperandCounters {
+            input_reads: self.macs_done,
+            kernel_reads: self.macs_done,
+            output_accesses: 2 * self.macs_done,
+            input_level: self.operand_levels[0].clone(),
+            kernel_level: self.operand_levels[1].clone(),
+            output_level: self.operand_levels[2].clone(),
+        };
+        let mut buffers = Vec::new();
+        for (ci, chain) in [&self.input_chain, &self.kernel_chain, &self.output_chain]
+            .into_iter()
+            .enumerate()
+        {
+            buffers.extend(self.virtualized[ci].iter().cloned());
+            for b in chain {
+                buffers.push(BufferCounters {
+                    tensor: b.tensor,
+                    ordinal: b.ordinal,
+                    level: b.level.clone(),
+                    size_elems: b.dims4.iter().product(),
+                    fill_events: b.fill_events,
+                    fill_elems: b.fill_elems,
+                    writeback_elems: b.writeback_elems,
+                });
+            }
+        }
+        Ok(ConvOutput {
+            output: self.dram_out,
+            counters: AccessCounters {
+                backend: backend.to_string(),
+                macs: self.macs_done,
+                buffers,
+                dram: self.dram,
+                operand,
+            },
+        })
+    }
+}

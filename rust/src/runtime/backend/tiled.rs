@@ -1,0 +1,285 @@
+//! The tiled CPU fast path: the blocked loop nest with a compiled
+//! level-0 tile kernel.
+//!
+//! [`TiledCpuBackend`] shares every buffer/fill mechanism with the
+//! [`super::BlockedCpuBackend`] interpreter (both drive
+//! [`super::nest::Nest`]), but stops the walker at the **level-0 tile
+//! boundary** — the string position of the first repeated split — and
+//! executes the whole innermost tile through one compiled kernel
+//! instead of `tile_macs` interpreted recursion steps:
+//!
+//! * the `Fw x Fh` window runs as tight inner loops over contiguous
+//!   input rows (LLVM fully unrolls them at the Table 4 window sizes);
+//! * the `K0` output-channel block is processed in lane chunks of
+//!   [`LANES`] with a per-chunk weight repack into `k`-contiguous
+//!   layout, so the innermost statement is a broadcast-multiply-add
+//!   over a fixed-width `f32` array — the portable shape the
+//!   autovectorizer lifts to SIMD (no unstable intrinsics, no
+//!   target-specific code);
+//! * ragged tiles (a `K0` that is not a multiple of [`LANES`], odd
+//!   `X0`) are handled by zero-padding the repacked weight lanes, so
+//!   the hot loop stays branch-free.
+//!
+//! Table 2 buffers created *inside* the tile (the level-0 `IB0`/`KB0`/
+//! `OB0`) are never materialized: the kernel reads operands from the
+//! innermost *materialized* buffer of each tensor (or DRAM), and the
+//! in-tile buffers' `AccessCounters` are derived analytically in
+//! [`super::nest::Nest`] — the exact trip-count products the per-MAC
+//! interpreter measures — so measured == predicted stays an exact
+//! invariant (`rust/tests/backend.rs` pins it for this backend too).
+//!
+//! This is the dispatch default for `plan.execute(..)` and interpreted
+//! serving (see [`super::backend_for_target`]); `cnnblk bench` measures
+//! the resulting MAC/s against the interpreter and the naive nest.
+
+use super::nest::Nest;
+use super::{Backend, ConvInputs, ConvOutput};
+use crate::model::dims::Dim;
+use crate::model::string::BlockingString;
+use crate::plan::BlockingPlan;
+use anyhow::Result;
+
+/// f32 lanes the tile kernel processes per output-channel chunk. Eight
+/// lanes map onto one AVX2 register / two NEON registers; the kernel is
+/// written as plain array arithmetic so the autovectorizer picks
+/// whatever the target offers.
+pub const LANES: usize = 8;
+
+/// Tiled loop-nest backend (see module docs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TiledCpuBackend;
+
+/// The string position where the level-0 tile ends: the first level that
+/// is a *second* split of some dim. Everything below it (the window
+/// loops plus the first split of each dim) is the tile the compiled
+/// kernel executes; everything at or above it is walked by the shared
+/// nest machinery. Returns `len()` when no dim is split twice — the
+/// whole layer is then one tile.
+pub(super) fn tile_boundary(s: &BlockingString) -> usize {
+    let mut seen = [false; 7];
+    for (i, l) in s.levels.iter().enumerate() {
+        let d = l.dim as usize;
+        if !matches!(l.dim, Dim::Fw | Dim::Fh) && seen[d] {
+            return i;
+        }
+        seen[d] = true;
+    }
+    s.len()
+}
+
+/// Level-0 tile extents, in problem coordinates.
+struct Tile {
+    b: usize,
+    x: usize,
+    y: usize,
+    c: usize,
+    k: usize,
+    fw: usize,
+    fh: usize,
+}
+
+impl Tile {
+    fn macs(&self) -> u64 {
+        (self.b * self.x * self.y * self.c * self.k * self.fw * self.fh) as u64
+    }
+}
+
+/// Cached `k`-contiguous weight repack for the tile kernel. Consecutive
+/// tile invocations often execute against an unchanged kernel block
+/// (spatial/batch loops directly above the tile boundary); the cache
+/// skips the repack unless the kernel view's content generation (the
+/// innermost kernel buffer's fill count) or the tile's C/K offsets
+/// changed, so the repack cost is paid once per kernel refill instead
+/// of once per tile.
+struct PackCache {
+    /// (kernel-buffer fill generation, `off[C]`, `off[K]`) of `data`;
+    /// `None` until the first pack.
+    key: Option<(u64, u64, u64)>,
+    /// Packed weights, `[k_chunk][c][fh][fw][lane]`, lanes zero-padded
+    /// past a ragged final chunk.
+    data: Vec<f32>,
+}
+
+impl Backend for TiledCpuBackend {
+    fn name(&self) -> &'static str {
+        "tiled"
+    }
+
+    fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput> {
+        let boundary = tile_boundary(&plan.string);
+        let mut nest = Nest::new(plan, inputs, boundary)?;
+        let cov = plan.string.covered_below(boundary);
+        let g = |d: Dim| cov[d as usize] as usize;
+        let tile = Tile {
+            b: g(Dim::B),
+            x: g(Dim::X),
+            y: g(Dim::Y),
+            c: g(Dim::C),
+            k: g(Dim::K),
+            // Window dims of extent 1 may be omitted from the string
+            // (FC layers); the tile always spans the full window.
+            fw: plan.dims.fw as usize,
+            fh: plan.dims.fh as usize,
+        };
+        let chunks = tile.k.div_ceil(LANES);
+        let mut pack = PackCache {
+            key: None,
+            data: vec![0f32; tile.c * tile.fh * tile.fw * LANES * chunks],
+        };
+        nest.run(&mut |n, off| exec_tile(n, off, &tile, &mut pack));
+        nest.finish(&plan.dims, "tiled")
+    }
+}
+
+/// Execute one level-0 tile at the global offsets in `off`, reading
+/// operands from the innermost materialized buffer of each tensor (or
+/// the DRAM tensor when a chain is empty or fully virtualized) and
+/// accumulating into the innermost materialized output buffer.
+fn exec_tile(n: &mut Nest<'_>, off: &[u64; 7], t: &Tile, pack: &mut PackCache) {
+    let o = |d: Dim| off[d as usize] as usize;
+    // Content generation of the kernel view: the innermost materialized
+    // kernel buffer's fill count (bumped on every refill), or a constant
+    // for the immutable DRAM tensor.
+    let w_gen = n.kernel_chain.first().map(|b| b.fill_events).unwrap_or(0);
+    // Source views: (data, extents, origin). Field-disjoint borrows of
+    // the nest keep input/kernel shared while output is mutable.
+    let (in_data, in_d, in_org): (&[f32], [u64; 4], [u64; 4]) = match n.input_chain.first() {
+        Some(b) => (b.data.as_slice(), b.dims4, b.origin),
+        None => (n.dram_in, n.in_dims, [0; 4]),
+    };
+    let (w_data, w_d, w_org): (&[f32], [u64; 4], [u64; 4]) = match n.kernel_chain.first() {
+        Some(b) => (b.data.as_slice(), b.dims4, b.origin),
+        None => (n.dram_w, n.w_dims, [0; 4]),
+    };
+    let (out_data, out_d, out_org): (&mut [f32], [u64; 4], [u64; 4]) =
+        match n.output_chain.first_mut() {
+            Some(b) => {
+                let (dims4, origin) = (b.dims4, b.origin);
+                (b.data.as_mut_slice(), dims4, origin)
+            }
+            None => (n.dram_out.as_mut_slice(), n.out_dims, [0; 4]),
+        };
+
+    // Local (block-relative) bases of the tile in each view. Window
+    // offsets are always 0 here: window loops live inside the tile, and
+    // materialized-buffer origins fold them the same way.
+    let ib0 = o(Dim::B) - in_org[0] as usize;
+    let ic0 = o(Dim::C) - in_org[1] as usize;
+    let ih0 = o(Dim::Y) - in_org[2] as usize;
+    let iw0 = o(Dim::X) - in_org[3] as usize;
+    let wk0 = o(Dim::K) - w_org[0] as usize;
+    let wc0 = o(Dim::C) - w_org[1] as usize;
+    let ob0 = o(Dim::B) - out_org[0] as usize;
+    let ok0 = o(Dim::K) - out_org[1] as usize;
+    let oy0 = o(Dim::Y) - out_org[2] as usize;
+    let ox0 = o(Dim::X) - out_org[3] as usize;
+
+    // Row-major strides of each view.
+    let in_s2 = in_d[3] as usize;
+    let in_s1 = (in_d[2] * in_d[3]) as usize;
+    let in_s0 = (in_d[1] * in_d[2] * in_d[3]) as usize;
+    let w_s1 = (w_d[2] * w_d[3]) as usize;
+    let w_s0 = (w_d[1] * w_d[2] * w_d[3]) as usize;
+    let w_sr = w_d[3] as usize;
+    let out_s2 = out_d[3] as usize;
+    let out_s1 = (out_d[2] * out_d[3]) as usize;
+    let out_s0 = (out_d[1] * out_d[2] * out_d[3]) as usize;
+
+    let (fw, fh) = (t.fw, t.fh);
+    let chunk_len = t.c * fh * fw * LANES;
+    // Repack the whole kernel tile k-contiguous, once per kernel-view
+    // change: pack[chunk][((c*Fh + r)*Fw + s)*LANES + l] = W[k0+l][c][r][s],
+    // zero-padding missing lanes so the hot loop is branch-free.
+    let key = (w_gen, off[Dim::C as usize], off[Dim::K as usize]);
+    if pack.key != Some(key) {
+        for (chunk, k0) in (0..t.k).step_by(LANES).enumerate() {
+            let lanes = LANES.min(t.k - k0);
+            let cbase = chunk * chunk_len;
+            for c in 0..t.c {
+                for r in 0..fh {
+                    for s in 0..fw {
+                        let dst = cbase + ((c * fh + r) * fw + s) * LANES;
+                        let src = (wc0 + c) * w_s1 + r * w_sr + s;
+                        for (l, slot) in pack.data[dst..dst + LANES].iter_mut().enumerate() {
+                            *slot = if l < lanes {
+                                w_data[(wk0 + k0 + l) * w_s0 + src]
+                            } else {
+                                0.0
+                            };
+                        }
+                    }
+                }
+            }
+        }
+        pack.key = Some(key);
+    }
+    for (chunk, k0) in (0..t.k).step_by(LANES).enumerate() {
+        let lanes = LANES.min(t.k - k0);
+        let wpack = &pack.data[chunk * chunk_len..(chunk + 1) * chunk_len];
+        for b in 0..t.b {
+            let ibase = (ib0 + b) * in_s0;
+            let obase_b = (ob0 + b) * out_s0 + (ok0 + k0) * out_s1;
+            for y in 0..t.y {
+                for x in 0..t.x {
+                    let obase = obase_b + (oy0 + y) * out_s2 + ox0 + x;
+                    // Load the running partials for this output point.
+                    let mut acc = [0f32; LANES];
+                    for (l, a) in acc.iter_mut().take(lanes).enumerate() {
+                        *a = out_data[obase + l * out_s1];
+                    }
+                    let mut wi = 0usize;
+                    for c in 0..t.c {
+                        let cbase = ibase + (ic0 + c) * in_s1;
+                        for r in 0..fh {
+                            let rbase = cbase + (ih0 + y + r) * in_s2 + iw0 + x;
+                            let row = &in_data[rbase..rbase + fw];
+                            for &iv in row {
+                                let wrow = &wpack[wi * LANES..wi * LANES + LANES];
+                                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                    *a += iv * wv;
+                                }
+                                wi += 1;
+                            }
+                        }
+                    }
+                    for (l, a) in acc.iter().take(lanes).enumerate() {
+                        out_data[obase + l * out_s1] = *a;
+                    }
+                }
+            }
+        }
+    }
+    n.macs_done += t.macs();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::dims::LayerDims;
+
+    fn parse(d: &LayerDims, s: &str) -> BlockingString {
+        let b = BlockingString::parse(s).unwrap().with_window(d);
+        b.validate(d).unwrap();
+        b
+    }
+
+    #[test]
+    fn boundary_is_the_first_repeated_split() {
+        let d = LayerDims::conv(8, 8, 4, 4, 3, 3);
+        let s = parse(&d, "Fw Fh X0=4 Y0=4 C0=2 K0=2 C1=4 K1=4 X1=8 Y1=8");
+        assert_eq!(tile_boundary(&s), 6);
+        // a fully single-level string is one big tile
+        let s = parse(&d, "Fw Fh C0=4 K0=4 X0=8 Y0=8");
+        assert_eq!(tile_boundary(&s), s.len());
+        // a repeat before other dims' first split shrinks the tile
+        let s = parse(&d, "Fw Fh X0=4 X1=8 Y0=8 C0=4 K0=4");
+        assert_eq!(tile_boundary(&s), 3);
+    }
+
+    #[test]
+    fn fc_boundary_skips_trailing_unit_windows() {
+        let fc = LayerDims::fc(16, 8, 1);
+        let s = parse(&fc, "C0=4 K0=8 C1=16 Fw Fh");
+        assert_eq!(tile_boundary(&s), 2);
+    }
+}

@@ -1,6 +1,7 @@
 //! Execution runtimes: the plan-level [`backend`] executors (naive
-//! reference + blocked loop-nest interpreter with measured access
-//! counters) and the PJRT engine that loads AOT HLO-text artifacts onto
+//! reference, blocked per-MAC interpreter, and the tiled SIMD fast
+//! path, all with measured access counters) and the PJRT engine that
+//! loads AOT HLO-text artifacts onto
 //! the CPU PJRT client — the only place the `xla` crate is touched.
 //! Python never runs here; the artifacts are self-contained (weights
 //! baked in as HLO constants by `python/compile/aot.py`).
@@ -17,6 +18,9 @@ pub mod engine;
 pub mod engine;
 pub mod manifest;
 
-pub use backend::{AccessCounters, Backend, BlockedCpuBackend, ConvInputs, ConvOutput, NaiveBackend};
+pub use backend::{
+    AccessCounters, Backend, BlockedCpuBackend, ConvInputs, ConvOutput, NaiveBackend,
+    TiledCpuBackend,
+};
 pub use engine::{Engine, Module};
 pub use manifest::{ArtifactSpec, Golden, Manifest};

@@ -1,13 +1,15 @@
 //! Executable-backend integration tests: the paper's Sec. 5 access-count
 //! story as enforced properties.
 //!
-//! (a) `BlockedCpuBackend` output equals the `NaiveBackend` oracle on
-//!     every Table 4 benchmark layer (scaled for execution the same way
-//!     the trace simulator scales — access *ratios* are scale-stable);
-//! (b) the access counters the blocked interpreter measures while
+//! (a) `BlockedCpuBackend` and `TiledCpuBackend` output equals the
+//!     `NaiveBackend` oracle on every Table 4 benchmark layer (scaled
+//!     for execution the same way the trace simulator scales — access
+//!     *ratios* are scale-stable);
+//! (b) the access counters both executing backends measure while
 //!     running match the `model::access` predictions within the pinned
 //!     tolerance — the analytical model is checked against a real
-//!     executed loop nest, not just against itself.
+//!     executed loop nest, not just against itself — and the tiled fast
+//!     path's counter report equals the interpreter's exactly.
 
 use cnn_blocking::model::benchmarks::{all_benchmarks, aux_benchmarks};
 use cnn_blocking::model::buffers::Tensor;
@@ -16,7 +18,7 @@ use cnn_blocking::model::string::BlockingString;
 use cnn_blocking::optimizer::beam::BeamConfig;
 use cnn_blocking::runtime::backend::{
     backend_by_name, predicted_counters, BlockedCpuBackend, ConvInputs, NaiveBackend,
-    ACCESS_REL_TOL,
+    TiledCpuBackend, ACCESS_REL_TOL,
 };
 use cnn_blocking::runtime::Backend;
 use cnn_blocking::{BlockingPlan, Planner, Target};
@@ -104,12 +106,42 @@ fn blocked_equals_naive_on_aux_table4_layers() {
     }
 }
 
-#[test]
-fn measured_access_counts_match_model_predictions() {
-    // The enforced form of the paper's analytical claim: per virtual
-    // buffer, the fills the interpreter performed equal the model's
-    // Eq. 1 fill events and traffic, and the DRAM terminals agree.
-    let cases: Vec<(String, LayerDims, usize)> = vec![
+/// The measured == predicted check shared by the blocked and tiled
+/// backends: per virtual buffer, fills equal the model's Eq. 1 fill
+/// events and traffic, and the DRAM terminals agree.
+fn assert_counters_match_model(name: &str, plan: &BlockingPlan, out: &cnn_blocking::ConvOutput) {
+    let pred = predicted_counters(plan);
+    assert_eq!(
+        out.counters.buffers.len(),
+        pred.buffers.len(),
+        "{}: buffer count",
+        name
+    );
+    for (m, p) in out.counters.buffers.iter().zip(&pred.buffers) {
+        assert_eq!((m.tensor, m.ordinal), (p.tensor, p.ordinal));
+        assert_eq!(m.size_elems, p.size_elems, "{}: {}{} size", name, m.tensor, m.ordinal);
+        close(
+            m.fill_events as f64,
+            p.fill_events,
+            &format!("{}: {}{} fill events", name, m.tensor, m.ordinal),
+        );
+        close(
+            m.fill_elems as f64,
+            p.fill_elems,
+            &format!("{}: {}{} fill elems", name, m.tensor, m.ordinal),
+        );
+    }
+    let d = &out.counters.dram;
+    close(d.input_loads as f64, pred.dram_input_loads, &format!("{}: DRAM input", name));
+    close(d.kernel_loads as f64, pred.dram_kernel_loads, &format!("{}: DRAM kernel", name));
+    close(d.output_loads as f64, pred.dram_output_loads, &format!("{}: DRAM out loads", name));
+    close(d.output_stores as f64, pred.dram_output_stores, &format!("{}: DRAM out stores", name));
+}
+
+/// The four measured-vs-predicted cases, shared by the blocked and
+/// tiled counter tests.
+fn counter_cases() -> Vec<(String, LayerDims, usize)> {
+    vec![
         (
             "Conv3".to_string(),
             cnn_blocking::model::benchmarks::by_name("Conv3")
@@ -136,43 +168,105 @@ fn measured_access_counts_match_model_predictions() {
             LayerDims::conv(14, 14, 16, 32, 3, 3),
             3,
         ),
-    ];
-    for (name, dims, levels) in cases {
+    ]
+}
+
+#[test]
+fn measured_access_counts_match_model_predictions() {
+    // The enforced form of the paper's analytical claim, on the per-MAC
+    // interpreter.
+    for (name, dims, levels) in counter_cases() {
         let plan = planned(&name, dims, levels);
         let out = BlockedCpuBackend
             .execute(&plan, &ConvInputs::synthetic(dims, 7))
             .unwrap();
-        let pred = predicted_counters(&plan);
-        assert_eq!(
-            out.counters.buffers.len(),
-            pred.buffers.len(),
-            "{}: buffer count",
-            name
-        );
-        for (m, p) in out.counters.buffers.iter().zip(&pred.buffers) {
-            assert_eq!((m.tensor, m.ordinal), (p.tensor, p.ordinal));
-            assert_eq!(m.size_elems, p.size_elems, "{}: {}{} size", name, m.tensor, m.ordinal);
-            close(
-                m.fill_events as f64,
-                p.fill_events,
-                &format!("{}: {}{} fill events", name, m.tensor, m.ordinal),
-            );
-            close(
-                m.fill_elems as f64,
-                p.fill_elems,
-                &format!("{}: {}{} fill elems", name, m.tensor, m.ordinal),
-            );
-        }
-        let d = &out.counters.dram;
-        close(d.input_loads as f64, pred.dram_input_loads, &format!("{}: DRAM input", name));
-        close(d.kernel_loads as f64, pred.dram_kernel_loads, &format!("{}: DRAM kernel", name));
-        close(d.output_loads as f64, pred.dram_output_loads, &format!("{}: DRAM out loads", name));
-        close(d.output_stores as f64, pred.dram_output_stores, &format!("{}: DRAM out stores", name));
+        assert_counters_match_model(&name, &plan, &out);
         let op = &out.counters.operand;
         assert_eq!(op.input_reads, dims.macs());
         assert_eq!(op.kernel_reads, dims.macs());
         assert_eq!(op.output_accesses, 2 * dims.macs());
     }
+}
+
+#[test]
+fn tiled_access_counts_match_model_predictions() {
+    // The tiled fast path derives in-tile buffer counters analytically
+    // and measures the rest; the combined report must match the model
+    // exactly, same as the interpreter — and therefore also match the
+    // interpreter's own report buffer for buffer.
+    for (name, dims, levels) in counter_cases() {
+        let plan = planned(&name, dims, levels);
+        let inputs = ConvInputs::synthetic(dims, 7);
+        let tiled = TiledCpuBackend.execute(&plan, &inputs).unwrap();
+        assert_counters_match_model(&name, &plan, &tiled);
+        let blocked = BlockedCpuBackend.execute(&plan, &inputs).unwrap();
+        assert_eq!(
+            tiled.counters.buffers, blocked.counters.buffers,
+            "{}: tiled and interpreter buffer counters diverged",
+            name
+        );
+        assert_eq!(tiled.counters.dram, blocked.counters.dram, "{}: DRAM", name);
+        assert_eq!(tiled.counters.operand, blocked.counters.operand, "{}: operand", name);
+    }
+}
+
+#[test]
+fn tiled_equals_naive_on_all_table4_layers() {
+    // The fast path's correctness pin: same OUT_REL_TOL oracle check as
+    // the interpreter, across all 9 Table 4 rows — the 5 conv + 2 FC
+    // benchmarks (searched plans) and the 2 degenerate aux rows
+    // (unblocked strings; C = 1 creates no output buffer, so the
+    // whole-layer-as-one-tile path is exercised too).
+    for (i, b) in all_benchmarks().into_iter().enumerate() {
+        let dims = b.dims.scaled_for_sim(EXEC_MACS);
+        let plan = planned(b.name, dims, 3);
+        let inputs = ConvInputs::synthetic(dims, 3000 + i as u64);
+        let naive = NaiveBackend.execute(&plan, &inputs).unwrap();
+        let tiled = TiledCpuBackend.execute(&plan, &inputs).unwrap();
+        assert_outputs_close(b.name, &tiled.output, &naive.output);
+        assert_eq!(tiled.counters.macs, dims.macs(), "{}: MAC count", b.name);
+        assert_eq!(tiled.counters.backend, "tiled");
+    }
+    for (i, b) in aux_benchmarks().into_iter().enumerate() {
+        let dims = b.dims.scaled_for_sim(EXEC_MACS);
+        let plan = Planner::for_named(b.name, dims)
+            .plan_string(&BlockingString::unblocked(&dims))
+            .unwrap();
+        let inputs = ConvInputs::synthetic(dims, 4000 + i as u64);
+        let naive = NaiveBackend.execute(&plan, &inputs).unwrap();
+        let tiled = TiledCpuBackend.execute(&plan, &inputs).unwrap();
+        assert_outputs_close(b.name, &tiled.output, &naive.output);
+    }
+}
+
+#[test]
+fn tiled_handles_ragged_tiles() {
+    // Tile extents that fight the SIMD lane width: K0 = 3 (not a
+    // multiple of the kernel's 8-lane chunk, so the zero-padded lane
+    // path runs) and an odd X0 = 5. Output must still match the naive
+    // oracle and counters must still match the model exactly.
+    let d = LayerDims::conv(10, 6, 3, 6, 3, 3);
+    let s = BlockingString::parse("Fw Fh X0=5 Y0=3 C0=3 K0=3 K1=6 Y1=6 X1=10")
+        .unwrap()
+        .with_window(&d);
+    let plan = Planner::for_named("ragged", d).plan_string(&s).unwrap();
+    let inputs = ConvInputs::synthetic(d, 77);
+    let naive = NaiveBackend.execute(&plan, &inputs).unwrap();
+    let tiled = TiledCpuBackend.execute(&plan, &inputs).unwrap();
+    assert_outputs_close("ragged", &tiled.output, &naive.output);
+    assert_counters_match_model("ragged", &plan, &tiled);
+    // and the interpreter agrees with the fast path bit for bit on the
+    // counter side
+    let blocked = BlockedCpuBackend.execute(&plan, &inputs).unwrap();
+    assert_eq!(tiled.counters.buffers, blocked.counters.buffers);
+    assert_outputs_close("ragged-blocked", &tiled.output, &blocked.output);
+    // Splits that truly don't divide the layer dims (the other reading
+    // of "ragged") are rejected at validate time — NonDividing — so no
+    // backend can ever see a partially-covered tile.
+    let bad = BlockingString::parse("Fw Fh X0=4 Y0=3 C0=3 K0=3 K1=6 Y1=6 X1=10")
+        .unwrap()
+        .with_window(&d);
+    assert!(bad.validate(&d).is_err(), "non-dividing X0=4 of X=10 must be invalid");
 }
 
 #[test]
@@ -193,7 +287,8 @@ fn counters_carry_the_plans_buffer_placement() {
             .plan()
             .unwrap();
         let out = plan.execute(&ConvInputs::synthetic(dims, 5)).unwrap();
-        assert_eq!(out.counters.backend, "blocked");
+        // target dispatch routes through the tiled fast path by default
+        assert_eq!(out.counters.backend, "tiled");
         for m in &out.counters.buffers {
             let pb = plan
                 .buffers
@@ -217,9 +312,15 @@ fn naive_backend_reports_unblocked_memory_traffic() {
     let plan = planned("t", dims, 2);
     let out = NaiveBackend.execute(&plan, &ConvInputs::synthetic(dims, 3)).unwrap();
     assert!(out.counters.buffers.is_empty());
+    // memory-rate semantics: input/kernel operands are fresh on every
+    // window step (MAC rate); the output accumulator folds the window
+    // in a register, so it touches memory once per (x, y, c, k) point.
+    let window = dims.fw * dims.fh;
     assert_eq!(out.counters.dram.input_loads, dims.macs());
     assert_eq!(out.counters.dram.kernel_loads, dims.macs());
-    assert_eq!(out.counters.dram.output_stores, dims.output_elems());
+    assert_eq!(out.counters.dram.output_stores, dims.macs() / window);
+    assert_eq!(out.counters.dram.output_loads, dims.macs() / window);
+    assert_eq!(out.counters.operand.output_accesses, 2 * dims.macs() / window);
 }
 
 #[test]
@@ -241,6 +342,7 @@ fn blocking_cuts_measured_dram_traffic_on_conv1() {
         + blocked.counters.dram.output_stores;
     let naive_dram = naive.counters.dram.input_loads
         + naive.counters.dram.kernel_loads
+        + naive.counters.dram.output_loads
         + naive.counters.dram.output_stores;
     assert!(
         (blocked_dram as f64) * 5.0 < naive_dram as f64,
@@ -269,7 +371,7 @@ fn plan_engine_outputs_are_directly_runnable() {
 
 #[test]
 fn backend_registry_round_trips_names() {
-    for name in ["naive", "blocked"] {
+    for name in ["naive", "blocked", "tiled"] {
         assert_eq!(backend_by_name(name).unwrap().name(), name);
     }
     assert!(backend_by_name("pallas").is_err());
