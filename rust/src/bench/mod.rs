@@ -1,5 +1,5 @@
-//! The `cnnblk bench` performance harness: naive vs blocked vs tiled on
-//! the Table 4 layers, machine-readable output.
+//! The `cnnblk bench` performance harness: naive vs blocked vs tiled vs
+//! parallel on the Table 4 layers, machine-readable output.
 //!
 //! The paper's x86 result (Sec. 6) is that optimal blockings cut memory
 //! accesses *in real programs*; PR 3 made plans executable and this
@@ -15,27 +15,43 @@
 //! (element traffic x 4 bytes — the executors move `f32` — over the
 //! median wall time).
 //!
-//! [`BenchReport::save`] writes the whole report as JSON (`BENCH_4.json`
-//! by convention — the repo's benchmark trajectory file; CI regenerates
-//! a smoke-sized one per commit and uploads it as an artifact). In smoke
-//! mode ([`BenchConfig::smoke`], CI's configuration) the harness also
-//! *enforces* the perf claim: it fails if the tiled backend is not at
-//! least as fast as the per-MAC interpreter on the smoke layer.
+//! [`BenchReport::save`] writes the whole report as JSON (`BENCH_5.json`
+//! is the current trajectory point — earlier PRs' `BENCH_*.json` files
+//! stay committed untouched, so the repo accumulates a MAC/s
+//! trajectory; CI regenerates a smoke-sized current point per commit
+//! and uploads it as an artifact). [`BenchReport::compare_to`] diffs a
+//! report against a previous trajectory file (`--compare prev.json`),
+//! printing per-layer MAC/s deltas and **failing on a tiled regression
+//! beyond** [`TILED_REGRESSION_FRAC`]. In smoke mode
+//! ([`BenchConfig::smoke`], CI's configuration) the harness also
+//! *enforces* the perf claims directly: it fails if the tiled backend
+//! is not at least as fast as the per-MAC interpreter on the smoke
+//! layer, and it runs a fixed shardable plan (the `ParGate` layer) to
+//! fail if the parallel backend at `jobs` workers is slower than the
+//! single-thread tiled path.
 //!
 //! [`AccessCounters`]: crate::runtime::backend::AccessCounters
 
 use crate::model::benchmarks::by_name;
 use crate::model::dims::LayerDims;
+use crate::model::string::BlockingString;
 use crate::optimizer::beam::BeamConfig;
 use crate::plan::{Planner, Target};
 use crate::runtime::backend::{backend_by_name, ConvInputs, ConvOutput};
 use crate::util::json::{self, Json};
+use crate::util::pool::with_thread_cap;
 use crate::util::table::{eng, Table};
 use anyhow::{anyhow, ensure, Result};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Bytes per element the executing backends actually move (`f32`).
 pub const ELEM_BYTES: u64 = 4;
+
+/// Largest tolerated relative MAC/s drop of the `tiled` backend against
+/// a previous trajectory point before [`BenchReport::compare_to`]
+/// fails (the CI regression gate): 0.20 = 20%.
+pub const TILED_REGRESSION_FRAC: f64 = 0.20;
 
 /// What to benchmark and how hard.
 #[derive(Debug, Clone)]
@@ -58,8 +74,14 @@ pub struct BenchConfig {
     pub budget_bytes: u64,
     /// Use the paper-width beam instead of the quick one.
     pub full_search: bool,
-    /// Smoke mode: also fail if tiled is slower than the interpreter.
+    /// Smoke mode: also fail if tiled is slower than the interpreter,
+    /// and run the fixed `ParGate` layer failing if parallel at `jobs`
+    /// workers is slower than single-thread tiled.
     pub smoke: bool,
+    /// Worker-thread cap every timed execution runs under (0 = inherit
+    /// `CNNBLK_THREADS` / machine width). This is what `--jobs` sets;
+    /// the parallel backend shards to at most this many workers.
+    pub jobs: usize,
 }
 
 impl Default for BenchConfig {
@@ -81,19 +103,22 @@ impl Default for BenchConfig {
             budget_bytes: 8 << 20,
             full_search: false,
             smoke: false,
+            jobs: 0,
         }
     }
 }
 
 impl BenchConfig {
     /// CI-sized configuration: one small layer, tiny dims, a single
-    /// timed rep, and the tiled-not-slower-than-interpreter gate armed.
+    /// timed rep, the tiled-not-slower-than-interpreter gate armed, and
+    /// the parallel-not-slower-than-tiled gate at 4 workers.
     pub fn smoke() -> BenchConfig {
         BenchConfig {
             layers: vec!["Conv4".to_string()],
             max_macs: 200_000,
             reps: 1,
             smoke: true,
+            jobs: 4,
             ..BenchConfig::default()
         }
     }
@@ -184,6 +209,9 @@ fn median_mad(times: &[f64]) -> (f64, f64) {
 
 /// Time one backend on one planned layer: warmup + `reps` timed
 /// executions, per-level rates from the (deterministic) counters.
+/// `cfg.jobs > 0` pins the worker width every execution sees (the
+/// parallel backend shards to at most that many workers; the serial
+/// backends ignore it).
 fn time_backend(
     cfg: &BenchConfig,
     plan: &crate::plan::BlockingPlan,
@@ -191,14 +219,21 @@ fn time_backend(
     backend: &str,
 ) -> Result<BackendRun> {
     let be = backend_by_name(backend)?;
+    let exec = || -> Result<ConvOutput> {
+        if cfg.jobs > 0 {
+            with_thread_cap(cfg.jobs, || be.execute(plan, inputs))
+        } else {
+            be.execute(plan, inputs)
+        }
+    };
     let mut last: Option<ConvOutput> = None;
     for _ in 0..cfg.warmup {
-        std::hint::black_box(be.execute(plan, inputs)?);
+        std::hint::black_box(exec()?);
     }
     let mut times = Vec::with_capacity(cfg.reps.max(1));
     for _ in 0..cfg.reps.max(1) {
         let t0 = Instant::now();
-        let out = std::hint::black_box(be.execute(plan, inputs)?);
+        let out = std::hint::black_box(exec()?);
         times.push(t0.elapsed().as_secs_f64());
         last = Some(out);
     }
@@ -297,6 +332,28 @@ pub fn run_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         }
         layers.push(layer);
     }
+    if cfg.smoke {
+        // The intra-layer parallelism gate: a fixed, known-shardable
+        // plan (outermost K split 8 ways) timed on the serial tiled path
+        // vs the parallel backend at `jobs` workers. Fixed rather than
+        // searched so the gate cannot silently degenerate into a
+        // nothing-to-shard plan where the comparison is a coin flip.
+        let gate = parallel_gate_layer(cfg)?;
+        let (tiled, par) = (
+            gate.run_of("tiled").expect("gate times tiled"),
+            gate.run_of("parallel").expect("gate times parallel"),
+        );
+        ensure!(
+            par.mac_per_s >= tiled.mac_per_s,
+            "smoke gate: parallel ({} MAC/s at {} workers) is slower than \
+             single-thread tiled ({} MAC/s) on {}",
+            eng(par.mac_per_s),
+            cfg.jobs.max(1),
+            eng(tiled.mac_per_s),
+            gate.name
+        );
+        layers.push(gate);
+    }
     let ratios: Vec<f64> = layers
         .iter()
         .filter_map(|l| {
@@ -312,6 +369,34 @@ pub fn run_bench(cfg: &BenchConfig) -> Result<BenchReport> {
         config: cfg.clone(),
         layers,
         tiled_vs_blocked,
+    })
+}
+
+/// Build and time the smoke gate's fixed comparison layer: a blocking
+/// whose outermost K split has 8 iterations above the tile boundary, so
+/// the parallel backend always has real shards to fan out (~1.3M MACs —
+/// big enough that sharding wins dwarf fan-out overhead, small enough
+/// for CI). Timed with at least 3 reps regardless of `cfg.reps` so a
+/// single noisy measurement cannot flip the gate.
+fn parallel_gate_layer(cfg: &BenchConfig) -> Result<LayerBench> {
+    let d = LayerDims::conv(24, 24, 8, 32, 3, 3);
+    let s = BlockingString::parse("Fw Fh X0=6 Y0=6 C0=8 K0=4 X1=24 Y1=24 K1=32")
+        .map_err(|e| anyhow!("internal: gate blocking string: {}", e))?
+        .with_window(&d);
+    let plan = Planner::for_named("ParGate", d).plan_string(&s)?;
+    let mut gcfg = cfg.clone();
+    gcfg.reps = cfg.reps.max(3);
+    gcfg.warmup = cfg.warmup.max(1);
+    let inputs = ConvInputs::synthetic(d, cfg.seed);
+    let mut runs = Vec::new();
+    for backend in ["tiled", "parallel"] {
+        runs.push(time_backend(&gcfg, &plan, &inputs, backend)?);
+    }
+    Ok(LayerBench {
+        name: "ParGate".to_string(),
+        dims: d,
+        plan_string: plan.string.notation(),
+        runs,
     })
 }
 
@@ -348,7 +433,7 @@ impl BenchReport {
         }
     }
 
-    /// Serialize the report as the `BENCH_4.json` document.
+    /// Serialize the report as the `BENCH_*.json` trajectory document.
     pub fn to_json(&self) -> Json {
         let mut root = Json::obj();
         root.set("kind", json::s("cnnblk-bench"));
@@ -362,7 +447,8 @@ impl BenchReport {
             .set("levels", json::unum(c.levels as u64))
             .set("budget_bytes", json::unum(c.budget_bytes))
             .set("full_search", Json::Bool(c.full_search))
-            .set("smoke", Json::Bool(c.smoke));
+            .set("smoke", Json::Bool(c.smoke))
+            .set("jobs", json::unum(c.jobs as u64));
         root.set("config", cj);
         let layers: Vec<Json> = self
             .layers
@@ -431,6 +517,118 @@ impl BenchReport {
         std::fs::write(path, self.to_json().pretty() + "\n")
             .map_err(|e| anyhow!("writing {}: {}", path, e))
     }
+
+    /// Compare this report against a previous trajectory point
+    /// (`cnnblk bench --compare prev.json`): print per-layer MAC/s
+    /// deltas for every (layer, backend) pair timed in both, and fail
+    /// if the `tiled` backend regressed by more than
+    /// [`TILED_REGRESSION_FRAC`] on any layer — the CI gate that keeps
+    /// the fast path from rotting between trajectory points. A pair is
+    /// only comparable when the executed MAC count matches — MACs
+    /// capture the layer dims and `--max-macs` scaling, so a smoke run
+    /// never gets gated against a full-matrix baseline (or vice versa).
+    /// Layers missing from either side, mismatched in size, or carrying
+    /// null timings (e.g. a placeholder written without a toolchain)
+    /// are skipped, not failed: absence of a comparable baseline is not
+    /// a regression.
+    pub fn compare_to(&self, path: &str) -> Result<()> {
+        let prev = load_bench_rates(path)?;
+        let mut table = Table::new(
+            &format!("MAC/s vs {}", path),
+            &["layer", "backend", "prev", "now", "delta"],
+        );
+        let mut compared = 0usize;
+        let mut skipped_size = 0usize;
+        let mut worst_tiled: Option<(&str, f64)> = None;
+        for layer in &self.layers {
+            for r in &layer.runs {
+                let Some(&(old_macs, old)) =
+                    prev.get(&(layer.name.clone(), r.backend.clone()))
+                else {
+                    continue;
+                };
+                if old <= 0.0 {
+                    continue;
+                }
+                if old_macs != r.macs {
+                    // Different dims / --max-macs scaling: MAC/s are not
+                    // comparable across problem sizes.
+                    skipped_size += 1;
+                    continue;
+                }
+                compared += 1;
+                let delta = r.mac_per_s / old - 1.0;
+                table.row(vec![
+                    layer.name.clone(),
+                    r.backend.clone(),
+                    eng(old),
+                    eng(r.mac_per_s),
+                    format!("{:+.1}%", delta * 100.0),
+                ]);
+                if r.backend == "tiled"
+                    && worst_tiled.map(|(_, w)| delta < w).unwrap_or(true)
+                {
+                    worst_tiled = Some((&layer.name, delta));
+                }
+            }
+        }
+        if compared == 0 {
+            println!(
+                "--compare: {} has no comparable timed layers ({} size-mismatched \
+                 pairs skipped); nothing to compare",
+                path, skipped_size
+            );
+            return Ok(());
+        }
+        table.print();
+        if skipped_size > 0 {
+            println!(
+                "--compare: skipped {} (layer, backend) pairs whose MAC counts \
+                 differ from {} (different dims / --max-macs)",
+                skipped_size, path
+            );
+        }
+        if let Some((layer, delta)) = worst_tiled {
+            ensure!(
+                delta >= -TILED_REGRESSION_FRAC,
+                "tiled regressed {:.1}% on {} vs {} (gate allows {:.0}%)",
+                -delta * 100.0,
+                layer,
+                path,
+                TILED_REGRESSION_FRAC * 100.0
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Parse a previous `BENCH_*.json` into (layer, backend) → (MACs per
+/// execution, MAC/s). Entries with null/absent `mac_per_s` or `macs`
+/// are dropped — the MAC count is what makes two points comparable.
+fn load_bench_rates(path: &str) -> Result<BTreeMap<(String, String), (u64, f64)>> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| anyhow!("reading {}: {}", path, e))?;
+    let doc = json::parse(&text).map_err(|e| anyhow!("parsing {}: {:?}", path, e))?;
+    ensure!(
+        doc.get("kind").and_then(|k| k.as_str()) == Some("cnnblk-bench"),
+        "{} is not a cnnblk-bench report",
+        path
+    );
+    let mut rates = BTreeMap::new();
+    for layer in doc.get("layers").and_then(|l| l.as_arr()).unwrap_or(&[]) {
+        let Some(name) = layer.get("name").and_then(|n| n.as_str()) else {
+            continue;
+        };
+        for run in layer.get("runs").and_then(|r| r.as_arr()).unwrap_or(&[]) {
+            let backend = run.get("backend").and_then(|b| b.as_str());
+            let macs = run.get("macs").and_then(|m| m.as_u64());
+            let rate = run.get("mac_per_s").and_then(|m| m.as_f64());
+            if let (Some(backend), Some(macs), Some(rate)) = (backend, macs, rate) {
+                rates.insert((name.to_string(), backend.to_string()), (macs, rate));
+            }
+        }
+    }
+    Ok(rates)
 }
 
 #[cfg(test)]
@@ -478,6 +676,72 @@ mod tests {
             back.get("layers").and_then(|l| l.as_arr()).unwrap().len(),
             1
         );
+    }
+
+    #[test]
+    fn gate_layer_times_tiled_and_parallel_on_a_shardable_plan() {
+        // Structure only — the speed assertion itself is CI's job
+        // (run_bench in smoke mode); a loaded test machine must not
+        // flake the unit suite.
+        let cfg = BenchConfig {
+            jobs: 2,
+            reps: 1,
+            warmup: 0,
+            ..tiny()
+        };
+        let gate = parallel_gate_layer(&cfg).unwrap();
+        assert_eq!(gate.name, "ParGate");
+        let tiled = gate.run_of("tiled").unwrap();
+        let par = gate.run_of("parallel").unwrap();
+        assert_eq!(tiled.macs, par.macs);
+        assert_eq!(tiled.macs, gate.dims.macs());
+        assert!(par.mac_per_s > 0.0);
+        // the gate plan really has an outer K split 8 ways
+        assert!(gate.plan_string.contains("K1=32"), "{}", gate.plan_string);
+    }
+
+    #[test]
+    fn compare_reports_deltas_and_gates_tiled_regressions() {
+        let mut cfg = tiny();
+        cfg.backends = vec!["blocked".to_string(), "tiled".to_string()];
+        let report = run_bench(&cfg).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "cnnblk-bench-compare-{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        report.save(&path).unwrap();
+        // identical report: zero delta, no regression
+        report.compare_to(&path).unwrap();
+        // a baseline whose tiled rate is 2x the measured one (same MAC
+        // count, so it is comparable): the new run is now a >20%
+        // "regression" and the gate must fire
+        let tiled = report.layers[0].run_of("tiled").unwrap();
+        let (cur, macs) = (tiled.mac_per_s, tiled.macs);
+        let baseline = |macs: u64, rate: f64| {
+            format!(
+                "{{\"kind\": \"cnnblk-bench\", \"layers\": [{{\"name\": \"Conv4\", \
+                 \"runs\": [{{\"backend\": \"tiled\", \"macs\": {}, \
+                 \"mac_per_s\": {}}}]}}]}}\n",
+                macs, rate
+            )
+        };
+        std::fs::write(&path, baseline(macs, cur * 2.0)).unwrap();
+        let err = report.compare_to(&path).unwrap_err();
+        assert!(err.to_string().contains("tiled regressed"), "{}", err);
+        // the same inflated rate at a DIFFERENT problem size is not
+        // comparable (different dims / --max-macs) and must be skipped,
+        // not gated
+        std::fs::write(&path, baseline(macs * 2, cur * 2.0)).unwrap();
+        report.compare_to(&path).unwrap();
+        // a placeholder with no timed layers is skipped, not failed
+        std::fs::write(
+            &path,
+            "{\"kind\": \"cnnblk-bench\", \"layers\": []}\n",
+        )
+        .unwrap();
+        report.compare_to(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

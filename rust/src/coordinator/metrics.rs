@@ -20,6 +20,12 @@ pub struct Metrics {
     /// Multiply-accumulates executed by the serving backend (interpreted
     /// mode; 0 on the PJRT path, which does not expose MAC counts).
     pub macs: u64,
+    /// Wall time spent *executing* batches, in microseconds — the sum of
+    /// per-batch execution durations recorded by
+    /// [`Metrics::record_batch`]. MAC/s in [`Metrics::report`] is
+    /// computed over this, not over the run's total wall time (which
+    /// also counts queueing, batch formation and client think time).
+    pub exec_us: u64,
     /// Name of the backend serving the pipeline (labels the MAC/s line;
     /// empty when unknown).
     pub backend: String,
@@ -33,11 +39,12 @@ impl Metrics {
     }
 
     /// Record one executed batch (`formed` real requests in an
-    /// `executed`-slot execution).
-    pub fn record_batch(&mut self, formed: usize, executed: usize) {
+    /// `executed`-slot execution) and the wall time the execution took.
+    pub fn record_batch(&mut self, formed: usize, executed: usize, exec: Duration) {
         self.batches += 1;
         self.batch_sizes.push(formed);
         self.padded_slots += (executed - formed) as u64;
+        self.exec_us += exec.as_micros() as u64;
     }
 
     /// Record one failed request.
@@ -71,7 +78,11 @@ impl Metrics {
 
     /// One-line serving summary for a run of `wall` duration. When the
     /// executor recorded MAC counts (interpreted serving), appends the
-    /// per-backend compute throughput.
+    /// per-backend compute throughput — computed over the **summed
+    /// batch execution time** (`exec_us`), not over `wall`: the old
+    /// per-run wall-time quotient understated MAC/s by folding queueing
+    /// and batch-formation idle time into compute throughput. `wall` is
+    /// the honest fallback only when no batch durations were recorded.
     pub fn report(&self, wall: Duration) -> String {
         let mut line = format!(
             "requests={} batches={} mean_batch={:.2} padded={} errors={} \
@@ -92,11 +103,16 @@ impl Metrics {
             } else {
                 self.backend.clone()
             };
+            let exec_s = if self.exec_us > 0 {
+                self.exec_us as f64 / 1e6
+            } else {
+                wall.as_secs_f64()
+            };
             line.push_str(&format!(
                 " backend={} macs={} mac_per_s={}",
                 label,
                 crate::util::table::eng(self.macs as f64),
-                crate::util::table::eng(self.macs as f64 / wall.as_secs_f64().max(1e-9)),
+                crate::util::table::eng(self.macs as f64 / exec_s.max(1e-9)),
             ));
         }
         line
@@ -123,11 +139,12 @@ mod tests {
     #[test]
     fn batch_accounting() {
         let mut m = Metrics::default();
-        m.record_batch(3, 4);
-        m.record_batch(4, 4);
+        m.record_batch(3, 4, Duration::from_millis(2));
+        m.record_batch(4, 4, Duration::from_millis(3));
         assert_eq!(m.batches, 2);
         assert_eq!(m.padded_slots, 1);
         assert!((m.mean_batch_size() - 3.5).abs() < 1e-9);
+        assert_eq!(m.exec_us, 5_000);
     }
 
     #[test]
@@ -143,6 +160,7 @@ mod tests {
 
     #[test]
     fn mac_throughput_reported_per_backend() {
+        // Without batch timings the run's wall time is the fallback.
         let mut m = Metrics {
             backend: "tiled".to_string(),
             ..Metrics::default()
@@ -153,5 +171,26 @@ mod tests {
         let r = m.report(Duration::from_secs(2));
         assert!(r.contains("backend=tiled"), "{}", r);
         assert!(r.contains("mac_per_s=1.00K"), "{}", r);
+    }
+
+    #[test]
+    fn mac_throughput_uses_batch_wall_time_not_run_wall_time() {
+        // The satellite pin: MAC/s must come from the summed per-batch
+        // execution durations. A run that spent 10 s overall but only
+        // 2 s executing 2000 MACs serves 1.00K MAC/s, regardless of the
+        // `wall` passed to report().
+        let mut m = Metrics {
+            backend: "parallel".to_string(),
+            ..Metrics::default()
+        };
+        m.record_batch(4, 4, Duration::from_millis(1_500));
+        m.record_batch(2, 2, Duration::from_millis(500));
+        m.record_macs(500);
+        m.record_macs(1_500);
+        let r = m.report(Duration::from_secs(10));
+        assert!(r.contains("mac_per_s=1.00K"), "{}", r);
+        // and the quotient tracks batch time, not the report argument
+        let r2 = m.report(Duration::from_secs(1));
+        assert!(r2.contains("mac_per_s=1.00K"), "{}", r2);
     }
 }

@@ -5,8 +5,9 @@
 //! weights; it needs `make artifacts` and the offline image's `xla`
 //! crate. This module is the backend-registry route the coordinator
 //! falls back on (and CI exercises): each conv layer is a
-//! [`BlockingPlan`] executed by a named backend ("naive", "blocked" or
-//! "tiled"), chained with the same ReLU / 2x2-max-pool structure as
+//! [`BlockingPlan`] executed by a named backend ("naive", "blocked",
+//! "tiled" or "parallel"), chained with the same ReLU / 2x2-max-pool
+//! structure as
 //! `python/compile/model.py`, over deterministic synthetic weights.
 //! Numerics are self-consistent (server output == direct pipeline run)
 //! rather than golden-checked — the PJRT artifacts bake different
@@ -19,17 +20,33 @@
 //! independent — each is a fixed chain of f32 executions — so outputs
 //! and summed [`AccessCounters`](crate::runtime::backend::AccessCounters)
 //! are byte-identical at any worker count (pinned by a test below and
-//! by CI's two-thread-count runs).
+//! by CI's two-thread-count runs). With the `"parallel"` backend the
+//! roles flip: images run serially and each *layer* fans its shards
+//! across the same pool
+//! ([`crate::runtime::backend::ParallelTiledBackend`]) — one big layer
+//! scales across cores instead of only across batch images, and the two
+//! fan-outs never nest on the shared pool (a pool job that submits to
+//! its own pool and blocks would deadlock).
+//!
+//! The weight path is zero-copy: each layer's synthetic weights are
+//! generated once and held behind `Arc<[f32]>`, so running an image
+//! shares them with the backend (and, under `"parallel"`, with every
+//! shard worker) instead of cloning the weight tensor per image — the
+//! per-image clone PR 4 left on the table. The per-image activation
+//! chain still pays one move into the shared allocation per layer
+//! (`Vec -> Arc<[f32]>`); that is inherent to activations being
+//! per-image data, comparable in bytes to the weight clones it
+//! replaced, and negligible against the layer's convolution itself.
 
 use super::naive_conv::{maxpool2, relu};
 use crate::optimizer::beam::BeamConfig;
 use crate::plan::BlockingPlan;
 use crate::runtime::backend::{backend_by_name, Backend, ConvInputs};
 use crate::runtime::Manifest;
-use crate::util::pool::{default_threads, par_map_with, WorkerPool};
+use crate::util::pool::{default_threads, par_map_with, shared_pool};
 use crate::util::rng::Rng;
 use anyhow::{ensure, Context, Result};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// One conv layer of the interpreted pipeline: its plan plus the
 /// synthetic weights it executes with.
@@ -37,8 +54,9 @@ use std::sync::{Arc, Mutex};
 pub struct PipelineLayer {
     /// The blocking plan executed for this layer.
     pub plan: BlockingPlan,
-    /// Deterministic synthetic weights, `(K, C, Fh, Fw)` row-major.
-    pub weights: Vec<f32>,
+    /// Deterministic synthetic weights, `(K, C, Fh, Fw)` row-major —
+    /// shared read-only across images, batches and shard workers.
+    pub weights: Arc<[f32]>,
     /// Whether a 2x2/stride-2 max-pool follows this layer (derived from
     /// how the next layer's input shape chains).
     pub pool_after: bool,
@@ -64,13 +82,11 @@ struct PipelineInner {
     backend: Arc<dyn Backend>,
 }
 
-/// A conv→ReLU(→pool) chain executed through a plan backend.
+/// A conv→ReLU(→pool) chain executed through a plan backend. Batch
+/// fan-out uses the process-wide shared pool
+/// ([`crate::util::pool::shared_pool`]).
 pub struct InterpretedPipeline {
     inner: Arc<PipelineInner>,
-    /// Lazily-created worker pool for batch fan-out, kept across
-    /// batches; re-created when the requested width changes
-    /// (`CNNBLK_THREADS` / `with_thread_cap`).
-    pool: Mutex<Option<Arc<WorkerPool>>>,
 }
 
 impl InterpretedPipeline {
@@ -123,18 +139,17 @@ impl InterpretedPipeline {
             };
             // He-style scale keeps activations bounded through the chain.
             let scale = (2.0 / (d.c * d.fh * d.fw) as f64).sqrt();
-            let weights = (0..d.kernel_elems())
+            let weights: Vec<f32> = (0..d.kernel_elems())
                 .map(|_| ((rng.f64() - 0.5) * 2.0 * scale) as f32)
                 .collect();
             layers.push(PipelineLayer {
                 plan: plan.clone(),
-                weights,
+                weights: weights.into(),
                 pool_after,
             });
         }
         Ok(InterpretedPipeline {
             inner: Arc::new(PipelineInner { layers, backend }),
-            pool: Mutex::new(None),
         })
     }
 
@@ -205,9 +220,12 @@ impl InterpretedPipeline {
     /// Run a batch and report the summed counters. Images fan out
     /// across the worker pool; per-image work is untouched by the
     /// parallelism, so outputs and counters are byte-identical at any
-    /// worker count. Takes the batch by value so the serving hot path
-    /// hands its buffer straight to the `'static` pool jobs without an
-    /// extra copy.
+    /// worker count. With the `"parallel"` layer backend the images run
+    /// serially instead — the intra-layer shard fan-out owns the shared
+    /// pool, and nesting both fan-outs on one pool could deadlock.
+    /// Takes the batch by value so the serving hot path hands its
+    /// buffer straight to the `'static` pool jobs without an extra
+    /// copy.
     pub fn run_batch_counted(&self, flat: Vec<f32>, b: usize) -> Result<PipelineRun> {
         let per = self.input_len();
         ensure!(
@@ -217,7 +235,8 @@ impl InterpretedPipeline {
             b * per,
             flat.len()
         );
-        let runs: Vec<Result<PipelineRun>> = if b <= 1 || default_threads() <= 1 {
+        let intra_layer = self.backend_name() == "parallel";
+        let runs: Vec<Result<PipelineRun>> = if b <= 1 || default_threads() <= 1 || intra_layer {
             (0..b)
                 .map(|i| self.inner.run_image_counted(&flat[i * per..(i + 1) * per]))
                 .collect()
@@ -226,7 +245,7 @@ impl InterpretedPipeline {
             // index their image out of the one buffer.
             let shared: Arc<Vec<f32>> = Arc::new(flat);
             let inner = Arc::clone(&self.inner);
-            par_map_with(&self.pool(), (0..b).collect::<Vec<usize>>(), move |i| {
+            par_map_with(&shared_pool(), (0..b).collect::<Vec<usize>>(), move |i| {
                 inner.run_image_counted(&shared[i * per..(i + 1) * per])
             })
         };
@@ -242,21 +261,6 @@ impl InterpretedPipeline {
             out.dram_elems += run.dram_elems;
         }
         Ok(out)
-    }
-
-    /// The batch pool, created on first use and re-created when the
-    /// requested worker count changes.
-    fn pool(&self) -> Arc<WorkerPool> {
-        let mut guard = self.pool.lock().unwrap();
-        let want = default_threads();
-        if let Some(p) = guard.as_ref() {
-            if p.threads() == want {
-                return Arc::clone(p);
-            }
-        }
-        let p = Arc::new(WorkerPool::new(want));
-        *guard = Some(Arc::clone(&p));
-        p
     }
 }
 
@@ -280,7 +284,12 @@ impl PipelineInner {
         let mut dram_elems = 0u64;
         for layer in &self.layers {
             let d = layer.plan.dims;
-            let inputs = ConvInputs::new(d, h, layer.weights.clone())?;
+            // Zero-copy on the weight side: `layer.weights` is shared by
+            // refcount, never duplicated per image. The activation `h`
+            // is per-image by nature; `h.into()` moves it into a shared
+            // allocation (one memcpy — Arc<[f32]> carries an inline
+            // refcount header, so the Vec buffer cannot be reused).
+            let inputs = ConvInputs::from_shared(d, h.into(), Arc::clone(&layer.weights))?;
             let out = self.backend.execute(&layer.plan, &inputs)?;
             macs += out.counters.macs;
             let dc = &out.counters.dram;
@@ -388,6 +397,29 @@ mod tests {
             let rel = (x - y).abs() / x.abs().max(y.abs()).max(1.0);
             assert!(rel < 1e-3, "{} vs {}", x, y);
         }
+    }
+
+    #[test]
+    fn parallel_backend_serves_the_pipeline() {
+        // Intra-layer sharding through the serving path: identical
+        // outputs to the tiled pipeline (byte for byte — sharding does
+        // not reassociate), same summed counters, at 1 and 4 workers.
+        let tiled =
+            InterpretedPipeline::plan_default(&BeamConfig::quick(), "tiled", 0).unwrap();
+        let par =
+            InterpretedPipeline::plan_default(&BeamConfig::quick(), "parallel", 0).unwrap();
+        assert_eq!(par.backend_name(), "parallel");
+        let mut rng = Rng::new(13);
+        let per = tiled.input_len();
+        let n = 3;
+        let flat: Vec<f32> = (0..n * per).map(|_| rng.f64() as f32 - 0.5).collect();
+        let want = tiled.run_batch_counted(flat.clone(), n).unwrap();
+        let got1 = with_thread_cap(1, || par.run_batch_counted(flat.clone(), n).unwrap());
+        let got4 = with_thread_cap(4, || par.run_batch_counted(flat.clone(), n).unwrap());
+        assert_eq!(got1.output, want.output, "parallel@1 diverged from tiled");
+        assert_eq!(got4.output, want.output, "parallel@4 diverged from tiled");
+        assert_eq!(got4.macs, want.macs);
+        assert_eq!(got4.dram_elems, want.dram_elems);
     }
 
     #[test]

@@ -36,9 +36,11 @@ pub enum Execution {
     /// needs `make artifacts` and the `pjrt` feature).
     Pjrt,
     /// Per-layer plans executed through the backend registry
-    /// (`"naive"`, `"blocked"` or `"tiled"` — the tiled fast path is
-    /// the serving default) with deterministic synthetic weights —
-    /// see [`InterpretedPipeline`].
+    /// (`"naive"`, `"blocked"`, `"tiled"` or `"parallel"` — the tiled
+    /// fast path is the serving default; `"parallel"` shards each
+    /// layer across the worker pool instead of fanning batch images)
+    /// with deterministic synthetic weights — see
+    /// [`InterpretedPipeline`].
     Interpreted {
         /// Backend name, resolved via
         /// [`crate::runtime::backend::backend_by_name`].
@@ -309,8 +311,12 @@ fn executor_loop(
         }
         flat.resize(exec_size * input_len, 0.0); // zero-pad
 
+        let t0 = Instant::now();
         let result = module.run_f32(&[&flat]);
-        metrics.lock().unwrap().record_batch(formed, exec_size);
+        metrics
+            .lock()
+            .unwrap()
+            .record_batch(formed, exec_size, t0.elapsed());
         deliver(batch, result, &metrics, output_len);
     }
 }
@@ -337,10 +343,11 @@ fn interpreted_loop(
         for r in &batch {
             flat.extend_from_slice(&r.input);
         }
+        let t0 = Instant::now();
         let result = pipeline.run_batch_counted(flat, formed);
         {
             let mut m = metrics.lock().unwrap();
-            m.record_batch(formed, formed);
+            m.record_batch(formed, formed, t0.elapsed());
             if let Ok(run) = &result {
                 m.record_macs(run.macs);
             }

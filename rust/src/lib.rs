@@ -45,11 +45,12 @@
 //!
 //! Plans are also directly *runnable*: the [`runtime::backend`] layer
 //! executes a plan on real tensors — [`Backend`] dispatched from
-//! `provenance.target` (the tiled SIMD fast path by default), with a
-//! naive Algorithm 1 oracle and a blocked per-MAC interpreter
-//! selectable by name, all measuring per-level access counts as they
-//! run — and `rust/tests/backend.rs` pins measured counts against the
-//! model's predictions:
+//! `provenance.target` (the tiled SIMD fast path, sharded across the
+//! worker pool by the `parallel` backend when more than one thread is
+//! available), with a naive Algorithm 1 oracle and a blocked per-MAC
+//! interpreter selectable by name, all measuring per-level access
+//! counts as they run — and `rust/tests/backend.rs` pins measured
+//! counts against the model's predictions:
 //!
 //! ```ignore
 //! use cnn_blocking::{ConvInputs, Planner};
@@ -73,15 +74,18 @@
 //!   (replaces the paper's PAPI measurements).
 //! * [`baselines`] — im2col+GEMM (MKL/ATLAS-like) and DianNao models.
 //! * [`parallel`] — multicore partitioning (Sec. 3.3 / Fig. 9).
-//! * [`runtime`] — executable plan backends (naive oracle + blocked
-//!   interpreter with measured access counters) and the PJRT client
-//!   wrapper (load + run AOT HLO artifacts).
+//! * [`runtime`] — executable plan backends (naive oracle, blocked
+//!   interpreter, tiled fast path, parallel-sharded tiled — all with
+//!   measured access counters) and the PJRT client wrapper (load + run
+//!   AOT HLO artifacts).
 //! * [`coordinator`] — threaded batching inference driver (L3), PJRT or
 //!   interpreted through the backend registry.
 //! * [`figures`] — harness that regenerates each paper table/figure.
 //! * [`bench`] — the `cnnblk bench` perf harness: naive vs blocked vs
-//!   tiled MAC/s and per-level bytes/s on the Table 4 layers, written
-//!   to the machine-readable `BENCH_4.json` trajectory file.
+//!   tiled vs parallel MAC/s and per-level bytes/s on the Table 4
+//!   layers, written to the machine-readable `BENCH_5.json` trajectory
+//!   point (earlier `BENCH_*.json` points stay committed), with
+//!   `--compare` regression gating against the previous point.
 //! * [`util`] — offline substrates (JSON, CLI, RNG, bench, threads).
 //!
 //! See `docs/ARCHITECTURE.md` for the paper-section → module map and the

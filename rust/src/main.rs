@@ -68,23 +68,30 @@ fn print_help() {
          \x20         [--top 5] [--cache PATH] [--no-cache]   (repeat runs hit the plan cache)\n\
          \x20         --network AlexNet                       (plan a whole network through the\n\
          \x20         engine: repeated shapes searched once, unique shapes in parallel)\n\
-         run       --benchmark Conv1 [--backend naive|blocked|tiled] (execute the planned layer\n\
-         \x20         and print measured-vs-predicted access counts; default backend tiled)\n\
+         run       --benchmark Conv1 [--backend naive|blocked|tiled|parallel] (execute the\n\
+         \x20         planned layer and print measured-vs-predicted access counts; default\n\
+         \x20         backend parallel when >1 worker thread is available, tiled otherwise)\n\
          \x20         [--levels 3] [--budget-kb 8192] [--target bespoke|diannao|cpu]\n\
          \x20         [--strategy beam|exhaustive|random] [--cache PATH] [--no-cache]\n\
          \x20         [--max-macs 2000000]                    (scale the layer for execution)\n\
+         \x20         [--jobs N]                              (worker threads for --backend\n\
+         \x20         parallel; 0 = CNNBLK_THREADS / machine width)\n\
          \x20         [--seed 42] [--verify]                  (--verify cross-checks vs naive\n\
          \x20         and prints the tiled-vs-blocked wall-time speedup)\n\
-         bench     [--layers Conv1,..,Conv5] [--backends naive,blocked,tiled]\n\
+         bench     [--layers Conv1,..,Conv5] [--backends naive,blocked,tiled,parallel]\n\
          \x20         [--max-macs 2000000] [--reps 5] [--warmup 1] [--seed 42]\n\
-         \x20         [--levels 3] [--budget-kb 8192] [--out BENCH_4.json]\n\
-         \x20         [--smoke]    (tiny dims, 1 rep; fails if tiled is slower than blocked)\n\
+         \x20         [--levels 3] [--budget-kb 8192] [--out BENCH_5.json] [--jobs N]\n\
+         \x20         [--compare PREV.json]  (print MAC/s deltas vs a previous trajectory\n\
+         \x20         point; fails on a >20% tiled regression)\n\
+         \x20         [--smoke]    (tiny dims, 1 rep; fails if tiled is slower than blocked\n\
+         \x20         or parallel@4 workers is slower than single-thread tiled)\n\
          schedules [--out python/compile/schedules.json]      (step 1 of `make artifacts`)\n\
          figures   [--table1|--table3|--table4|--fig3|--fig5|--fig6|--fig7|--fig8|--fig9|--all]\n\
          cachesim  [--max-macs 20000000]                      (Figs. 3-4 traces)\n\
          serve     [--requests 256] [--batch 8] [--timeout-ms 2] [--artifacts artifacts]\n\
-         \x20         [--interpret [naive|blocked|tiled]]     (plan-backend serving, no PJRT;\n\
-         \x20         bare --interpret serves the tiled fast path)\n\
+         \x20         [--interpret [naive|blocked|tiled|parallel]] (plan-backend serving, no\n\
+         \x20         PJRT; bare --interpret serves the tiled fast path fanning batch images\n\
+         \x20         across workers; 'parallel' shards each layer across workers instead)\n\
          validate  [--artifacts artifacts]                    (PJRT round-trip checks)\n\
          \n\
          add --full-search for the paper-width beam (128 seeds) instead of the quick one"
@@ -261,6 +268,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             "levels",
             "strategy",
             "max-macs",
+            "jobs",
             "seed",
             "verify",
             "full-search",
@@ -294,11 +302,26 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let plan = planner.plan()?;
     println!("plan:  {}", plan);
 
-    let backend_name = args.get_or("backend", "tiled");
+    // Default to the dispatch default: the parallel-sharded fast path
+    // when more than one worker thread is available, plain tiled
+    // otherwise. `--jobs N` pins the worker width for this run, so it
+    // also decides the default — `--jobs 4` on a single-core box (or
+    // under CNNBLK_THREADS=1) must still mean 4-way sharding.
+    let jobs = args.get_u64("jobs", 0) as usize;
+    let workers = if jobs > 0 {
+        jobs
+    } else {
+        cnn_blocking::util::pool::default_threads()
+    };
+    let backend_name = args.get_or("backend", if workers > 1 { "parallel" } else { "tiled" });
     let backend = backend_by_name(&backend_name)?;
     let inputs = ConvInputs::synthetic(dims, args.get_u64("seed", 42));
     let t0 = Instant::now();
-    let out = backend.execute(&plan, &inputs)?;
+    let out = if jobs > 0 {
+        cnn_blocking::util::pool::with_thread_cap(jobs, || backend.execute(&plan, &inputs))?
+    } else {
+        backend.execute(&plan, &inputs)?
+    };
     let wall = t0.elapsed();
     let rate = out.counters.macs as f64 / wall.as_secs_f64().max(1e-9);
     println!(
@@ -446,10 +469,15 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `cnnblk bench`: time the executing backends on (scaled) Table 4
-/// layers and write the machine-readable `BENCH_4.json` report — the
-/// repo's benchmark trajectory file. `--smoke` is the CI configuration:
-/// tiny dims, one rep, and a hard failure when the tiled fast path is
-/// slower than the per-MAC interpreter.
+/// layers and write the machine-readable `BENCH_5.json` report — the
+/// current point of the repo's benchmark trajectory (earlier
+/// `BENCH_*.json` points stay committed). `--compare PREV.json` prints
+/// MAC/s deltas against a previous point and fails on a >20% tiled
+/// regression. `--smoke` is the CI configuration: tiny dims, one rep,
+/// a hard failure when the tiled fast path is slower than the per-MAC
+/// interpreter, and a second hard failure when the parallel backend at
+/// 4 workers is slower than single-thread tiled on the fixed `ParGate`
+/// layer.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     check_flags(
         args,
@@ -463,6 +491,8 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             "levels",
             "budget-kb",
             "out",
+            "compare",
+            "jobs",
             "smoke",
             "full-search",
         ],
@@ -491,11 +521,17 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     cfg.levels = args.get_u64("levels", cfg.levels as u64) as usize;
     cfg.budget_bytes = args.get_u64("budget-kb", cfg.budget_bytes / 1024) * 1024;
     cfg.full_search = args.has("full-search");
+    cfg.jobs = args.get_u64("jobs", cfg.jobs as u64) as usize;
     let report = run_bench(&cfg)?;
     report.print();
-    let out = args.get_or("out", "BENCH_4.json");
+    let out = args.get_or("out", "BENCH_5.json");
     report.save(&out)?;
     println!("wrote {}", out);
+    // Compare after saving: even a regressing run leaves its trajectory
+    // point on disk for inspection.
+    if let Some(prev) = args.get("compare") {
+        report.compare_to(prev)?;
+    }
     Ok(())
 }
 

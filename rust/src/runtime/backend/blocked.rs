@@ -56,7 +56,7 @@ impl Backend for BlockedCpuBackend {
         // materialized, and the leaf is a single interpreted MAC.
         let mut nest = Nest::new(plan, inputs, 0)?;
         nest.run(&mut |n, off| n.mac_at(off));
-        nest.finish(&plan.dims, "blocked")
+        nest.finish("blocked")
     }
 }
 

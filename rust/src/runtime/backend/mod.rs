@@ -8,7 +8,7 @@
 //! than BLAS-style baselines) become a checkable, enforced property
 //! (`rust/tests/backend.rs`) instead of a printed number.
 //!
-//! Three backends ship:
+//! Four backends ship:
 //!
 //! * [`NaiveBackend`] — Algorithm 1 reference semantics, wrapping
 //!   [`crate::coordinator::naive_conv`]: the unblocked `FwFhXYCK` nest
@@ -28,9 +28,16 @@
 //!   loops over contiguous rows, the `K0` output-channel block in
 //!   SIMD-friendly lane chunks — with the in-tile buffers' counters
 //!   derived analytically so measured == predicted still holds exactly.
+//! * [`ParallelTiledBackend`] — the scale-out role: shards the plan's
+//!   outermost K (or Y) blocking split into disjoint iteration ranges,
+//!   runs the tiled kernel over each shard on the shared
+//!   [`crate::util::pool::WorkerPool`], and merges outputs and counters
+//!   deterministically — byte-identical output and exactly the
+//!   interpreter's counters at any worker count.
 //!
 //! Dispatch keys off [`BlockingPlan::provenance`]`.target` — every
-//! target executes through the tiled fast path (what differs per target
+//! target executes through the tiled fast path, parallel-sharded when
+//! more than one worker thread is available (what differs per target
 //! is the buffer *placement* already recorded in the plan); the
 //! interpreter and the naive oracle are selected explicitly by name —
 //! so `Planner`/`PlanEngine` outputs are directly runnable:
@@ -50,10 +57,12 @@
 mod blocked;
 mod naive;
 mod nest;
+mod parallel;
 mod tiled;
 
 pub use blocked::BlockedCpuBackend;
 pub use naive::NaiveBackend;
+pub use parallel::ParallelTiledBackend;
 pub use tiled::{TiledCpuBackend, LANES};
 
 use crate::model::access;
@@ -66,7 +75,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// The backend names [`backend_by_name`] resolves, in CLI order.
-pub const BACKEND_NAMES: [&str; 3] = ["naive", "blocked", "tiled"];
+pub const BACKEND_NAMES: [&str; 4] = ["naive", "blocked", "tiled", "parallel"];
 
 /// An executor for planned convolutions: turns a [`BlockingPlan`] plus
 /// real tensors into an output tensor and a measured access report.
@@ -81,12 +90,14 @@ pub trait Backend: Send + Sync {
     fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput>;
 }
 
-/// Resolve a backend by CLI name ("naive", "blocked" or "tiled").
+/// Resolve a backend by CLI name ("naive", "blocked", "tiled" or
+/// "parallel").
 pub fn backend_by_name(name: &str) -> Result<Arc<dyn Backend>> {
     match name {
         "naive" => Ok(Arc::new(NaiveBackend)),
         "blocked" => Ok(Arc::new(BlockedCpuBackend)),
         "tiled" => Ok(Arc::new(TiledCpuBackend)),
+        "parallel" => Ok(Arc::new(ParallelTiledBackend::default())),
         other => Err(anyhow!(
             "unknown backend '{}' (known: {})",
             other,
@@ -96,16 +107,26 @@ pub fn backend_by_name(name: &str) -> Result<Arc<dyn Backend>> {
 }
 
 /// The backend a plan's target executes on. Every target — bespoke,
-/// DianNao, CPU — runs through the [`TiledCpuBackend`] fast path, which
-/// executes every plan the interpreter can (both reject the same
-/// hoisted-window strings) at far higher MAC/s with identical access
-/// counters; what differs per target is the buffer *placement* already
-/// recorded in the plan. The [`BlockedCpuBackend`] per-MAC interpreter
-/// and the [`NaiveBackend`] oracle are only ever selected explicitly,
-/// by name.
+/// DianNao, CPU — runs through the tiled fast path, which executes
+/// every plan the interpreter can (both reject the same hoisted-window
+/// strings) at far higher MAC/s with identical access counters; what
+/// differs per target is the buffer *placement* already recorded in the
+/// plan. When more than one worker thread is available
+/// (`CNNBLK_THREADS` / [`crate::util::pool::default_threads`]), the
+/// dispatch default is the [`ParallelTiledBackend`], which shards the
+/// outermost blocking split across the worker pool; with a single
+/// thread it is the plain [`TiledCpuBackend`]. The
+/// [`BlockedCpuBackend`] per-MAC interpreter and the [`NaiveBackend`]
+/// oracle are only ever selected explicitly, by name.
 pub fn backend_for_target(target: &Target) -> Arc<dyn Backend> {
     match target {
-        Target::Bespoke { .. } | Target::DianNao | Target::Cpu => Arc::new(TiledCpuBackend),
+        Target::Bespoke { .. } | Target::DianNao | Target::Cpu => {
+            if crate::util::pool::default_threads() > 1 {
+                Arc::new(ParallelTiledBackend::default())
+            } else {
+                Arc::new(TiledCpuBackend)
+            }
+        }
     }
 }
 
@@ -130,19 +151,37 @@ impl BlockingPlan {
 /// stack uses (model.py / `naive_conv`): input `(B, C, H, W)` with
 /// `H = Y + Fh - 1`, `W = X + Fw - 1` ("valid" convolution producing
 /// `Y x X` outputs), weights `(K, C, Fh, Fw)`, all `f32` row-major.
+///
+/// Tensors are held behind `Arc<[f32]>`, so cloning a `ConvInputs` is
+/// two reference-count bumps, not a tensor copy. That is what makes
+/// fan-out cheap everywhere downstream: the serving pipeline reuses one
+/// weight tensor across every image of a batch, and the
+/// [`ParallelTiledBackend`] hands the same tensors to every shard
+/// worker without copying.
 #[derive(Debug, Clone)]
 pub struct ConvInputs {
     /// The layer shape these tensors are sized for.
     pub dims: LayerDims,
-    /// Input activations, `(B, C, H, W)` row-major.
-    pub input: Vec<f32>,
-    /// Kernel weights, `(K, C, Fh, Fw)` row-major.
-    pub weights: Vec<f32>,
+    /// Input activations, `(B, C, H, W)` row-major (shared, read-only).
+    pub input: Arc<[f32]>,
+    /// Kernel weights, `(K, C, Fh, Fw)` row-major (shared, read-only).
+    pub weights: Arc<[f32]>,
 }
 
 impl ConvInputs {
     /// Wrap caller-provided tensors, validating their lengths.
     pub fn new(dims: LayerDims, input: Vec<f32>, weights: Vec<f32>) -> Result<ConvInputs> {
+        ConvInputs::from_shared(dims, input.into(), weights.into())
+    }
+
+    /// Wrap already-shared tensors without copying, validating their
+    /// lengths — the zero-copy constructor the serving pipeline uses to
+    /// reuse one weight tensor across a whole batch.
+    pub fn from_shared(
+        dims: LayerDims,
+        input: Arc<[f32]>,
+        weights: Arc<[f32]>,
+    ) -> Result<ConvInputs> {
         ensure!(
             input.len() as u64 == dims.input_elems(),
             "input has {} elements, {} needs {}",
@@ -168,16 +207,16 @@ impl ConvInputs {
     /// layer — what `cnnblk run`, the tests, and the examples execute.
     pub fn synthetic(dims: LayerDims, seed: u64) -> ConvInputs {
         let mut rng = Rng::new(seed);
-        let input = (0..dims.input_elems())
+        let input: Vec<f32> = (0..dims.input_elems())
             .map(|_| rng.f64() as f32 - 0.5)
             .collect();
-        let weights = (0..dims.kernel_elems())
+        let weights: Vec<f32> = (0..dims.kernel_elems())
             .map(|_| rng.f64() as f32 - 0.5)
             .collect();
         ConvInputs {
             dims,
-            input,
-            weights,
+            input: input.into(),
+            weights: weights.into(),
         }
     }
 
@@ -448,7 +487,7 @@ mod tests {
     }
 
     #[test]
-    fn registry_resolves_both_backends() {
+    fn registry_resolves_every_backend() {
         for name in BACKEND_NAMES {
             assert_eq!(backend_by_name(name).unwrap().name(), name);
         }
@@ -456,13 +495,20 @@ mod tests {
     }
 
     #[test]
-    fn every_target_dispatches_to_tiled() {
+    fn target_dispatch_follows_worker_width() {
+        use crate::util::pool::with_thread_cap;
         for t in [
             Target::Bespoke { budget_bytes: 1024 },
             Target::DianNao,
             Target::Cpu,
         ] {
-            assert_eq!(backend_for_target(&t).name(), "tiled");
+            // single worker: the plain tiled fast path
+            assert_eq!(with_thread_cap(1, || backend_for_target(&t).name()), "tiled");
+            // multiple workers: the parallel-sharded fast path
+            assert_eq!(
+                with_thread_cap(4, || backend_for_target(&t).name()),
+                "parallel"
+            );
         }
     }
 
@@ -507,7 +553,11 @@ mod tests {
         let plan = small_plan();
         let inputs = ConvInputs::synthetic(plan.dims, 1);
         let out = plan.execute(&inputs).unwrap();
-        assert_eq!(out.counters.backend, "tiled");
+        assert!(
+            out.counters.backend == "tiled" || out.counters.backend == "parallel",
+            "dispatch default must be a tiled fast path, got '{}'",
+            out.counters.backend
+        );
         assert_eq!(out.output.len(), inputs.output_len());
     }
 

@@ -4,7 +4,9 @@
 //! correctness for every other backend; its access report is what an
 //! unblocked implementation pays — every operand fetch is memory
 //! traffic, which is exactly the baseline the paper's blocked schedules
-//! are measured against.
+//! are measured against. Like every backend it reads the `Arc<[f32]>`
+//! tensors of [`ConvInputs`] in place — comparing against the oracle
+//! never copies the inputs.
 
 use super::{AccessCounters, Backend, ConvInputs, ConvOutput, DramCounters, OperandCounters};
 use crate::coordinator::naive_conv::conv_valid;

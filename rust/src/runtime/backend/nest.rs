@@ -27,7 +27,7 @@ use super::{
     AccessCounters, BufferCounters, ConvInputs, ConvOutput, DramCounters, OperandCounters,
 };
 use crate::model::buffers::{allocate, Tensor};
-use crate::model::dims::{Dim, LayerDims};
+use crate::model::dims::Dim;
 use crate::plan::BlockingPlan;
 use anyhow::{anyhow, ensure, Result};
 
@@ -168,12 +168,34 @@ fn fill_chain(
     b.fill_elems += n;
 }
 
+/// Restriction of one walked loop level to a contiguous sub-range of
+/// its iterations — how [`super::ParallelTiledBackend`] splits a layer
+/// into per-worker shards. The restricted level must lie at or above
+/// the leaf boundary; every other level runs in full. Counters for
+/// buffers whose fills ride the restricted loop scale naturally (the
+/// walker simply executes fewer iterations); counters for buffers
+/// created at or above the restricted level are identical in every
+/// shard and are de-duplicated at merge time by the parallel backend.
+#[derive(Debug, Clone, Copy)]
+pub(super) struct NestShard {
+    /// String position of the restricted loop level.
+    pub(super) pos: usize,
+    /// First iteration (inclusive) of that level to execute.
+    pub(super) start: u64,
+    /// Last iteration (exclusive) of that level to execute.
+    pub(super) end: u64,
+}
+
 /// A live loop nest executing one plan: the walker state, the
 /// materialized buffer chains, the DRAM-resident tensors, and every
 /// counter. Backends drive it via [`Nest::run`] with a leaf callback and
 /// collect the result with [`Nest::finish`].
 pub(super) struct Nest<'a> {
     levels: Vec<LoopLevel>,
+    /// Iteration-range restriction of one level, if sharded.
+    shard: Option<NestShard>,
+    /// MACs this (possibly sharded) nest is expected to execute.
+    expected_macs: u64,
     /// Materialized buffers created at each string position, as
     /// (tensor, index into that tensor's materialized chain).
     by_pos: Vec<Vec<(Tensor, usize)>>,
@@ -207,6 +229,20 @@ impl<'a> Nest<'a> {
     /// to execute those loops itself. `boundary == 0` materializes
     /// everything (the interpreter configuration).
     pub(super) fn new(plan: &BlockingPlan, inputs: &'a ConvInputs, boundary: usize) -> Result<Nest<'a>> {
+        Nest::with_shard(plan, inputs, boundary, None)
+    }
+
+    /// [`Nest::new`] with an optional iteration-range restriction of one
+    /// walked level (see [`NestShard`]). Virtualized-buffer counters and
+    /// their DRAM terminals are derived from the *effective* trip counts,
+    /// so a shard's analytic counters are exactly its share of the whole
+    /// layer's.
+    pub(super) fn with_shard(
+        plan: &BlockingPlan,
+        inputs: &'a ConvInputs,
+        boundary: usize,
+        shard: Option<NestShard>,
+    ) -> Result<Nest<'a>> {
         let d = plan.dims;
         ensure!(
             inputs.dims == d,
@@ -261,11 +297,37 @@ impl<'a> Nest<'a> {
                 stride,
             });
         }
-        // trips_above[p] = product of trip counts at positions >= p —
-        // the fill count of a buffer created at position p - 1.
+        let mut expected_macs = d.macs();
+        if let Some(sh) = &shard {
+            ensure!(
+                sh.pos >= boundary && sh.pos < n,
+                "internal: shard level {} outside walked range [{}, {})",
+                sh.pos,
+                boundary,
+                n
+            );
+            ensure!(
+                sh.start < sh.end && sh.end <= levels[sh.pos].trip,
+                "internal: shard range {}..{} invalid for trip {}",
+                sh.start,
+                sh.end,
+                levels[sh.pos].trip
+            );
+            // Every trip is a factor of macs() on a validated string, so
+            // this division is exact.
+            expected_macs = expected_macs / levels[sh.pos].trip * (sh.end - sh.start);
+        }
+        // trips_above[p] = product of *effective* trip counts at
+        // positions >= p — the fill count of a buffer created at
+        // position p - 1. A sharded level contributes only the
+        // iterations this nest will actually run.
+        let eff = |p: usize| match &shard {
+            Some(sh) if sh.pos == p => sh.end - sh.start,
+            _ => levels[p].trip,
+        };
         let mut trips_above = vec![1u64; n + 1];
         for p in (0..n).rev() {
-            trips_above[p] = trips_above[p + 1] * levels[p].trip;
+            trips_above[p] = trips_above[p + 1] * eff(p);
         }
 
         let bufs = allocate(s, &d);
@@ -358,6 +420,8 @@ impl<'a> Nest<'a> {
 
         Ok(Nest {
             levels,
+            shard,
+            expected_macs,
             by_pos,
             boundary,
             input_chain,
@@ -409,9 +473,15 @@ impl<'a> Nest<'a> {
             let l = &self.levels[pos];
             (l.dim as usize, l.trip, l.stride)
         };
+        // A sharded level runs only its assigned iteration sub-range;
+        // every other level runs in full.
+        let (it0, it1) = match &self.shard {
+            Some(sh) if sh.pos == pos => (sh.start, sh.end),
+            _ => (0, trip),
+        };
         let base = off[dim];
         let mut inner = off;
-        for it in 0..trip {
+        for it in it0..it1 {
             inner[dim] = base + it * stride;
             self.subtree(pos, inner, leaf);
         }
@@ -523,12 +593,12 @@ impl<'a> Nest<'a> {
     /// Collect the output tensor and the full access report: measured
     /// counters from the materialized chains merged (innermost first)
     /// with the analytic counters of any virtualized buffers.
-    pub(super) fn finish(self, d: &LayerDims, backend: &str) -> Result<ConvOutput> {
+    pub(super) fn finish(self, backend: &str) -> Result<ConvOutput> {
         ensure!(
-            self.macs_done == d.macs(),
-            "internal: executed {} MACs, layer has {}",
+            self.macs_done == self.expected_macs,
+            "internal: executed {} MACs, this nest owes {}",
             self.macs_done,
-            d.macs()
+            self.expected_macs
         );
         let operand = OperandCounters {
             input_reads: self.macs_done,

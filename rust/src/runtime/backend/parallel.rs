@@ -1,0 +1,295 @@
+//! Intra-layer parallel tiled execution: one layer sharded across the
+//! worker pool.
+//!
+//! The blocked loop nests of the paper expose an outermost level of
+//! *independent* work: iterations of the outermost `K` split touch
+//! disjoint output channels (and disjoint kernel rows), iterations of
+//! the outermost `Y` split touch disjoint output rows. PR 4's serving
+//! path already exploited parallelism *across* batch images;
+//! [`ParallelTiledBackend`] exploits it *within* one layer — the piece
+//! that lets one big convolution scale across cores, matching how the
+//! paper's x86 implementation (Sec. 5) and the DianNao-style
+//! accelerators in PAPERS.md spread a layer over lanes.
+//!
+//! How a layer is sharded:
+//!
+//! 1. Pick the shard level: the **outermost K split** of the plan's
+//!    blocking string, falling back to the outermost `Y` split when `K`
+//!    is unsplit outside the level-0 tile or too narrow to shard
+//!    (trip < 2). Both leave the compiled tile kernel untouched — the
+//!    restriction applies to a walked level at or above the tile
+//!    boundary.
+//! 2. Partition that level's trip count into contiguous per-worker
+//!    iteration ranges ([`NestShard`]) — ragged counts allowed (3
+//!    workers over a split of 8 get 2/3/3 iterations).
+//! 3. Run each shard through the ordinary tiled execution path
+//!    ([`super::TiledCpuBackend`]'s machinery) on the shared
+//!    [`crate::util::pool::WorkerPool`], each worker with its own
+//!    [`AccessCounters`](super::AccessCounters).
+//! 4. Merge deterministically, in fixed shard order: output regions are
+//!    disjoint (byte-identical to the serial tiled output at any worker
+//!    count), per-buffer counters **sum** for buffers created below the
+//!    shard level (each worker ran its share of the enclosing trips),
+//!    and are **accounted once** for buffers created at or above it —
+//!    those fills cross the shard boundary and are identical in every
+//!    worker, so summing would double-count what the model charges a
+//!    single execution. The same rule keyed off each tensor's outermost
+//!    buffer settles the DRAM terminals. The merged report equals the
+//!    per-MAC interpreter's exactly (`rust/tests/backend.rs` pins it).
+//!
+//! Fan-out is cheap because nothing is copied: `ConvInputs` tensors are
+//! `Arc<[f32]>` (two refcount bumps per worker), the plan is shared
+//! behind one `Arc`, and when the plan materializes no kernel buffer
+//! outside the tile the whole weight repack is computed once
+//! ([`super::nest`]-independent, immutable DRAM weights) and shared
+//! read-only across workers ([`SharedPack`]).
+
+use super::nest::NestShard;
+use super::tiled::{execute_tiled, prepack_dram_weights, tile_boundary, SharedPack, Tile};
+use super::{Backend, ConvInputs, ConvOutput};
+use crate::model::buffers::{allocate, BufferSet, Tensor};
+use crate::model::dims::Dim;
+use crate::model::string::BlockingString;
+use crate::plan::BlockingPlan;
+use crate::util::pool::{default_threads, par_map_with, shared_pool};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// Intra-layer parallel tiled backend (see module docs). Registered as
+/// `backend_by_name("parallel")` and the dispatch default for
+/// `plan.execute(..)` whenever more than one worker thread is
+/// available.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ParallelTiledBackend {
+    /// Worker-count override: `0` (the default) follows
+    /// [`default_threads`] (`CNNBLK_THREADS` /
+    /// [`crate::util::pool::with_thread_cap`]); any other value shards
+    /// into at most that many ranges regardless of pool width.
+    pub jobs: usize,
+}
+
+/// The string position to shard: the outermost `K` split at or above
+/// the tile boundary with at least 2 iterations, else the outermost `Y`
+/// split under the same conditions, else `None` (the layer runs
+/// serially — e.g. a single-level string whose whole nest is one tile).
+fn shard_level(s: &BlockingString, boundary: usize) -> Option<usize> {
+    for dim in [Dim::K, Dim::Y] {
+        if let Some(pos) = s.levels.iter().rposition(|l| l.dim == dim) {
+            if pos >= boundary && s.trip(pos) >= 2 {
+                return Some(pos);
+            }
+        }
+    }
+    None
+}
+
+impl Backend for ParallelTiledBackend {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput> {
+        let boundary = tile_boundary(&plan.string);
+        let workers = if self.jobs > 0 {
+            self.jobs
+        } else {
+            default_threads()
+        };
+        let pos = match shard_level(&plan.string, boundary) {
+            Some(pos) if workers > 1 => pos,
+            // Nothing shardable (or a single worker): the plain tiled
+            // path, reported under this backend's name.
+            _ => return execute_tiled(plan, inputs, None, "parallel", None),
+        };
+        let trip = plan.string.trip(pos);
+        let shards = (workers as u64).min(trip);
+
+        // Kernel buffers all inside the tile means the tile kernel reads
+        // weights straight from the immutable DRAM tensor — pack them
+        // once, shared read-only across every worker.
+        let bufs = allocate(&plan.string, &plan.dims);
+        let shared_pack = if bufs.kernel.iter().all(|vb| vb.created_at < boundary) {
+            Some(Arc::new(prepack_dram_weights(
+                &plan.dims,
+                &Tile::of(plan, boundary),
+                &inputs.weights,
+            )))
+        } else {
+            None
+        };
+
+        // Contiguous iteration ranges, ragged-safe: shard w runs
+        // [w*T/S, (w+1)*T/S) — non-empty whenever S <= T.
+        let ranges: Vec<NestShard> = (0..shards)
+            .map(|w| NestShard {
+                pos,
+                start: trip * w / shards,
+                end: trip * (w + 1) / shards,
+            })
+            .collect();
+
+        let outs: Vec<Result<ConvOutput>> = {
+            let plan = Arc::new(plan.clone());
+            let inputs = inputs.clone();
+            let sp = shared_pack.clone();
+            par_map_with(&shared_pool(), ranges.clone(), move |sh| {
+                execute_tiled(&plan, &inputs, Some(sh), "parallel", sp.as_ref())
+            })
+        };
+        let mut shards_out = Vec::with_capacity(outs.len());
+        for out in outs {
+            shards_out.push(out?);
+        }
+        merge(plan, pos, &ranges, &bufs, shards_out)
+    }
+}
+
+/// Merge per-shard results deterministically (fixed shard order):
+/// disjoint output regions copied into the full tensor, counters summed
+/// or accounted once per the shard-boundary rule (module docs).
+fn merge(
+    plan: &BlockingPlan,
+    pos: usize,
+    ranges: &[NestShard],
+    bufs: &BufferSet,
+    shards: Vec<ConvOutput>,
+) -> Result<ConvOutput> {
+    let d = plan.dims;
+    let dim = plan.string.levels[pos].dim;
+    // Extent of `dim` covered per iteration of the shard level.
+    let stride = plan.string.covered_below(pos)[dim as usize] as usize;
+    let (bb, kk, yy, xx) = (
+        d.b as usize,
+        d.k as usize,
+        d.y as usize,
+        d.x as usize,
+    );
+    let plane = yy * xx;
+
+    let mut output = vec![0f32; d.output_elems() as usize];
+    for (sh, run) in ranges.iter().zip(&shards) {
+        ensure!(
+            run.output.len() == output.len(),
+            "internal: shard output length {} != layer output {}",
+            run.output.len(),
+            output.len()
+        );
+        let (lo, hi) = (sh.start as usize * stride, sh.end as usize * stride);
+        match dim {
+            Dim::K => {
+                // Rows [lo, hi) of the K axis, per image.
+                for b in 0..bb {
+                    let at = (b * kk + lo) * plane;
+                    let len = (hi - lo) * plane;
+                    output[at..at + len].copy_from_slice(&run.output[at..at + len]);
+                }
+            }
+            Dim::Y => {
+                // Rows [lo, hi) of the Y axis, per (image, channel).
+                for b in 0..bb {
+                    for k in 0..kk {
+                        let at = (b * kk + k) * plane + lo * xx;
+                        let len = (hi - lo) * xx;
+                        output[at..at + len].copy_from_slice(&run.output[at..at + len]);
+                    }
+                }
+            }
+            other => unreachable!("shard level is K or Y, got {}", other),
+        }
+    }
+
+    // Counters: start from shard 0 (operand levels, buffer identities
+    // and every at-or-above-the-boundary value are identical in all
+    // shards), then fold the remaining shards in.
+    let mut counters = shards[0].counters.clone();
+    // True when the fills of tensor `t`'s outermost buffer — the DRAM
+    // terminal of its chain — cross the shard boundary (account once).
+    let dram_once = |t: Tensor| {
+        bufs.of(t)
+            .last()
+            .map(|vb| vb.created_at >= pos)
+            .unwrap_or(false)
+    };
+    for run in &shards[1..] {
+        counters.macs += run.counters.macs;
+        counters.operand.input_reads += run.counters.operand.input_reads;
+        counters.operand.kernel_reads += run.counters.operand.kernel_reads;
+        counters.operand.output_accesses += run.counters.operand.output_accesses;
+        ensure!(
+            counters.buffers.len() == run.counters.buffers.len(),
+            "internal: shard buffer reports diverge"
+        );
+        for (acc, b) in counters.buffers.iter_mut().zip(&run.counters.buffers) {
+            let created_at = bufs.of(b.tensor)[b.ordinal].created_at;
+            if created_at >= pos {
+                // Fills crossing the shard boundary: every worker
+                // performed the identical (re)fill of this buffer, but a
+                // single execution of the layer pays it once.
+                continue;
+            }
+            acc.fill_events += b.fill_events;
+            acc.fill_elems += b.fill_elems;
+            acc.writeback_elems += b.writeback_elems;
+        }
+        if !dram_once(Tensor::Input) {
+            counters.dram.input_loads += run.counters.dram.input_loads;
+        }
+        if !dram_once(Tensor::Kernel) {
+            counters.dram.kernel_loads += run.counters.dram.kernel_loads;
+        }
+        if !dram_once(Tensor::Output) {
+            counters.dram.output_loads += run.counters.dram.output_loads;
+            counters.dram.output_stores += run.counters.dram.output_stores;
+        }
+    }
+    ensure!(
+        counters.macs == d.macs(),
+        "internal: merged shards executed {} MACs, layer has {}",
+        counters.macs,
+        d.macs()
+    );
+    Ok(ConvOutput { output, counters })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::dims::LayerDims;
+
+    fn parse(d: &LayerDims, s: &str) -> BlockingString {
+        let b = BlockingString::parse(s).unwrap().with_window(d);
+        b.validate(d).unwrap();
+        b
+    }
+
+    #[test]
+    fn shard_level_prefers_outermost_k() {
+        let d = LayerDims::conv(8, 8, 4, 4, 3, 3);
+        let s = parse(&d, "Fw Fh X0=4 Y0=4 C0=2 K0=2 C1=4 K1=4 X1=8 Y1=8");
+        // boundary 6; outermost K is K1 at position 7 with trip 2
+        assert_eq!(shard_level(&s, tile_boundary(&s)), Some(7));
+    }
+
+    #[test]
+    fn shard_level_falls_back_to_y_then_none() {
+        let d = LayerDims::conv(8, 8, 4, 4, 3, 3);
+        // K only inside the tile: fall back to the outermost Y split.
+        let s = parse(&d, "Fw Fh X0=4 Y0=4 C0=4 K0=4 X1=8 Y1=8");
+        let b = tile_boundary(&s);
+        assert_eq!(shard_level(&s, b), Some(7)); // Y1
+        // single-level string: everything is one tile, nothing to shard
+        let s = parse(&d, "Fw Fh C0=4 K0=4 X0=8 Y0=8");
+        assert_eq!(shard_level(&s, tile_boundary(&s)), None);
+    }
+
+    #[test]
+    fn ranges_partition_ragged_trips() {
+        // 3 workers over a K split 8 ways: 2/3/3 contiguous iterations.
+        let trip = 8u64;
+        let shards = 3u64;
+        let ranges: Vec<(u64, u64)> = (0..shards)
+            .map(|w| (trip * w / shards, trip * (w + 1) / shards))
+            .collect();
+        assert_eq!(ranges, vec![(0, 2), (2, 5), (5, 8)]);
+    }
+}

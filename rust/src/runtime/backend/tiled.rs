@@ -28,16 +28,28 @@
 //! interpreter measures — so measured == predicted stays an exact
 //! invariant (`rust/tests/backend.rs` pins it for this backend too).
 //!
-//! This is the dispatch default for `plan.execute(..)` and interpreted
-//! serving (see [`super::backend_for_target`]); `cnnblk bench` measures
-//! the resulting MAC/s against the interpreter and the naive nest.
+//! The weight repack comes in two flavours ([`TilePack`]): a per-nest
+//! mutable cache keyed on the kernel view's fill generation (the
+//! general case — kernel blocks change content as outer loops refill
+//! them), and a **shared read-only prepack** of the whole weight tensor
+//! ([`SharedPack`]) used when the plan materializes no kernel buffer
+//! outside the tile — the kernel view is then the immutable DRAM
+//! tensor, so [`super::ParallelTiledBackend`] packs once and every
+//! shard worker reads the same blocks.
+//!
+//! The serial tiled path is one dispatch default for
+//! `plan.execute(..)` (single worker thread) and the execution engine
+//! under the parallel backend (multiple workers); `cnnblk bench`
+//! measures the resulting MAC/s against the interpreter and the naive
+//! nest.
 
-use super::nest::Nest;
+use super::nest::{Nest, NestShard};
 use super::{Backend, ConvInputs, ConvOutput};
-use crate::model::dims::Dim;
+use crate::model::dims::{Dim, LayerDims};
 use crate::model::string::BlockingString;
 use crate::plan::BlockingPlan;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// f32 lanes the tile kernel processes per output-channel chunk. Eight
 /// lanes map onto one AVX2 register / two NEON registers; the kernel is
@@ -68,7 +80,7 @@ pub(super) fn tile_boundary(s: &BlockingString) -> usize {
 }
 
 /// Level-0 tile extents, in problem coordinates.
-struct Tile {
+pub(super) struct Tile {
     b: usize,
     x: usize,
     y: usize,
@@ -79,8 +91,35 @@ struct Tile {
 }
 
 impl Tile {
+    /// The tile extents a plan's string implies below `boundary`.
+    pub(super) fn of(plan: &BlockingPlan, boundary: usize) -> Tile {
+        let cov = plan.string.covered_below(boundary);
+        let g = |d: Dim| cov[d as usize] as usize;
+        Tile {
+            b: g(Dim::B),
+            x: g(Dim::X),
+            y: g(Dim::Y),
+            c: g(Dim::C),
+            k: g(Dim::K),
+            // Window dims of extent 1 may be omitted from the string
+            // (FC layers); the tile always spans the full window.
+            fw: plan.dims.fw as usize,
+            fh: plan.dims.fh as usize,
+        }
+    }
+
     fn macs(&self) -> u64 {
         (self.b * self.x * self.y * self.c * self.k * self.fw * self.fh) as u64
+    }
+
+    /// K lane-chunks per tile.
+    fn chunks(&self) -> usize {
+        self.k.div_ceil(LANES)
+    }
+
+    /// Packed elements per chunk (`c * fh * fw * LANES`).
+    fn chunk_len(&self) -> usize {
+        self.c * self.fh * self.fw * LANES
     }
 }
 
@@ -91,7 +130,7 @@ impl Tile {
 /// innermost kernel buffer's fill count) or the tile's C/K offsets
 /// changed, so the repack cost is paid once per kernel refill instead
 /// of once per tile.
-struct PackCache {
+pub(super) struct PackCache {
     /// (kernel-buffer fill generation, `off[C]`, `off[K]`) of `data`;
     /// `None` until the first pack.
     key: Option<(u64, u64, u64)>,
@@ -100,34 +139,147 @@ struct PackCache {
     data: Vec<f32>,
 }
 
+/// A read-only repack of the *entire* weight tensor into per-tile
+/// `k`-contiguous blocks, built once and shared across shard workers
+/// (see [`prepack_dram_weights`]). Valid only when the kernel view the
+/// tile kernel reads is the immutable DRAM tensor — i.e. the plan
+/// materializes no kernel buffer outside the tile.
+pub(super) struct SharedPack {
+    /// Packed blocks, `[c_block][k_block][k_chunk][c][fh][fw][lane]`.
+    data: Vec<f32>,
+    /// Elements per `(c_block, k_block)` block.
+    block_len: usize,
+    /// Number of K-offset blocks (`K / tile.k`).
+    k_blocks: usize,
+}
+
+impl SharedPack {
+    fn block(&self, ci: usize, ki: usize) -> &[f32] {
+        let at = (ci * self.k_blocks + ki) * self.block_len;
+        &self.data[at..at + self.block_len]
+    }
+}
+
+/// Where a tile execution gets its packed weights from.
+pub(super) enum TilePack {
+    /// Per-nest mutable cache, repacked whenever the kernel view's
+    /// content or the tile offsets change (the general case).
+    Cache(PackCache),
+    /// Immutable whole-tensor prepack shared read-only across workers
+    /// (kernel served straight from DRAM; contents never change).
+    Shared(Arc<SharedPack>),
+}
+
+/// Repack one tile-sized kernel block `k`-contiguous into `dst`:
+/// `dst[((c*Fh + r)*Fw + s)*LANES + l] = W[wk0 + k0 + l][wc0 + c][r][s]`
+/// per chunk, zero-padding missing lanes so the hot loop stays
+/// branch-free. `(w_s0, w_s1, w_sr)` are the source view's K/C/row
+/// strides; `(wk0, wc0)` the view-local K/C base of the block.
+#[allow(clippy::too_many_arguments)] // strides + offsets of a raw view
+fn pack_block(
+    dst: &mut [f32],
+    t: &Tile,
+    w_data: &[f32],
+    w_s0: usize,
+    w_s1: usize,
+    w_sr: usize,
+    wk0: usize,
+    wc0: usize,
+) {
+    let (fw, fh) = (t.fw, t.fh);
+    let chunk_len = t.chunk_len();
+    for (chunk, k0) in (0..t.k).step_by(LANES).enumerate() {
+        let lanes = LANES.min(t.k - k0);
+        let cbase = chunk * chunk_len;
+        for c in 0..t.c {
+            for r in 0..fh {
+                for s in 0..fw {
+                    let at = cbase + ((c * fh + r) * fw + s) * LANES;
+                    let src = (wc0 + c) * w_s1 + r * w_sr + s;
+                    for (l, slot) in dst[at..at + LANES].iter_mut().enumerate() {
+                        *slot = if l < lanes {
+                            w_data[(wk0 + k0 + l) * w_s0 + src]
+                        } else {
+                            0.0
+                        };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Build the shared read-only repack of the full DRAM weight tensor:
+/// one `k`-contiguous block per (C-offset, K-offset) tile position.
+/// Tile offsets at the boundary are always multiples of the tile
+/// extents (covered ranges of one dim form a divisibility chain), so
+/// block lookup in [`SharedPack::block`] is exact.
+pub(super) fn prepack_dram_weights(d: &LayerDims, t: &Tile, weights: &[f32]) -> SharedPack {
+    let block_len = t.chunks() * t.chunk_len();
+    let c_blocks = (d.c as usize) / t.c;
+    let k_blocks = (d.k as usize) / t.k;
+    let w_s0 = (d.c * d.fh * d.fw) as usize;
+    let w_s1 = (d.fh * d.fw) as usize;
+    let w_sr = d.fw as usize;
+    let mut data = vec![0f32; c_blocks * k_blocks * block_len];
+    for ci in 0..c_blocks {
+        for ki in 0..k_blocks {
+            let at = (ci * k_blocks + ki) * block_len;
+            pack_block(
+                &mut data[at..at + block_len],
+                t,
+                weights,
+                w_s0,
+                w_s1,
+                w_sr,
+                ki * t.k,
+                ci * t.c,
+            );
+        }
+    }
+    SharedPack {
+        data,
+        block_len,
+        k_blocks,
+    }
+}
+
+/// Run a plan through the tiled execution path: walk the nest down to
+/// the level-0 tile boundary (optionally restricted to one shard's
+/// iteration range — see [`NestShard`]) and execute each tile through
+/// the compiled kernel. `label` names the backend in the counter
+/// report; `shared_pack` supplies the read-only weight prepack when the
+/// caller knows the kernel view is the immutable DRAM tensor (ignored
+/// otherwise).
+pub(super) fn execute_tiled(
+    plan: &BlockingPlan,
+    inputs: &ConvInputs,
+    shard: Option<NestShard>,
+    label: &'static str,
+    shared_pack: Option<&Arc<SharedPack>>,
+) -> Result<ConvOutput> {
+    let boundary = tile_boundary(&plan.string);
+    let mut nest = Nest::with_shard(plan, inputs, boundary, shard)?;
+    let tile = Tile::of(plan, boundary);
+    let mut pack = match shared_pack {
+        // The prepack is only sound while the kernel view is DRAM.
+        Some(sp) if nest.kernel_chain.is_empty() => TilePack::Shared(Arc::clone(sp)),
+        _ => TilePack::Cache(PackCache {
+            key: None,
+            data: vec![0f32; tile.chunks() * tile.chunk_len()],
+        }),
+    };
+    nest.run(&mut |n, off| exec_tile(n, off, &tile, &mut pack));
+    nest.finish(label)
+}
+
 impl Backend for TiledCpuBackend {
     fn name(&self) -> &'static str {
         "tiled"
     }
 
     fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput> {
-        let boundary = tile_boundary(&plan.string);
-        let mut nest = Nest::new(plan, inputs, boundary)?;
-        let cov = plan.string.covered_below(boundary);
-        let g = |d: Dim| cov[d as usize] as usize;
-        let tile = Tile {
-            b: g(Dim::B),
-            x: g(Dim::X),
-            y: g(Dim::Y),
-            c: g(Dim::C),
-            k: g(Dim::K),
-            // Window dims of extent 1 may be omitted from the string
-            // (FC layers); the tile always spans the full window.
-            fw: plan.dims.fw as usize,
-            fh: plan.dims.fh as usize,
-        };
-        let chunks = tile.k.div_ceil(LANES);
-        let mut pack = PackCache {
-            key: None,
-            data: vec![0f32; tile.c * tile.fh * tile.fw * LANES * chunks],
-        };
-        nest.run(&mut |n, off| exec_tile(n, off, &tile, &mut pack));
-        nest.finish(&plan.dims, "tiled")
+        execute_tiled(plan, inputs, None, "tiled", None)
     }
 }
 
@@ -135,7 +287,7 @@ impl Backend for TiledCpuBackend {
 /// operands from the innermost materialized buffer of each tensor (or
 /// the DRAM tensor when a chain is empty or fully virtualized) and
 /// accumulating into the innermost materialized output buffer.
-fn exec_tile(n: &mut Nest<'_>, off: &[u64; 7], t: &Tile, pack: &mut PackCache) {
+fn exec_tile(n: &mut Nest<'_>, off: &[u64; 7], t: &Tile, pack: &mut TilePack) {
     let o = |d: Dim| off[d as usize] as usize;
     // Content generation of the kernel view: the innermost materialized
     // kernel buffer's fill count (bumped on every refill), or a constant
@@ -186,36 +338,28 @@ fn exec_tile(n: &mut Nest<'_>, off: &[u64; 7], t: &Tile, pack: &mut PackCache) {
     let out_s0 = (out_d[1] * out_d[2] * out_d[3]) as usize;
 
     let (fw, fh) = (t.fw, t.fh);
-    let chunk_len = t.c * fh * fw * LANES;
-    // Repack the whole kernel tile k-contiguous, once per kernel-view
-    // change: pack[chunk][((c*Fh + r)*Fw + s)*LANES + l] = W[k0+l][c][r][s],
-    // zero-padding missing lanes so the hot loop is branch-free.
-    let key = (w_gen, off[Dim::C as usize], off[Dim::K as usize]);
-    if pack.key != Some(key) {
-        for (chunk, k0) in (0..t.k).step_by(LANES).enumerate() {
-            let lanes = LANES.min(t.k - k0);
-            let cbase = chunk * chunk_len;
-            for c in 0..t.c {
-                for r in 0..fh {
-                    for s in 0..fw {
-                        let dst = cbase + ((c * fh + r) * fw + s) * LANES;
-                        let src = (wc0 + c) * w_s1 + r * w_sr + s;
-                        for (l, slot) in pack.data[dst..dst + LANES].iter_mut().enumerate() {
-                            *slot = if l < lanes {
-                                w_data[(wk0 + k0 + l) * w_s0 + src]
-                            } else {
-                                0.0
-                            };
-                        }
-                    }
-                }
-            }
+    let chunk_len = t.chunk_len();
+    let packed: &[f32] = match pack {
+        TilePack::Shared(sp) => {
+            // Only sound while the kernel view really is the DRAM
+            // tensor — `execute_tiled` guarantees it.
+            debug_assert!(n.kernel_chain.is_empty(), "shared pack with live kernel buffer");
+            sp.block(o(Dim::C) / t.c, o(Dim::K) / t.k)
         }
-        pack.key = Some(key);
-    }
+        TilePack::Cache(pc) => {
+            // Repack the kernel tile k-contiguous, once per kernel-view
+            // change.
+            let key = (w_gen, off[Dim::C as usize], off[Dim::K as usize]);
+            if pc.key != Some(key) {
+                pack_block(&mut pc.data, t, w_data, w_s0, w_s1, w_sr, wk0, wc0);
+                pc.key = Some(key);
+            }
+            pc.data.as_slice()
+        }
+    };
     for (chunk, k0) in (0..t.k).step_by(LANES).enumerate() {
         let lanes = LANES.min(t.k - k0);
-        let wpack = &pack.data[chunk * chunk_len..(chunk + 1) * chunk_len];
+        let wpack = &packed[chunk * chunk_len..(chunk + 1) * chunk_len];
         for b in 0..t.b {
             let ibase = (ib0 + b) * in_s0;
             let obase_b = (ob0 + b) * out_s0 + (ok0 + k0) * out_s1;
@@ -281,5 +425,34 @@ mod tests {
         let fc = LayerDims::fc(16, 8, 1);
         let s = parse(&fc, "C0=4 K0=8 C1=16 Fw Fh");
         assert_eq!(tile_boundary(&s), 2);
+    }
+
+    #[test]
+    fn prepack_blocks_match_per_view_packing() {
+        // The shared prepack must hold, block for block, exactly what
+        // pack_block produces from the raw DRAM view at that offset.
+        let d = LayerDims::conv(4, 4, 4, 6, 3, 3);
+        let weights: Vec<f32> = (0..d.kernel_elems()).map(|i| i as f32).collect();
+        let t = Tile {
+            b: 1,
+            x: 4,
+            y: 4,
+            c: 2,
+            k: 3,
+            fw: 3,
+            fh: 3,
+        };
+        let sp = prepack_dram_weights(&d, &t, &weights);
+        let block_len = t.chunks() * t.chunk_len();
+        let mut want = vec![0f32; block_len];
+        let (w_s0, w_s1, w_sr) = (36, 9, 3);
+        // block (ci=1, ki=1): C offset 2, K offset 3
+        pack_block(&mut want, &t, &weights, w_s0, w_s1, w_sr, 3, 2);
+        assert_eq!(sp.block(1, 1), &want[..]);
+        // ragged K0=3 zero-pads lanes 3..8 of the only chunk
+        assert_eq!(t.chunks(), 1);
+        for probe in sp.block(0, 0).chunks(LANES) {
+            assert!(probe[3..].iter().all(|&v| v == 0.0));
+        }
     }
 }

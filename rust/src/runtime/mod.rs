@@ -1,6 +1,7 @@
 //! Execution runtimes: the plan-level [`backend`] executors (naive
-//! reference, blocked per-MAC interpreter, and the tiled SIMD fast
-//! path, all with measured access counters) and the PJRT engine that
+//! reference, blocked per-MAC interpreter, the tiled SIMD fast path
+//! and its parallel-sharded variant, all with measured access
+//! counters) and the PJRT engine that
 //! loads AOT HLO-text artifacts onto
 //! the CPU PJRT client — the only place the `xla` crate is touched.
 //! Python never runs here; the artifacts are self-contained (weights
@@ -20,7 +21,7 @@ pub mod manifest;
 
 pub use backend::{
     AccessCounters, Backend, BlockedCpuBackend, ConvInputs, ConvOutput, NaiveBackend,
-    TiledCpuBackend,
+    ParallelTiledBackend, TiledCpuBackend,
 };
 pub use engine::{Engine, Module};
 pub use manifest::{ArtifactSpec, Golden, Manifest};

@@ -90,6 +90,33 @@ where
     results.into_iter().map(|r| r.unwrap()).collect()
 }
 
+/// The process-wide shared [`WorkerPool`], created on first use and
+/// re-created whenever the requested width ([`default_threads`]) has
+/// changed since the last call. Shared by the batch fan-out in
+/// `coordinator::pipeline` and the intra-layer shard fan-out in
+/// `runtime::backend::ParallelTiledBackend`, so serving pays
+/// thread-spawn cost once per width, not once per batch or layer.
+///
+/// Jobs submitted here must be leaves: a pool job that itself calls
+/// [`par_map_with`] on the same pool and blocks on the results can
+/// deadlock once every worker is a blocked submitter. The two users
+/// above are arranged so only one of them fans out at a time (the
+/// pipeline runs images serially when the layer backend is already
+/// parallel).
+pub fn shared_pool() -> Arc<WorkerPool> {
+    static SHARED: Mutex<Option<Arc<WorkerPool>>> = Mutex::new(None);
+    let mut guard = SHARED.lock().unwrap();
+    let want = default_threads();
+    if let Some(p) = guard.as_ref() {
+        if p.threads() == want {
+            return Arc::clone(p);
+        }
+    }
+    let p = Arc::new(WorkerPool::new(want));
+    *guard = Some(Arc::clone(&p));
+    p
+}
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// A persistent pool of worker threads consuming boxed jobs from a shared
@@ -266,6 +293,20 @@ mod tests {
         let pool = WorkerPool::new(0);
         assert_eq!(pool.threads(), 1);
         assert_eq!(par_map_with(&pool, vec![1, 2, 3], |x| x * x), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn shared_pool_follows_requested_width() {
+        // (No pointer-identity check: other tests in this binary hit the
+        // shared pool concurrently at their own widths, so the cache may
+        // legitimately be recreated between any two calls here.)
+        let a = with_thread_cap(3, shared_pool);
+        assert_eq!(a.threads(), 3);
+        let c = with_thread_cap(2, shared_pool);
+        assert_eq!(c.threads(), 2);
+        // a handle stays usable even after the cache moved on
+        let out = par_map_with(&a, vec![1u64, 2, 3], |x| x * 2);
+        assert_eq!(out, vec![2, 4, 6]);
     }
 
     #[test]

@@ -18,9 +18,10 @@ use cnn_blocking::model::string::BlockingString;
 use cnn_blocking::optimizer::beam::BeamConfig;
 use cnn_blocking::runtime::backend::{
     backend_by_name, predicted_counters, BlockedCpuBackend, ConvInputs, NaiveBackend,
-    TiledCpuBackend, ACCESS_REL_TOL,
+    ParallelTiledBackend, TiledCpuBackend, ACCESS_REL_TOL,
 };
 use cnn_blocking::runtime::Backend;
+use cnn_blocking::util::pool::with_thread_cap;
 use cnn_blocking::{BlockingPlan, Planner, Target};
 
 /// Pinned output tolerance: blocked and naive accumulate f32 partial
@@ -269,6 +270,131 @@ fn tiled_handles_ragged_tiles() {
     assert!(bad.validate(&d).is_err(), "non-dividing X0=4 of X=10 must be invalid");
 }
 
+/// Assert two counter reports are identical apart from the backend
+/// label — the exact-equality form of "summed shard counters == the
+/// interpreter's".
+fn assert_counters_equal(name: &str, a: &cnn_blocking::AccessCounters, b: &cnn_blocking::AccessCounters) {
+    assert_eq!(a.macs, b.macs, "{}: MACs", name);
+    assert_eq!(a.buffers, b.buffers, "{}: per-buffer counters", name);
+    assert_eq!(a.dram, b.dram, "{}: DRAM terminals", name);
+    assert_eq!(a.operand, b.operand, "{}: operand traffic", name);
+}
+
+#[test]
+fn parallel_equals_tiled_and_naive_on_all_table4_layers() {
+    // The determinism pin across the whole Table 4: the parallel
+    // backend's merged output is byte-identical to the serial tiled
+    // output (sharding never reassociates a shard's own partial sums)
+    // and matches the naive oracle within the pinned tolerance — on the
+    // 7 searched benchmark rows and the 2 degenerate aux rows (whose
+    // single-level strings have nothing to shard, exercising the
+    // serial fallback under the "parallel" label).
+    let par = ParallelTiledBackend::default();
+    for (i, b) in all_benchmarks().into_iter().enumerate() {
+        let dims = b.dims.scaled_for_sim(EXEC_MACS);
+        let plan = planned(b.name, dims, 3);
+        let inputs = ConvInputs::synthetic(dims, 5000 + i as u64);
+        let tiled = TiledCpuBackend.execute(&plan, &inputs).unwrap();
+        let naive = NaiveBackend.execute(&plan, &inputs).unwrap();
+        let got = with_thread_cap(4, || par.execute(&plan, &inputs)).unwrap();
+        assert_eq!(got.output, tiled.output, "{}: parallel != tiled bytes", b.name);
+        assert_outputs_close(b.name, &got.output, &naive.output);
+        assert_eq!(got.counters.backend, "parallel");
+        assert_eq!(got.counters.macs, dims.macs(), "{}: MAC count", b.name);
+    }
+    for (i, b) in aux_benchmarks().into_iter().enumerate() {
+        let dims = b.dims.scaled_for_sim(EXEC_MACS);
+        let plan = Planner::for_named(b.name, dims)
+            .plan_string(&BlockingString::unblocked(&dims))
+            .unwrap();
+        let inputs = ConvInputs::synthetic(dims, 6000 + i as u64);
+        let tiled = TiledCpuBackend.execute(&plan, &inputs).unwrap();
+        let got = with_thread_cap(4, || par.execute(&plan, &inputs)).unwrap();
+        assert_eq!(got.output, tiled.output, "{}: parallel != tiled bytes", b.name);
+        assert_eq!(got.counters.backend, "parallel");
+    }
+}
+
+#[test]
+fn parallel_summed_counters_equal_interpreter_at_1_and_4_workers() {
+    // The shard-merge accounting pin: summed below-boundary counters
+    // plus accounted-once crossing fills must reproduce the per-MAC
+    // interpreter's report exactly — at 1 worker (serial fallback) and
+    // 4 workers (real shards), on every counter case.
+    for (name, dims, levels) in counter_cases() {
+        let plan = planned(&name, dims, levels);
+        let inputs = ConvInputs::synthetic(dims, 7);
+        let blocked = BlockedCpuBackend.execute(&plan, &inputs).unwrap();
+        for cap in [1usize, 4] {
+            let got = with_thread_cap(cap, || {
+                backend_by_name("parallel").unwrap().execute(&plan, &inputs)
+            })
+            .unwrap();
+            let label = format!("{}@{}", name, cap);
+            assert_counters_equal(&label, &got.counters, &blocked.counters);
+            assert_counters_match_model(&label, &plan, &got);
+        }
+    }
+}
+
+#[test]
+fn parallel_handles_ragged_shard_counts() {
+    // 3 workers over an outermost K split with 8 iterations: shard
+    // ranges 2/3/3. Output must stay byte-identical to tiled and the
+    // merged counters must equal the interpreter's exactly.
+    let d = LayerDims::conv(8, 8, 4, 32, 3, 3);
+    let s = BlockingString::parse("Fw Fh X0=4 Y0=4 C0=4 K0=4 X1=8 Y1=8 K1=32")
+        .unwrap()
+        .with_window(&d);
+    let plan = Planner::for_named("ragged-shards", d).plan_string(&s).unwrap();
+    let inputs = ConvInputs::synthetic(d, 21);
+    let tiled = TiledCpuBackend.execute(&plan, &inputs).unwrap();
+    let blocked = BlockedCpuBackend.execute(&plan, &inputs).unwrap();
+    let got = ParallelTiledBackend { jobs: 3 }.execute(&plan, &inputs).unwrap();
+    assert_eq!(got.output, tiled.output, "ragged shards diverged from tiled");
+    assert_counters_equal("ragged-shards", &got.counters, &blocked.counters);
+    assert_counters_match_model("ragged-shards", &plan, &got);
+}
+
+#[test]
+fn parallel_falls_back_to_y_sharding() {
+    // K split only inside the tile: the backend shards the outermost Y
+    // split instead. Y shards overlap in the input halo rows
+    // (read-only) but write disjoint output rows.
+    let d = LayerDims::conv(16, 16, 4, 4, 3, 3);
+    let s = BlockingString::parse("Fw Fh X0=4 Y0=4 C0=4 K0=4 X1=16 Y1=16")
+        .unwrap()
+        .with_window(&d);
+    let plan = Planner::for_named("y-shards", d).plan_string(&s).unwrap();
+    let inputs = ConvInputs::synthetic(d, 23);
+    let tiled = TiledCpuBackend.execute(&plan, &inputs).unwrap();
+    let blocked = BlockedCpuBackend.execute(&plan, &inputs).unwrap();
+    let got = ParallelTiledBackend { jobs: 4 }.execute(&plan, &inputs).unwrap();
+    assert_eq!(got.output, tiled.output, "Y shards diverged from tiled");
+    assert_counters_equal("y-shards", &got.counters, &blocked.counters);
+}
+
+#[test]
+fn parallel_uses_the_shared_weight_prepack_exactly() {
+    // No X/Y/B splits outside the tile -> every kernel buffer lives
+    // inside it, the tile kernel reads weights straight from DRAM, and
+    // the parallel backend packs them once, shared read-only across
+    // workers. Results must be indistinguishable from the per-worker
+    // pack-cache path: byte-identical to tiled, counters == interpreter.
+    let d = LayerDims::conv(8, 8, 4, 32, 3, 3);
+    let s = BlockingString::parse("Fw Fh X0=8 Y0=8 C0=2 K0=4 C1=4 K1=32")
+        .unwrap()
+        .with_window(&d);
+    let plan = Planner::for_named("prepack", d).plan_string(&s).unwrap();
+    let inputs = ConvInputs::synthetic(d, 29);
+    let tiled = TiledCpuBackend.execute(&plan, &inputs).unwrap();
+    let blocked = BlockedCpuBackend.execute(&plan, &inputs).unwrap();
+    let got = ParallelTiledBackend { jobs: 4 }.execute(&plan, &inputs).unwrap();
+    assert_eq!(got.output, tiled.output, "shared-prepack run diverged from tiled");
+    assert_counters_equal("prepack", &got.counters, &blocked.counters);
+    assert_counters_match_model("prepack", &plan, &got);
+}
+
 #[test]
 fn counters_carry_the_plans_buffer_placement() {
     // Per-level counters must be labelled with the physical levels the
@@ -287,8 +413,13 @@ fn counters_carry_the_plans_buffer_placement() {
             .plan()
             .unwrap();
         let out = plan.execute(&ConvInputs::synthetic(dims, 5)).unwrap();
-        // target dispatch routes through the tiled fast path by default
-        assert_eq!(out.counters.backend, "tiled");
+        // target dispatch routes through a tiled fast path by default:
+        // plain "tiled" at one worker, "parallel" when more are available
+        assert!(
+            out.counters.backend == "tiled" || out.counters.backend == "parallel",
+            "unexpected dispatch backend '{}'",
+            out.counters.backend
+        );
         for m in &out.counters.buffers {
             let pb = plan
                 .buffers
@@ -371,7 +502,7 @@ fn plan_engine_outputs_are_directly_runnable() {
 
 #[test]
 fn backend_registry_round_trips_names() {
-    for name in ["naive", "blocked", "tiled"] {
+    for name in ["naive", "blocked", "tiled", "parallel"] {
         assert_eq!(backend_by_name(name).unwrap().name(), name);
     }
     assert!(backend_by_name("pallas").is_err());
