@@ -11,7 +11,7 @@
 //!
 //!     make artifacts && cargo run --release --example e2e_inference
 
-use cnn_blocking::coordinator::{InferenceServer, ServerConfig};
+use cnn_blocking::coordinator::{Execution, InferenceServer, ServerConfig};
 use cnn_blocking::runtime::Golden;
 use cnn_blocking::util::cli::Args;
 use cnn_blocking::util::rng::Rng;
@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
         max_batch: args.get_u64("batch", 8) as usize,
         batch_timeout: Duration::from_millis(args.get_u64("timeout-ms", 2)),
         queue_depth: 64,
+        execution: Execution::Pjrt,
     })?;
 
     println!("== pipeline plans compiled into the artifacts ==");

@@ -1,0 +1,443 @@
+//! The `cnnblk loadgen` latency harness: N concurrent connections
+//! driving a live `cnnblk serve --listen` server at a target rate,
+//! reporting client-measured p50/p95/p99 latency plus the server's own
+//! stats (MAC/s, accepted/shed), written as the machine-readable
+//! `BENCH_6.json` trajectory point.
+//!
+//! Measurement discipline follows the in-process bench harness: inputs
+//! are deterministic per seed, percentiles use the same
+//! index-rounding rule as [`crate::coordinator::Metrics`], and the
+//! report carries everything needed to interpret the numbers (config,
+//! client-side results, server-side counters). The report `kind` is
+//! `"cnnblk-loadgen"`, distinct from `"cnnblk-bench"`, so
+//! `cnnblk bench --compare` never tries to gate kernel MAC/s against a
+//! serving latency point.
+//!
+//! Smoke mode (CI) additionally *proves* the load-shedding contract on
+//! a live server: barrier-synchronized bursts larger than the admission
+//! queue until at least one request is explicitly shed, then a health
+//! check and one more inference to show the server stayed live.
+
+use crate::serve::codec::{Request, Response, ServeClient};
+use crate::serve::health::{HealthReport, StatsReport};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+/// What to drive and how hard.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, `host:port`.
+    pub addr: String,
+    /// Concurrent connections (each is one client thread).
+    pub connections: usize,
+    /// Total requests across all connections.
+    pub requests: usize,
+    /// Target aggregate request rate, requests/second (0 = unthrottled:
+    /// every connection issues its next request as soon as the previous
+    /// response lands).
+    pub rate: f64,
+    /// Seed for the deterministic synthetic inputs.
+    pub seed: u64,
+    /// CI smoke mode: after the timed run, force the server past its
+    /// queue capacity with synchronized bursts and fail unless at least
+    /// one request is explicitly shed and the server stays healthy.
+    pub smoke: bool,
+    /// How long to retry the initial connection (the server may still
+    /// be planning its pipeline when launched in the background).
+    pub connect_timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            addr: "127.0.0.1:7744".to_string(),
+            connections: 4,
+            requests: 64,
+            rate: 0.0,
+            seed: 42,
+            smoke: false,
+            connect_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Per-connection outcome counts plus every client-measured latency.
+#[derive(Debug, Default)]
+struct WorkerTally {
+    ok: u64,
+    shed: u64,
+    errors: u64,
+    latencies_us: Vec<u64>,
+}
+
+/// The harness result: client-side latency distribution and outcome
+/// counts, plus the server's own health and stats snapshots after the
+/// run.
+#[derive(Debug)]
+pub struct LoadgenReport {
+    /// The configuration that produced this report.
+    pub config: LoadgenConfig,
+    /// Requests that returned an output.
+    pub ok: u64,
+    /// Requests explicitly shed (retry-after responses) — the timed run
+    /// plus, in smoke mode, the shed-probe bursts.
+    pub shed: u64,
+    /// Requests that returned an error response.
+    pub errors: u64,
+    /// Wall time of the timed run.
+    pub wall: Duration,
+    /// Client-measured request latency percentiles, microseconds.
+    pub p50_us: u64,
+    /// 95th percentile, microseconds.
+    pub p95_us: u64,
+    /// 99th percentile, microseconds.
+    pub p99_us: u64,
+    /// Completed requests per second over the timed run.
+    pub throughput_rps: f64,
+    /// The server's health report after the run.
+    pub health: HealthReport,
+    /// The server's stats after the run (queue counters, MAC/s).
+    pub server: StatsReport,
+}
+
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// Deterministic synthetic image for request `k` of the stream seeded
+/// by `seed` — same recipe as the server tests (`rng.f64() - 0.5`).
+fn synth_image(seed: u64, k: u64, len: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    (0..len).map(|_| rng.f64() as f32 - 0.5).collect()
+}
+
+/// Drive the server per `cfg` and collect the report.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    ensure!(cfg.connections > 0, "loadgen needs at least one connection");
+    ensure!(cfg.requests > 0, "loadgen needs at least one request");
+
+    // Probe first: health gives the input length and proves readiness.
+    let mut probe = ServeClient::connect_retry(&cfg.addr, cfg.connect_timeout)?;
+    let health = probe.health().context("initial health check")?;
+    ensure!(
+        health.serving,
+        "server at {} reports serving=false",
+        cfg.addr
+    );
+    let input_len = health.input_len;
+
+    // The timed run: spread `requests` across `connections` threads,
+    // each on its own socket, optionally pacing to the aggregate rate.
+    let per_conn = cfg.requests.div_ceil(cfg.connections);
+    let interval = if cfg.rate > 0.0 {
+        Duration::from_secs_f64(cfg.connections as f64 / cfg.rate)
+    } else {
+        Duration::ZERO
+    };
+    let tallies: Arc<Mutex<Vec<WorkerTally>>> = Arc::new(Mutex::new(Vec::new()));
+    let t0 = Instant::now();
+    let mut workers = Vec::new();
+    for conn in 0..cfg.connections {
+        let addr = cfg.addr.clone();
+        let tallies = tallies.clone();
+        let connect_timeout = cfg.connect_timeout;
+        let seed = cfg.seed;
+        let n = per_conn.min(cfg.requests - (conn * per_conn).min(cfg.requests));
+        if n == 0 {
+            continue;
+        }
+        workers.push(std::thread::spawn(move || -> Result<()> {
+            let mut client = ServeClient::connect_retry(&addr, connect_timeout)?;
+            let mut tally = WorkerTally::default();
+            let start = Instant::now();
+            for k in 0..n {
+                if !interval.is_zero() {
+                    // Pace against the schedule, not the last response:
+                    // a slow request does not earn the stream a burst.
+                    let due = interval * k as u32;
+                    let elapsed = start.elapsed();
+                    if due > elapsed {
+                        std::thread::sleep(due - elapsed);
+                    }
+                }
+                let img = synth_image(seed, (conn * per_conn + k) as u64, input_len);
+                let sent = Instant::now();
+                match client.infer(&img)? {
+                    Response::Output(out) => {
+                        tally.latencies_us.push(sent.elapsed().as_micros() as u64);
+                        tally.ok += 1;
+                        ensure!(
+                            !out.is_empty(),
+                            "server returned an empty output tensor"
+                        );
+                    }
+                    Response::Shed { .. } => tally.shed += 1,
+                    Response::Error(msg) => {
+                        tally.errors += 1;
+                        bail!("server error: {}", msg);
+                    }
+                    other => bail!("unexpected response to infer: {:?}", other),
+                }
+            }
+            tallies.lock().unwrap().push(tally);
+            Ok(())
+        }));
+    }
+    for w in workers {
+        w.join()
+            .map_err(|_| anyhow!("a loadgen worker panicked"))??;
+    }
+    let wall = t0.elapsed();
+
+    let mut ok = 0;
+    let mut shed = 0;
+    let mut errors = 0;
+    let mut latencies: Vec<u64> = Vec::new();
+    for t in tallies.lock().unwrap().iter() {
+        ok += t.ok;
+        shed += t.shed;
+        errors += t.errors;
+        latencies.extend_from_slice(&t.latencies_us);
+    }
+    latencies.sort_unstable();
+
+    if cfg.smoke {
+        shed += shed_probe(&cfg.addr, cfg.connect_timeout, &health, cfg.seed)?;
+    }
+
+    // Post-run server snapshots (also re-proves liveness after bursts).
+    let health = probe.health().context("post-run health check")?;
+    ensure!(health.serving, "server stopped serving during the run");
+    let server = probe.stats().context("post-run stats")?;
+
+    Ok(LoadgenReport {
+        config: cfg.clone(),
+        ok,
+        shed,
+        errors,
+        wall,
+        p50_us: percentile(&latencies, 0.50),
+        p95_us: percentile(&latencies, 0.95),
+        p99_us: percentile(&latencies, 0.99),
+        throughput_rps: ok as f64 / wall.as_secs_f64().max(1e-9),
+        health,
+        server,
+    })
+}
+
+/// Drive the server past its queue capacity: barrier-synchronized
+/// bursts of single-request connections, repeated until at least one
+/// request is explicitly shed (a handful of rounds is plenty against a
+/// small queue — fail loudly rather than loop forever if the server
+/// never sheds). Returns the shed count observed. Every burst ends by
+/// proving the server still answers.
+fn shed_probe(
+    addr: &str,
+    connect_timeout: Duration,
+    health: &HealthReport,
+    seed: u64,
+) -> Result<u64> {
+    let burst = (health.queue_cap * 8).clamp(16, 64);
+    let mut total_shed = 0u64;
+    for round in 0..10 {
+        let barrier = Arc::new(Barrier::new(burst));
+        let mut handles = Vec::new();
+        for b in 0..burst {
+            let addr = addr.to_string();
+            let barrier = barrier.clone();
+            let img = synth_image(seed ^ 0xB00_57ED, (round * burst + b) as u64, health.input_len);
+            handles.push(std::thread::spawn(move || -> Result<u64> {
+                let mut client = ServeClient::connect_retry(&addr, connect_timeout)?;
+                barrier.wait();
+                match client.infer(&img)? {
+                    Response::Output(_) => Ok(0),
+                    Response::Shed { retry_after_ms } => {
+                        ensure!(
+                            retry_after_ms > 0,
+                            "shed response carried no retry-after hint"
+                        );
+                        Ok(1)
+                    }
+                    Response::Error(msg) => bail!("server error during burst: {}", msg),
+                    other => bail!("unexpected burst response: {:?}", other),
+                }
+            }));
+        }
+        for h in handles {
+            total_shed += h
+                .join()
+                .map_err(|_| anyhow!("a shed-probe worker panicked"))??;
+        }
+        if total_shed > 0 {
+            break;
+        }
+    }
+    ensure!(
+        total_shed > 0,
+        "10 bursts of {} concurrent requests never saw a shed response \
+         (queue_cap {}) — load-shedding is not working",
+        burst,
+        health.queue_cap
+    );
+    // The server must still answer after being slammed.
+    let mut client = ServeClient::connect_retry(addr, connect_timeout)?;
+    let after = client.health().context("health after shed probe")?;
+    ensure!(after.serving, "server unhealthy after the shed probe");
+    let img = synth_image(seed, 0, health.input_len);
+    let mut answered = false;
+    for _ in 0..50 {
+        match client.request(&Request::Infer(img.clone()))? {
+            Response::Output(_) => {
+                answered = true;
+                break;
+            }
+            Response::Shed { retry_after_ms } => {
+                std::thread::sleep(Duration::from_millis(retry_after_ms.max(1)));
+            }
+            other => bail!("unexpected response after shed probe: {:?}", other),
+        }
+    }
+    ensure!(answered, "server kept shedding long after the burst ended");
+    Ok(total_shed)
+}
+
+impl LoadgenReport {
+    /// Serialize as the `BENCH_6.json` trajectory document (`kind`
+    /// `"cnnblk-loadgen"`).
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("kind", json::s("cnnblk-loadgen"));
+        root.set("version", json::unum(1));
+        let c = &self.config;
+        let mut cj = Json::obj();
+        cj.set("addr", json::s(&c.addr))
+            .set("connections", json::unum(c.connections as u64))
+            .set("requests", json::unum(c.requests as u64))
+            .set("rate", json::num(c.rate))
+            .set("seed", json::unum(c.seed))
+            .set("smoke", Json::Bool(c.smoke));
+        root.set("config", cj);
+        let mut rj = Json::obj();
+        rj.set("ok", json::unum(self.ok))
+            .set("shed", json::unum(self.shed))
+            .set("errors", json::unum(self.errors))
+            .set("wall_us", json::unum(self.wall.as_micros() as u64))
+            .set("throughput_rps", json::num(self.throughput_rps))
+            .set("p50_us", json::unum(self.p50_us))
+            .set("p95_us", json::unum(self.p95_us))
+            .set("p99_us", json::unum(self.p99_us));
+        root.set("results", rj);
+        root.set("health", self.health.to_json());
+        root.set("server", self.server.to_json());
+        root
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty() + "\n")
+            .map_err(|e| anyhow!("writing {}: {}", path, e))
+    }
+
+    /// Print the human-readable summary.
+    pub fn print(&self) {
+        println!(
+            "loadgen: {} ok, {} shed, {} errors over {:?} ({:.1} req/s)",
+            self.ok, self.shed, self.errors, self.wall, self.throughput_rps
+        );
+        println!(
+            "latency: p50={}µs p95={}µs p99={}µs (client-measured, {} samples)",
+            self.p50_us, self.p95_us, self.p99_us, self.ok
+        );
+        println!(
+            "server:  backend={} accepted={} shed={} mac_per_s={} queue {}/{}",
+            self.health.backend,
+            self.server.accepted,
+            self.server.shed,
+            crate::util::table::eng(self.server.mac_per_s),
+            self.server.queue_depth,
+            self.server.queue_cap,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_rounding_matches_metrics() {
+        let v: Vec<u64> = (1..=1000).collect();
+        assert_eq!(percentile(&v, 0.50), 500);
+        assert_eq!(percentile(&v, 0.95), 950);
+        assert_eq!(percentile(&v, 0.99), 990);
+        assert_eq!(percentile(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn synth_images_are_deterministic_and_distinct() {
+        let a = synth_image(42, 0, 64);
+        let b = synth_image(42, 0, 64);
+        let c = synth_image(42, 1, 64);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().all(|v| (-0.5..0.5).contains(v)));
+    }
+
+    #[test]
+    fn report_json_has_the_trajectory_shape() {
+        let report = LoadgenReport {
+            config: LoadgenConfig::default(),
+            ok: 60,
+            shed: 4,
+            errors: 0,
+            wall: Duration::from_millis(1234),
+            p50_us: 900,
+            p95_us: 2_000,
+            p99_us: 3_000,
+            throughput_rps: 48.6,
+            health: HealthReport {
+                serving: true,
+                backend: "tiled".to_string(),
+                input_len: 10368,
+                output_len: 800,
+                queue_cap: 64,
+            },
+            server: StatsReport {
+                queue_depth: 0,
+                queue_cap: 64,
+                accepted: 64,
+                shed: 4,
+                requests: 60,
+                errors: 0,
+                macs: 1_000_000,
+                exec_us: 5_000,
+                mac_per_s: 2e8,
+                p50_us: 800,
+                p95_us: 1_900,
+                p99_us: 2_900,
+            },
+        };
+        let j = report.to_json();
+        assert_eq!(j.get("kind").and_then(|k| k.as_str()), Some("cnnblk-loadgen"));
+        let text = j.pretty();
+        let back = json::parse(&text).unwrap();
+        let results = back.get("results").unwrap();
+        assert_eq!(results.get("p95_us").and_then(|v| v.as_u64()), Some(2_000));
+        assert_eq!(results.get("shed").and_then(|v| v.as_u64()), Some(4));
+        // the server block round-trips through the StatsReport codec
+        let server = StatsReport::from_json(back.get("server").unwrap()).unwrap();
+        assert_eq!(server.accepted, 64);
+        // and a loadgen point must never be mistaken for a bench point
+        assert_ne!(
+            back.get("kind").and_then(|k| k.as_str()),
+            Some("cnnblk-bench")
+        );
+    }
+}

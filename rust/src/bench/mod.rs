@@ -45,6 +45,8 @@ use anyhow::{anyhow, ensure, Result};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+pub mod loadgen;
+
 /// Bytes per element the executing backends actually move (`f32`).
 pub const ELEM_BYTES: u64 = 4;
 

@@ -1,14 +1,69 @@
-//! Serving metrics: request counters, batch-size histogram, and latency
-//! percentiles (exact, from a sorted sample buffer — request counts here
-//! are small enough that reservoir tricks are unnecessary).
+//! Serving metrics: request counters, batch-size histogram, admission
+//! accounting (accepted/shed), and latency percentiles over a bounded
+//! reservoir.
+//!
+//! Latencies used to accumulate in an unbounded `Vec`; a server that
+//! now runs indefinitely behind `cnnblk serve --listen` cannot grow
+//! state per request, so the sample buffer is a fixed-size reservoir
+//! (Vitter's Algorithm R, 4096 slots): every request has an equal
+//! probability of being in the sample, memory stays constant, and the
+//! selection is driven by the in-tree deterministic
+//! [`Rng`](crate::util::rng::Rng) — given the same arrival order the
+//! sampled set is exactly reproducible. Below 4096 requests the
+//! percentiles are exact, which covers every test and most bench runs.
 
+use crate::util::rng::Rng;
 use std::time::Duration;
+
+/// Latency reservoir capacity. Exact percentiles below this count;
+/// uniform sampling (Algorithm R) beyond it.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Fixed-size uniform sample of request latencies (Algorithm R).
+#[derive(Debug)]
+struct Reservoir {
+    sample: Vec<u64>,
+    seen: u64,
+    rng: Rng,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir {
+            sample: Vec::new(),
+            seen: 0,
+            // Fixed seed: sampling is deterministic per arrival order.
+            rng: Rng::new(0x5EED_CAB5),
+        }
+    }
+}
+
+impl Reservoir {
+    fn record(&mut self, v: u64) {
+        self.seen += 1;
+        if self.sample.len() < RESERVOIR_CAP {
+            self.sample.push(v);
+        } else {
+            // Keep v with probability cap/seen, evicting a uniform slot.
+            let j = self.rng.below(self.seen);
+            if (j as usize) < RESERVOIR_CAP {
+                self.sample[j as usize] = v;
+            }
+        }
+    }
+}
 
 /// Serving counters the executor records and `report` summarizes.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    latencies_us: Vec<u64>,
+    latency: Reservoir,
     batch_sizes: Vec<usize>,
+    /// Requests admitted into the serving queue (both the shedding TCP
+    /// path and the blocking in-process path count here).
+    pub accepted: u64,
+    /// Requests shed at admission (queue full — the explicit
+    /// load-shedding response, never silent buffering).
+    pub shed: u64,
     /// Requests completed (success only).
     pub requests: u64,
     /// Batches executed.
@@ -32,10 +87,20 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Record one request admitted into the queue.
+    pub fn record_admit(&mut self) {
+        self.accepted += 1;
+    }
+
+    /// Record one request shed at admission (queue full).
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
     /// Record one completed request and its latency.
     pub fn record_request(&mut self, latency: Duration) {
         self.requests += 1;
-        self.latencies_us.push(latency.as_micros() as u64);
+        self.latency.record(latency.as_micros() as u64);
     }
 
     /// Record one executed batch (`formed` real requests in an
@@ -57,12 +122,13 @@ impl Metrics {
         self.macs += macs;
     }
 
-    /// Exact latency percentile (`q` in [0, 1]) over all requests.
+    /// Latency percentile (`q` in [0, 1]) over the reservoir sample —
+    /// exact until [`RESERVOIR_CAP`] requests, sampled beyond.
     pub fn latency_percentile(&self, q: f64) -> Duration {
-        if self.latencies_us.is_empty() {
+        if self.latency.sample.is_empty() {
             return Duration::ZERO;
         }
-        let mut v = self.latencies_us.clone();
+        let mut v = self.latency.sample.clone();
         v.sort_unstable();
         let idx = ((v.len() - 1) as f64 * q).round() as usize;
         Duration::from_micros(v[idx])
@@ -76,6 +142,15 @@ impl Metrics {
         self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
     }
 
+    /// Compute throughput over the summed batch execution time
+    /// (`macs / exec_us`); 0.0 until a batch with MAC counts ran.
+    pub fn mac_per_s(&self) -> f64 {
+        if self.macs == 0 || self.exec_us == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / (self.exec_us as f64 / 1e6)
+    }
+
     /// One-line serving summary for a run of `wall` duration. When the
     /// executor recorded MAC counts (interpreted serving), appends the
     /// per-backend compute throughput — computed over the **summed
@@ -85,15 +160,16 @@ impl Metrics {
     /// the honest fallback only when no batch durations were recorded.
     pub fn report(&self, wall: Duration) -> String {
         let mut line = format!(
-            "requests={} batches={} mean_batch={:.2} padded={} errors={} \
-             p50={:?} p90={:?} p99={:?} throughput={:.1} req/s",
+            "requests={} batches={} mean_batch={:.2} padded={} shed={} errors={} \
+             p50={:?} p95={:?} p99={:?} throughput={:.1} req/s",
             self.requests,
             self.batches,
             self.mean_batch_size(),
             self.padded_slots,
+            self.shed,
             self.errors,
             self.latency_percentile(0.50),
-            self.latency_percentile(0.90),
+            self.latency_percentile(0.95),
             self.latency_percentile(0.99),
             self.requests as f64 / wall.as_secs_f64().max(1e-9),
         );
@@ -130,10 +206,72 @@ mod tests {
             m.record_request(Duration::from_micros(i * 10));
         }
         let p50 = m.latency_percentile(0.5);
-        let p90 = m.latency_percentile(0.9);
+        let p95 = m.latency_percentile(0.95);
         let p99 = m.latency_percentile(0.99);
-        assert!(p50 <= p90 && p90 <= p99);
+        assert!(p50 <= p95 && p95 <= p99);
         assert_eq!(m.requests, 100);
+    }
+
+    #[test]
+    fn percentiles_exact_below_reservoir_cap() {
+        // The satellite pin: below RESERVOIR_CAP samples nothing is
+        // dropped, so percentiles are exact order statistics. 1..=1000
+        // µs uniform → p50 = 500, p95 = 950, p99 = 990 (index = round
+        // ((n-1) * q) into the sorted sample).
+        let mut m = Metrics::default();
+        for i in 1..=1000u64 {
+            m.record_request(Duration::from_micros(i));
+        }
+        assert_eq!(m.latency_percentile(0.50), Duration::from_micros(500));
+        assert_eq!(m.latency_percentile(0.95), Duration::from_micros(950));
+        assert_eq!(m.latency_percentile(0.99), Duration::from_micros(990));
+        let r = m.report(Duration::from_secs(1));
+        assert!(r.contains("p50=500µs"), "{}", r);
+        assert!(r.contains("p95=950µs"), "{}", r);
+        assert!(r.contains("p99=990µs"), "{}", r);
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_representative() {
+        // 100k requests: memory stays at RESERVOIR_CAP, and the sampled
+        // median of a uniform 1..=100_000 µs stream lands near 50 ms.
+        let mut m = Metrics::default();
+        for i in 1..=100_000u64 {
+            m.record_request(Duration::from_micros(i));
+        }
+        assert_eq!(m.latency.sample.len(), RESERVOIR_CAP);
+        assert_eq!(m.latency.seen, 100_000);
+        let p50 = m.latency_percentile(0.5).as_micros() as f64;
+        assert!(
+            (p50 - 50_000.0).abs() < 5_000.0,
+            "sampled p50 {} far from true median 50000",
+            p50
+        );
+    }
+
+    #[test]
+    fn reservoir_sampling_is_deterministic() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        for i in 0..20_000u64 {
+            a.record_request(Duration::from_micros(i * 3 % 7919));
+            b.record_request(Duration::from_micros(i * 3 % 7919));
+        }
+        assert_eq!(a.latency.sample, b.latency.sample);
+    }
+
+    #[test]
+    fn admission_counters() {
+        let mut m = Metrics::default();
+        for _ in 0..5 {
+            m.record_admit();
+        }
+        m.record_shed();
+        m.record_shed();
+        assert_eq!(m.accepted, 5);
+        assert_eq!(m.shed, 2);
+        let r = m.report(Duration::from_secs(1));
+        assert!(r.contains("shed=2"), "{}", r);
     }
 
     #[test]
@@ -152,6 +290,7 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.latency_percentile(0.9), Duration::ZERO);
         assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.mac_per_s(), 0.0);
         let r = m.report(Duration::from_secs(1));
         assert!(r.contains("requests=0"));
         // no MAC counts recorded -> no mac_per_s clutter
@@ -189,6 +328,8 @@ mod tests {
         m.record_macs(1_500);
         let r = m.report(Duration::from_secs(10));
         assert!(r.contains("mac_per_s=1.00K"), "{}", r);
+        // the helper the stats endpoint uses agrees
+        assert!((m.mac_per_s() - 1_000.0).abs() < 1e-9);
         // and the quotient tracks batch time, not the report argument
         let r2 = m.report(Duration::from_secs(1));
         assert!(r2.contains("mac_per_s=1.00K"), "{}", r2);

@@ -84,7 +84,10 @@ struct PipelineInner {
 
 /// A conv→ReLU(→pool) chain executed through a plan backend. Batch
 /// fan-out uses the process-wide shared pool
-/// ([`crate::util::pool::shared_pool`]).
+/// ([`crate::util::pool::shared_pool`]). Cloning is cheap (the layers
+/// and backend live behind one `Arc`), which is how the serving core
+/// hands the same pipeline to its batcher thread and health endpoint.
+#[derive(Clone)]
 pub struct InterpretedPipeline {
     inner: Arc<PipelineInner>,
 }
@@ -162,6 +165,35 @@ impl InterpretedPipeline {
             "manifest has no rehydratable schedule records"
         );
         InterpretedPipeline::from_plans(m.layer_plans.clone(), backend, seed)
+    }
+
+    /// Recover the compiled plans from `artifacts_dir`'s manifest when
+    /// one exists (so serving executes exactly what the artifacts were
+    /// built from), or plan the default e2e pipeline fresh when there is
+    /// no manifest at all. A manifest that exists but cannot be
+    /// rehydrated is an error, not a silent fallback — serving different
+    /// plans than the operator's artifacts would misreport what runs.
+    /// This is the one resolution rule every serving entry point
+    /// (`serve --interpret`, `serve --listen`) shares.
+    pub fn from_artifacts_or_default(
+        artifacts_dir: &std::path::Path,
+        backend: &str,
+        seed: u64,
+    ) -> Result<InterpretedPipeline> {
+        let manifest_path = artifacts_dir.join("manifest.json");
+        if manifest_path.exists() {
+            let m = Manifest::load(artifacts_dir)?;
+            InterpretedPipeline::from_manifest(&m, backend, seed).with_context(|| {
+                format!(
+                    "rehydrating the pipeline from {} (pass a different \
+                     --artifacts dir, or remove it to serve freshly-planned \
+                     default layers)",
+                    manifest_path.display()
+                )
+            })
+        } else {
+            InterpretedPipeline::plan_default(&BeamConfig::quick(), backend, seed)
+        }
     }
 
     /// Plan the default e2e pipeline (AlexNet-mini) fresh and wrap it —

@@ -11,21 +11,23 @@
 //!    own thread — the client is not Send) and a ladder of compiled
 //!    executables, one per batch size {1,2,4,8}; a formed batch runs on
 //!    the smallest ladder entry that fits, padding with zeros;
-//!  * in interpreted mode ([`Execution::Interpreted`]) the executor runs
-//!    each layer's [`crate::plan::BlockingPlan`] through the backend
-//!    registry (`coordinator::pipeline`) — no artifacts or `xla` crate
-//!    needed, so this path also serves as the CI-visible server test;
+//!  * in interpreted mode ([`Execution::Interpreted`]) the server is a
+//!    facade over [`crate::serve::ServeCore`] — the same admission
+//!    queue, batcher, metrics and backend dispatch the TCP front end
+//!    (`cnnblk serve --listen`) runs on, so the in-process and network
+//!    paths cannot drift apart;
 //!  * responses flow back through per-request channels; metrics capture
 //!    latency percentiles, batch occupancy and padding waste.
 
 use super::metrics::Metrics;
 use super::pipeline::InterpretedPipeline;
-use crate::optimizer::beam::BeamConfig;
 use crate::runtime::{Engine, Manifest, Module};
+use crate::serve::core::{collect_batch, deliver, CoreConfig, ServeCore};
+use crate::serve::queue::{self, AdmissionQueue, AdmissionReceiver, InferRequest};
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -78,16 +80,17 @@ impl Default for ServerConfig {
     }
 }
 
-struct Request {
-    input: Vec<f32>,
-    submitted: Instant,
-    resp: Sender<Result<Vec<f32>, String>>,
-}
-
 /// Handle to a running server.
 pub struct InferenceServer {
-    tx: Option<SyncSender<Request>>,
+    /// PJRT path: producer half of the admission queue feeding the
+    /// executor thread. `None` in interpreted mode (the core owns its
+    /// own queue) and after shutdown.
+    tx: Option<AdmissionQueue>,
+    /// PJRT executor thread.
     handle: Option<std::thread::JoinHandle<()>>,
+    /// Interpreted mode: the shared serving core (same one
+    /// `cnnblk serve --listen` fronts with TCP sessions).
+    core: Option<Arc<ServeCore>>,
     /// Shared serving counters.
     pub metrics: Arc<Mutex<Metrics>>,
     /// Flat per-image input length the pipeline expects.
@@ -114,49 +117,34 @@ impl InferenceServer {
         }
     }
 
-    /// The interpreted path: recover the compiled plans from the
-    /// artifact manifest when present (so we serve exactly what the
-    /// artifacts were built from), or plan the default e2e pipeline
-    /// fresh when there is no manifest at all; then execute every layer
-    /// through the backend registry. A manifest that exists but cannot
-    /// be rehydrated is an error, not a silent fallback — serving
-    /// different plans than the operator's artifacts would misreport
-    /// what runs.
+    /// The interpreted path: resolve the pipeline (artifact manifest
+    /// when present, freshly-planned defaults otherwise — see
+    /// [`InterpretedPipeline::from_artifacts_or_default`]) and start a
+    /// [`ServeCore`] over it. This facade and the TCP listener share
+    /// that core's admission queue, batcher, and metrics verbatim.
     fn start_interpreted(cfg: ServerConfig, backend: String) -> Result<InferenceServer> {
-        let manifest_path = cfg.artifacts_dir.join("manifest.json");
-        let pipeline = if manifest_path.exists() {
-            let m = Manifest::load(&cfg.artifacts_dir)?;
-            InterpretedPipeline::from_manifest(&m, &backend, 0).with_context(|| {
-                format!(
-                    "rehydrating the pipeline from {} (pass a different \
-                     --artifacts dir, or remove it to serve freshly-planned \
-                     default layers)",
-                    manifest_path.display()
-                )
-            })?
-        } else {
-            InterpretedPipeline::plan_default(&BeamConfig::quick(), &backend, 0)?
-        };
+        let pipeline = InterpretedPipeline::from_artifacts_or_default(&cfg.artifacts_dir, &backend, 0)?;
         let input_len = pipeline.input_len();
         let output_len = pipeline.output_len();
         let layer_plans: Vec<crate::plan::BlockingPlan> =
             pipeline.layers().iter().map(|l| l.plan.clone()).collect();
         let layer_strings = layer_plans.iter().map(|p| p.string.notation()).collect();
 
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let metrics = Arc::new(Mutex::new(Metrics {
-            backend: backend.clone(),
-            ..Metrics::default()
-        }));
-        let metrics2 = metrics.clone();
-        let handle = std::thread::Builder::new()
-            .name("cnnblk-interp".into())
-            .spawn(move || interpreted_loop(cfg, pipeline, rx, metrics2, input_len))
-            .context("spawning interpreted executor")?;
+        let core = ServeCore::start(
+            pipeline,
+            CoreConfig {
+                max_batch: cfg.max_batch,
+                batch_timeout: cfg.batch_timeout,
+                queue_cap: cfg.queue_depth,
+                ..CoreConfig::default()
+            },
+        )?;
+        let metrics = core.metrics();
 
         Ok(InferenceServer {
-            tx: Some(tx),
-            handle: Some(handle),
+            tx: None,
+            handle: None,
+            core: Some(core),
             metrics,
             input_len,
             output_len,
@@ -178,7 +166,7 @@ impl InferenceServer {
         let layer_strings = manifest.layer_strings.clone();
         let layer_plans = manifest.layer_plans.clone();
 
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let (tx, rx) = queue::bounded(cfg.queue_depth);
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let metrics2 = metrics.clone();
         let (ready_tx, ready_rx) = sync_channel::<Result<(), String>>(1);
@@ -199,6 +187,7 @@ impl InferenceServer {
         Ok(InferenceServer {
             tx: Some(tx),
             handle: Some(handle),
+            core: None,
             metrics,
             input_len,
             output_len,
@@ -215,8 +204,15 @@ impl InferenceServer {
             .map_err(|e| anyhow!(e))
     }
 
-    /// Submit without waiting: returns the response channel.
+    /// Submit without waiting: returns the response channel. Blocks for
+    /// a queue slot when the admission queue is full (in-process
+    /// backpressure — the TCP path sheds instead; see
+    /// [`ServeCore::admit`]).
     pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Result<Vec<f32>, String>>> {
+        if let Some(core) = &self.core {
+            return core.submit_blocking(input);
+        }
+        // PJRT path: same validation + blocking admission, local queue.
         if input.len() != self.input_len {
             return Err(anyhow!(
                 "input has {} elements, expected {}",
@@ -228,37 +224,48 @@ impl InferenceServer {
         self.tx
             .as_ref()
             .expect("server running")
-            .send(Request {
+            .send_blocking(InferRequest {
                 input,
                 submitted: Instant::now(),
                 resp: resp_tx,
             })
             .map_err(|_| anyhow!("server stopped"))?;
+        self.metrics.lock().unwrap().record_admit();
         Ok(resp_rx)
     }
 
-    /// Graceful shutdown: drain the queue, join the executor.
-    pub fn shutdown(mut self) {
+    /// The serving core behind the interpreted path (health, stats,
+    /// TCP listening); `None` on the PJRT path.
+    pub fn core(&self) -> Option<&Arc<ServeCore>> {
+        self.core.as_ref()
+    }
+
+    fn stop(&mut self) {
         drop(self.tx.take());
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+        if let Some(core) = self.core.take() {
+            core.shutdown();
+        }
+    }
+
+    /// Graceful shutdown: drain the queue, join the executor.
+    pub fn shutdown(mut self) {
+        self.stop();
     }
 }
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.stop();
     }
 }
 
 fn executor_loop(
     cfg: ServerConfig,
     manifest: Manifest,
-    rx: Receiver<Request>,
+    rx: AdmissionReceiver,
     metrics: Arc<Mutex<Metrics>>,
     ready_tx: SyncSender<Result<(), String>>,
     input_len: usize,
@@ -321,96 +328,10 @@ fn executor_loop(
     }
 }
 
-/// Executor loop for interpreted mode: the same batcher, with the
-/// formed batch fanned across the pipeline's worker pool (no ladder,
-/// no padding). Records the executed MACs so `Metrics` can report the
-/// serving backend's MAC/s.
-fn interpreted_loop(
-    cfg: ServerConfig,
-    pipeline: InterpretedPipeline,
-    rx: Receiver<Request>,
-    metrics: Arc<Mutex<Metrics>>,
-    input_len: usize,
-) {
-    let output_len = pipeline.output_len();
-    loop {
-        let batch = match collect_batch(&rx, cfg.batch_timeout, cfg.max_batch.max(1)) {
-            Some(b) => b,
-            None => return,
-        };
-        let formed = batch.len();
-        let mut flat = Vec::with_capacity(formed * input_len);
-        for r in &batch {
-            flat.extend_from_slice(&r.input);
-        }
-        let t0 = Instant::now();
-        let result = pipeline.run_batch_counted(flat, formed);
-        {
-            let mut m = metrics.lock().unwrap();
-            m.record_batch(formed, formed, t0.elapsed());
-            if let Ok(run) = &result {
-                m.record_macs(run.macs);
-            }
-        }
-        deliver(batch, result.map(|run| run.output), &metrics, output_len);
-    }
-}
-
-/// Collect one batch: block for the first request, then keep accepting
-/// until `cap` requests are queued or `timeout` expires. `None` means
-/// every sender dropped (shutdown).
-fn collect_batch(
-    rx: &Receiver<Request>,
-    timeout: Duration,
-    cap: usize,
-) -> Option<Vec<Request>> {
-    let first = rx.recv().ok()?;
-    let mut batch = vec![first];
-    let deadline = Instant::now() + timeout;
-    while batch.len() < cap {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(r) => batch.push(r),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
-        }
-    }
-    Some(batch)
-}
-
-/// Slice a batch result back to per-request responses (or fan the error
-/// out to every requester), recording metrics.
-fn deliver(
-    batch: Vec<Request>,
-    result: Result<Vec<f32>>,
-    metrics: &Arc<Mutex<Metrics>>,
-    output_len: usize,
-) {
-    match result {
-        Ok(out) => {
-            for (i, r) in batch.into_iter().enumerate() {
-                let slice = out[i * output_len..(i + 1) * output_len].to_vec();
-                let latency = r.submitted.elapsed();
-                metrics.lock().unwrap().record_request(latency);
-                let _ = r.resp.send(Ok(slice));
-            }
-        }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            for r in batch {
-                metrics.lock().unwrap().record_error();
-                let _ = r.resp.send(Err(msg.clone()));
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optimizer::beam::BeamConfig;
     use crate::runtime::manifest::Golden;
 
     fn artifacts_dir() -> PathBuf {

@@ -80,6 +80,11 @@
 //!   AOT HLO artifacts).
 //! * [`coordinator`] — threaded batching inference driver (L3), PJRT or
 //!   interpreted through the backend registry.
+//! * [`serve`] — the TCP serving front end over the interpreted
+//!   pipeline: length-prefixed framing, JSON codec, bounded admission
+//!   queue with explicit load-shedding, per-connection sessions,
+//!   health/stats endpoints, graceful drain — `cnnblk serve --listen`
+//!   and the `cnnblk loadgen` harness run on it.
 //! * [`figures`] — harness that regenerates each paper table/figure.
 //! * [`bench`] — the `cnnblk bench` perf harness: naive vs blocked vs
 //!   tiled vs parallel MAC/s and per-level bytes/s on the Table 4
@@ -103,6 +108,7 @@ pub mod optimizer;
 pub mod parallel;
 pub mod plan;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use plan::{BlockingPlan, PlanCache, PlanEngine, Planner, Target};

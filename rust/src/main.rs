@@ -13,14 +13,19 @@
 //!   schedules  plan the e2e pipeline layers and emit schedules.json
 //!   figures    regenerate the paper's tables/figures (see --help text)
 //!   cachesim   run the Fig. 3/4 cache-trace comparison
-//!   serve      run the batching inference server on synthetic requests
+//!   serve      run the batching inference server — in-process synthetic
+//!              requests by default, or a concurrent TCP front end with
+//!              load-shedding via --listen
+//!   loadgen    drive a live `serve --listen` server: N connections,
+//!              p50/p95/p99 latency + MAC/s, BENCH_6.json trajectory point
 //!   validate   PJRT round-trip checks against goldens and the native conv
 //!
 //! docs/CLI.md documents every subcommand and flag; `print_help` below
 //! must stay in agreement with it.
 
+use cnn_blocking::bench::loadgen::{run_loadgen, LoadgenConfig};
 use cnn_blocking::bench::{run_bench, BenchConfig};
-use cnn_blocking::coordinator::{Execution, InferenceServer, ServerConfig};
+use cnn_blocking::coordinator::{Execution, InferenceServer, InterpretedPipeline, ServerConfig};
 use cnn_blocking::figures::{fig3_4, fig5_8, fig9, tables};
 use cnn_blocking::model::benchmarks::{all_benchmarks, by_name};
 use cnn_blocking::model::hierarchy::human_bytes;
@@ -28,6 +33,7 @@ use cnn_blocking::optimizer::beam::BeamConfig;
 use cnn_blocking::optimizer::schedules::emit_schedules;
 use cnn_blocking::runtime::backend::{backend_by_name, predicted_counters, ConvInputs};
 use cnn_blocking::runtime::{Engine, Golden, Manifest};
+use cnn_blocking::serve::{CoreConfig, ListenConfig, ServeCore, TcpServeHandle};
 use cnn_blocking::util::cli::Args;
 use cnn_blocking::util::table::{energy_pj, eng, Table};
 use cnn_blocking::{BlockingPlan, Planner, Target};
@@ -47,6 +53,7 @@ fn main() -> anyhow::Result<()> {
         Some("figures") => cmd_figures(&args),
         Some("cachesim") => cmd_cachesim(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("validate") => cmd_validate(&args),
         _ => {
             print_help();
@@ -89,9 +96,20 @@ fn print_help() {
          figures   [--table1|--table3|--table4|--fig3|--fig5|--fig6|--fig7|--fig8|--fig9|--all]\n\
          cachesim  [--max-macs 20000000]                      (Figs. 3-4 traces)\n\
          serve     [--requests 256] [--batch 8] [--timeout-ms 2] [--artifacts artifacts]\n\
+         \x20         [--queue-cap 64]                        (bounded admission queue depth)\n\
          \x20         [--interpret [naive|blocked|tiled|parallel]] (plan-backend serving, no\n\
          \x20         PJRT; bare --interpret serves the tiled fast path fanning batch images\n\
          \x20         across workers; 'parallel' shards each layer across workers instead)\n\
+         \x20         [--listen] [--host 127.0.0.1] [--port 7744] (concurrent TCP front end\n\
+         \x20         over the interpreted pipeline: length-prefixed JSON protocol, explicit\n\
+         \x20         load-shedding past --queue-cap, health/stats ops; runs until killed;\n\
+         \x20         --port 0 picks an ephemeral port, printed on startup)\n\
+         loadgen   [--addr 127.0.0.1:7744] [--connections 4] [--requests 64] [--rate 0]\n\
+         \x20         [--seed 42] [--out BENCH_6.json] [--connect-timeout-s 30] [--smoke]\n\
+         \x20         (drive a live `serve --listen`: p50/p95/p99 client latency + server\n\
+         \x20         MAC/s; --rate targets aggregate req/s, 0 = unthrottled; --smoke also\n\
+         \x20         bursts past the queue cap and fails unless requests are explicitly\n\
+         \x20         shed with the server staying healthy)\n\
          validate  [--artifacts artifacts]                    (PJRT round-trip checks)\n\
          \n\
          add --full-search for the paper-width beam (128 seeds) instead of the quick one"
@@ -634,8 +652,34 @@ fn cmd_cachesim(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Print the plans behind each served pipeline layer.
+fn print_layer_plans(plans: &[BlockingPlan]) {
+    for p in plans {
+        println!(
+            "  {}: {}  ({:.3} pJ/MAC predicted, on-chip {})",
+            p.name,
+            p.string,
+            p.pj_per_mac(),
+            human_bytes(p.outcome.onchip_bytes),
+        );
+    }
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    check_flags(args, &["requests", "batch", "timeout-ms", "artifacts", "interpret"])?;
+    check_flags(
+        args,
+        &[
+            "requests",
+            "batch",
+            "timeout-ms",
+            "artifacts",
+            "interpret",
+            "listen",
+            "host",
+            "port",
+            "queue-cap",
+        ],
+    )?;
     // A bare `--interpret` (no backend name) serves the tiled fast
     // path — the interpreted-serving default.
     let interpret = args.get("interpret").map(|b| {
@@ -645,15 +689,57 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             b.to_string()
         }
     });
+    let artifacts_dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let max_batch = args.get_u64("batch", 8) as usize;
+    let batch_timeout = Duration::from_millis(args.get_u64("timeout-ms", 2));
+    let queue_cap = args.get_u64("queue-cap", 64) as usize;
+
+    if args.has("listen") {
+        // The TCP front end always serves the interpreted pipeline
+        // (the PJRT executor is pinned to its own thread and has no
+        // ServeCore); bare --listen defaults to the tiled fast path.
+        let backend = interpret.unwrap_or_else(|| "tiled".to_string());
+        let pipeline = InterpretedPipeline::from_artifacts_or_default(&artifacts_dir, &backend, 0)?;
+        let plans: Vec<BlockingPlan> =
+            pipeline.layers().iter().map(|l| l.plan.clone()).collect();
+        let core = ServeCore::start(
+            pipeline,
+            CoreConfig {
+                max_batch,
+                batch_timeout,
+                queue_cap,
+                ..CoreConfig::default()
+            },
+        )?;
+        let listen = ListenConfig {
+            host: args.get_or("host", "127.0.0.1"),
+            port: args.get_u64("port", 7744) as u16,
+        };
+        let handle = TcpServeHandle::start(core, &listen)?;
+        println!(
+            "listening on {} (backend '{}', queue cap {}, max batch {}); pipeline plans:",
+            handle.local_addr(),
+            backend,
+            queue_cap,
+            max_batch,
+        );
+        print_layer_plans(&plans);
+        // Serve until killed; sessions, batcher and accept loop run on
+        // their own threads.
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+
     let execution = match interpret.clone() {
         Some(backend) => Execution::Interpreted { backend },
         None => Execution::Pjrt,
     };
     let cfg = ServerConfig {
-        artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")),
-        max_batch: args.get_u64("batch", 8) as usize,
-        batch_timeout: Duration::from_millis(args.get_u64("timeout-ms", 2)),
-        queue_depth: 64,
+        artifacts_dir,
+        max_batch,
+        batch_timeout,
+        queue_depth: queue_cap,
         execution,
     };
     let n = args.get_u64("requests", 256) as usize;
@@ -665,15 +751,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if server.layer_plans.is_empty() {
         println!("  (no plan records; raw strings: {:?})", server.layer_strings);
     }
-    for p in &server.layer_plans {
-        println!(
-            "  {}: {}  ({:.3} pJ/MAC predicted, on-chip {})",
-            p.name,
-            p.string,
-            p.pj_per_mac(),
-            human_bytes(p.outcome.onchip_bytes),
-        );
-    }
+    print_layer_plans(&server.layer_plans);
     let mut rng = cnn_blocking::util::rng::Rng::new(42);
     let input_len = server.input_len;
     let t0 = Instant::now();
@@ -688,6 +766,38 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let wall = t0.elapsed();
     println!("{}", server.metrics.lock().unwrap().report(wall));
     server.shutdown();
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    check_flags(
+        args,
+        &[
+            "addr",
+            "connections",
+            "requests",
+            "rate",
+            "seed",
+            "out",
+            "connect-timeout-s",
+            "smoke",
+        ],
+    )?;
+    let cfg = LoadgenConfig {
+        addr: args.get_or("addr", "127.0.0.1:7744"),
+        connections: args.get_u64("connections", 4) as usize,
+        requests: args.get_u64("requests", 64) as usize,
+        rate: args.get_f64("rate", 0.0),
+        seed: args.get_u64("seed", 42),
+        smoke: args.has("smoke"),
+        connect_timeout: Duration::from_secs(args.get_u64("connect-timeout-s", 30)),
+    };
+    let report = run_loadgen(&cfg)?;
+    report.print();
+    if let Some(out) = args.get("out") {
+        report.save(out)?;
+        println!("wrote {}", out);
+    }
     Ok(())
 }
 

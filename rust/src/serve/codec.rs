@@ -1,0 +1,322 @@
+//! The JSON request/response codec, and the small blocking client the
+//! load generator and tests drive.
+//!
+//! Every frame payload is one compact JSON object tagged by an `"op"`
+//! field — the codec is built on the in-tree [`crate::util::json`]
+//! codec (the offline crate snapshot has no serde, and the protocol is
+//! small enough that a hand-rolled tagged-object scheme stays legible).
+//!
+//! Tensors travel as JSON number arrays through an **exact** round
+//! trip: `f32 → f64` widening is exact, the serializer emits Rust's
+//! shortest-round-trip `f64` decimal (whole values print as integers,
+//! which still parse back exactly), and decoding narrows `f64 → f32`
+//! without loss. Non-finite values are rejected at encode time — JSON
+//! cannot carry them, and the pipeline never produces them (outputs
+//! are post-ReLU finite).
+
+use crate::serve::frame::{read_frame, write_frame, MAX_FRAME_LEN};
+use crate::serve::health::{HealthReport, StatsReport};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// A client→server message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Run one image through the pipeline (`input` is the flat image,
+    /// `input_len` elements).
+    Infer(Vec<f32>),
+    /// Ask whether the server is accepting work and what shape of work.
+    Health,
+    /// Ask for the live serving counters.
+    Stats,
+}
+
+/// A server→client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Successful inference: the flat output activations.
+    Output(Vec<f32>),
+    /// The admission queue was full; retry after the hinted delay.
+    Shed {
+        /// Suggested client back-off before retrying, milliseconds.
+        retry_after_ms: u64,
+    },
+    /// The request failed (bad input length, backend error, draining).
+    Error(String),
+    /// Response to [`Request::Health`].
+    Health(HealthReport),
+    /// Response to [`Request::Stats`].
+    Stats(StatsReport),
+}
+
+/// Encode a tensor as a JSON number array. Fails on non-finite values,
+/// which JSON cannot represent.
+pub fn floats_to_json(vals: &[f32]) -> Result<Json> {
+    let mut out = Vec::with_capacity(vals.len());
+    for (i, &v) in vals.iter().enumerate() {
+        if !v.is_finite() {
+            bail!("non-finite value {} at index {} cannot be encoded", v, i);
+        }
+        out.push(json::num(f64::from(v)));
+    }
+    Ok(json::arr(out))
+}
+
+/// Decode a JSON number array back into `f32` values.
+pub fn json_to_floats(val: &Json) -> Result<Vec<f32>> {
+    let arr = val.as_arr().ok_or_else(|| anyhow!("expected an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, item) in arr.iter().enumerate() {
+        let n = item
+            .as_f64()
+            .ok_or_else(|| anyhow!("non-numeric element at index {}", i))?;
+        out.push(n as f32);
+    }
+    Ok(out)
+}
+
+fn op_of(doc: &Json) -> Result<&str> {
+    doc.get("op")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("message has no 'op' field"))
+}
+
+impl Request {
+    /// Serialize to a frame payload (compact JSON bytes).
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut o = Json::obj();
+        match self {
+            Request::Infer(input) => {
+                o.set("op", json::s("infer"))
+                    .set("input", floats_to_json(input)?);
+            }
+            Request::Health => {
+                o.set("op", json::s("health"));
+            }
+            Request::Stats => {
+                o.set("op", json::s("stats"));
+            }
+        }
+        Ok(o.compact().into_bytes())
+    }
+
+    /// Parse a frame payload back into a request.
+    pub fn decode(payload: &[u8]) -> Result<Request> {
+        let text = std::str::from_utf8(payload).context("request is not UTF-8")?;
+        let doc = json::parse(text).map_err(|e| anyhow!("bad request JSON: {}", e))?;
+        match op_of(&doc)? {
+            "infer" => {
+                let input = doc
+                    .get("input")
+                    .ok_or_else(|| anyhow!("infer request has no 'input'"))?;
+                Ok(Request::Infer(json_to_floats(input)?))
+            }
+            "health" => Ok(Request::Health),
+            "stats" => Ok(Request::Stats),
+            other => bail!("unknown request op '{}'", other),
+        }
+    }
+}
+
+impl Response {
+    /// Serialize to a frame payload (compact JSON bytes).
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut o = Json::obj();
+        match self {
+            Response::Output(output) => {
+                o.set("op", json::s("output"))
+                    .set("output", floats_to_json(output)?);
+            }
+            Response::Shed { retry_after_ms } => {
+                o.set("op", json::s("shed"))
+                    .set("retry_after_ms", json::unum(*retry_after_ms));
+            }
+            Response::Error(msg) => {
+                o.set("op", json::s("error")).set("message", json::s(msg));
+            }
+            Response::Health(h) => {
+                o.set("op", json::s("health")).set("body", h.to_json());
+            }
+            Response::Stats(s) => {
+                o.set("op", json::s("stats")).set("body", s.to_json());
+            }
+        }
+        Ok(o.compact().into_bytes())
+    }
+
+    /// Parse a frame payload back into a response.
+    pub fn decode(payload: &[u8]) -> Result<Response> {
+        let text = std::str::from_utf8(payload).context("response is not UTF-8")?;
+        let doc = json::parse(text).map_err(|e| anyhow!("bad response JSON: {}", e))?;
+        let body = |doc: &Json| {
+            doc.get("body")
+                .cloned()
+                .ok_or_else(|| anyhow!("response has no 'body'"))
+        };
+        match op_of(&doc)? {
+            "output" => {
+                let output = doc
+                    .get("output")
+                    .ok_or_else(|| anyhow!("output response has no 'output'"))?;
+                Ok(Response::Output(json_to_floats(output)?))
+            }
+            "shed" => Ok(Response::Shed {
+                retry_after_ms: doc
+                    .get("retry_after_ms")
+                    .and_then(|v| v.as_u64())
+                    .ok_or_else(|| anyhow!("shed response has no 'retry_after_ms'"))?,
+            }),
+            "error" => Ok(Response::Error(
+                doc.get("message")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("error response has no 'message'"))?
+                    .to_string(),
+            )),
+            "health" => Ok(Response::Health(HealthReport::from_json(&body(&doc)?)?)),
+            "stats" => Ok(Response::Stats(StatsReport::from_json(&body(&doc)?)?)),
+            other => bail!("unknown response op '{}'", other),
+        }
+    }
+}
+
+/// A blocking client for the serve protocol: one TCP connection,
+/// strictly request→response (the protocol has no pipelining).
+///
+/// This is what `cnnblk loadgen` and the integration tests drive; it
+/// is also a reference implementation for external clients.
+pub struct ServeClient {
+    stream: TcpStream,
+}
+
+impl ServeClient {
+    /// Connect to `addr` (e.g. `127.0.0.1:7744`).
+    pub fn connect(addr: &str) -> Result<ServeClient> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {}", addr))?;
+        stream.set_nodelay(true).ok();
+        Ok(ServeClient { stream })
+    }
+
+    /// Connect, retrying until `deadline` elapses — for racing a server
+    /// that is still planning its pipeline or binding its socket (the
+    /// CI smoke test launches `serve --listen` in the background and
+    /// immediately starts the load generator).
+    pub fn connect_retry(addr: &str, deadline: Duration) -> Result<ServeClient> {
+        let start = Instant::now();
+        loop {
+            match ServeClient::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) if start.elapsed() >= deadline => {
+                    return Err(e.context(format!(
+                        "server at {} not reachable within {:?}",
+                        addr, deadline
+                    )));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(100)),
+            }
+        }
+    }
+
+    /// Send one request and block for its response.
+    pub fn request(&mut self, req: &Request) -> Result<Response> {
+        write_frame(&mut self.stream, &req.encode()?).context("writing request frame")?;
+        let payload = read_frame(&mut self.stream, MAX_FRAME_LEN)
+            .context("reading response frame")?
+            .ok_or_else(|| anyhow!("server closed the connection mid-request"))?;
+        Response::decode(&payload)
+    }
+
+    /// Run one image. Returns the raw [`Response`] so callers can
+    /// distinguish `Output` from `Shed` (the load generator counts
+    /// sheds; it does not treat them as failures).
+    pub fn infer(&mut self, input: &[f32]) -> Result<Response> {
+        self.request(&Request::Infer(input.to_vec()))
+    }
+
+    /// Fetch the health report, erroring on any other response.
+    pub fn health(&mut self) -> Result<HealthReport> {
+        match self.request(&Request::Health)? {
+            Response::Health(h) => Ok(h),
+            other => bail!("expected a health response, got {:?}", other),
+        }
+    }
+
+    /// Fetch the stats report, erroring on any other response.
+    pub fn stats(&mut self) -> Result<StatsReport> {
+        match self.request(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => bail!("expected a stats response, got {:?}", other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_request_roundtrip_is_bit_exact() {
+        // Values chosen to exercise shortest-round-trip printing:
+        // whole numbers, subnormals, negative fractions, f32::MAX.
+        let vals: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -7.0,
+            0.1,
+            -3.25,
+            1.0e-40, // subnormal
+            f32::MAX,
+            f32::MIN_POSITIVE,
+            std::f32::consts::PI,
+        ];
+        let bytes = Request::Infer(vals.clone()).encode().unwrap();
+        match Request::decode(&bytes).unwrap() {
+            Request::Infer(back) => {
+                assert_eq!(back.len(), vals.len());
+                for (a, b) in back.iter().zip(vals.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{} != {}", a, b);
+                }
+            }
+            other => panic!("wrong decode: {:?}", other),
+        }
+    }
+
+    #[test]
+    fn control_ops_roundtrip() {
+        for req in [Request::Health, Request::Stats] {
+            let bytes = req.encode().unwrap();
+            assert_eq!(Request::decode(&bytes).unwrap(), req);
+        }
+        let shed = Response::Shed { retry_after_ms: 25 };
+        assert_eq!(Response::decode(&shed.encode().unwrap()).unwrap(), shed);
+        let err = Response::Error("queue closed".to_string());
+        assert_eq!(Response::decode(&err.encode().unwrap()).unwrap(), err);
+    }
+
+    #[test]
+    fn output_roundtrip_matches_request_path() {
+        let vals = vec![0.5f32, 2.0, 1.5e-3];
+        let resp = Response::Output(vals.clone());
+        match Response::decode(&resp.encode().unwrap()).unwrap() {
+            Response::Output(back) => assert_eq!(back, vals),
+            other => panic!("wrong decode: {:?}", other),
+        }
+    }
+
+    #[test]
+    fn non_finite_rejected_at_encode() {
+        assert!(Request::Infer(vec![f32::NAN]).encode().is_err());
+        assert!(Response::Output(vec![f32::INFINITY]).encode().is_err());
+    }
+
+    #[test]
+    fn garbage_payloads_are_clean_errors() {
+        assert!(Request::decode(b"\xff\xfe").is_err());
+        assert!(Request::decode(b"{\"op\": \"warp\"}").is_err());
+        assert!(Response::decode(b"[1,2,3]").is_err());
+        assert!(Request::decode(b"{\"op\": \"infer\"}").is_err());
+    }
+}

@@ -1,0 +1,439 @@
+//! [`ServeCore`]: the one serving core behind both `cnnblk serve
+//! --interpret` (in-process driver) and `cnnblk serve --listen` (TCP).
+//!
+//! Both entry points share everything that drives the pipeline —
+//! admission through the bounded [`crate::serve::queue`], the dynamic
+//! batcher, dispatch into [`InterpretedPipeline`] (whose batches fan
+//! out on the shared worker pool), the [`Metrics`] counters, and
+//! drain-on-shutdown. The only difference between the two paths is the
+//! admission verb: TCP sessions use [`ServeCore::admit`] (non-blocking,
+//! sheds on a full queue) while in-process submitters use
+//! [`ServeCore::submit_blocking`] (backpressure).
+//!
+//! Threading: the core owns exactly one batcher thread. TCP sessions
+//! are plain blocking reader threads, **not** shared-pool jobs — a pool
+//! job that blocked on the pipeline's response (which itself fans onto
+//! the pool) could deadlock the pool; routing all compute through the
+//! single batcher keeps every pool submission a leaf.
+//!
+//! Shutdown is a drain, not an abort: dropping the producer half of a
+//! `sync_channel` still lets the consumer pop everything already
+//! queued, so the batcher finishes and answers every admitted request
+//! before exiting.
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pipeline::InterpretedPipeline;
+use crate::serve::health::{HealthReport, StatsReport};
+use crate::serve::queue::{self, AdmissionQueue, AdmissionReceiver, InferRequest, Rejected};
+use anyhow::{anyhow, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Knobs for [`ServeCore::start`].
+#[derive(Debug, Clone)]
+pub struct CoreConfig {
+    /// Most requests batched into one pipeline execution.
+    pub max_batch: usize,
+    /// How long the batcher waits for more requests after the first.
+    pub batch_timeout: Duration,
+    /// Admission queue capacity; beyond it, [`ServeCore::admit`] sheds.
+    pub queue_cap: usize,
+    /// The back-off hint carried by shed responses, milliseconds.
+    pub retry_after_ms: u64,
+}
+
+impl Default for CoreConfig {
+    fn default() -> Self {
+        CoreConfig {
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(2),
+            queue_cap: 64,
+            retry_after_ms: 25,
+        }
+    }
+}
+
+/// Outcome of a non-blocking admission attempt.
+pub enum Admission {
+    /// Queued; the result (or a per-request error) arrives here.
+    Admitted(Receiver<Result<Vec<f32>, String>>),
+    /// The queue was full — the request was shed, not buffered.
+    Shed {
+        /// Suggested client back-off before retrying, milliseconds.
+        retry_after_ms: u64,
+    },
+    /// The core is draining or stopped; no new work is accepted.
+    Closed,
+}
+
+/// The serving core: bounded admission in front of one batching thread
+/// driving the interpreted pipeline. Shared behind an `Arc` by every
+/// producer (TCP sessions, the in-process server facade).
+pub struct ServeCore {
+    /// Producer half of the admission queue; `None` once shutdown
+    /// began. Dropping it is what lets the batcher drain and exit.
+    tx: Mutex<Option<AdmissionQueue>>,
+    batcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    depth: Arc<AtomicUsize>,
+    serving: AtomicBool,
+    metrics: Arc<Mutex<Metrics>>,
+    pipeline: InterpretedPipeline,
+    cfg: CoreConfig,
+}
+
+impl ServeCore {
+    /// Spin up the batcher over `pipeline` and return the shared core.
+    pub fn start(pipeline: InterpretedPipeline, cfg: CoreConfig) -> Result<Arc<ServeCore>> {
+        let (tx, rx) = queue::bounded(cfg.queue_cap);
+        let depth = tx.depth_gauge();
+        let metrics = Arc::new(Mutex::new(Metrics {
+            backend: pipeline.backend_name().to_string(),
+            ..Metrics::default()
+        }));
+        let batcher = {
+            let pipeline = pipeline.clone();
+            let metrics = metrics.clone();
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("cnnblk-serve-core".into())
+                .spawn(move || batcher_loop(pipeline, rx, metrics, cfg))
+                .context("spawning the serving batcher")?
+        };
+        Ok(Arc::new(ServeCore {
+            tx: Mutex::new(Some(tx)),
+            batcher: Mutex::new(Some(batcher)),
+            depth,
+            serving: AtomicBool::new(true),
+            metrics,
+            pipeline,
+            cfg,
+        }))
+    }
+
+    /// Flat per-image input length the pipeline expects.
+    pub fn input_len(&self) -> usize {
+        self.pipeline.input_len()
+    }
+
+    /// Flat per-image output length the pipeline produces.
+    pub fn output_len(&self) -> usize {
+        self.pipeline.output_len()
+    }
+
+    /// The pipeline being served (cheap to clone; plans/weights shared).
+    pub fn pipeline(&self) -> &InterpretedPipeline {
+        &self.pipeline
+    }
+
+    /// The shared serving counters.
+    pub fn metrics(&self) -> Arc<Mutex<Metrics>> {
+        self.metrics.clone()
+    }
+
+    fn make_request(
+        &self,
+        input: Vec<f32>,
+    ) -> Result<(InferRequest, Receiver<Result<Vec<f32>, String>>)> {
+        if input.len() != self.input_len() {
+            self.metrics.lock().unwrap().record_error();
+            return Err(anyhow!(
+                "input has {} elements, expected {}",
+                input.len(),
+                self.input_len()
+            ));
+        }
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+        Ok((
+            InferRequest {
+                input,
+                submitted: Instant::now(),
+                resp: resp_tx,
+            },
+            resp_rx,
+        ))
+    }
+
+    /// Non-blocking admission (the TCP path): a full queue sheds the
+    /// request with a retry-after hint instead of buffering it. `Err`
+    /// only for malformed requests (wrong input length).
+    pub fn admit(&self, input: Vec<f32>) -> Result<Admission> {
+        let Some(q) = self.tx.lock().unwrap().clone() else {
+            return Ok(Admission::Closed);
+        };
+        let (req, resp_rx) = self.make_request(input)?;
+        match q.try_send(req) {
+            Ok(()) => {
+                self.metrics.lock().unwrap().record_admit();
+                Ok(Admission::Admitted(resp_rx))
+            }
+            Err(Rejected::Full(_)) => {
+                self.metrics.lock().unwrap().record_shed();
+                Ok(Admission::Shed {
+                    retry_after_ms: self.cfg.retry_after_ms,
+                })
+            }
+            Err(Rejected::Closed(_)) => Ok(Admission::Closed),
+        }
+    }
+
+    /// Blocking admission (the in-process path): waits for a queue slot
+    /// — backpressure on the submitting thread instead of a shed
+    /// response. Returns the response channel.
+    pub fn submit_blocking(&self, input: Vec<f32>) -> Result<Receiver<Result<Vec<f32>, String>>> {
+        let Some(q) = self.tx.lock().unwrap().clone() else {
+            return Err(anyhow!("server stopped"));
+        };
+        let (req, resp_rx) = self.make_request(input)?;
+        q.send_blocking(req).map_err(|_| anyhow!("server stopped"))?;
+        self.metrics.lock().unwrap().record_admit();
+        Ok(resp_rx)
+    }
+
+    /// Submit one image and block for its result.
+    pub fn infer_blocking(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit_blocking(input)?
+            .recv()
+            .map_err(|_| anyhow!("server dropped the response channel"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// The health/readiness snapshot served by the `health` op.
+    pub fn health(&self) -> HealthReport {
+        HealthReport {
+            serving: self.serving.load(Ordering::SeqCst),
+            backend: self.pipeline.backend_name().to_string(),
+            input_len: self.input_len(),
+            output_len: self.output_len(),
+            queue_cap: self.cfg.queue_cap,
+        }
+    }
+
+    /// The live counter snapshot served by the `stats` op.
+    pub fn stats(&self) -> StatsReport {
+        let m = self.metrics.lock().unwrap();
+        StatsReport {
+            queue_depth: self.depth.load(Ordering::SeqCst),
+            queue_cap: self.cfg.queue_cap,
+            accepted: m.accepted,
+            shed: m.shed,
+            requests: m.requests,
+            errors: m.errors,
+            macs: m.macs,
+            exec_us: m.exec_us,
+            mac_per_s: m.mac_per_s(),
+            p50_us: m.latency_percentile(0.50).as_micros() as u64,
+            p95_us: m.latency_percentile(0.95).as_micros() as u64,
+            p99_us: m.latency_percentile(0.99).as_micros() as u64,
+        }
+    }
+
+    /// Graceful shutdown: stop admitting, let the batcher drain every
+    /// already-admitted request, and join it. Idempotent.
+    pub fn shutdown(&self) {
+        self.serving.store(false, Ordering::SeqCst);
+        drop(self.tx.lock().unwrap().take());
+        let handle = self.batcher.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeCore {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The batching loop: form a batch (up to `max_batch` or
+/// `batch_timeout` from the first request), run it through the pipeline
+/// as one flat execution, slice results back per request. Exits when
+/// every producer dropped and the queue is drained.
+fn batcher_loop(
+    pipeline: InterpretedPipeline,
+    rx: AdmissionReceiver,
+    metrics: Arc<Mutex<Metrics>>,
+    cfg: CoreConfig,
+) {
+    let input_len = pipeline.input_len();
+    let output_len = pipeline.output_len();
+    loop {
+        let batch = match collect_batch(&rx, cfg.batch_timeout, cfg.max_batch.max(1)) {
+            Some(b) => b,
+            None => return,
+        };
+        let formed = batch.len();
+        let mut flat = Vec::with_capacity(formed * input_len);
+        for r in &batch {
+            flat.extend_from_slice(&r.input);
+        }
+        let t0 = Instant::now();
+        let result = pipeline.run_batch_counted(flat, formed);
+        {
+            let mut m = metrics.lock().unwrap();
+            m.record_batch(formed, formed, t0.elapsed());
+            if let Ok(run) = &result {
+                m.record_macs(run.macs);
+            }
+        }
+        deliver(batch, result.map(|run| run.output), &metrics, output_len);
+    }
+}
+
+/// Collect one batch: block for the first request, then keep accepting
+/// until `cap` requests are queued or `timeout` expires. `None` means
+/// every sender dropped and the queue is drained (shutdown).
+pub(crate) fn collect_batch(
+    rx: &AdmissionReceiver,
+    timeout: Duration,
+    cap: usize,
+) -> Option<Vec<InferRequest>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + timeout;
+    while batch.len() < cap {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => batch.push(r),
+            Err(_) => break, // timeout or disconnect: run what we have
+        }
+    }
+    Some(batch)
+}
+
+/// Slice a batch result back to per-request responses (or fan the error
+/// out to every requester), recording metrics.
+pub(crate) fn deliver(
+    batch: Vec<InferRequest>,
+    result: Result<Vec<f32>>,
+    metrics: &Arc<Mutex<Metrics>>,
+    output_len: usize,
+) {
+    match result {
+        Ok(out) => {
+            for (i, r) in batch.into_iter().enumerate() {
+                let slice = out[i * output_len..(i + 1) * output_len].to_vec();
+                let latency = r.submitted.elapsed();
+                metrics.lock().unwrap().record_request(latency);
+                let _ = r.resp.send(Ok(slice));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for r in batch {
+                metrics.lock().unwrap().record_error();
+                let _ = r.resp.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::beam::BeamConfig;
+
+    fn core(queue_cap: usize, max_batch: usize) -> Arc<ServeCore> {
+        let pipeline =
+            InterpretedPipeline::plan_default(&BeamConfig::quick(), "tiled", 0).unwrap();
+        ServeCore::start(
+            pipeline,
+            CoreConfig {
+                max_batch,
+                batch_timeout: Duration::from_millis(2),
+                queue_cap,
+                retry_after_ms: 25,
+            },
+        )
+        .unwrap()
+    }
+
+    fn image(core: &ServeCore, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..core.input_len())
+            .map(|_| rng.f64() as f32 - 0.5)
+            .collect()
+    }
+
+    #[test]
+    fn core_matches_direct_pipeline() {
+        let c = core(16, 4);
+        let img = image(&c, 5);
+        let want = c.pipeline().run_image(&img).unwrap();
+        let got = c.infer_blocking(img).unwrap();
+        assert_eq!(got, want);
+        let stats = c.stats();
+        assert_eq!(stats.accepted, 1);
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.shed, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn bad_input_length_is_an_error_not_a_crash() {
+        let c = core(16, 4);
+        assert!(c.infer_blocking(vec![0.0; 3]).is_err());
+        assert!(c.admit(vec![0.0; 3]).is_err());
+        assert_eq!(c.stats().errors, 2);
+        // the core still serves afterward
+        let img = image(&c, 1);
+        assert!(c.infer_blocking(img).is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_requests() {
+        // Submit a pile of requests, then immediately shut down: every
+        // already-admitted request must still get its answer (dropping
+        // the producers lets the consumer drain what was queued).
+        let c = core(32, 2);
+        let img = image(&c, 7);
+        let want = c.pipeline().run_image(&img).unwrap();
+        let rxs: Vec<_> = (0..8)
+            .map(|_| c.submit_blocking(img.clone()).unwrap())
+            .collect();
+        c.shutdown();
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().unwrap(), want);
+        }
+        // ... and new work is refused, cleanly.
+        assert!(c.submit_blocking(img.clone()).is_err());
+        assert!(matches!(c.admit(img).unwrap(), Admission::Closed));
+        assert!(!c.health().serving);
+    }
+
+    #[test]
+    fn admit_sheds_beyond_queue_capacity() {
+        // Deterministic shed: a held batcher cannot exist without
+        // cooperation, so instead fill the queue faster than one batch
+        // can leave it: queue_cap 1, max_batch 1, and a burst larger
+        // than the queue. At least one admit must shed (the queue holds
+        // 1 and the batcher at most 1 more in flight).
+        let c = core(1, 1);
+        let img = image(&c, 9);
+        let mut outcomes = Vec::new();
+        for _ in 0..16 {
+            outcomes.push(c.admit(img.clone()).unwrap());
+        }
+        let shed = outcomes
+            .iter()
+            .filter(|o| matches!(o, Admission::Shed { .. }))
+            .count();
+        assert!(shed > 0, "burst of 16 into a 1-deep queue never shed");
+        assert_eq!(c.stats().shed, shed as u64);
+        // every admitted request completes; the core stays healthy
+        for o in outcomes {
+            if let Admission::Admitted(rx) = o {
+                assert!(rx.recv().unwrap().is_ok());
+            }
+        }
+        assert!(c.health().serving);
+        assert!(c.infer_blocking(img).is_ok());
+        c.shutdown();
+    }
+}

@@ -1,0 +1,220 @@
+//! Length-prefixed framing: every message on the wire is a 4-byte
+//! big-endian payload length followed by the payload bytes.
+//!
+//! The framing layer is deliberately below the codec: it moves opaque
+//! byte payloads and knows nothing about JSON. It is written against
+//! plain `Read`/`Write` so the unit and property tests can drive it
+//! over in-memory buffers (including pathological one-byte-at-a-time
+//! split reads) exactly as the TCP sessions drive it over sockets.
+//!
+//! Oversized frames are rejected from the *header alone* — a peer
+//! declaring a length beyond the cap is refused before a single payload
+//! byte is buffered, so a hostile or broken client cannot make the
+//! server allocate unboundedly.
+
+use std::io::{self, Read, Write};
+
+/// Default cap on one frame's payload size (16 MiB). The serving
+/// payloads are a few hundred KiB of JSON-encoded activations; anything
+/// near this cap is a broken or hostile peer.
+pub const MAX_FRAME_LEN: usize = 16 << 20;
+
+/// Write one frame: 4-byte big-endian length, then the payload.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > u32::MAX as usize {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame payload of {} bytes exceeds u32", payload.len()),
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// What [`read_frame_idle`] observed on a stream with a read timeout.
+#[derive(Debug, PartialEq, Eq)]
+pub enum FrameRead {
+    /// A complete frame payload.
+    Frame(Vec<u8>),
+    /// The peer closed cleanly between frames.
+    Eof,
+    /// The read timed out before the first header byte arrived — the
+    /// connection is merely idle; poll your stop flag and call again.
+    Idle,
+}
+
+/// Read one frame. Returns `Ok(None)` on a clean end-of-stream (the
+/// peer closed between frames); an EOF *inside* a frame is an error.
+/// A header declaring more than `max_len` bytes fails with
+/// `InvalidData` before any payload is read.
+///
+/// Short reads are handled: the header and payload are accumulated
+/// across as many `read` calls as the underlying stream needs, so
+/// TCP segmentation (or a one-byte-at-a-time test reader) cannot split
+/// a frame.
+pub fn read_frame<R: Read>(r: &mut R, max_len: usize) -> io::Result<Option<Vec<u8>>> {
+    let mut first = [0u8; 1];
+    // First byte decides clean-EOF vs mid-frame-EOF.
+    let n = r.read(&mut first)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    read_rest(r, first[0], max_len).map(Some)
+}
+
+/// Like [`read_frame`], for streams carrying a read timeout (the
+/// server's session loops): a timeout **before** the first header byte
+/// is [`FrameRead::Idle`] — no bytes were consumed, the stream is still
+/// in sync. A timeout *inside* a frame is an error: bytes are already
+/// consumed, and continuing would desync the protocol (frames are
+/// written with a single `write_all`, so an intra-frame stall means a
+/// dead or hostile peer, not a slow one).
+pub fn read_frame_idle<R: Read>(r: &mut R, max_len: usize) -> io::Result<FrameRead> {
+    let mut first = [0u8; 1];
+    let n = match r.read(&mut first) {
+        Ok(n) => n,
+        Err(e)
+            if matches!(
+                e.kind(),
+                io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+            ) =>
+        {
+            return Ok(FrameRead::Idle)
+        }
+        Err(e) => return Err(e),
+    };
+    if n == 0 {
+        return Ok(FrameRead::Eof);
+    }
+    read_rest(r, first[0], max_len).map(FrameRead::Frame)
+}
+
+/// Finish a frame whose first header byte is already in hand: the
+/// remaining three header bytes, the length check, the payload.
+fn read_rest<R: Read>(r: &mut R, first: u8, max_len: usize) -> io::Result<Vec<u8>> {
+    let mut header = [first, 0, 0, 0];
+    r.read_exact(&mut header[1..])?;
+    let len = u32::from_be_bytes(header) as usize;
+    if len > max_len {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {} bytes exceeds the {} byte cap", len, max_len),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    /// A reader that hands out at most `chunk` bytes per `read` call —
+    /// the adversarial split-read stream the property tests also use.
+    pub(crate) struct SplitReader {
+        data: Vec<u8>,
+        pos: usize,
+        chunk: usize,
+    }
+
+    impl SplitReader {
+        pub(crate) fn new(data: Vec<u8>, chunk: usize) -> SplitReader {
+            SplitReader {
+                data,
+                pos: 0,
+                chunk: chunk.max(1),
+            }
+        }
+    }
+
+    impl Read for SplitReader {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            let n = buf
+                .len()
+                .min(self.chunk)
+                .min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, b"world!").unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r, MAX_FRAME_LEN).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r, MAX_FRAME_LEN).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut r, MAX_FRAME_LEN).unwrap().unwrap(), b"world!");
+        assert!(read_frame(&mut r, MAX_FRAME_LEN).unwrap().is_none());
+    }
+
+    #[test]
+    fn split_reads_reassemble() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[7u8; 1000]).unwrap();
+        for chunk in [1, 2, 3, 5, 999] {
+            let mut r = SplitReader::new(buf.clone(), chunk);
+            assert_eq!(
+                read_frame(&mut r, MAX_FRAME_LEN).unwrap().unwrap(),
+                vec![7u8; 1000]
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_header_rejected_without_reading_payload() {
+        let mut buf = (1_000_000u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(&[0u8; 16]); // far less than declared
+        let err = read_frame(&mut Cursor::new(buf), 1024).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("exceeds"), "{}", err);
+    }
+
+    #[test]
+    fn idle_reader_reports_idle_then_frames() {
+        /// Yields WouldBlock on the first read, then streams `data`.
+        struct StallThenData {
+            stalled: bool,
+            inner: Cursor<Vec<u8>>,
+        }
+        impl Read for StallThenData {
+            fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+                if !self.stalled {
+                    self.stalled = true;
+                    return Err(io::Error::new(io::ErrorKind::WouldBlock, "idle"));
+                }
+                self.inner.read(buf)
+            }
+        }
+        let mut framed = Vec::new();
+        write_frame(&mut framed, b"after the stall").unwrap();
+        let mut r = StallThenData {
+            stalled: false,
+            inner: Cursor::new(framed),
+        };
+        assert_eq!(read_frame_idle(&mut r, MAX_FRAME_LEN).unwrap(), FrameRead::Idle);
+        assert_eq!(
+            read_frame_idle(&mut r, MAX_FRAME_LEN).unwrap(),
+            FrameRead::Frame(b"after the stall".to_vec())
+        );
+        assert_eq!(read_frame_idle(&mut r, MAX_FRAME_LEN).unwrap(), FrameRead::Eof);
+    }
+
+    #[test]
+    fn eof_inside_frame_is_an_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"truncated payload").unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_frame(&mut Cursor::new(buf), MAX_FRAME_LEN).is_err());
+        // ... and a torn header too
+        let torn = vec![0u8, 0u8];
+        assert!(read_frame(&mut Cursor::new(torn), MAX_FRAME_LEN).is_err());
+    }
+}

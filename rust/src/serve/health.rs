@@ -1,0 +1,185 @@
+//! Health/readiness and stats report types — the payloads behind the
+//! protocol's `health` and `stats` ops.
+//!
+//! Modeled on gRPC health checking's `SERVING`/`NOT_SERVING` probe: a
+//! load balancer (or the load generator's smoke mode) asks `health`
+//! and gets a one-bit serving verdict plus the pipeline geometry a
+//! client needs to form requests; `stats` returns the live counters —
+//! queue depth against capacity, accepted/shed admission counts, and
+//! the latency percentiles and MAC/s the `Metrics` reservoir tracks.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Result};
+
+/// The `health` op's response: is the server accepting work, and what
+/// shape of work does it accept.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthReport {
+    /// `true` while the server admits new requests; `false` once
+    /// shutdown has begun (draining) — the load-balancer signal to stop
+    /// routing here.
+    pub serving: bool,
+    /// Name of the backend executing each pipeline layer.
+    pub backend: String,
+    /// Flat per-image input length the pipeline expects.
+    pub input_len: usize,
+    /// Flat per-image output length the pipeline produces.
+    pub output_len: usize,
+    /// Admission queue capacity (requests buffered before shedding).
+    pub queue_cap: usize,
+}
+
+/// The `stats` op's response: a snapshot of the serving counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsReport {
+    /// Requests currently buffered in the admission queue.
+    pub queue_depth: usize,
+    /// Admission queue capacity.
+    pub queue_cap: usize,
+    /// Requests admitted into the queue since startup.
+    pub accepted: u64,
+    /// Requests shed (rejected with retry-after) since startup.
+    pub shed: u64,
+    /// Requests completed successfully.
+    pub requests: u64,
+    /// Requests that returned an error.
+    pub errors: u64,
+    /// Multiply-accumulates executed by the serving backend.
+    pub macs: u64,
+    /// Summed batch execution wall time, microseconds.
+    pub exec_us: u64,
+    /// Compute throughput over the summed batch execution time
+    /// (`macs / exec_us`), 0 when nothing has executed yet.
+    pub mac_per_s: f64,
+    /// Median request latency, microseconds (queue wait + execution).
+    pub p50_us: u64,
+    /// 95th-percentile request latency, microseconds.
+    pub p95_us: u64,
+    /// 99th-percentile request latency, microseconds.
+    pub p99_us: u64,
+}
+
+fn req_u64(doc: &Json, key: &str) -> Result<u64> {
+    doc.get(key)
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow!("missing or non-integer field '{}'", key))
+}
+
+impl HealthReport {
+    /// Serialize as the `health` response body (without the `op` tag,
+    /// which the codec adds).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("serving", Json::Bool(self.serving))
+            .set("backend", json::s(&self.backend))
+            .set("input_len", json::unum(self.input_len as u64))
+            .set("output_len", json::unum(self.output_len as u64))
+            .set("queue_cap", json::unum(self.queue_cap as u64));
+        o
+    }
+
+    /// Parse the fields back out of a `health` response document.
+    pub fn from_json(doc: &Json) -> Result<HealthReport> {
+        Ok(HealthReport {
+            serving: doc
+                .get("serving")
+                .and_then(|v| v.as_bool())
+                .ok_or_else(|| anyhow!("missing or non-bool field 'serving'"))?,
+            backend: doc
+                .get("backend")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("missing or non-string field 'backend'"))?
+                .to_string(),
+            input_len: req_u64(doc, "input_len")? as usize,
+            output_len: req_u64(doc, "output_len")? as usize,
+            queue_cap: req_u64(doc, "queue_cap")? as usize,
+        })
+    }
+}
+
+impl StatsReport {
+    /// Serialize as the `stats` response body (without the `op` tag).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("queue_depth", json::unum(self.queue_depth as u64))
+            .set("queue_cap", json::unum(self.queue_cap as u64))
+            .set("accepted", json::unum(self.accepted))
+            .set("shed", json::unum(self.shed))
+            .set("requests", json::unum(self.requests))
+            .set("errors", json::unum(self.errors))
+            .set("macs", json::unum(self.macs))
+            .set("exec_us", json::unum(self.exec_us))
+            .set("mac_per_s", json::num(self.mac_per_s))
+            .set("p50_us", json::unum(self.p50_us))
+            .set("p95_us", json::unum(self.p95_us))
+            .set("p99_us", json::unum(self.p99_us));
+        o
+    }
+
+    /// Parse the fields back out of a `stats` response document.
+    pub fn from_json(doc: &Json) -> Result<StatsReport> {
+        Ok(StatsReport {
+            queue_depth: req_u64(doc, "queue_depth")? as usize,
+            queue_cap: req_u64(doc, "queue_cap")? as usize,
+            accepted: req_u64(doc, "accepted")?,
+            shed: req_u64(doc, "shed")?,
+            requests: req_u64(doc, "requests")?,
+            errors: req_u64(doc, "errors")?,
+            macs: req_u64(doc, "macs")?,
+            exec_us: req_u64(doc, "exec_us")?,
+            mac_per_s: doc
+                .get("mac_per_s")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("missing or non-numeric field 'mac_per_s'"))?,
+            p50_us: req_u64(doc, "p50_us")?,
+            p95_us: req_u64(doc, "p95_us")?,
+            p99_us: req_u64(doc, "p99_us")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_roundtrip() {
+        let h = HealthReport {
+            serving: true,
+            backend: "tiled".to_string(),
+            input_len: 10368,
+            output_len: 800,
+            queue_cap: 64,
+        };
+        let back = HealthReport::from_json(&h.to_json()).unwrap();
+        assert_eq!(back, h);
+    }
+
+    #[test]
+    fn stats_roundtrip() {
+        let s = StatsReport {
+            queue_depth: 3,
+            queue_cap: 64,
+            accepted: 100,
+            shed: 7,
+            requests: 93,
+            errors: 0,
+            macs: 1_234_567,
+            exec_us: 4_200,
+            mac_per_s: 2.94e8,
+            p50_us: 900,
+            p95_us: 2_100,
+            p99_us: 4_000,
+        };
+        let text = s.to_json().compact();
+        let back = StatsReport::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn missing_fields_are_clean_errors() {
+        let doc = json::parse("{\"serving\": true}").unwrap();
+        assert!(HealthReport::from_json(&doc).is_err());
+        assert!(StatsReport::from_json(&doc).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! The TCP accept loop and its graceful shutdown.
+//!
+//! [`TcpServeHandle::start`] binds the socket (port 0 = ephemeral, the
+//! integration tests' path), spawns the accept thread, and hands each
+//! accepted connection to a [`crate::serve::session`] thread. Shutdown
+//! is ordered so in-flight work drains instead of being dropped:
+//!
+//! 1. raise the stop flag (sessions notice within one read-timeout
+//!    tick; new connections stop being handed to sessions);
+//! 2. self-connect once to wake the blocking `accept`, join the accept
+//!    thread;
+//! 3. join every session thread — the core's batcher is still alive
+//!    here, so sessions blocked on an in-flight response get their
+//!    answer and write it out before exiting;
+//! 4. only then shut the core down (drop the admission queue, drain,
+//!    join the batcher).
+
+use crate::serve::core::ServeCore;
+use crate::serve::session::run_session;
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Where to listen.
+#[derive(Debug, Clone)]
+pub struct ListenConfig {
+    /// Bind address (default `127.0.0.1`; use `0.0.0.0` to serve
+    /// beyond the host).
+    pub host: String,
+    /// TCP port; `0` picks an ephemeral port (reported by
+    /// [`TcpServeHandle::local_addr`]).
+    pub port: u16,
+}
+
+impl Default for ListenConfig {
+    fn default() -> Self {
+        ListenConfig {
+            host: "127.0.0.1".to_string(),
+            port: 7744,
+        }
+    }
+}
+
+/// A running TCP server: the accept thread, its sessions, and the core
+/// they feed. Dropping the handle performs the same graceful shutdown
+/// as [`TcpServeHandle::shutdown`].
+pub struct TcpServeHandle {
+    core: Arc<ServeCore>,
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    sessions: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl TcpServeHandle {
+    /// Bind `cfg`'s address and start accepting connections over `core`.
+    pub fn start(core: Arc<ServeCore>, cfg: &ListenConfig) -> Result<TcpServeHandle> {
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+            .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
+        let local_addr = listener.local_addr().context("resolving bound address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let sessions: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+
+        let accept = {
+            let core = core.clone();
+            let stop = stop.clone();
+            let sessions = sessions.clone();
+            std::thread::Builder::new()
+                .name("cnnblk-accept".into())
+                .spawn(move || loop {
+                    let (conn, _) = match listener.accept() {
+                        Ok(c) => c,
+                        Err(_) => {
+                            if stop.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            continue; // transient accept error
+                        }
+                    };
+                    if stop.load(Ordering::SeqCst) {
+                        // includes the self-connection that woke us
+                        return;
+                    }
+                    let core = core.clone();
+                    let stop2 = stop.clone();
+                    let spawned = std::thread::Builder::new()
+                        .name("cnnblk-session".into())
+                        .spawn(move || run_session(conn, core, stop2));
+                    let mut held = sessions.lock().unwrap();
+                    held.retain(|h| !h.is_finished()); // prune dead sessions
+                    if let Ok(h) = spawned {
+                        held.push(h);
+                    }
+                })
+                .context("spawning the accept thread")?
+        };
+
+        Ok(TcpServeHandle {
+            core,
+            local_addr,
+            stop,
+            accept: Some(accept),
+            sessions,
+        })
+    }
+
+    /// The bound address (resolves `--port 0` to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The serving core behind this listener (health, stats, metrics).
+    pub fn core(&self) -> &Arc<ServeCore> {
+        &self.core
+    }
+
+    fn stop_threads(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(accept) = self.accept.take() {
+            // Wake the blocking accept; it sees the flag and exits.
+            let _ = TcpStream::connect(self.local_addr);
+            let _ = accept.join();
+        }
+        // Join sessions *before* the core shuts down: the batcher is
+        // still alive, so in-flight requests complete and respond.
+        let handles: Vec<_> = self.sessions.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        self.core.shutdown();
+    }
+
+    /// Graceful shutdown: stop accepting, drain in-flight requests,
+    /// join every thread (see the module docs for the ordering).
+    pub fn shutdown(mut self) {
+        self.stop_threads();
+    }
+}
+
+impl Drop for TcpServeHandle {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}

@@ -1,0 +1,58 @@
+//! The network serving front end: a concurrent TCP server over the
+//! interpreted pipeline, plus the request/response wire protocol.
+//!
+//! PRs 1–5 built a planning-and-execution stack that is fast *in
+//! process*; this subsystem puts it on a socket. The design extends the
+//! paper's discipline — memory traffic as a budgeted, explicitly
+//! accounted resource — to request traffic: admission is a **bounded
+//! queue** and overload is **explicit load-shedding** (a reject
+//! response carrying a retry-after hint), never unbounded buffering.
+//!
+//! Layering (socket → framing → admission queue → pool → pipeline):
+//!
+//! * [`frame`] — length-prefixed framing over any `Read`/`Write`
+//!   (4-byte big-endian length + payload, oversized frames rejected).
+//! * [`codec`] — the JSON request/response codec on the in-tree
+//!   [`crate::util::json`] codec (serde/tokio are not in the offline
+//!   crate snapshot; everything here is `std`), plus [`codec::ServeClient`],
+//!   the small blocking client the load generator and tests drive.
+//! * [`queue`] — the bounded admission queue: `try_send` returns the
+//!   request back on a full queue instead of blocking, and a live depth
+//!   gauge feeds the stats endpoint.
+//! * [`core`] — [`core::ServeCore`], the one serving core both
+//!   `cnnblk serve --interpret` (in-process synthetic driver) and
+//!   `--listen` (TCP) run on: admission, dynamic batching, dispatch
+//!   into [`crate::coordinator::InterpretedPipeline`] (whose batches
+//!   fan out on [`crate::util::pool::shared_pool`]), metrics, and
+//!   drain-on-shutdown.
+//! * [`session`] — the per-connection loop: read a frame, decode,
+//!   admit (or shed), respond. Sessions are cheap blocking reader
+//!   threads; all *compute* multiplexes onto the shared worker pool
+//!   through the core's single batcher, so the pool never deadlocks on
+//!   nested submissions.
+//! * [`listener`] — [`listener::TcpServeHandle`]: the accept loop,
+//!   session lifecycle, and graceful shutdown (stop accepting, finish
+//!   in-flight requests, drain the queue, join every thread).
+//! * [`health`] — the health/readiness and stats report types served
+//!   by the `health`/`stats` request ops.
+//!
+//! Determinism across the network boundary: the codec carries `f32`
+//! tensors as JSON numbers through an exact round-trip (`f32 → f64` is
+//! exact, the serializer emits shortest-round-trip decimal, and the
+//! parse narrows back without loss), so a response payload is
+//! **byte-identical** to the in-process
+//! [`InterpretedPipeline::run_image`](crate::coordinator::InterpretedPipeline::run_image)
+//! output for the same input — pinned by `rust/tests/serve.rs`.
+
+pub mod codec;
+pub mod core;
+pub mod frame;
+pub mod health;
+pub mod listener;
+pub mod queue;
+pub mod session;
+
+pub use codec::{Request, Response, ServeClient};
+pub use core::{Admission, CoreConfig, ServeCore};
+pub use health::{HealthReport, StatsReport};
+pub use listener::{ListenConfig, TcpServeHandle};

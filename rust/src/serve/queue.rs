@@ -1,0 +1,221 @@
+//! The bounded admission queue between request producers (TCP sessions,
+//! the in-process `serve --interpret` driver) and the batching core.
+//!
+//! This is where the subsystem's load-shedding contract lives:
+//! admission is a `sync_channel` of fixed capacity, and the two ways in
+//! differ only in what happens at that capacity —
+//!
+//! * [`AdmissionQueue::try_send`] **returns the request back** on a
+//!   full queue so the caller can shed it explicitly (the TCP path:
+//!   respond `shed` with a retry-after hint);
+//! * [`AdmissionQueue::send_blocking`] blocks until a slot frees (the
+//!   in-process path, where backpressure on the submitting thread is
+//!   the correct overload behavior — there is no remote peer to tell).
+//!
+//! Neither path ever buffers beyond the configured capacity. A shared
+//! depth gauge tracks how many requests sit in the channel right now,
+//! feeding the `stats` endpoint's `queue_depth`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvError, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One admitted inference request: the flat input image, the admission
+/// timestamp (latency is measured from here, so queue wait counts), and
+/// the channel the result goes back on.
+pub struct InferRequest {
+    /// Flat input image, `input_len` elements.
+    pub input: Vec<f32>,
+    /// When the request entered the queue; `Metrics::record_request`
+    /// latency is measured from this instant.
+    pub submitted: Instant,
+    /// Where the (sliced, per-request) result is delivered.
+    pub resp: Sender<Result<Vec<f32>, String>>,
+}
+
+/// Why [`AdmissionQueue::try_send`] refused a request. Both variants
+/// hand the request back so the caller still owns its response channel.
+pub enum Rejected {
+    /// The queue is at capacity — shed this request.
+    Full(InferRequest),
+    /// The consumer is gone (core shut down) — the server is draining.
+    Closed(InferRequest),
+}
+
+/// Producer half of the bounded admission queue. Cheap to clone; the
+/// consumer sees disconnect only when every clone is dropped.
+#[derive(Clone)]
+pub struct AdmissionQueue {
+    tx: SyncSender<InferRequest>,
+    depth: Arc<AtomicUsize>,
+    cap: usize,
+}
+
+/// Consumer half: hands requests to the batching core, decrementing the
+/// shared depth gauge as they leave the queue.
+pub struct AdmissionReceiver {
+    rx: Receiver<InferRequest>,
+    depth: Arc<AtomicUsize>,
+}
+
+/// Create a bounded admission queue of capacity `cap` (at least 1).
+pub fn bounded(cap: usize) -> (AdmissionQueue, AdmissionReceiver) {
+    let cap = cap.max(1);
+    let (tx, rx) = sync_channel(cap);
+    let depth = Arc::new(AtomicUsize::new(0));
+    (
+        AdmissionQueue {
+            tx,
+            depth: depth.clone(),
+            cap,
+        },
+        AdmissionReceiver { rx, depth },
+    )
+}
+
+impl AdmissionQueue {
+    /// Non-blocking admission: `Ok` if the request was queued,
+    /// [`Rejected::Full`] (shed) or [`Rejected::Closed`] (draining)
+    /// otherwise — the request comes back in both rejection cases.
+    pub fn try_send(&self, req: InferRequest) -> Result<(), Rejected> {
+        // Count the slot before sending so the gauge can transiently
+        // overshoot but never underflow against the consumer's decrement.
+        self.depth.fetch_add(1, Ordering::SeqCst);
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(r)) => {
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+                Err(Rejected::Full(r))
+            }
+            Err(TrySendError::Disconnected(r)) => {
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+                Err(Rejected::Closed(r))
+            }
+        }
+    }
+
+    /// Blocking admission: waits for a free slot (in-process
+    /// backpressure). `Err` returns the request when the consumer is
+    /// gone.
+    pub fn send_blocking(&self, req: InferRequest) -> Result<(), InferRequest> {
+        self.depth.fetch_add(1, Ordering::SeqCst);
+        match self.tx.send(req) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+                Err(e.0)
+            }
+        }
+    }
+
+    /// Requests currently buffered (live gauge, may transiently
+    /// overshoot by in-flight senders).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
+    /// The queue's fixed capacity.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// A handle on the shared depth gauge that stays valid after the
+    /// queue itself is dropped — the stats endpoint keeps reporting
+    /// `queue_depth` while a shutdown drains.
+    pub fn depth_gauge(&self) -> Arc<AtomicUsize> {
+        self.depth.clone()
+    }
+}
+
+impl AdmissionReceiver {
+    /// Block for the next request; `Err` when every producer dropped
+    /// and the queue is drained (shutdown complete).
+    pub fn recv(&self) -> Result<InferRequest, RecvError> {
+        let r = self.rx.recv()?;
+        self.depth.fetch_sub(1, Ordering::SeqCst);
+        Ok(r)
+    }
+
+    /// Like [`AdmissionReceiver::recv`] with a timeout — the batcher's
+    /// batch-formation wait.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<InferRequest, RecvTimeoutError> {
+        let r = self.rx.recv_timeout(timeout)?;
+        self.depth.fetch_sub(1, Ordering::SeqCst);
+        Ok(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req() -> (InferRequest, Receiver<Result<Vec<f32>, String>>) {
+        let (tx, rx) = channel();
+        (
+            InferRequest {
+                input: vec![1.0, 2.0],
+                submitted: Instant::now(),
+                resp: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn try_send_sheds_at_capacity() {
+        let (q, r) = bounded(2);
+        assert!(q.try_send(req().0).is_ok());
+        assert!(q.try_send(req().0).is_ok());
+        assert_eq!(q.depth(), 2);
+        match q.try_send(req().0) {
+            Err(Rejected::Full(_)) => {}
+            _ => panic!("third send should shed"),
+        }
+        assert_eq!(q.depth(), 2);
+        // draining restores capacity
+        r.recv().unwrap();
+        assert_eq!(q.depth(), 1);
+        assert!(q.try_send(req().0).is_ok());
+    }
+
+    #[test]
+    fn closed_queue_reports_closed_and_returns_request() {
+        let (q, r) = bounded(1);
+        drop(r);
+        let (rq, _keep) = req();
+        match q.try_send(rq) {
+            Err(Rejected::Closed(back)) => assert_eq!(back.input, vec![1.0, 2.0]),
+            _ => panic!("expected Closed"),
+        }
+        let (rq, _keep) = req();
+        assert!(q.send_blocking(rq).is_err());
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn receiver_drains_after_producers_drop() {
+        // The graceful-shutdown property: dropping every producer still
+        // lets the consumer pop what was already queued.
+        let (q, r) = bounded(4);
+        for _ in 0..3 {
+            q.try_send(req().0).map_err(|_| ()).unwrap();
+        }
+        drop(q);
+        assert!(r.recv().is_ok());
+        assert!(r.recv().is_ok());
+        assert!(r.recv().is_ok());
+        assert!(r.recv().is_err());
+        assert_eq!(r.depth.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let (q, _r) = bounded(0);
+        assert_eq!(q.cap(), 1);
+        assert!(q.try_send(req().0).is_ok());
+    }
+}

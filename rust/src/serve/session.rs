@@ -1,0 +1,79 @@
+//! The per-connection session loop: read a frame, decode a request,
+//! admit it (or shed), write the response frame.
+//!
+//! A session is a dedicated blocking reader thread, deliberately *not*
+//! a shared-pool job: a pool job that blocked on the pipeline's
+//! response — which itself fans onto the same pool — could deadlock the
+//! pool, so sessions stay cheap OS threads and all compute funnels
+//! through the core's single batcher. The socket carries a short read
+//! timeout so an idle session notices the server's stop flag within
+//! ~200 ms; an in-flight request is always answered before the session
+//! re-checks the flag, which is what makes listener shutdown a drain.
+
+use crate::serve::codec::{Request, Response};
+use crate::serve::core::{Admission, ServeCore};
+use crate::serve::frame::{read_frame_idle, write_frame, FrameRead, MAX_FRAME_LEN};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How long a blocked session read waits before re-checking `stop`.
+pub const STOP_POLL: Duration = Duration::from_millis(200);
+
+/// Serve one connection until the peer disconnects, a protocol error
+/// occurs, or `stop` is raised while the connection is idle. Each
+/// request is answered before the next is read (the protocol is
+/// strictly request→response per connection; concurrency comes from
+/// many connections).
+pub fn run_session(mut stream: TcpStream, core: Arc<ServeCore>, stop: Arc<AtomicBool>) {
+    stream.set_nodelay(true).ok();
+    if stream.set_read_timeout(Some(STOP_POLL)).is_err() {
+        return;
+    }
+    loop {
+        let payload = match read_frame_idle(&mut stream, MAX_FRAME_LEN) {
+            Ok(FrameRead::Frame(p)) => p,
+            Ok(FrameRead::Eof) => return,
+            Ok(FrameRead::Idle) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return, // torn frame, oversized frame, socket error
+        };
+        let response = match Request::decode(&payload) {
+            Ok(req) => handle(&core, req),
+            Err(e) => Response::Error(format!("{e:#}")),
+        };
+        let bytes = match response.encode() {
+            Ok(b) => b,
+            Err(e) => match Response::Error(format!("{e:#}")).encode() {
+                Ok(b) => b,
+                Err(_) => return,
+            },
+        };
+        if write_frame(&mut stream, &bytes).is_err() {
+            return;
+        }
+    }
+}
+
+/// Dispatch one decoded request against the core.
+fn handle(core: &ServeCore, req: Request) -> Response {
+    match req {
+        Request::Infer(input) => match core.admit(input) {
+            Ok(Admission::Admitted(rx)) => match rx.recv() {
+                Ok(Ok(output)) => Response::Output(output),
+                Ok(Err(msg)) => Response::Error(msg),
+                Err(_) => Response::Error("server dropped the response channel".to_string()),
+            },
+            Ok(Admission::Shed { retry_after_ms }) => Response::Shed { retry_after_ms },
+            Ok(Admission::Closed) => Response::Error("server is draining".to_string()),
+            Err(e) => Response::Error(format!("{e:#}")),
+        },
+        Request::Health => Response::Health(core.health()),
+        Request::Stats => Response::Stats(core.stats()),
+    }
+}

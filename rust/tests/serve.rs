@@ -1,0 +1,352 @@
+//! Integration tests for the TCP serving stack: framing properties over
+//! adversarial streams, bit-exact codec round-trips, and real
+//! socket-level sessions against a live [`TcpServeHandle`] — including
+//! the load-shedding and graceful-drain behavior the subsystem exists
+//! to provide.
+//!
+//! The socket tests bind port 0 (ephemeral) so the suite can run
+//! concurrently with itself and with a developer's live server.
+
+use cnn_blocking::coordinator::InterpretedPipeline;
+use cnn_blocking::optimizer::beam::BeamConfig;
+use cnn_blocking::serve::frame::{read_frame, write_frame, MAX_FRAME_LEN};
+use cnn_blocking::serve::{
+    CoreConfig, ListenConfig, Request, Response, ServeClient, ServeCore, TcpServeHandle,
+};
+use cnn_blocking::util::proptest::{check, Config};
+use cnn_blocking::util::rng::Rng;
+use std::io::{self, Read};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+// ---------------------------------------------------------------- framing
+
+/// A reader that hands out at most `chunk` bytes per `read` call — the
+/// worst-case TCP segmentation the framing layer must reassemble.
+struct SplitReader {
+    data: Vec<u8>,
+    pos: usize,
+    chunk: usize,
+}
+
+impl Read for SplitReader {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let n = buf.len().min(self.chunk).min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+#[test]
+fn prop_frames_roundtrip_under_split_reads() {
+    check("frame-split-roundtrip", Config::default(), |rng| {
+        let frames: Vec<Vec<u8>> = (0..1 + rng.below(4))
+            .map(|_| {
+                let len = rng.below(2000) as usize;
+                (0..len).map(|_| rng.below(256) as u8).collect()
+            })
+            .collect();
+        let mut wire = Vec::new();
+        for f in &frames {
+            write_frame(&mut wire, f).map_err(|e| e.to_string())?;
+        }
+        let chunk = 1 + rng.below(16) as usize;
+        let mut r = SplitReader {
+            data: wire,
+            pos: 0,
+            chunk,
+        };
+        for f in &frames {
+            let got = read_frame(&mut r, MAX_FRAME_LEN)
+                .map_err(|e| e.to_string())?
+                .ok_or("unexpected EOF between frames")?;
+            if got != *f {
+                return Err(format!(
+                    "payload of {} bytes corrupted at chunk size {}",
+                    f.len(),
+                    chunk
+                ));
+            }
+        }
+        match read_frame(&mut r, MAX_FRAME_LEN) {
+            Ok(None) => Ok(()),
+            other => Err(format!("expected clean EOF, got {:?}", other)),
+        }
+    });
+}
+
+#[test]
+fn prop_oversized_frames_rejected_from_the_header() {
+    check("frame-oversized-rejected", Config::default(), |rng| {
+        let cap = (1 + rng.below(4096)) as usize;
+        let declared = cap as u64 + 1 + rng.below(1 << 20);
+        let mut wire = (declared as u32).to_be_bytes().to_vec();
+        // Far fewer bytes than declared: if the reader tried to buffer
+        // the payload it would hit EOF, a different error kind.
+        wire.extend_from_slice(&[0u8; 8]);
+        let mut r = SplitReader {
+            data: wire,
+            pos: 0,
+            chunk: 1 + rng.below(4) as usize,
+        };
+        match read_frame(&mut r, cap) {
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => Ok(()),
+            other => Err(format!(
+                "declared {} vs cap {}: expected InvalidData, got {:?}",
+                declared, cap, other
+            )),
+        }
+    });
+}
+
+// ------------------------------------------------------------------ codec
+
+#[test]
+fn prop_infer_tensors_roundtrip_bit_exact() {
+    check("codec-bit-exact", Config::default(), |rng| {
+        // Arbitrary finite f32 bit patterns — subnormals, extremes,
+        // negative zero — must survive the JSON wire format exactly.
+        let vals: Vec<f32> = (0..1 + rng.below(64))
+            .map(|_| loop {
+                let v = f32::from_bits(rng.next_u64() as u32);
+                if v.is_finite() {
+                    break v;
+                }
+            })
+            .collect();
+        let req = Request::Infer(vals.clone()).encode().map_err(|e| e.to_string())?;
+        let back = match Request::decode(&req).map_err(|e| e.to_string())? {
+            Request::Infer(b) => b,
+            other => return Err(format!("wrong request decode: {:?}", other)),
+        };
+        let resp = Response::Output(vals.clone()).encode().map_err(|e| e.to_string())?;
+        let back2 = match Response::decode(&resp).map_err(|e| e.to_string())? {
+            Response::Output(b) => b,
+            other => return Err(format!("wrong response decode: {:?}", other)),
+        };
+        for (got, want) in back.iter().chain(back2.iter()).zip(vals.iter().cycle()) {
+            if got.to_bits() != want.to_bits() {
+                return Err(format!("{} (bits {:#x}) != {} (bits {:#x})",
+                    got, got.to_bits(), want, want.to_bits()));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- live server
+
+fn serve(cfg: CoreConfig) -> TcpServeHandle {
+    let pipeline = InterpretedPipeline::plan_default(&BeamConfig::quick(), "tiled", 0).unwrap();
+    let core = ServeCore::start(pipeline, cfg).unwrap();
+    TcpServeHandle::start(
+        core,
+        &ListenConfig {
+            host: "127.0.0.1".to_string(),
+            port: 0,
+        },
+    )
+    .unwrap()
+}
+
+fn image(input_len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..input_len).map(|_| rng.f64() as f32 - 0.5).collect()
+}
+
+#[test]
+fn tcp_responses_are_byte_identical_to_the_in_process_pipeline() {
+    let server = serve(CoreConfig::default());
+    let addr = server.local_addr().to_string();
+    let mut client = ServeClient::connect(&addr).unwrap();
+
+    let health = client.health().unwrap();
+    assert!(health.serving);
+    assert_eq!(health.backend, "tiled");
+    assert_eq!(health.input_len, server.core().input_len());
+    assert_eq!(health.output_len, server.core().output_len());
+
+    // Several requests down one connection, each pinned bit-for-bit
+    // against running the same pipeline in-process.
+    for seed in 0..4u64 {
+        let img = image(health.input_len, seed);
+        let want = server.core().pipeline().run_image(&img).unwrap();
+        match client.infer(&img).unwrap() {
+            Response::Output(got) => {
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "{} != {}", g, w);
+                }
+            }
+            other => panic!("expected an output, got {:?}", other),
+        }
+    }
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.accepted, 4);
+    assert_eq!(stats.requests, 4);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.errors, 0);
+    assert!(stats.macs > 0, "served MACs must be counted");
+    server.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_error_responses_and_the_session_survives() {
+    let server = serve(CoreConfig::default());
+    let addr = server.local_addr().to_string();
+    let input_len = server.core().input_len();
+
+    // Drive the wire by hand so we can send things ServeClient never
+    // would: non-JSON bytes, an unknown op, a wrong-length tensor.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let expect_error = |stream: &mut TcpStream, payload: &[u8]| {
+        write_frame(stream, payload).unwrap();
+        let resp = read_frame(stream, MAX_FRAME_LEN).unwrap().unwrap();
+        match Response::decode(&resp).unwrap() {
+            Response::Error(_) => {}
+            other => panic!("expected an error response, got {:?}", other),
+        }
+    };
+    expect_error(&mut stream, b"\xff\xfe not json");
+    expect_error(&mut stream, b"{\"op\": \"warp\"}");
+    expect_error(&mut stream, &Request::Infer(vec![0.0; 3]).encode().unwrap());
+
+    // The same connection still serves a well-formed request.
+    let img = image(input_len, 1);
+    write_frame(&mut stream, &Request::Infer(img.clone()).encode().unwrap()).unwrap();
+    let resp = read_frame(&mut stream, MAX_FRAME_LEN).unwrap().unwrap();
+    match Response::decode(&resp).unwrap() {
+        Response::Output(got) => {
+            assert_eq!(got, server.core().pipeline().run_image(&img).unwrap());
+        }
+        other => panic!("expected an output, got {:?}", other),
+    }
+    assert!(server.core().stats().errors >= 3);
+    server.shutdown();
+}
+
+#[test]
+fn overload_sheds_and_the_server_stays_live() {
+    // A 1-deep queue in front of a 1-request batcher: a synchronized
+    // burst of clients must shed at least one request (the server can
+    // hold at most two — one queued, one in flight).
+    let server = serve(CoreConfig {
+        max_batch: 1,
+        queue_cap: 1,
+        ..CoreConfig::default()
+    });
+    let addr = server.local_addr().to_string();
+    let input_len = server.core().input_len();
+
+    let mut shed_total = 0u64;
+    for round in 0..10 {
+        let burst = 16;
+        let barrier = Arc::new(Barrier::new(burst));
+        let workers: Vec<_> = (0..burst)
+            .map(|k| {
+                let addr = addr.clone();
+                let barrier = barrier.clone();
+                let img = image(input_len, (round * burst + k) as u64);
+                std::thread::spawn(move || {
+                    let mut c = ServeClient::connect(&addr).unwrap();
+                    barrier.wait();
+                    match c.infer(&img).unwrap() {
+                        Response::Output(_) => (1u64, 0u64),
+                        Response::Shed { retry_after_ms } => {
+                            assert!(retry_after_ms > 0, "shed must carry a back-off hint");
+                            (0, 1)
+                        }
+                        other => panic!("unexpected response {:?}", other),
+                    }
+                })
+            })
+            .collect();
+        let (mut ok, mut shed) = (0u64, 0u64);
+        for w in workers {
+            let (o, s) = w.join().unwrap();
+            ok += o;
+            shed += s;
+        }
+        assert_eq!(ok + shed, burst as u64);
+        shed_total += shed;
+        if shed_total > 0 {
+            break;
+        }
+    }
+    assert!(shed_total > 0, "no burst ever overflowed a 1-deep queue");
+
+    // Shedding is not an outage: the server still answers health and
+    // serves an (eventually admitted) request afterward.
+    let mut client = ServeClient::connect(&addr).unwrap();
+    assert!(client.health().unwrap().serving);
+    let img = image(input_len, 999);
+    let mut served = false;
+    for _ in 0..50 {
+        match client.infer(&img).unwrap() {
+            Response::Output(got) => {
+                assert_eq!(got, server.core().pipeline().run_image(&img).unwrap());
+                served = true;
+                break;
+            }
+            Response::Shed { retry_after_ms } => {
+                std::thread::sleep(Duration::from_millis(retry_after_ms));
+            }
+            other => panic!("unexpected response {:?}", other),
+        }
+    }
+    assert!(served, "server never recovered after shedding");
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.shed, shed_total);
+    assert_eq!(stats.queue_cap, 1);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_in_flight_tcp_requests() {
+    let server = serve(CoreConfig::default());
+    let addr = server.local_addr().to_string();
+    let input_len = server.core().input_len();
+    let img = image(input_len, 3);
+    let want = server.core().pipeline().run_image(&img).unwrap();
+
+    // A client streams requests while the main thread shuts the server
+    // down: every request written before the session closes must still
+    // be answered correctly (sessions are joined before the core stops,
+    // so an in-flight request always completes).
+    let worker = {
+        let addr = addr.clone();
+        let img = img.clone();
+        let want = want.clone();
+        std::thread::spawn(move || {
+            let mut c = ServeClient::connect(&addr).unwrap();
+            for _ in 0..20 {
+                match c.infer(&img).unwrap() {
+                    Response::Output(got) => assert_eq!(got, want),
+                    other => panic!("drained request got {:?}", other),
+                }
+            }
+            // Dropping the client closes the connection, which is what
+            // lets the (busy, never-idle) session observe EOF and exit.
+        })
+    };
+    std::thread::sleep(Duration::from_millis(10));
+    server.shutdown(); // blocks until the session drains and exits
+    worker.join().unwrap();
+}
+
+#[test]
+fn sessions_close_after_shutdown() {
+    let server = serve(CoreConfig::default());
+    let addr = server.local_addr().to_string();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    assert!(client.health().unwrap().serving);
+
+    server.shutdown();
+
+    // The idle session was closed by the stop flag; the next request on
+    // the old connection fails instead of hanging.
+    assert!(client.health().is_err(), "connection must be closed after shutdown");
+}
