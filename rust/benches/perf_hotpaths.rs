@@ -63,6 +63,7 @@ fn main() {
             max_batch: 8,
             batch_timeout: Duration::from_millis(2),
             queue_depth: 64,
+            ..ServerConfig::default()
         })
         .expect("server start");
         let input_len = server.input_len;
@@ -85,6 +86,7 @@ fn main() {
             max_batch: 1,
             batch_timeout: Duration::ZERO,
             queue_depth: 64,
+            ..ServerConfig::default()
         })
         .expect("server start");
         bench.time_fn("coordinator: e2e requests/s (batch 1)", || {

@@ -44,7 +44,20 @@ pub struct LoadgenConfig {
     /// CI smoke mode: after the timed run, force the server past its
     /// queue capacity with synchronized bursts and fail unless at least
     /// one request is explicitly shed and the server stays healthy.
+    /// Combined with `mixed`, additionally fails unless the server's
+    /// decision counters show both scheduling modes were exercised.
     pub smoke: bool,
+    /// Mixed workload mode: instead of a uniform stream, each round
+    /// issues a few sequential single-image requests (the server sees
+    /// batch-of-1 arrivals) followed by one barrier-synchronized burst
+    /// of concurrent requests (the batcher forms full/ragged batches) —
+    /// the shape that exercises every scheduler decision. `connections`
+    /// and `rate` are ignored in this mode.
+    pub mixed: bool,
+    /// Client-side worker-thread cap (`--jobs`): `0` = use
+    /// `connections` (or the full burst width in mixed mode); any other
+    /// value caps the concurrent client threads.
+    pub jobs: usize,
     /// How long to retry the initial connection (the server may still
     /// be planning its pipeline when launched in the background).
     pub connect_timeout: Duration,
@@ -59,6 +72,8 @@ impl Default for LoadgenConfig {
             rate: 0.0,
             seed: 42,
             smoke: false,
+            mixed: false,
+            jobs: 0,
             connect_timeout: Duration::from_secs(30),
         }
     }
@@ -133,18 +148,78 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     );
     let input_len = health.input_len;
 
-    // The timed run: spread `requests` across `connections` threads,
-    // each on its own socket, optionally pacing to the aggregate rate.
-    let per_conn = cfg.requests.div_ceil(cfg.connections);
+    // The timed run: either the uniform stream or the mixed
+    // singles-plus-bursts workload that exercises every scheduler
+    // decision.
+    let (ok, mut shed, errors, latencies, wall) = if cfg.mixed {
+        mixed_run(cfg, input_len)?
+    } else {
+        uniform_run(cfg, input_len)?
+    };
+
+    if cfg.smoke {
+        shed += shed_probe(&cfg.addr, cfg.connect_timeout, &health, cfg.seed)?;
+    }
+
+    // Post-run server snapshots (also re-proves liveness after bursts).
+    let health = probe.health().context("post-run health check")?;
+    ensure!(health.serving, "server stopped serving during the run");
+    let server = probe.stats().context("post-run stats")?;
+
+    // Mixed smoke runs must prove both scheduling modes actually fired:
+    // singles must have produced layer-sharded decisions and bursts
+    // image-parallel ones (a hybrid decision executes both mappings in
+    // one batch, so it counts for either side).
+    if cfg.smoke && cfg.mixed {
+        ensure!(
+            server.sched_image + server.sched_hybrid > 0,
+            "mixed smoke run never saw an image-parallel (or hybrid) \
+             batch decision (sched_image=0, sched_hybrid=0)"
+        );
+        ensure!(
+            server.sched_layer + server.sched_hybrid > 0,
+            "mixed smoke run never saw a layer-sharded (or hybrid) \
+             batch decision (sched_layer=0, sched_hybrid=0)"
+        );
+    }
+
+    Ok(LoadgenReport {
+        config: cfg.clone(),
+        ok,
+        shed,
+        errors,
+        wall,
+        p50_us: percentile(&latencies, 0.50),
+        p95_us: percentile(&latencies, 0.95),
+        p99_us: percentile(&latencies, 0.99),
+        throughput_rps: ok as f64 / wall.as_secs_f64().max(1e-9),
+        health,
+        server,
+    })
+}
+
+/// The uniform timed run: spread `requests` across `connections`
+/// threads, each on its own socket, optionally pacing to the aggregate
+/// rate. Returns `(ok, shed, errors, sorted latencies µs, wall)`.
+fn uniform_run(
+    cfg: &LoadgenConfig,
+    input_len: usize,
+) -> Result<(u64, u64, u64, Vec<u64>, Duration)> {
+    let connections = if cfg.jobs > 0 {
+        cfg.connections.clamp(1, cfg.jobs)
+    } else {
+        cfg.connections
+    };
+    let per_conn = cfg.requests.div_ceil(connections);
     let interval = if cfg.rate > 0.0 {
-        Duration::from_secs_f64(cfg.connections as f64 / cfg.rate)
+        Duration::from_secs_f64(connections as f64 / cfg.rate)
     } else {
         Duration::ZERO
     };
     let tallies: Arc<Mutex<Vec<WorkerTally>>> = Arc::new(Mutex::new(Vec::new()));
     let t0 = Instant::now();
     let mut workers = Vec::new();
-    for conn in 0..cfg.connections {
+    for conn in 0..connections {
         let addr = cfg.addr.clone();
         let tallies = tallies.clone();
         let connect_timeout = cfg.connect_timeout;
@@ -207,29 +282,96 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         latencies.extend_from_slice(&t.latencies_us);
     }
     latencies.sort_unstable();
+    Ok((ok, shed, errors, latencies, wall))
+}
 
-    if cfg.smoke {
-        shed += shed_probe(&cfg.addr, cfg.connect_timeout, &health, cfg.seed)?;
+/// Sequential single-image requests per mixed round — each is sent on
+/// one persistent connection only after the previous response landed,
+/// so the server's batcher sees them as batch-of-1 arrivals.
+const MIXED_SINGLES: usize = 4;
+/// Barrier-synchronized concurrent requests per mixed round — they
+/// arrive together, so the batcher forms full (and ragged) batches.
+const MIXED_BURST: usize = 12;
+
+/// The mixed timed run: rounds of `MIXED_SINGLES` sequential singles
+/// followed by one burst of up to `MIXED_BURST` concurrent requests
+/// (capped by `jobs` when set). Sheds during bursts are counted, not
+/// fatal — a small admission queue is allowed to push back. Returns
+/// the same tuple as [`uniform_run`].
+fn mixed_run(
+    cfg: &LoadgenConfig,
+    input_len: usize,
+) -> Result<(u64, u64, u64, Vec<u64>, Duration)> {
+    let burst = if cfg.jobs > 0 {
+        cfg.jobs.clamp(2, MIXED_BURST)
+    } else {
+        MIXED_BURST
+    };
+    let round_len = MIXED_SINGLES + burst;
+    let rounds = cfg.requests.div_ceil(round_len).max(1);
+    let mut ok = 0u64;
+    let mut shed = 0u64;
+    // A server-reported error aborts the run, so the error count a
+    // successful mixed run reports is always zero.
+    let errors = 0u64;
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut single = ServeClient::connect_retry(&cfg.addr, cfg.connect_timeout)?;
+    let t0 = Instant::now();
+    for round in 0..rounds {
+        for k in 0..MIXED_SINGLES {
+            let img = synth_image(cfg.seed, (round * round_len + k) as u64, input_len);
+            let sent = Instant::now();
+            match single.infer(&img)? {
+                Response::Output(out) => {
+                    latencies.push(sent.elapsed().as_micros() as u64);
+                    ok += 1;
+                    ensure!(!out.is_empty(), "server returned an empty output tensor");
+                }
+                Response::Shed { .. } => shed += 1,
+                Response::Error(msg) => bail!("server error: {}", msg),
+                other => bail!("unexpected response to infer: {:?}", other),
+            }
+        }
+        let barrier = Arc::new(Barrier::new(burst));
+        let mut handles = Vec::new();
+        for b in 0..burst {
+            let addr = cfg.addr.clone();
+            let barrier = barrier.clone();
+            let connect_timeout = cfg.connect_timeout;
+            let img = synth_image(
+                cfg.seed,
+                (round * round_len + MIXED_SINGLES + b) as u64,
+                input_len,
+            );
+            handles.push(std::thread::spawn(move || -> Result<(u64, u64, u64)> {
+                let mut client = ServeClient::connect_retry(&addr, connect_timeout)?;
+                barrier.wait();
+                let sent = Instant::now();
+                match client.infer(&img)? {
+                    Response::Output(out) => {
+                        ensure!(!out.is_empty(), "server returned an empty output tensor");
+                        Ok((1, 0, sent.elapsed().as_micros() as u64))
+                    }
+                    Response::Shed { .. } => Ok((0, 1, 0)),
+                    Response::Error(msg) => bail!("server error during burst: {}", msg),
+                    other => bail!("unexpected response to infer: {:?}", other),
+                }
+            }));
+        }
+        for h in handles {
+            let (o, s, lat) = h
+                .join()
+                .map_err(|_| anyhow!("a mixed-burst worker panicked"))??;
+            ok += o;
+            shed += s;
+            if o > 0 {
+                latencies.push(lat);
+            }
+        }
     }
-
-    // Post-run server snapshots (also re-proves liveness after bursts).
-    let health = probe.health().context("post-run health check")?;
-    ensure!(health.serving, "server stopped serving during the run");
-    let server = probe.stats().context("post-run stats")?;
-
-    Ok(LoadgenReport {
-        config: cfg.clone(),
-        ok,
-        shed,
-        errors,
-        wall,
-        p50_us: percentile(&latencies, 0.50),
-        p95_us: percentile(&latencies, 0.95),
-        p99_us: percentile(&latencies, 0.99),
-        throughput_rps: ok as f64 / wall.as_secs_f64().max(1e-9),
-        health,
-        server,
-    })
+    let wall = t0.elapsed();
+    latencies.sort_unstable();
+    Ok((ok, shed, errors, latencies, wall))
 }
 
 /// Drive the server past its queue capacity: barrier-synchronized
@@ -322,7 +464,9 @@ impl LoadgenReport {
             .set("requests", json::unum(c.requests as u64))
             .set("rate", json::num(c.rate))
             .set("seed", json::unum(c.seed))
-            .set("smoke", Json::Bool(c.smoke));
+            .set("smoke", Json::Bool(c.smoke))
+            .set("mixed", Json::Bool(c.mixed))
+            .set("jobs", json::unum(c.jobs as u64));
         root.set("config", cj);
         let mut rj = Json::obj();
         rj.set("ok", json::unum(self.ok))
@@ -363,6 +507,130 @@ impl LoadgenReport {
             crate::util::table::eng(self.server.mac_per_s),
             self.server.queue_depth,
             self.server.queue_cap,
+        );
+        let s = &self.server;
+        if s.sched_image + s.sched_layer + s.sched_hybrid > 0 {
+            println!(
+                "sched:   image={} layer={} hybrid={} (batch decisions)",
+                s.sched_image, s.sched_layer, s.sched_hybrid
+            );
+        }
+    }
+}
+
+/// The scheduler A/B comparison: the same mixed workload driven at a
+/// model-policy server and at two fixed-policy servers (`--sched image`
+/// and `--sched layer`), so the cost model's choices can be gated
+/// against both degenerate strategies. Written as `BENCH_7.json`.
+#[derive(Debug)]
+pub struct AbReport {
+    /// The run against the model-policy server (`config.addr`).
+    pub model: LoadgenReport,
+    /// The run against the `--sched image` fixed-policy server.
+    pub image: LoadgenReport,
+    /// The run against the `--sched layer` fixed-policy server.
+    pub layer: LoadgenReport,
+}
+
+/// Drive the mixed workload at all three servers and, in smoke mode,
+/// fail unless the model policy kept up with the worse fixed policy
+/// (it should track the *better* one per batch shape; a small tolerance
+/// absorbs shared-runner timing noise). The fixed-policy legs run with
+/// smoke off — the shed probe and decision gate belong to the model
+/// server only — so all three legs measure the identical workload.
+pub fn run_ab(cfg: &LoadgenConfig, image_addr: &str, layer_addr: &str) -> Result<AbReport> {
+    ensure!(
+        cfg.mixed,
+        "--ab-image/--ab-layer compare scheduling policies on the mixed \
+         workload; pass --mixed as well"
+    );
+    let model = run_loadgen(cfg)?;
+    let fixed = |addr: &str| -> Result<LoadgenReport> {
+        let mut c = cfg.clone();
+        c.addr = addr.to_string();
+        c.smoke = false;
+        run_loadgen(&c)
+    };
+    let image = fixed(image_addr)?;
+    let layer = fixed(layer_addr)?;
+    if cfg.smoke {
+        let worse = image.throughput_rps.min(layer.throughput_rps);
+        ensure!(
+            model.throughput_rps >= worse * 0.9,
+            "model policy ({:.1} req/s) fell behind the worse fixed policy \
+             ({:.1} req/s; image {:.1}, layer {:.1}) — the cost model is \
+             mis-ranking mappings",
+            model.throughput_rps,
+            worse,
+            image.throughput_rps,
+            layer.throughput_rps
+        );
+    }
+    Ok(AbReport {
+        model,
+        image,
+        layer,
+    })
+}
+
+impl AbReport {
+    /// Serialize as the `BENCH_7.json` trajectory document (`kind`
+    /// `"cnnblk-loadgen-ab"`): the three per-policy reports plus a
+    /// summary block with the throughput ratio against the worse fixed
+    /// policy.
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("kind", json::s("cnnblk-loadgen-ab"));
+        root.set("version", json::unum(1));
+        let mut policies = Json::obj();
+        policies
+            .set("model", self.model.to_json())
+            .set("image", self.image.to_json())
+            .set("layer", self.layer.to_json());
+        root.set("policies", policies);
+        let worse = self.image.throughput_rps.min(self.layer.throughput_rps);
+        let mut summary = Json::obj();
+        summary
+            .set("model_rps", json::num(self.model.throughput_rps))
+            .set("image_rps", json::num(self.image.throughput_rps))
+            .set("layer_rps", json::num(self.layer.throughput_rps))
+            .set(
+                "speedup_vs_worse",
+                json::num(self.model.throughput_rps / worse.max(1e-9)),
+            );
+        root.set("summary", summary);
+        root
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty() + "\n")
+            .map_err(|e| anyhow!("writing {}: {}", path, e))
+    }
+
+    /// Print the human-readable three-way summary.
+    pub fn print(&self) {
+        println!("scheduler A/B (mixed workload):");
+        for (name, r) in [
+            ("model", &self.model),
+            ("image", &self.image),
+            ("layer", &self.layer),
+        ] {
+            println!(
+                "  {:>5}: {:.1} req/s p50={}µs p99={}µs (sched i/l/h = {}/{}/{})",
+                name,
+                r.throughput_rps,
+                r.p50_us,
+                r.p99_us,
+                r.server.sched_image,
+                r.server.sched_layer,
+                r.server.sched_hybrid,
+            );
+        }
+        let worse = self.image.throughput_rps.min(self.layer.throughput_rps);
+        println!(
+            "  model vs worse fixed policy: {:.2}x",
+            self.model.throughput_rps / worse.max(1e-9)
         );
     }
 }
@@ -422,6 +690,9 @@ mod tests {
                 p50_us: 800,
                 p95_us: 1_900,
                 p99_us: 2_900,
+                sched_image: 6,
+                sched_layer: 16,
+                sched_hybrid: 1,
             },
         };
         let j = report.to_json();
@@ -431,13 +702,95 @@ mod tests {
         let results = back.get("results").unwrap();
         assert_eq!(results.get("p95_us").and_then(|v| v.as_u64()), Some(2_000));
         assert_eq!(results.get("shed").and_then(|v| v.as_u64()), Some(4));
+        let config = back.get("config").unwrap();
+        assert_eq!(config.get("mixed").and_then(|v| v.as_bool()), Some(false));
         // the server block round-trips through the StatsReport codec
         let server = StatsReport::from_json(back.get("server").unwrap()).unwrap();
         assert_eq!(server.accepted, 64);
+        assert_eq!(server.sched_layer, 16);
         // and a loadgen point must never be mistaken for a bench point
         assert_ne!(
             back.get("kind").and_then(|k| k.as_str()),
             Some("cnnblk-bench")
         );
+    }
+
+    fn report_with_rps(rps: f64, sched: (u64, u64, u64)) -> LoadgenReport {
+        LoadgenReport {
+            config: LoadgenConfig {
+                mixed: true,
+                ..LoadgenConfig::default()
+            },
+            ok: 48,
+            shed: 0,
+            errors: 0,
+            wall: Duration::from_millis(500),
+            p50_us: 900,
+            p95_us: 2_000,
+            p99_us: 3_000,
+            throughput_rps: rps,
+            health: HealthReport {
+                serving: true,
+                backend: "tiled".to_string(),
+                input_len: 10368,
+                output_len: 800,
+                queue_cap: 8,
+            },
+            server: StatsReport {
+                queue_depth: 0,
+                queue_cap: 8,
+                accepted: 48,
+                shed: 0,
+                requests: 48,
+                errors: 0,
+                macs: 1_000_000,
+                exec_us: 5_000,
+                mac_per_s: 2e8,
+                p50_us: 800,
+                p95_us: 1_900,
+                p99_us: 2_900,
+                sched_image: sched.0,
+                sched_layer: sched.1,
+                sched_hybrid: sched.2,
+            },
+        }
+    }
+
+    #[test]
+    fn ab_report_carries_all_three_policies_and_the_speedup() {
+        let ab = AbReport {
+            model: report_with_rps(120.0, (3, 16, 1)),
+            image: report_with_rps(100.0, (20, 0, 0)),
+            layer: report_with_rps(80.0, (0, 20, 0)),
+        };
+        let back = json::parse(&ab.to_json().pretty()).unwrap();
+        assert_eq!(
+            back.get("kind").and_then(|k| k.as_str()),
+            Some("cnnblk-loadgen-ab")
+        );
+        let policies = back.get("policies").unwrap();
+        for name in ["model", "image", "layer"] {
+            let leg = policies.get(name).unwrap();
+            assert_eq!(
+                leg.get("kind").and_then(|k| k.as_str()),
+                Some("cnnblk-loadgen")
+            );
+        }
+        let summary = back.get("summary").unwrap();
+        // worse fixed policy is layer at 80 req/s -> model speedup 1.5x
+        let speedup = summary
+            .get("speedup_vs_worse")
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!((speedup - 1.5).abs() < 1e-9, "speedup {}", speedup);
+    }
+
+    #[test]
+    fn mixed_round_geometry_covers_the_request_budget() {
+        // 64 requests at 4 singles + 12 burst per round -> 4 full rounds.
+        let round = MIXED_SINGLES + MIXED_BURST;
+        assert_eq!(64usize.div_ceil(round).max(1), 4);
+        // a tiny budget still runs one full round
+        assert_eq!(1usize.div_ceil(round).max(1), 1);
     }
 }

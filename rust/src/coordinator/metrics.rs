@@ -53,10 +53,23 @@ impl Reservoir {
     }
 }
 
+/// How the scheduler mapped one executed batch — the histogram bucket
+/// the per-decision counters track (see [`crate::serve::sched`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionKind {
+    /// Every layer fanned the batch's images across the pool.
+    Image,
+    /// Every layer ran images serially with intra-layer sharding.
+    Layer,
+    /// Mixed mappings (per-layer switches, or a ragged-batch split).
+    Hybrid,
+}
+
 /// Serving counters the executor records and `report` summarizes.
 #[derive(Debug, Default)]
 pub struct Metrics {
     latency: Reservoir,
+    batch_exec: Reservoir,
     batch_sizes: Vec<usize>,
     /// Requests admitted into the serving queue (both the shedding TCP
     /// path and the blocking in-process path count here).
@@ -84,6 +97,12 @@ pub struct Metrics {
     /// Name of the backend serving the pipeline (labels the MAC/s line;
     /// empty when unknown).
     pub backend: String,
+    /// Batches the scheduler mapped image-parallel on every layer.
+    pub sched_image: u64,
+    /// Batches the scheduler mapped layer-sharded on every layer.
+    pub sched_layer: u64,
+    /// Batches with mixed per-layer mappings or a ragged hybrid split.
+    pub sched_hybrid: u64,
 }
 
 impl Metrics {
@@ -110,6 +129,29 @@ impl Metrics {
         self.batch_sizes.push(formed);
         self.padded_slots += (executed - formed) as u64;
         self.exec_us += exec.as_micros() as u64;
+        self.batch_exec.record(exec.as_micros() as u64);
+    }
+
+    /// Record one scheduler decision (per executed batch).
+    pub fn record_decision(&mut self, kind: DecisionKind) {
+        match kind {
+            DecisionKind::Image => self.sched_image += 1,
+            DecisionKind::Layer => self.sched_layer += 1,
+            DecisionKind::Hybrid => self.sched_hybrid += 1,
+        }
+    }
+
+    /// Median batch *service* time, microseconds, over the bounded
+    /// reservoir of per-batch execution durations — the measured signal
+    /// the admission path's `retry_after_ms` hint is derived from. 0
+    /// until the first batch executes.
+    pub fn batch_exec_p50_us(&self) -> u64 {
+        if self.batch_exec.sample.is_empty() {
+            return 0;
+        }
+        let mut v = self.batch_exec.sample.clone();
+        v.sort_unstable();
+        v[(v.len() - 1) / 2]
     }
 
     /// Record one failed request.
@@ -283,6 +325,31 @@ mod tests {
         assert_eq!(m.padded_slots, 1);
         assert!((m.mean_batch_size() - 3.5).abs() < 1e-9);
         assert_eq!(m.exec_us, 5_000);
+    }
+
+    #[test]
+    fn decision_counters_bucket_by_kind() {
+        let mut m = Metrics::default();
+        m.record_decision(DecisionKind::Image);
+        m.record_decision(DecisionKind::Image);
+        m.record_decision(DecisionKind::Layer);
+        m.record_decision(DecisionKind::Hybrid);
+        assert_eq!(
+            (m.sched_image, m.sched_layer, m.sched_hybrid),
+            (2, 1, 1)
+        );
+    }
+
+    #[test]
+    fn batch_service_time_median_tracks_executions() {
+        let mut m = Metrics::default();
+        assert_eq!(m.batch_exec_p50_us(), 0, "no batches yet -> 0");
+        for ms in [2u64, 8, 4, 100, 6] {
+            m.record_batch(1, 1, Duration::from_millis(ms));
+        }
+        // sorted: 2, 4, 6, 8, 100 ms -> median 6 ms, robust to the
+        // 100 ms outlier (a mean would not be)
+        assert_eq!(m.batch_exec_p50_us(), 6_000);
     }
 
     #[test]

@@ -41,12 +41,43 @@
 use super::naive_conv::{maxpool2, relu};
 use crate::optimizer::beam::BeamConfig;
 use crate::plan::BlockingPlan;
-use crate::runtime::backend::{backend_by_name, Backend, ConvInputs};
+use crate::runtime::backend::{
+    backend_by_name, Backend, ConvInputs, ParallelTiledBackend, TiledCpuBackend,
+};
 use crate::runtime::Manifest;
 use crate::util::pool::{default_threads, par_map_with, shared_pool};
 use crate::util::rng::Rng;
 use anyhow::{ensure, Context, Result};
 use std::sync::Arc;
+
+/// How one layer of a batch is mapped onto the worker pool — the unit
+/// the serving scheduler ([`crate::serve::sched`]) decides per layer
+/// boundary. Every mapping executes through the tiled fast-path family
+/// (plain tiled per image, or [`ParallelTiledBackend`] shards), so the
+/// merged outputs are byte-identical across mappings at any worker
+/// count — which is what makes the scheduler free to choose
+/// aggressively.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mapping {
+    /// Fan the batch's images across the shared pool; each image runs
+    /// the layer through the serial tiled kernel. Best when there are
+    /// at least as many images as workers.
+    ImageParallel,
+    /// Run images serially; each image's layer is sharded across the
+    /// pool by [`ParallelTiledBackend`] (outermost K/Y split). Best for
+    /// small batches of big layers; degrades gracefully to serial tiled
+    /// when the plan has no shardable split.
+    LayerSharded,
+    /// Ragged-batch split: the first `split` images fan out
+    /// image-parallel (a whole number of pool rounds), the remainder
+    /// run serially with intra-layer sharding. The two phases run
+    /// sequentially, so the two fan-outs never nest on the shared pool.
+    Hybrid {
+        /// Number of leading images executed image-parallel; the rest
+        /// (`batch - split`) are layer-sharded. Clamped to the batch.
+        split: usize,
+    },
+}
 
 /// One conv layer of the interpreted pipeline: its plan plus the
 /// synthetic weights it executes with.
@@ -294,6 +325,102 @@ impl InterpretedPipeline {
         }
         Ok(out)
     }
+
+    /// Run a batch with an explicit per-layer [`Mapping`] — the serving
+    /// scheduler's entry point. The batch advances one layer at a time
+    /// (the continuous-batching seam): at each layer boundary the
+    /// chosen mapping decides whether the images fan out across the
+    /// pool (each through the serial tiled kernel), run serially with
+    /// the layer sharded across the pool, or split between the two
+    /// phases. Whatever the mappings, outputs are byte-identical to
+    /// [`InterpretedPipeline::run_batch_counted`] under a single thread
+    /// — the whole family executes the identical tiled tile kernel —
+    /// and the summed counters match too. Only meaningful for the
+    /// tiled-family pipelines; the interpreter and naive oracle
+    /// backends are rejected (their numerics intentionally differ).
+    pub fn run_batch_scheduled(
+        &self,
+        flat: Vec<f32>,
+        b: usize,
+        mappings: &[Mapping],
+    ) -> Result<PipelineRun> {
+        let per = self.input_len();
+        ensure!(
+            flat.len() == b * per,
+            "batch of {} images needs {} elements, got {}",
+            b,
+            b * per,
+            flat.len()
+        );
+        ensure!(
+            matches!(self.backend_name(), "tiled" | "parallel"),
+            "scheduled execution maps onto the tiled fast-path family; \
+             pipeline backend '{}' is selected for its own numerics — \
+             use run_batch_counted",
+            self.backend_name()
+        );
+        ensure!(
+            mappings.len() == self.inner.layers.len(),
+            "{} mappings for {} layers",
+            mappings.len(),
+            self.inner.layers.len()
+        );
+        let mut acts: Vec<Vec<f32>> = (0..b)
+            .map(|i| flat[i * per..(i + 1) * per].to_vec())
+            .collect();
+        let mut macs = 0u64;
+        let mut dram_elems = 0u64;
+        for (li, mapping) in mappings.iter().enumerate() {
+            let n = acts.len();
+            let split = match *mapping {
+                Mapping::ImageParallel => n,
+                Mapping::LayerSharded => 0,
+                Mapping::Hybrid { split } => split.min(n),
+            };
+            let tail = acts.split_off(split);
+            // Phase 1: images [0, split) fan out across the pool, each
+            // running the layer through the serial tiled kernel.
+            let mut next: Vec<Vec<f32>> = Vec::with_capacity(n);
+            let fanned: Vec<Result<(Vec<f32>, u64, u64)>> =
+                if split <= 1 || default_threads() <= 1 {
+                    acts.into_iter()
+                        .map(|a| self.inner.run_layer_image(li, a, &TiledCpuBackend))
+                        .collect()
+                } else {
+                    let inner = Arc::clone(&self.inner);
+                    par_map_with(&shared_pool(), acts, move |a| {
+                        inner.run_layer_image(li, a, &TiledCpuBackend)
+                    })
+                };
+            for run in fanned {
+                let (h, m, dr) = run?;
+                next.push(h);
+                macs += m;
+                dram_elems += dr;
+            }
+            // Phase 2 (after phase 1 joined — the fan-outs never nest):
+            // images [split, n) run serially, each layer sharded across
+            // the pool.
+            for a in tail {
+                let (h, m, dr) =
+                    self.inner
+                        .run_layer_image(li, a, &ParallelTiledBackend::default())?;
+                next.push(h);
+                macs += m;
+                dram_elems += dr;
+            }
+            acts = next;
+        }
+        let mut output = Vec::with_capacity(b * self.output_len());
+        for a in acts {
+            output.extend(a);
+        }
+        Ok(PipelineRun {
+            output,
+            macs,
+            dram_elems,
+        })
+    }
 }
 
 impl PipelineInner {
@@ -338,6 +465,31 @@ impl PipelineInner {
             macs,
             dram_elems,
         })
+    }
+
+    /// One image through one layer (conv on `backend`, then ReLU, then
+    /// the trailing pool where the chain has one), returning the next
+    /// activation plus the measured MACs and DRAM element traffic — the
+    /// per-layer-boundary step `run_batch_scheduled` drives.
+    fn run_layer_image(
+        &self,
+        li: usize,
+        act: Vec<f32>,
+        backend: &dyn Backend,
+    ) -> Result<(Vec<f32>, u64, u64)> {
+        let layer = &self.layers[li];
+        let d = layer.plan.dims;
+        let inputs = ConvInputs::from_shared(d, act.into(), Arc::clone(&layer.weights))?;
+        let out = backend.execute(&layer.plan, &inputs)?;
+        let dc = &out.counters.dram;
+        let dram = dc.input_loads + dc.kernel_loads + dc.output_loads + dc.output_stores;
+        let mut h = out.output;
+        relu(&mut h);
+        if layer.pool_after {
+            let (pooled, _) = maxpool2(&h, (d.k as usize, d.y as usize, d.x as usize));
+            h = pooled;
+        }
+        Ok((h, out.counters.macs, dram))
     }
 }
 
@@ -452,6 +604,55 @@ mod tests {
         assert_eq!(got4.output, want.output, "parallel@4 diverged from tiled");
         assert_eq!(got4.macs, want.macs);
         assert_eq!(got4.dram_elems, want.dram_elems);
+    }
+
+    #[test]
+    fn scheduled_mappings_all_match_serial_execution() {
+        // The scheduler-safety invariant: whatever per-layer mapping
+        // vector the scheduler emits, outputs are byte-identical to the
+        // single-threaded serial run and the summed counters match.
+        let p = InterpretedPipeline::plan_default(&BeamConfig::quick(), "tiled", 0).unwrap();
+        let mut rng = Rng::new(17);
+        let per = p.input_len();
+        for n in [1usize, 4, 5] {
+            let flat: Vec<f32> = (0..n * per).map(|_| rng.f64() as f32 - 0.5).collect();
+            let want = with_thread_cap(1, || p.run_batch_counted(flat.clone(), n).unwrap());
+            let cases: Vec<Vec<Mapping>> = vec![
+                vec![Mapping::ImageParallel; 3],
+                vec![Mapping::LayerSharded; 3],
+                vec![Mapping::Hybrid { split: n / 2 }; 3],
+                vec![
+                    Mapping::ImageParallel,
+                    Mapping::LayerSharded,
+                    Mapping::Hybrid { split: 1 },
+                ],
+            ];
+            for maps in cases {
+                let got = with_thread_cap(4, || {
+                    p.run_batch_scheduled(flat.clone(), n, &maps).unwrap()
+                });
+                assert_eq!(got.output, want.output, "n={} maps={:?}", n, maps);
+                assert_eq!(got.macs, want.macs, "n={} maps={:?}", n, maps);
+                assert_eq!(got.dram_elems, want.dram_elems, "n={} maps={:?}", n, maps);
+            }
+        }
+    }
+
+    #[test]
+    fn scheduled_rejects_bad_mappings_and_backends() {
+        let p = InterpretedPipeline::plan_default(&BeamConfig::quick(), "tiled", 0).unwrap();
+        let flat = vec![0.0f32; p.input_len()];
+        // wrong mapping count
+        assert!(p
+            .run_batch_scheduled(flat.clone(), 1, &[Mapping::ImageParallel])
+            .is_err());
+        // non-tiled-family backend: scheduled execution would silently
+        // change the numerics the operator asked for
+        let naive = quick();
+        let err = naive
+            .run_batch_scheduled(flat, 1, &[Mapping::ImageParallel; 3])
+            .unwrap_err();
+        assert!(err.to_string().contains("tiled"), "{}", err);
     }
 
     #[test]

@@ -66,6 +66,13 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// PJRT artifacts or the interpreted plan backend.
     pub execution: Execution,
+    /// Batch scheduling policy for the interpreted path's tiled-family
+    /// backends (`--sched`; ignored by PJRT, which has no mapping
+    /// choice to make).
+    pub policy: crate::serve::sched::SchedPolicy,
+    /// Worker-count override for the serving pool (`--jobs`; `0`
+    /// follows `CNNBLK_THREADS` / machine width).
+    pub jobs: usize,
 }
 
 impl Default for ServerConfig {
@@ -76,6 +83,8 @@ impl Default for ServerConfig {
             batch_timeout: Duration::from_millis(2),
             queue_depth: 64,
             execution: Execution::Pjrt,
+            policy: crate::serve::sched::SchedPolicy::Model,
+            jobs: 0,
         }
     }
 }
@@ -136,6 +145,8 @@ impl InferenceServer {
                 max_batch: cfg.max_batch,
                 batch_timeout: cfg.batch_timeout,
                 queue_cap: cfg.queue_depth,
+                policy: cfg.policy,
+                jobs: cfg.jobs,
                 ..CoreConfig::default()
             },
         )?;
@@ -349,6 +360,7 @@ mod tests {
             batch_timeout: Duration::from_millis(5),
             queue_depth: 64,
             execution: Execution::Pjrt,
+            ..ServerConfig::default()
         }
     }
 
@@ -364,6 +376,7 @@ mod tests {
             execution: Execution::Interpreted {
                 backend: backend.to_string(),
             },
+            ..ServerConfig::default()
         }
     }
 

@@ -23,7 +23,7 @@
 //! docs/CLI.md documents every subcommand and flag; `print_help` below
 //! must stay in agreement with it.
 
-use cnn_blocking::bench::loadgen::{run_loadgen, LoadgenConfig};
+use cnn_blocking::bench::loadgen::{run_ab, run_loadgen, LoadgenConfig};
 use cnn_blocking::bench::{run_bench, BenchConfig};
 use cnn_blocking::coordinator::{Execution, InferenceServer, InterpretedPipeline, ServerConfig};
 use cnn_blocking::figures::{fig3_4, fig5_8, fig9, tables};
@@ -33,7 +33,7 @@ use cnn_blocking::optimizer::beam::BeamConfig;
 use cnn_blocking::optimizer::schedules::emit_schedules;
 use cnn_blocking::runtime::backend::{backend_by_name, predicted_counters, ConvInputs};
 use cnn_blocking::runtime::{Engine, Golden, Manifest};
-use cnn_blocking::serve::{CoreConfig, ListenConfig, ServeCore, TcpServeHandle};
+use cnn_blocking::serve::{CoreConfig, ListenConfig, SchedPolicy, ServeCore, TcpServeHandle};
 use cnn_blocking::util::cli::Args;
 use cnn_blocking::util::table::{energy_pj, eng, Table};
 use cnn_blocking::{BlockingPlan, Planner, Target};
@@ -100,6 +100,11 @@ fn print_help() {
          \x20         [--interpret [naive|blocked|tiled|parallel]] (plan-backend serving, no\n\
          \x20         PJRT; bare --interpret serves the tiled fast path fanning batch images\n\
          \x20         across workers; 'parallel' shards each layer across workers instead)\n\
+         \x20         [--sched model|image|layer]   (per-batch scheduling policy on the tiled\n\
+         \x20         family: 'model' lets the cost model pick image-parallel vs layer-sharded\n\
+         \x20         per batch; 'image'/'layer' pin the mapping for A/B runs)\n\
+         \x20         [--jobs N]                    (worker threads for the serving pool;\n\
+         \x20         0 = CNNBLK_THREADS / machine width; takes precedence over CNNBLK_THREADS)\n\
          \x20         [--listen] [--host 127.0.0.1] [--port 7744] (concurrent TCP front end\n\
          \x20         over the interpreted pipeline: length-prefixed JSON protocol, explicit\n\
          \x20         load-shedding past --queue-cap, health/stats ops; runs until killed;\n\
@@ -110,6 +115,14 @@ fn print_help() {
          \x20         MAC/s; --rate targets aggregate req/s, 0 = unthrottled; --smoke also\n\
          \x20         bursts past the queue cap and fails unless requests are explicitly\n\
          \x20         shed with the server staying healthy)\n\
+         \x20         [--jobs N]                  (cap client worker threads)\n\
+         \x20         [--mixed]                   (singles + synchronized bursts: the workload\n\
+         \x20         that exercises every scheduler decision; with --smoke also fails unless\n\
+         \x20         the server's decision counters show both modes fired)\n\
+         \x20         [--ab-image ADDR] [--ab-layer ADDR] (drive the same mixed workload at\n\
+         \x20         two fixed-policy servers and write a three-way BENCH_7.json comparison;\n\
+         \x20         with --smoke, fails if the model policy is slower than the worse fixed\n\
+         \x20         policy)\n\
          validate  [--artifacts artifacts]                    (PJRT round-trip checks)\n\
          \n\
          add --full-search for the paper-width beam (128 seeds) instead of the quick one"
@@ -678,6 +691,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             "host",
             "port",
             "queue-cap",
+            "sched",
+            "jobs",
         ],
     )?;
     // A bare `--interpret` (no backend name) serves the tiled fast
@@ -693,6 +708,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let max_batch = args.get_u64("batch", 8) as usize;
     let batch_timeout = Duration::from_millis(args.get_u64("timeout-ms", 2));
     let queue_cap = args.get_u64("queue-cap", 64) as usize;
+    let policy = SchedPolicy::parse(&args.get_or("sched", "model"))?;
+    let jobs = args.get_u64("jobs", 0) as usize;
 
     if args.has("listen") {
         // The TCP front end always serves the interpreted pipeline
@@ -708,6 +725,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 max_batch,
                 batch_timeout,
                 queue_cap,
+                policy,
+                jobs,
                 ..CoreConfig::default()
             },
         )?;
@@ -717,9 +736,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         };
         let handle = TcpServeHandle::start(core, &listen)?;
         println!(
-            "listening on {} (backend '{}', queue cap {}, max batch {}); pipeline plans:",
+            "listening on {} (backend '{}', sched '{}', queue cap {}, max batch {}); \
+             pipeline plans:",
             handle.local_addr(),
             backend,
+            policy.as_str(),
             queue_cap,
             max_batch,
         );
@@ -741,6 +762,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         batch_timeout,
         queue_depth: queue_cap,
         execution,
+        policy,
+        jobs,
     };
     let n = args.get_u64("requests", 256) as usize;
     let server = InferenceServer::start(cfg)?;
@@ -781,6 +804,10 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
             "out",
             "connect-timeout-s",
             "smoke",
+            "jobs",
+            "mixed",
+            "ab-image",
+            "ab-layer",
         ],
     )?;
     let cfg = LoadgenConfig {
@@ -790,13 +817,32 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         rate: args.get_f64("rate", 0.0),
         seed: args.get_u64("seed", 42),
         smoke: args.has("smoke"),
+        mixed: args.has("mixed"),
+        jobs: args.get_u64("jobs", 0) as usize,
         connect_timeout: Duration::from_secs(args.get_u64("connect-timeout-s", 30)),
     };
-    let report = run_loadgen(&cfg)?;
-    report.print();
-    if let Some(out) = args.get("out") {
-        report.save(out)?;
-        println!("wrote {}", out);
+    let ab = (args.get("ab-image"), args.get("ab-layer"));
+    match ab {
+        (Some(image_addr), Some(layer_addr)) => {
+            let report = run_ab(&cfg, image_addr, layer_addr)?;
+            report.print();
+            if let Some(out) = args.get("out") {
+                report.save(out)?;
+                println!("wrote {}", out);
+            }
+        }
+        (None, None) => {
+            let report = run_loadgen(&cfg)?;
+            report.print();
+            if let Some(out) = args.get("out") {
+                report.save(out)?;
+                println!("wrote {}", out);
+            }
+        }
+        _ => anyhow::bail!(
+            "--ab-image and --ab-layer must be given together (the A/B run \
+             compares both fixed policies against the model server)"
+        ),
     }
     Ok(())
 }

@@ -62,7 +62,7 @@ mod tiled;
 
 pub use blocked::BlockedCpuBackend;
 pub use naive::NaiveBackend;
-pub use parallel::ParallelTiledBackend;
+pub use parallel::{shard_width, ParallelTiledBackend};
 pub use tiled::{TiledCpuBackend, LANES};
 
 use crate::model::access;

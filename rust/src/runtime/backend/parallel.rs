@@ -83,6 +83,18 @@ fn shard_level(s: &BlockingString, boundary: usize) -> Option<usize> {
     None
 }
 
+/// The number of independent shards [`ParallelTiledBackend`] can split
+/// `plan` into: the trip count of the shard level (outermost `K` split
+/// at or above the tile boundary with trip >= 2, else the outermost `Y`
+/// split), or `None` when the plan has no shardable level and executes
+/// serially under the "parallel" label. This is the legality/width
+/// signal the serving scheduler uses to decide whether intra-layer
+/// sharding is even worth scoring for a layer.
+pub fn shard_width(plan: &BlockingPlan) -> Option<u64> {
+    let boundary = tile_boundary(&plan.string);
+    shard_level(&plan.string, boundary).map(|pos| plan.string.trip(pos))
+}
+
 impl Backend for ParallelTiledBackend {
     fn name(&self) -> &'static str {
         "parallel"
@@ -280,6 +292,26 @@ mod tests {
         // single-level string: everything is one tile, nothing to shard
         let s = parse(&d, "Fw Fh C0=4 K0=4 X0=8 Y0=8");
         assert_eq!(shard_level(&s, tile_boundary(&s)), None);
+    }
+
+    #[test]
+    fn shard_width_reports_the_shard_level_trip() {
+        use crate::plan::{Planner, Target};
+        let plan = Planner::for_named("t", LayerDims::conv(8, 8, 4, 4, 3, 3))
+            .target(Target::Bespoke {
+                budget_bytes: 64 * 1024,
+            })
+            .levels(2)
+            .plan()
+            .unwrap();
+        let b = tile_boundary(&plan.string);
+        match shard_level(&plan.string, b) {
+            Some(pos) => assert_eq!(shard_width(&plan), Some(plan.string.trip(pos))),
+            None => assert_eq!(shard_width(&plan), None),
+        }
+        if let Some(w) = shard_width(&plan) {
+            assert!(w >= 2, "shardable plans expose at least 2 shards, got {w}");
+        }
     }
 
     #[test]

@@ -25,6 +25,8 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::InterpretedPipeline;
 use crate::serve::health::{HealthReport, StatsReport};
 use crate::serve::queue::{self, AdmissionQueue, AdmissionReceiver, InferRequest, Rejected};
+use crate::serve::sched::{SchedModel, SchedPolicy};
+use crate::util::pool::{default_threads, with_thread_cap};
 use anyhow::{anyhow, Context, Result};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
@@ -40,8 +42,21 @@ pub struct CoreConfig {
     pub batch_timeout: Duration,
     /// Admission queue capacity; beyond it, [`ServeCore::admit`] sheds.
     pub queue_cap: usize,
-    /// The back-off hint carried by shed responses, milliseconds.
+    /// The back-off hint carried by shed responses before any batch has
+    /// executed, milliseconds. Once batches run, the hint is derived
+    /// from the measured batch service time instead (reservoir median x
+    /// batches ahead in the queue) and this is only the cold-start
+    /// fallback.
     pub retry_after_ms: u64,
+    /// How the batcher maps each batch onto the pool: the cost-model
+    /// default, or one of the fixed strategies (the `--sched` knob).
+    /// Only applies to the tiled-family backends; the interpreter and
+    /// naive oracle always run the legacy serial-semantics path.
+    pub policy: SchedPolicy,
+    /// Worker-count override for the serving pool (the `--jobs` knob):
+    /// `0` follows `CNNBLK_THREADS` / the machine width; any other
+    /// value caps the shared pool and the scheduler's worker count.
+    pub jobs: usize,
 }
 
 impl Default for CoreConfig {
@@ -51,6 +66,8 @@ impl Default for CoreConfig {
             batch_timeout: Duration::from_millis(2),
             queue_cap: 64,
             retry_after_ms: 25,
+            policy: SchedPolicy::Model,
+            jobs: 0,
         }
     }
 }
@@ -98,7 +115,17 @@ impl ServeCore {
             let cfg = cfg.clone();
             std::thread::Builder::new()
                 .name("cnnblk-serve-core".into())
-                .spawn(move || batcher_loop(pipeline, rx, metrics, cfg))
+                // The --jobs cap is thread-local, so it must be applied
+                // *on the batcher thread* — every pool sizing and
+                // scheduler worker-count read happens there.
+                .spawn(move || {
+                    if cfg.jobs > 0 {
+                        let jobs = cfg.jobs;
+                        with_thread_cap(jobs, || batcher_loop(pipeline, rx, metrics, cfg))
+                    } else {
+                        batcher_loop(pipeline, rx, metrics, cfg)
+                    }
+                })
                 .context("spawning the serving batcher")?
         };
         Ok(Arc::new(ServeCore {
@@ -169,9 +196,13 @@ impl ServeCore {
                 Ok(Admission::Admitted(resp_rx))
             }
             Err(Rejected::Full(_)) => {
-                self.metrics.lock().unwrap().record_shed();
+                let p50_us = {
+                    let mut m = self.metrics.lock().unwrap();
+                    m.record_shed();
+                    m.batch_exec_p50_us()
+                };
                 Ok(Admission::Shed {
-                    retry_after_ms: self.cfg.retry_after_ms,
+                    retry_after_ms: self.retry_after_hint_ms(p50_us),
                 })
             }
             Err(Rejected::Closed(_)) => Ok(Admission::Closed),
@@ -197,6 +228,25 @@ impl ServeCore {
             .recv()
             .map_err(|_| anyhow!("server dropped the response channel"))?
             .map_err(|e| anyhow!(e))
+    }
+
+    /// The measured back-off hint for a shed response: roughly how long
+    /// until a queue slot frees up — the batches ahead of a new arrival
+    /// (queue depth / max_batch, plus the one forming) times the median
+    /// measured batch service time, rounded up to whole milliseconds
+    /// and clamped to [1, 1000]. Before any batch has executed the
+    /// configured `retry_after_ms` constant is the fallback, so clients
+    /// always get a non-zero hint.
+    fn retry_after_hint_ms(&self, batch_p50_us: u64) -> u64 {
+        if batch_p50_us == 0 {
+            return self.cfg.retry_after_ms;
+        }
+        let depth = self.depth.load(Ordering::SeqCst) as u64;
+        let batches_ahead = depth / self.cfg.max_batch.max(1) as u64 + 1;
+        batches_ahead
+            .saturating_mul(batch_p50_us)
+            .div_ceil(1_000)
+            .clamp(1, 1_000)
     }
 
     /// The health/readiness snapshot served by the `health` op.
@@ -226,6 +276,9 @@ impl ServeCore {
             p50_us: m.latency_percentile(0.50).as_micros() as u64,
             p95_us: m.latency_percentile(0.95).as_micros() as u64,
             p99_us: m.latency_percentile(0.99).as_micros() as u64,
+            sched_image: m.sched_image,
+            sched_layer: m.sched_layer,
+            sched_hybrid: m.sched_hybrid,
         }
     }
 
@@ -248,9 +301,15 @@ impl Drop for ServeCore {
 }
 
 /// The batching loop: form a batch (up to `max_batch` or
-/// `batch_timeout` from the first request), run it through the pipeline
-/// as one flat execution, slice results back per request. Exits when
-/// every producer dropped and the queue is drained.
+/// `batch_timeout` from the first request), let the scheduler pick the
+/// batch's mapping, run it through the pipeline as one flat execution,
+/// slice results back per request. Exits when every producer dropped
+/// and the queue is drained.
+///
+/// Scheduling only engages for the tiled-family backends ("tiled" /
+/// "parallel"), whose mappings are byte-identical by construction; the
+/// interpreter and naive oracle keep the legacy path so an operator who
+/// asked for their numerics gets exactly those.
 fn batcher_loop(
     pipeline: InterpretedPipeline,
     rx: AdmissionReceiver,
@@ -259,6 +318,8 @@ fn batcher_loop(
 ) {
     let input_len = pipeline.input_len();
     let output_len = pipeline.output_len();
+    let sched = matches!(pipeline.backend_name(), "tiled" | "parallel")
+        .then(|| SchedModel::for_pipeline(&pipeline));
     loop {
         let batch = match collect_batch(&rx, cfg.batch_timeout, cfg.max_batch.max(1)) {
             Some(b) => b,
@@ -270,10 +331,22 @@ fn batcher_loop(
             flat.extend_from_slice(&r.input);
         }
         let t0 = Instant::now();
-        let result = pipeline.run_batch_counted(flat, formed);
+        let (result, decided) = match &sched {
+            Some(model) => {
+                // default_threads() is read on this thread, where the
+                // --jobs cap (if any) is installed.
+                let d = model.decide(formed, default_threads(), cfg.policy);
+                let run = pipeline.run_batch_scheduled(flat, formed, &d.mappings);
+                (run, Some(d.kind))
+            }
+            None => (pipeline.run_batch_counted(flat, formed), None),
+        };
         {
             let mut m = metrics.lock().unwrap();
             m.record_batch(formed, formed, t0.elapsed());
+            if let Some(kind) = decided {
+                m.record_decision(kind);
+            }
             if let Ok(run) = &result {
                 m.record_macs(run.macs);
             }
@@ -348,6 +421,7 @@ mod tests {
                 batch_timeout: Duration::from_millis(2),
                 queue_cap,
                 retry_after_ms: 25,
+                ..CoreConfig::default()
             },
         )
         .unwrap()
@@ -405,6 +479,41 @@ mod tests {
         assert!(c.submit_blocking(img.clone()).is_err());
         assert!(matches!(c.admit(img).unwrap(), Admission::Closed));
         assert!(!c.health().serving);
+    }
+
+    #[test]
+    fn scheduled_batches_count_decisions() {
+        // Singles through the tiled-family pipeline must land in the
+        // decision histogram (batch of 1 -> the Layer bucket: a lone
+        // image cannot fan, so the model maps it layer-sharded), and
+        // the stats endpoint surfaces the counters.
+        let c = core(16, 4);
+        let img = image(&c, 3);
+        for _ in 0..3 {
+            c.infer_blocking(img.clone()).unwrap();
+        }
+        let s = c.stats();
+        assert_eq!(
+            s.sched_image + s.sched_layer + s.sched_hybrid,
+            c.metrics().lock().unwrap().batches,
+            "every scheduled batch must be counted exactly once"
+        );
+        assert!(s.sched_layer > 0, "single-image batches bucket as layer");
+        c.shutdown();
+    }
+
+    #[test]
+    fn retry_hint_tracks_measured_service_time() {
+        let c = core(4, 2);
+        // Cold start: no batch has run, the configured constant holds.
+        assert_eq!(c.retry_after_hint_ms(0), 25);
+        // Measured: 8 ms median, empty queue -> one batch ahead -> 8 ms.
+        assert_eq!(c.retry_after_hint_ms(8_000), 8);
+        // Sub-millisecond batches round up to a non-zero hint.
+        assert_eq!(c.retry_after_hint_ms(300), 1);
+        // And absurd medians clamp instead of telling clients to leave.
+        assert_eq!(c.retry_after_hint_ms(10_000_000), 1_000);
+        c.shutdown();
     }
 
     #[test]

@@ -57,6 +57,12 @@ pub struct StatsReport {
     pub p95_us: u64,
     /// 99th-percentile request latency, microseconds.
     pub p99_us: u64,
+    /// Batches the scheduler mapped image-parallel on every layer.
+    pub sched_image: u64,
+    /// Batches the scheduler mapped layer-sharded on every layer.
+    pub sched_layer: u64,
+    /// Batches with mixed per-layer mappings or a ragged hybrid split.
+    pub sched_hybrid: u64,
 }
 
 fn req_u64(doc: &Json, key: &str) -> Result<u64> {
@@ -112,7 +118,10 @@ impl StatsReport {
             .set("mac_per_s", json::num(self.mac_per_s))
             .set("p50_us", json::unum(self.p50_us))
             .set("p95_us", json::unum(self.p95_us))
-            .set("p99_us", json::unum(self.p99_us));
+            .set("p99_us", json::unum(self.p99_us))
+            .set("sched_image", json::unum(self.sched_image))
+            .set("sched_layer", json::unum(self.sched_layer))
+            .set("sched_hybrid", json::unum(self.sched_hybrid));
         o
     }
 
@@ -134,6 +143,9 @@ impl StatsReport {
             p50_us: req_u64(doc, "p50_us")?,
             p95_us: req_u64(doc, "p95_us")?,
             p99_us: req_u64(doc, "p99_us")?,
+            sched_image: req_u64(doc, "sched_image")?,
+            sched_layer: req_u64(doc, "sched_layer")?,
+            sched_hybrid: req_u64(doc, "sched_hybrid")?,
         })
     }
 }
@@ -170,6 +182,9 @@ mod tests {
             p50_us: 900,
             p95_us: 2_100,
             p99_us: 4_000,
+            sched_image: 11,
+            sched_layer: 5,
+            sched_hybrid: 2,
         };
         let text = s.to_json().compact();
         let back = StatsReport::from_json(&json::parse(&text).unwrap()).unwrap();

@@ -21,10 +21,17 @@
 //!   gauge feeds the stats endpoint.
 //! * [`core`] — [`core::ServeCore`], the one serving core both
 //!   `cnnblk serve --interpret` (in-process synthetic driver) and
-//!   `--listen` (TCP) run on: admission, dynamic batching, dispatch
-//!   into [`crate::coordinator::InterpretedPipeline`] (whose batches
+//!   `--listen` (TCP) run on: admission, dynamic batching, the
+//!   per-batch scheduling decision, dispatch into
+//!   [`crate::coordinator::InterpretedPipeline`] (whose batches
 //!   fan out on [`crate::util::pool::shared_pool`]), metrics, and
 //!   drain-on-shutdown.
+//! * [`sched`] — the cost-model batch scheduler: for each formed batch,
+//!   scores image-parallel fan-out vs. intra-layer sharding vs. a
+//!   ragged hybrid split per layer, using the plans' MACs and predicted
+//!   DRAM traffic plus the worker count — a pure, deterministic
+//!   decision function the batcher executes through
+//!   `InterpretedPipeline::run_batch_scheduled`.
 //! * [`session`] — the per-connection loop: read a frame, decode,
 //!   admit (or shed), respond. Sessions are cheap blocking reader
 //!   threads; all *compute* multiplexes onto the shared worker pool
@@ -50,9 +57,11 @@ pub mod frame;
 pub mod health;
 pub mod listener;
 pub mod queue;
+pub mod sched;
 pub mod session;
 
 pub use codec::{Request, Response, ServeClient};
 pub use core::{Admission, CoreConfig, ServeCore};
 pub use health::{HealthReport, StatsReport};
 pub use listener::{ListenConfig, TcpServeHandle};
+pub use sched::{Decision, LayerCost, SchedModel, SchedPolicy};

@@ -1,0 +1,437 @@
+//! Cost-model batch scheduler: the analytical model picks the
+//! execution mapping per batch.
+//!
+//! PRs 1–5 use the paper's access-count model only *offline* — the beam
+//! search scores candidate blockings before anything runs. This module
+//! closes ROADMAP item 1 by putting the same numbers on the serving hot
+//! path: for every batch the batcher forms, [`SchedModel::decide`]
+//! scores the candidate mappings of each layer
+//! ([`Mapping::ImageParallel`] fan-out across the shared pool,
+//! [`Mapping::LayerSharded`] serial images with intra-layer sharding,
+//! or a ragged [`Mapping::Hybrid`] split) and
+//! `InterpretedPipeline::run_batch_scheduled` executes the winner. The
+//! paper's move — an analytical model instead of a heuristic — applied
+//! to batch scheduling instead of blocking search.
+//!
+//! The cost of running one layer once is modeled in "work units"
+//!
+//! ```text
+//! w = MACs + DRAM_WEIGHT x predicted DRAM element traffic
+//! ```
+//!
+//! with the DRAM term straight from the plan's Eq. 1 predicted access
+//! counts ([`crate::runtime::backend::predicted_counters`]) — a DRAM
+//! element costs several MAC-times of latency/bandwidth, which is
+//! exactly the arithmetic-intensity axis the paper optimizes. On top of
+//! that, the critical path of each mapping for a batch of `n` images on
+//! `W` workers:
+//!
+//! ```text
+//! image(n, W) = ceil(n / W) x (w + DISPATCH_COST)      pool rounds
+//! layer(n, W) = n x shard1(W)                          serial images
+//! shard1(W)   = ceil(w x ceil(width/s) / width) + SHARD_COST x s
+//!               with s = min(W, width); w when unshardable/1 worker
+//! hybrid(n,W) = (n - n mod W)/W x (w + DISPATCH_COST)  full rounds
+//!               + (n mod W) x shard1(W)                sharded tail
+//! ```
+//!
+//! where `width` is the shard width the plan's blocking string exposes
+//! ([`crate::runtime::backend::shard_width`]: the outermost K/Y split's
+//! trip count) and the constants price the pool dispatch and shard
+//! fork/merge overheads in the same units. Per layer the cheapest
+//! mapping wins; ties go to image-parallel — except single-image
+//! batches, where fan-out cannot help (there is nothing to fan) and
+//! ties go to intra-layer sharding, which degrades to the identical
+//! serial execution when the plan is unshardable.
+//!
+//! Everything here is pure integer arithmetic over
+//! (batch size, per-layer plan stats, worker count): the decision
+//! sequence is a deterministic function of arrival order, unit-testable
+//! without running a convolution, and — because every mapping executes
+//! the identical tiled tile kernel — free to be wrong about *speed*
+//! without ever being wrong about *bytes*.
+
+use crate::coordinator::metrics::DecisionKind;
+use crate::coordinator::pipeline::{InterpretedPipeline, Mapping};
+use crate::runtime::backend::{predicted_counters, shard_width};
+use anyhow::{anyhow, Result};
+
+/// Weight of one predicted DRAM element relative to one MAC in the
+/// scheduler's work-unit metric.
+pub const DRAM_WEIGHT: u64 = 4;
+
+/// Fixed per-pool-round cost (work units) of fanning jobs out across
+/// the shared pool and joining them.
+pub const DISPATCH_COST: u64 = 2_000;
+
+/// Per-shard cost (work units) of forking a layer into shards and
+/// merging outputs/counters — charged once per shard, so wider
+/// fan-outs must earn their keep.
+pub const SHARD_COST: u64 = 5_000;
+
+/// Which scheduling policy the batcher runs — the `--sched` CLI knob.
+/// `Model` is the cost-model default; `Image` and `Layer` pin the
+/// corresponding fixed mapping on every layer so loadgen can A/B the
+/// model against both fixed strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Score the mappings per layer and take the argmin (the default).
+    Model,
+    /// Always fan images across the pool (PR 4/5's fixed strategy).
+    Image,
+    /// Always run images serially with intra-layer sharding.
+    Layer,
+}
+
+impl SchedPolicy {
+    /// Parse a `--sched` argument.
+    pub fn parse(s: &str) -> Result<SchedPolicy> {
+        match s {
+            "model" => Ok(SchedPolicy::Model),
+            "image" => Ok(SchedPolicy::Image),
+            "layer" => Ok(SchedPolicy::Layer),
+            other => Err(anyhow!(
+                "unknown scheduling policy '{}' (known: model, image, layer)",
+                other
+            )),
+        }
+    }
+
+    /// The CLI name this policy parses from.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SchedPolicy::Model => "model",
+            SchedPolicy::Image => "image",
+            SchedPolicy::Layer => "layer",
+        }
+    }
+}
+
+/// The per-layer stats the cost model scores — extracted once from the
+/// pipeline's plans at server startup, not per batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerCost {
+    /// Multiply-accumulates one execution of the layer performs.
+    pub macs: u64,
+    /// Predicted DRAM element traffic (loads + stores) of one
+    /// execution, from the plan's Eq. 1 access counts.
+    pub dram_elems: u64,
+    /// Shard width the plan's blocking string exposes (outermost K/Y
+    /// split trip), `None` when intra-layer sharding has no parallelism
+    /// to offer and falls back to serial execution.
+    pub shard_width: Option<u64>,
+}
+
+/// One scheduling decision: the per-layer mappings to execute plus the
+/// histogram bucket it lands in.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Decision {
+    /// The mapping `run_batch_scheduled` executes, one per layer.
+    pub mappings: Vec<Mapping>,
+    /// Batch-level classification for the decision counters: `Image`
+    /// when every layer fans images, `Layer` when every layer shards,
+    /// `Hybrid` for anything mixed.
+    pub kind: DecisionKind,
+}
+
+/// The scheduler: per-layer cost stats plus the pure decision function.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SchedModel {
+    layers: Vec<LayerCost>,
+}
+
+fn ceil_div(a: u128, b: u128) -> u128 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+impl SchedModel {
+    /// Build the model from explicit per-layer stats (unit tests drive
+    /// the decision function through this without planning anything).
+    pub fn from_stats(layers: Vec<LayerCost>) -> SchedModel {
+        SchedModel { layers }
+    }
+
+    /// Extract the per-layer stats from a pipeline's plans: MACs and
+    /// predicted DRAM traffic from the analytical model, shard width
+    /// from the blocking string.
+    pub fn for_pipeline(p: &InterpretedPipeline) -> SchedModel {
+        let layers = p
+            .layers()
+            .iter()
+            .map(|l| {
+                let pred = predicted_counters(&l.plan);
+                let dram = pred.dram_input_loads
+                    + pred.dram_kernel_loads
+                    + pred.dram_output_loads
+                    + pred.dram_output_stores;
+                LayerCost {
+                    macs: pred.macs,
+                    dram_elems: dram.round() as u64,
+                    shard_width: shard_width(&l.plan),
+                }
+            })
+            .collect();
+        SchedModel { layers }
+    }
+
+    /// Number of layers the model scores.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Whether the model has no layers (never true for a real pipeline).
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Decide the mapping for a batch of `batch` images on `workers`
+    /// pool threads. Pure: same `(batch, workers, policy)` against the
+    /// same stats always returns the same decision, so a fixed arrival
+    /// order yields a fixed decision sequence.
+    pub fn decide(&self, batch: usize, workers: usize, policy: SchedPolicy) -> Decision {
+        let n = batch.max(1) as u64;
+        let w = workers.max(1) as u64;
+        let mappings: Vec<Mapping> = self
+            .layers
+            .iter()
+            .map(|lc| match policy {
+                SchedPolicy::Image => Mapping::ImageParallel,
+                SchedPolicy::Layer => Mapping::LayerSharded,
+                SchedPolicy::Model => pick(lc, n, w),
+            })
+            .collect();
+        let kind = if mappings.iter().all(|m| *m == Mapping::ImageParallel) {
+            DecisionKind::Image
+        } else if mappings.iter().all(|m| *m == Mapping::LayerSharded) {
+            DecisionKind::Layer
+        } else {
+            DecisionKind::Hybrid
+        };
+        Decision { mappings, kind }
+    }
+}
+
+/// One execution of the layer, in work units.
+fn work(lc: &LayerCost) -> u128 {
+    lc.macs as u128 + (DRAM_WEIGHT as u128) * (lc.dram_elems as u128)
+}
+
+/// Critical path of fanning `n` images over `w` workers: whole pool
+/// rounds of one layer execution plus the dispatch overhead. A single
+/// image (or a single worker) runs serially with no dispatch.
+fn image_cost(wk: u128, n: u64, w: u64) -> u128 {
+    if n <= 1 || w <= 1 {
+        (n as u128) * wk
+    } else {
+        ceil_div(n as u128, w as u128) * (wk + DISPATCH_COST as u128)
+    }
+}
+
+/// Critical path of one image with the layer sharded across `w`
+/// workers: the widest shard's slice of the work plus the per-shard
+/// fork/merge overhead; the plain serial cost when the plan is
+/// unshardable or only one worker is available.
+fn shard1_cost(wk: u128, lc: &LayerCost, w: u64) -> u128 {
+    match lc.shard_width {
+        Some(width) if width >= 2 && w >= 2 => {
+            let s = w.min(width) as u128;
+            let width = width as u128;
+            ceil_div(wk * ceil_div(width, s), width) + (SHARD_COST as u128) * s
+        }
+        _ => wk,
+    }
+}
+
+/// The model's per-layer argmin (see the module docs for the formulas
+/// and the tie rules).
+fn pick(lc: &LayerCost, n: u64, w: u64) -> Mapping {
+    let wk = work(lc);
+    let image = image_cost(wk, n, w);
+    let shard1 = shard1_cost(wk, lc, w);
+    let layer = (n as u128) * shard1;
+    let (mut best, best_cost) = if n == 1 {
+        // Nothing to fan for a lone image: on a tie, sharding — which
+        // degrades to the identical serial run when unshardable — is
+        // the only mapping that can help.
+        if layer <= image {
+            (Mapping::LayerSharded, layer)
+        } else {
+            (Mapping::ImageParallel, image)
+        }
+    } else if image <= layer {
+        (Mapping::ImageParallel, image)
+    } else {
+        (Mapping::LayerSharded, layer)
+    };
+    // Ragged batch: fan the whole rounds, shard the remainder — a
+    // candidate only when it is strictly cheaper than both pure forms.
+    if n > w && w > 1 && n % w != 0 {
+        let split = n - n % w;
+        let cost = ((split / w) as u128) * (wk + DISPATCH_COST as u128)
+            + ((n % w) as u128) * shard1;
+        if cost < best_cost {
+            best = Mapping::Hybrid {
+                split: split as usize,
+            };
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A convolution-sized layer: sharding 4 ways saves far more than
+    /// the fork/merge overhead costs.
+    fn big(width: Option<u64>) -> LayerCost {
+        LayerCost {
+            macs: 1_000_000,
+            dram_elems: 0,
+            shard_width: width,
+        }
+    }
+
+    #[test]
+    fn single_image_shards_the_layer() {
+        let m = SchedModel::from_stats(vec![big(Some(4)); 3]);
+        let d = m.decide(1, 4, SchedPolicy::Model);
+        assert_eq!(d.mappings, vec![Mapping::LayerSharded; 3]);
+        assert_eq!(d.kind, DecisionKind::Layer);
+    }
+
+    #[test]
+    fn single_image_unshardable_still_classifies_layer() {
+        // The tie rule: a lone image cannot be fanned, and LayerSharded
+        // degrades to the identical serial execution — so unshardable
+        // plans do not flip the decision (or the counters) around.
+        let m = SchedModel::from_stats(vec![big(None); 3]);
+        let d = m.decide(1, 4, SchedPolicy::Model);
+        assert_eq!(d.mappings, vec![Mapping::LayerSharded; 3]);
+        assert_eq!(d.kind, DecisionKind::Layer);
+    }
+
+    #[test]
+    fn full_batch_fans_images() {
+        let m = SchedModel::from_stats(vec![big(Some(4)); 3]);
+        let d = m.decide(4, 4, SchedPolicy::Model);
+        assert_eq!(d.mappings, vec![Mapping::ImageParallel; 3]);
+        assert_eq!(d.kind, DecisionKind::Image);
+    }
+
+    #[test]
+    fn small_batch_on_wide_pool_shards() {
+        // 2 images on 4 workers: fan-out leaves half the pool idle;
+        // sharding uses all of it on each image in turn.
+        let m = SchedModel::from_stats(vec![big(Some(4)); 3]);
+        let d = m.decide(2, 4, SchedPolicy::Model);
+        assert_eq!(d.mappings, vec![Mapping::LayerSharded; 3]);
+        assert_eq!(d.kind, DecisionKind::Layer);
+    }
+
+    #[test]
+    fn ragged_batch_splits_hybrid() {
+        // 5 images on 4 workers: 4 fan out in one full round, the
+        // straggler shards — cheaper than a second nearly-idle round
+        // and cheaper than serializing all 5.
+        let m = SchedModel::from_stats(vec![big(Some(4)); 3]);
+        let d = m.decide(5, 4, SchedPolicy::Model);
+        assert_eq!(d.mappings, vec![Mapping::Hybrid { split: 4 }; 3]);
+        assert_eq!(d.kind, DecisionKind::Hybrid);
+    }
+
+    #[test]
+    fn tiny_layer_never_pays_shard_overhead() {
+        // 10k MACs sharded 4 ways saves 7.5k units but costs 20k in
+        // fork/merge: the model keeps it serial-per-image.
+        let tiny = LayerCost {
+            macs: 10_000,
+            dram_elems: 0,
+            shard_width: Some(4),
+        };
+        let m = SchedModel::from_stats(vec![tiny]);
+        let d = m.decide(1, 4, SchedPolicy::Model);
+        assert_eq!(d.mappings, vec![Mapping::ImageParallel]);
+    }
+
+    #[test]
+    fn dram_traffic_shifts_the_balance() {
+        // Same MACs, but heavy DRAM traffic raises the per-execution
+        // work enough that sharding a lone image pays where the
+        // MAC-only layer would not.
+        let lean = LayerCost {
+            macs: 20_000,
+            dram_elems: 0,
+            shard_width: Some(4),
+        };
+        let heavy = LayerCost {
+            macs: 20_000,
+            dram_elems: 20_000,
+            shard_width: Some(4),
+        };
+        let m = SchedModel::from_stats(vec![lean, heavy]);
+        let d = m.decide(1, 4, SchedPolicy::Model);
+        assert_eq!(
+            d.mappings,
+            vec![Mapping::ImageParallel, Mapping::LayerSharded]
+        );
+        assert_eq!(d.kind, DecisionKind::Hybrid);
+    }
+
+    #[test]
+    fn fixed_policies_pin_the_mapping() {
+        let m = SchedModel::from_stats(vec![big(Some(4)); 3]);
+        for n in [1usize, 3, 8] {
+            let img = m.decide(n, 4, SchedPolicy::Image);
+            assert_eq!(img.mappings, vec![Mapping::ImageParallel; 3]);
+            assert_eq!(img.kind, DecisionKind::Image);
+            let lay = m.decide(n, 4, SchedPolicy::Layer);
+            assert_eq!(lay.mappings, vec![Mapping::LayerSharded; 3]);
+            assert_eq!(lay.kind, DecisionKind::Layer);
+        }
+    }
+
+    #[test]
+    fn single_worker_is_always_image_serial() {
+        // One worker: no mapping can parallelize anything; costs tie at
+        // n x w and image-parallel (== plain serial) wins for n > 1.
+        let m = SchedModel::from_stats(vec![big(Some(4)); 3]);
+        let d = m.decide(8, 1, SchedPolicy::Model);
+        assert_eq!(d.mappings, vec![Mapping::ImageParallel; 3]);
+    }
+
+    #[test]
+    fn decisions_are_deterministic() {
+        let m = SchedModel::from_stats(vec![big(Some(4)), big(None), big(Some(8))]);
+        for n in 1..=9usize {
+            for w in 1..=5usize {
+                for p in [SchedPolicy::Model, SchedPolicy::Image, SchedPolicy::Layer] {
+                    assert_eq!(m.decide(n, w, p), m.decide(n, w, p));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn policy_parse_roundtrips() {
+        for p in [SchedPolicy::Model, SchedPolicy::Image, SchedPolicy::Layer] {
+            assert_eq!(SchedPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(SchedPolicy::parse("fastest").is_err());
+    }
+
+    #[test]
+    fn pipeline_stats_extraction_is_consistent() {
+        use crate::optimizer::beam::BeamConfig;
+        let p = InterpretedPipeline::plan_default(&BeamConfig::quick(), "tiled", 0).unwrap();
+        let m = SchedModel::for_pipeline(&p);
+        assert_eq!(m.len(), p.layers().len());
+        for (lc, l) in m.layers.iter().zip(p.layers()) {
+            assert_eq!(lc.macs, l.plan.dims.macs());
+            assert!(lc.dram_elems > 0, "every plan moves some DRAM traffic");
+        }
+        // and the model built twice from the same pipeline is identical
+        assert_eq!(m, SchedModel::for_pipeline(&p));
+    }
+}

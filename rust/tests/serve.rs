@@ -11,7 +11,8 @@ use cnn_blocking::coordinator::InterpretedPipeline;
 use cnn_blocking::optimizer::beam::BeamConfig;
 use cnn_blocking::serve::frame::{read_frame, write_frame, MAX_FRAME_LEN};
 use cnn_blocking::serve::{
-    CoreConfig, ListenConfig, Request, Response, ServeClient, ServeCore, TcpServeHandle,
+    CoreConfig, ListenConfig, Request, Response, SchedModel, SchedPolicy, ServeClient, ServeCore,
+    TcpServeHandle,
 };
 use cnn_blocking::util::proptest::{check, Config};
 use cnn_blocking::util::rng::Rng;
@@ -302,6 +303,105 @@ fn overload_sheds_and_the_server_stays_live() {
     assert_eq!(stats.shed, shed_total);
     assert_eq!(stats.queue_cap, 1);
     server.shutdown();
+}
+
+#[test]
+fn scheduler_decisions_are_deterministic_for_an_arrival_order() {
+    // The cost model is a pure function of (batch size, plans, worker
+    // count, policy): the same arrival order must always produce the
+    // same decision sequence, including when the model is rebuilt from
+    // the same pipeline.
+    let pipeline = InterpretedPipeline::plan_default(&BeamConfig::quick(), "tiled", 0).unwrap();
+    let model_a = SchedModel::for_pipeline(&pipeline);
+    let model_b = SchedModel::for_pipeline(&pipeline);
+    let arrivals = [1usize, 5, 8, 1, 3, 8, 2, 1];
+    for workers in [1usize, 2, 4, 8] {
+        for policy in [SchedPolicy::Model, SchedPolicy::Image, SchedPolicy::Layer] {
+            let a: Vec<_> = arrivals
+                .iter()
+                .map(|&n| model_a.decide(n, workers, policy))
+                .collect();
+            let b: Vec<_> = arrivals
+                .iter()
+                .map(|&n| model_b.decide(n, workers, policy))
+                .collect();
+            assert_eq!(a, b, "workers={} policy={:?}", workers, policy);
+        }
+    }
+}
+
+#[test]
+fn every_policy_serves_byte_identical_outputs_on_mixed_batches() {
+    // Whatever the scheduler decides — model-driven or pinned by a
+    // fixed --sched policy — the merged outputs must be byte-identical
+    // to the serial in-process pipeline, across batch-of-1 singles and
+    // a ragged concurrent burst.
+    for policy in [SchedPolicy::Model, SchedPolicy::Image, SchedPolicy::Layer] {
+        let server = serve(CoreConfig {
+            max_batch: 8,
+            policy,
+            ..CoreConfig::default()
+        });
+        let addr = server.local_addr().to_string();
+        let input_len = server.core().input_len();
+
+        // Singles: the batcher sees batch-of-1 arrivals.
+        let mut client = ServeClient::connect(&addr).unwrap();
+        for seed in 0..2u64 {
+            let img = image(input_len, seed);
+            let want = server.core().pipeline().run_image(&img).unwrap();
+            match client.infer(&img).unwrap() {
+                Response::Output(got) => {
+                    assert_eq!(got.len(), want.len());
+                    for (g, w) in got.iter().zip(&want) {
+                        assert_eq!(g.to_bits(), w.to_bits(), "policy {:?}", policy);
+                    }
+                }
+                other => panic!("expected an output, got {:?}", other),
+            }
+        }
+
+        // A synchronized burst of 5 — ragged against max_batch 8, so the
+        // model policy can pick a hybrid split.
+        let burst = 5usize;
+        let barrier = Arc::new(Barrier::new(burst));
+        let workers: Vec<_> = (0..burst)
+            .map(|k| {
+                let addr = addr.clone();
+                let barrier = barrier.clone();
+                let img = image(input_len, 100 + k as u64);
+                let want = server.core().pipeline().run_image(&img).unwrap();
+                std::thread::spawn(move || {
+                    let mut c = ServeClient::connect(&addr).unwrap();
+                    barrier.wait();
+                    match c.infer(&img).unwrap() {
+                        Response::Output(got) => {
+                            assert_eq!(got.len(), want.len());
+                            for (g, w) in got.iter().zip(&want) {
+                                assert_eq!(g.to_bits(), w.to_bits());
+                            }
+                        }
+                        other => panic!("expected an output, got {:?}", other),
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+
+        // Every executed batch carried exactly one decision, and a fixed
+        // policy pins its bucket.
+        let stats = server.core().stats();
+        let total = stats.sched_image + stats.sched_layer + stats.sched_hybrid;
+        assert!(total >= 3, "expected >= 3 decided batches, got {}", total);
+        match policy {
+            SchedPolicy::Image => assert_eq!(stats.sched_image, total),
+            SchedPolicy::Layer => assert_eq!(stats.sched_layer, total),
+            SchedPolicy::Model => {}
+        }
+        server.shutdown();
+    }
 }
 
 #[test]
