@@ -26,9 +26,12 @@
 //! ([`BenchConfig::smoke`], CI's configuration) the harness also
 //! *enforces* the perf claims directly: it fails if the tiled backend
 //! is not at least as fast as the per-MAC interpreter on the smoke
-//! layer, and it runs a fixed shardable plan (the `ParGate` layer) to
+//! layer, it runs a fixed shardable plan (the `ParGate` layer) to
 //! fail if the parallel backend at `jobs` workers is slower than the
-//! single-thread tiled path.
+//! single-thread tiled path, and it runs a fixed ragged plan (the
+//! `RaggedGate` layer: K split 3 × Y split 5 on 4 workers) to fail if
+//! the 2-D shard grid is slower than 1-D K-sharding at the same worker
+//! count.
 //!
 //! [`AccessCounters`]: crate::runtime::backend::AccessCounters
 
@@ -37,7 +40,7 @@ use crate::model::dims::LayerDims;
 use crate::model::string::BlockingString;
 use crate::optimizer::beam::BeamConfig;
 use crate::plan::{Planner, Target};
-use crate::runtime::backend::{backend_by_name, ConvInputs, ConvOutput};
+use crate::runtime::backend::{backend_by_name, execute_single_axis, ConvInputs, ConvOutput};
 use crate::util::json::{self, Json};
 use crate::util::pool::with_thread_cap;
 use crate::util::table::{eng, Table};
@@ -221,13 +224,23 @@ fn time_backend(
     backend: &str,
 ) -> Result<BackendRun> {
     let be = backend_by_name(backend)?;
-    let exec = || -> Result<ConvOutput> {
+    time_run(cfg, backend, || {
         if cfg.jobs > 0 {
             with_thread_cap(cfg.jobs, || be.execute(plan, inputs))
         } else {
             be.execute(plan, inputs)
         }
-    };
+    })
+}
+
+/// The timing loop itself, open to execution paths that are not
+/// registered backends (the ragged smoke gate times the parallel
+/// backend's internal 1-D seam under the label `parallel1d`).
+fn time_run(
+    cfg: &BenchConfig,
+    label: &str,
+    exec: impl Fn() -> Result<ConvOutput>,
+) -> Result<BackendRun> {
     let mut last: Option<ConvOutput> = None;
     for _ in 0..cfg.warmup {
         std::hint::black_box(exec()?);
@@ -253,7 +266,7 @@ fn time_backend(
         })
         .collect();
     Ok(BackendRun {
-        backend: backend.to_string(),
+        backend: label.to_string(),
         macs: out.counters.macs,
         reps: times.len(),
         median_s,
@@ -355,6 +368,25 @@ pub fn run_bench(cfg: &BenchConfig) -> Result<BenchReport> {
             gate.name
         );
         layers.push(gate);
+        // The ragged-grid gate: a K split narrower than the worker count
+        // (3 shards, 4 workers) where 1-D sharding strands a worker. The
+        // 2-D K×Y grid must not be slower than the 1-D seam at the same
+        // worker count, or grid scheduling has rotted.
+        let ragged = ragged_gate_layer(cfg)?;
+        let (par1d, grid) = (
+            ragged.run_of("parallel1d").expect("gate times the 1-D seam"),
+            ragged.run_of("parallel").expect("gate times the grid"),
+        );
+        ensure!(
+            grid.mac_per_s >= par1d.mac_per_s,
+            "smoke gate: grid parallel ({} MAC/s at {} workers) is slower \
+             than 1-D sharding ({} MAC/s) on {}",
+            eng(grid.mac_per_s),
+            cfg.jobs.max(1),
+            eng(par1d.mac_per_s),
+            ragged.name
+        );
+        layers.push(ragged);
     }
     let ratios: Vec<f64> = layers
         .iter()
@@ -399,6 +431,39 @@ fn parallel_gate_layer(cfg: &BenchConfig) -> Result<LayerBench> {
         dims: d,
         plan_string: plan.string.notation(),
         runs,
+    })
+}
+
+/// Build and time the ragged-grid smoke gate layer: K split 3 × Y split
+/// 5 — a K trip *below* the worker count, exactly the shape where 1-D
+/// K-sharding strands workers (3 shards on 4 workers) and the 2-D grid
+/// is supposed to win them back (12 cells on 4 workers). Times the
+/// grid-parallel backend against its own internal single-axis seam
+/// (labeled `parallel1d`), both at `cfg.jobs` workers; CI fails if the
+/// grid is slower. ~1.4M MACs and at least 3 reps, like `ParGate`.
+fn ragged_gate_layer(cfg: &BenchConfig) -> Result<LayerBench> {
+    let d = LayerDims::conv(40, 40, 8, 12, 3, 3);
+    let s = BlockingString::parse("Fw Fh X0=8 Y0=8 C0=8 K0=4 X1=40 Y1=40 K1=12")
+        .map_err(|e| anyhow!("internal: ragged gate blocking string: {}", e))?
+        .with_window(&d);
+    let plan = Planner::for_named("RaggedGate", d).plan_string(&s)?;
+    let mut gcfg = cfg.clone();
+    gcfg.reps = cfg.reps.max(3);
+    gcfg.warmup = cfg.warmup.max(1);
+    let inputs = ConvInputs::synthetic(d, cfg.seed);
+    let jobs = cfg.jobs.max(1);
+    let par1d = time_run(&gcfg, "parallel1d", || {
+        execute_single_axis(&plan, &inputs, jobs)
+    })?;
+    let be = backend_by_name("parallel")?;
+    let grid = time_run(&gcfg, "parallel", || {
+        with_thread_cap(jobs, || be.execute(&plan, &inputs))
+    })?;
+    Ok(LayerBench {
+        name: "RaggedGate".to_string(),
+        dims: d,
+        plan_string: plan.string.notation(),
+        runs: vec![par1d, grid],
     })
 }
 
@@ -700,6 +765,35 @@ mod tests {
         assert!(par.mac_per_s > 0.0);
         // the gate plan really has an outer K split 8 ways
         assert!(gate.plan_string.contains("K1=32"), "{}", gate.plan_string);
+    }
+
+    #[test]
+    fn ragged_gate_times_the_grid_against_the_1d_seam() {
+        // Structure only, like the ParGate test — the speed assertion
+        // is CI's job in smoke mode.
+        let cfg = BenchConfig {
+            jobs: 4,
+            reps: 1,
+            warmup: 0,
+            ..tiny()
+        };
+        let gate = ragged_gate_layer(&cfg).unwrap();
+        assert_eq!(gate.name, "RaggedGate");
+        let par1d = gate.run_of("parallel1d").unwrap();
+        let grid = gate.run_of("parallel").unwrap();
+        assert_eq!(par1d.macs, grid.macs);
+        assert_eq!(grid.macs, gate.dims.macs());
+        assert!(grid.mac_per_s > 0.0 && par1d.mac_per_s > 0.0);
+        // the gate plan really is ragged: K trip 3, Y trip 5
+        assert!(gate.plan_string.contains("K1=12"), "{}", gate.plan_string);
+        let plan = Planner::for_named("RaggedGate", gate.dims)
+            .plan_string(
+                &BlockingString::parse("Fw Fh X0=8 Y0=8 C0=8 K0=4 X1=40 Y1=40 K1=12")
+                    .unwrap()
+                    .with_window(&gate.dims),
+            )
+            .unwrap();
+        assert_eq!(crate::runtime::backend::shard_width(&plan), Some(15));
     }
 
     #[test]

@@ -6,8 +6,8 @@
 //! see [`crate::plan::Planner::cache_key`] — to the best plan found, so
 //! repeat `optimize` calls and the serving path skip search entirely.
 //!
-//! Two cooperation mechanisms make one cache file a coordination point
-//! for sharded search across processes:
+//! Three cooperation mechanisms make one cache file a coordination
+//! point for sharded search across processes:
 //!
 //! * **Merge-on-save**: [`PlanCache::save`] re-reads the file and folds
 //!   in entries other writers recorded since this cache loaded, instead
@@ -20,6 +20,18 @@
 //!   across independent locks) that a worker pool reads and writes
 //!   concurrently without serializing on one mutex, then folds back into
 //!   the file-backed cache in one save.
+//! * **Job claims** ([`JobClaim`]): the same claim idea the parallel
+//!   backend's shard grid uses at execution scale, applied to planning.
+//!   Before searching a job, a cooperating engine records
+//!   `claims[key] = {owner, stamp_ms}` and saves; other engines seeing
+//!   a live foreign claim defer that job and poll for its entry instead
+//!   of duplicating the search, so a fleet of planner processes
+//!   partitions a network sweep between them. A claim is *released by
+//!   its entry landing*: `save` drops any claim whose key is present in
+//!   the merged entries, and a claim whose owner crashed mid-search
+//!   goes stale after an expiry window and is simply re-claimed.
+//!   Claims are advisory exactly like merge-on-save — a lost race costs
+//!   one duplicate search, never correctness.
 
 use super::ir::{BlockingPlan, PLAN_SCHEMA_VERSION};
 use crate::util::json::{self, parse, Json};
@@ -35,11 +47,36 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-/// File-backed plan cache: search-signature keys to best plans.
+/// An in-flight search claim on one job key: which cooperating engine
+/// is (or was) searching it, and when the claim was stamped. Stored in
+/// the cache file's `claims` section (module docs describe the
+/// protocol); released implicitly when the claimed key's entry lands.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobClaim {
+    /// Claimant identity (defaults to `pid-<process id>` in the plan
+    /// engine; anything unique per cooperating engine works).
+    pub owner: String,
+    /// Claim timestamp, milliseconds since the Unix epoch.
+    pub stamp_ms: u64,
+}
+
+impl JobClaim {
+    /// Whether the claim is older than `expiry_ms` at time `now_ms` —
+    /// its owner presumably crashed mid-search, so the job is up for
+    /// re-claiming. A clock that jumped backwards makes the claim look
+    /// fresh, which is safe (the job is merely deferred longer).
+    pub fn is_stale(&self, now_ms: u64, expiry_ms: u64) -> bool {
+        now_ms.saturating_sub(self.stamp_ms) > expiry_ms
+    }
+}
+
+/// File-backed plan cache: search-signature keys to best plans, plus
+/// the in-flight [`JobClaim`]s cooperating engines partition work with.
 #[derive(Debug, Clone)]
 pub struct PlanCache {
     path: PathBuf,
     entries: BTreeMap<String, BlockingPlan>,
+    claims: BTreeMap<String, JobClaim>,
 }
 
 impl PlanCache {
@@ -50,14 +87,18 @@ impl PlanCache {
     /// parse are dropped — both get recomputed and overwritten.
     pub fn open(path: impl Into<PathBuf>) -> Result<PlanCache> {
         let path = path.into();
-        let entries = if path.exists() {
+        let (entries, claims) = if path.exists() {
             let text = std::fs::read_to_string(&path)
                 .with_context(|| format!("reading plan cache {}", path.display()))?;
-            parse_entries(&text)
+            parse_document(&text)
         } else {
-            BTreeMap::new()
+            (BTreeMap::new(), BTreeMap::new())
         };
-        Ok(PlanCache { path, entries })
+        Ok(PlanCache {
+            path,
+            entries,
+            claims,
+        })
     }
 
     /// A cache handle bound to `path` without reading the file — for
@@ -68,6 +109,7 @@ impl PlanCache {
         PlanCache {
             path: path.into(),
             entries: BTreeMap::new(),
+            claims: BTreeMap::new(),
         }
     }
 
@@ -101,6 +143,30 @@ impl PlanCache {
         self.entries.iter()
     }
 
+    /// The in-flight claim on a job key, if any was loaded or recorded.
+    pub fn claim_of(&self, key: &str) -> Option<&JobClaim> {
+        self.claims.get(key)
+    }
+
+    /// Record this handle's claim on a job key (stamped by the caller so
+    /// the protocol stays clock-source-agnostic); lands on the next
+    /// [`PlanCache::save`]. Replaces any claim loaded for the same key —
+    /// callers only claim keys they checked were free or stale.
+    pub fn claim(&mut self, key: String, owner: impl Into<String>, stamp_ms: u64) {
+        self.claims.insert(
+            key,
+            JobClaim {
+                owner: owner.into(),
+                stamp_ms,
+            },
+        );
+    }
+
+    /// Iterate all claims in key order.
+    pub fn claims(&self) -> impl Iterator<Item = (&String, &JobClaim)> {
+        self.claims.iter()
+    }
+
     /// Write the cache back to its file (creating parent directories).
     ///
     /// Cooperates with other savers of the same file: the current
@@ -120,13 +186,21 @@ impl PlanCache {
                     .with_context(|| format!("creating {}", parent.display()))?;
             }
         }
-        let mut merged = match std::fs::read_to_string(&self.path) {
-            Ok(text) => parse_entries(&text),
-            Err(_) => BTreeMap::new(), // missing or unreadable: nothing to merge
+        let (mut merged, mut merged_claims) = match std::fs::read_to_string(&self.path) {
+            Ok(text) => parse_document(&text),
+            // missing or unreadable: nothing to merge
+            Err(_) => (BTreeMap::new(), BTreeMap::new()),
         };
         for (k, p) in &self.entries {
             merged.insert(k.clone(), p.clone());
         }
+        for (k, c) in &self.claims {
+            merged_claims.insert(k.clone(), c.clone());
+        }
+        // A claim is released by its entry landing: once any writer has
+        // recorded a plan for the key, the claim has done its job and
+        // keeping it would only make the key look in-flight forever.
+        merged_claims.retain(|k, _| !merged.contains_key(k));
         let mut entries = Json::obj();
         for (k, p) in &merged {
             entries.set(k, p.to_json());
@@ -135,6 +209,16 @@ impl PlanCache {
         root.set("version", json::unum(PLAN_SCHEMA_VERSION));
         root.set("key_format", json::unum(KEY_FORMAT));
         root.set("entries", entries);
+        if !merged_claims.is_empty() {
+            let mut claims = Json::obj();
+            for (k, c) in &merged_claims {
+                let mut cj = Json::obj();
+                cj.set("owner", Json::Str(c.owner.clone()));
+                cj.set("stamp_ms", json::unum(c.stamp_ms));
+                claims.set(k, cj);
+            }
+            root.set("claims", claims);
+        }
         let tmp = self
             .path
             .with_extension(format!("json.tmp.{}", std::process::id()));
@@ -145,14 +229,18 @@ impl PlanCache {
     }
 }
 
-fn parse_entries(text: &str) -> BTreeMap<String, BlockingPlan> {
+type Document = (BTreeMap<String, BlockingPlan>, BTreeMap<String, JobClaim>);
+
+fn parse_document(text: &str) -> Document {
     let mut entries = BTreeMap::new();
+    let mut claims = BTreeMap::new();
     if let Ok(j) = parse(text) {
         // A document keyed under another format (or predating key
-        // formats) holds entries no current lookup can ever hit: start
-        // fresh instead of dragging them through every merge.
+        // formats) holds entries no current lookup can ever hit — and
+        // claims on keys no engine will ever compute: start fresh
+        // instead of dragging them through every merge.
         if j.get("key_format").and_then(|v| v.as_u64()) != Some(KEY_FORMAT) {
-            return entries;
+            return (entries, claims);
         }
         if let Some(Json::Obj(m)) = j.get("entries") {
             for (k, v) in m {
@@ -161,8 +249,23 @@ fn parse_entries(text: &str) -> BTreeMap<String, BlockingPlan> {
                 }
             }
         }
+        if let Some(Json::Obj(m)) = j.get("claims") {
+            for (k, v) in m {
+                let owner = v.get("owner").and_then(|o| o.as_str());
+                let stamp = v.get("stamp_ms").and_then(|s| s.as_u64());
+                if let (Some(owner), Some(stamp_ms)) = (owner, stamp) {
+                    claims.insert(
+                        k.clone(),
+                        JobClaim {
+                            owner: owner.to_string(),
+                            stamp_ms,
+                        },
+                    );
+                }
+            }
+        }
     }
-    entries
+    (entries, claims)
 }
 
 /// Concurrency-safe in-memory plan index: keys are hashed across
@@ -377,6 +480,93 @@ mod tests {
         let mut file = PlanCache::open(&path).unwrap();
         shared.drain_into(&mut file);
         assert_eq!(file.len(), 64);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn claims_roundtrip_through_save_and_open() {
+        let path = temp_path("claim-roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let mut c = PlanCache::open(&path).unwrap();
+        c.claim("job-a".to_string(), "pid-1", 1_000);
+        c.save().unwrap();
+        let back = PlanCache::open(&path).unwrap();
+        let cl = back.claim_of("job-a").expect("claim survived the file");
+        assert_eq!(cl.owner, "pid-1");
+        assert_eq!(cl.stamp_ms, 1_000);
+        assert_eq!(back.claims().count(), 1);
+        assert!(back.is_empty(), "claims are not entries");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn claim_is_released_when_its_entry_lands() {
+        // The release protocol: a claim exists only while the key has no
+        // entry. Saving a plan for a claimed key drops the claim — even
+        // when entry and claim come from different handles.
+        let path = temp_path("claim-release");
+        let _ = std::fs::remove_file(&path);
+        let mut a = PlanCache::open(&path).unwrap();
+        a.claim("job".to_string(), "pid-a", 5);
+        a.save().unwrap();
+        let mut b = PlanCache::open(&path).unwrap();
+        assert!(b.claim_of("job").is_some());
+        b.put("job".to_string(), sample_plan());
+        b.save().unwrap();
+        let back = PlanCache::open(&path).unwrap();
+        assert!(back.get("job").is_some());
+        assert!(
+            back.claim_of("job").is_none(),
+            "entry landing must release the claim"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn claims_from_concurrent_writers_merge() {
+        // Two engines claim different jobs through handles opened before
+        // either saved: both claims must survive, own claims win the key.
+        let path = temp_path("claim-merge");
+        let _ = std::fs::remove_file(&path);
+        let mut a = PlanCache::open(&path).unwrap();
+        let mut b = PlanCache::open(&path).unwrap();
+        a.claim("ja".to_string(), "pid-a", 1);
+        a.save().unwrap();
+        b.claim("jb".to_string(), "pid-b", 2);
+        b.save().unwrap();
+        let c = PlanCache::open(&path).unwrap();
+        assert_eq!(c.claims().count(), 2);
+        assert_eq!(c.claim_of("ja").unwrap().owner, "pid-a");
+        assert_eq!(c.claim_of("jb").unwrap().owner, "pid-b");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_claim_detection() {
+        let c = JobClaim {
+            owner: "pid-x".to_string(),
+            stamp_ms: 10_000,
+        };
+        assert!(!c.is_stale(10_500, 1_000), "within the expiry window");
+        assert!(!c.is_stale(11_000, 1_000), "exactly at the window edge");
+        assert!(c.is_stale(11_001, 1_000), "past the window");
+        assert!(
+            !c.is_stale(9_000, 1_000),
+            "clock jumped backwards: claim looks fresh, which is safe"
+        );
+    }
+
+    #[test]
+    fn foreign_key_format_discards_claims_too() {
+        let path = temp_path("claim-keyformat");
+        let _ = std::fs::remove_file(&path);
+        let mut c = PlanCache::open(&path).unwrap();
+        c.claim("old-job".to_string(), "pid-z", 7);
+        c.save().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"key_format\": 2", "\"key_format\": 1")).unwrap();
+        let reloaded = PlanCache::open(&path).unwrap();
+        assert_eq!(reloaded.claims().count(), 0);
         let _ = std::fs::remove_file(&path);
     }
 

@@ -22,6 +22,15 @@
 //!    whose merge-on-save + atomic-rename write lets multiple processes
 //!    share one `.cnnblk/plan-cache.json` without clobbering each other.
 //!
+//! When a claimant identity is configured ([`PlanEngine::claimant`])
+//! alongside a cache file, steps 3–4 switch to a cooperative per-job
+//! protocol: claim the job in the cache file's `claims` section, search
+//! it, persist its entry the moment the search finishes (which releases
+//! the claim); jobs another engine claimed are polled for instead of
+//! re-searched. Concurrent engines over one file thereby *partition* a
+//! network sweep — the same work-stealing claim the parallel backend's
+//! shard grid uses at execution scale, applied to planning.
+//!
 //! Engine output is deterministic: strategies are pure functions of
 //! their inputs and batch plans record `search_ms = 0`, so the same
 //! request batch produces byte-identical plan JSON at any worker count.
@@ -35,7 +44,8 @@ use crate::optimizer::targets::{BespokeTarget, FixedTarget};
 use crate::util::pool::{default_threads, par_map_with, with_thread_cap, WorkerPool};
 use anyhow::{anyhow, ensure, Result};
 use std::collections::BTreeSet;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// One planning problem: a named layer plus everything that determines
@@ -144,6 +154,17 @@ pub struct PlanEngine {
     strategy: Arc<dyn SearchStrategy>,
     cache_path: Option<PathBuf>,
     workers: usize,
+    /// Cooperative-claim identity; `None` (the default) disables the
+    /// claim protocol and batches behave exactly as before.
+    claimant: Option<String>,
+    /// Age in milliseconds past which a foreign claim counts as
+    /// abandoned and its job becomes re-claimable.
+    claim_expiry_ms: u64,
+    /// Searches this engine actually ran (shared by clones) — cache
+    /// hits and claim-deferred jobs resolved by other engines do not
+    /// count, so cooperating engines can verify they partitioned a
+    /// sweep instead of duplicating it.
+    searches: Arc<AtomicUsize>,
     /// Lazily-spawned worker pool, kept alive (and shared by clones)
     /// across batches so repeated `plan_requests` calls pay thread
     /// spawn cost once.
@@ -159,6 +180,7 @@ impl std::fmt::Debug for PlanEngine {
             .field("strategy", &self.strategy.name())
             .field("cache_path", &self.cache_path)
             .field("workers", &self.workers)
+            .field("claimant", &self.claimant)
             .finish()
     }
 }
@@ -183,6 +205,9 @@ impl PlanEngine {
             strategy: default_strategy(),
             cache_path: None,
             workers: 0,
+            claimant: None,
+            claim_expiry_ms: 60_000,
+            searches: Arc::new(AtomicUsize::new(0)),
             pool: Arc::new(Mutex::new(None)),
         }
     }
@@ -257,6 +282,41 @@ impl PlanEngine {
         self
     }
 
+    /// Join the cooperative claim protocol under an identity (anything
+    /// unique per cooperating engine; `pid-<process id>` is the natural
+    /// choice for one engine per process — see
+    /// [`PlanEngine::default_claimant`]). With a claimant set *and* a
+    /// cache file attached, each unsearched job is claimed in the cache
+    /// file before searching and its entry is persisted the moment the
+    /// search finishes, so concurrent engines over the same file
+    /// partition a network sweep between them instead of all searching
+    /// everything. Without a claimant, batches behave exactly as before.
+    pub fn claimant(mut self, owner: impl Into<String>) -> PlanEngine {
+        self.claimant = Some(owner.into());
+        self
+    }
+
+    /// The conventional per-process claim identity, `pid-<process id>`.
+    pub fn default_claimant() -> String {
+        format!("pid-{}", std::process::id())
+    }
+
+    /// Age after which a foreign claim counts as abandoned (its owner
+    /// presumably crashed mid-search) and the job is re-claimed.
+    /// Default one minute — far beyond any single-layer search.
+    pub fn claim_expiry_ms(mut self, ms: u64) -> PlanEngine {
+        self.claim_expiry_ms = ms;
+        self
+    }
+
+    /// How many searches this engine (and its clones) actually ran.
+    /// Cache hits and claim-deferred jobs another engine resolved do
+    /// not count — cooperating engines sum these to check a sweep was
+    /// partitioned, not duplicated.
+    pub fn searches_performed(&self) -> usize {
+        self.searches.load(Ordering::Relaxed)
+    }
+
     /// Plan every conv layer of a named network (same names
     /// `Planner::for_network` accepts).
     pub fn plan_network(&self, network: &str) -> Result<Vec<BlockingPlan>> {
@@ -329,20 +389,31 @@ impl PlanEngine {
         }
         let fresh_keys: Vec<String> = jobs.iter().map(|(k, _)| k.clone()).collect();
 
-        // Fan unique jobs out across the persistent pool. Workers write
-        // straight into the shard index; errors come back to the caller.
+        // Fan unique jobs out. Cooperative mode (claimant + cache file)
+        // claims each job in the cache file and persists per-job so
+        // concurrent engines partition the batch; otherwise jobs spread
+        // across the persistent pool. Workers write straight into the
+        // shard index; errors come back to the caller.
         let searched_fresh = !jobs.is_empty();
-        if searched_fresh {
+        let cooperative = self.claimant.is_some() && self.cache_path.is_some();
+        if searched_fresh && cooperative {
+            let path = self.cache_path.clone().unwrap();
+            let owner = self.claimant.clone().unwrap();
+            let foreign = self.solve_cooperatively(&path, &owner, jobs, &shared)?;
+            from_disk.extend(foreign);
+        } else if searched_fresh {
             let pool = self.worker_pool();
             // Each worker's strategy parallelizes internally; divide the
             // inner width so W workers don't run W x default threads.
             let inner = (default_threads() / pool.threads()).max(1);
             let strategy = Arc::clone(&self.strategy);
             let index = Arc::clone(&shared);
+            let searches = Arc::clone(&self.searches);
             let errors: Vec<Option<anyhow::Error>> =
                 par_map_with(&pool, jobs, move |(key, req)| {
                     match with_thread_cap(inner, || solve(strategy.as_ref(), &req)) {
                         Ok(plan) => {
+                            searches.fetch_add(1, Ordering::Relaxed);
                             index.put(key, plan);
                             None
                         }
@@ -357,8 +428,10 @@ impl PlanEngine {
         // Persist before assembling output: fresh entries merge into the
         // shared file. Skipped on all-hit runs (nothing new to write —
         // rewriting would just churn the file and race other writers)
-        // and best-effort otherwise: the plans exist regardless.
-        if searched_fresh {
+        // and in cooperative mode (entries landed per-job as their
+        // searches finished); best-effort otherwise: the plans exist
+        // regardless.
+        if searched_fresh && !cooperative {
             if let Some(path) = &self.cache_path {
                 // Persist only the freshly-searched entries through a
                 // write-only handle: save()'s merge-on-save folds in the
@@ -402,6 +475,132 @@ impl PlanEngine {
             .collect::<BTreeSet<String>>()
             .len()
     }
+
+    /// Cooperative fan-out: claim-or-defer each job against the cache
+    /// file, search what we claimed (persisting each entry the moment
+    /// its search finishes — which is also what releases the claim),
+    /// then poll deferred jobs until their owners' entries land or
+    /// their claims go stale. Returns the keys resolved by *other*
+    /// engines' entries, which the caller marks as cache hits.
+    fn solve_cooperatively(
+        &self,
+        path: &Path,
+        owner: &str,
+        jobs: Vec<(String, PlanRequest)>,
+        shared: &SharedPlanCache,
+    ) -> Result<BTreeSet<String>> {
+        let mut foreign: BTreeSet<String> = BTreeSet::new();
+        let mut deferred: Vec<(String, PlanRequest)> = Vec::new();
+        for (key, req) in jobs {
+            match self.claim_or_fetch(path, owner, &key) {
+                ClaimOutcome::Entry(plan) => {
+                    shared.put(key.clone(), plan);
+                    foreign.insert(key);
+                }
+                ClaimOutcome::Claimed => self.solve_and_persist(path, &key, &req, shared)?,
+                ClaimOutcome::Deferred => deferred.push((key, req)),
+            }
+        }
+        // Foreign-claimed jobs: their owners are searching right now.
+        // Poll for entries; a claim that goes stale (owner crashed) is
+        // re-claimed here, so this loop always terminates.
+        let poll = std::time::Duration::from_millis((self.claim_expiry_ms / 20).clamp(1, 50));
+        while !deferred.is_empty() {
+            let mut still = Vec::new();
+            for (key, req) in deferred {
+                match self.claim_or_fetch(path, owner, &key) {
+                    ClaimOutcome::Entry(plan) => {
+                        shared.put(key.clone(), plan);
+                        foreign.insert(key);
+                    }
+                    ClaimOutcome::Claimed => self.solve_and_persist(path, &key, &req, shared)?,
+                    ClaimOutcome::Deferred => still.push((key, req)),
+                }
+            }
+            deferred = still;
+            if !deferred.is_empty() {
+                std::thread::sleep(poll);
+            }
+        }
+        Ok(foreign)
+    }
+
+    /// One claim transaction: re-read the cache file; a usable entry
+    /// resolves the job outright, a live foreign claim defers it, and
+    /// anything else (no claim, our own claim, a stale claim) records
+    /// our claim and saves. Engines in the same process serialize the
+    /// transaction on a global lock, so in-process cooperators always
+    /// partition cleanly; across processes the protocol is advisory,
+    /// exactly like merge-on-save — a lost race costs one duplicate
+    /// search, never correctness.
+    fn claim_or_fetch(&self, path: &Path, owner: &str, key: &str) -> ClaimOutcome {
+        static CLAIM_LOCK: Mutex<()> = Mutex::new(());
+        let _guard = CLAIM_LOCK.lock().unwrap();
+        let mut cache = match PlanCache::open(path) {
+            Ok(c) => c,
+            // An unreadable file can't hold us back: claims are
+            // advisory, so search locally and let save() sort it out.
+            Err(_) => return ClaimOutcome::Claimed,
+        };
+        if let Some(p) = cache.get(key) {
+            if p.provenance.model_version == MODEL_VERSION {
+                return ClaimOutcome::Entry(p.clone());
+            }
+        }
+        let now = now_ms();
+        if let Some(cl) = cache.claim_of(key) {
+            if cl.owner != owner && !cl.is_stale(now, self.claim_expiry_ms) {
+                return ClaimOutcome::Deferred;
+            }
+        }
+        cache.claim(key.to_string(), owner, now);
+        if let Err(e) = cache.save() {
+            // The claim is advisory: failing to record it only risks a
+            // duplicate search elsewhere, so search anyway.
+            eprintln!("warning: failed to record plan claim: {:#}", e);
+        }
+        ClaimOutcome::Claimed
+    }
+
+    /// Search one claimed job and land its entry in the cache file
+    /// immediately (releasing the claim), so deferred engines stop
+    /// polling the moment the answer exists.
+    fn solve_and_persist(
+        &self,
+        path: &Path,
+        key: &str,
+        req: &PlanRequest,
+        shared: &SharedPlanCache,
+    ) -> Result<()> {
+        let plan = solve(self.strategy.as_ref(), req)
+            .map_err(|e| e.context(format!("planning layer '{}'", req.name)))?;
+        self.searches.fetch_add(1, Ordering::Relaxed);
+        shared.put(key.to_string(), plan.clone());
+        let mut cache = PlanCache::empty_at(path);
+        cache.put(key.to_string(), plan);
+        if let Err(e) = cache.save() {
+            eprintln!("warning: failed to write plan cache: {:#}", e);
+        }
+        Ok(())
+    }
+}
+
+/// What one claim transaction decided about a job.
+enum ClaimOutcome {
+    /// Another engine (or a prior run) already recorded a usable plan.
+    Entry(BlockingPlan),
+    /// The job is ours: claim recorded, search it now.
+    Claimed,
+    /// A live foreign claim exists: poll for its entry instead.
+    Deferred,
+}
+
+/// Milliseconds since the Unix epoch (0 if the clock predates it).
+fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
 }
 
 #[cfg(test)]

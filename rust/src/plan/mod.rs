@@ -17,7 +17,7 @@ pub mod engine;
 pub mod ir;
 pub mod planner;
 
-pub use cache::{PlanCache, SharedPlanCache};
+pub use cache::{JobClaim, PlanCache, SharedPlanCache};
 pub use engine::{job_key, PlanEngine, PlanRequest};
 pub use ir::{
     BlockingPlan, PlanBuffer, PlanOutcome, Provenance, Target, MODEL_VERSION, PLAN_SCHEMA_VERSION,

@@ -28,12 +28,15 @@
 //!   loops over contiguous rows, the `K0` output-channel block in
 //!   SIMD-friendly lane chunks — with the in-tile buffers' counters
 //!   derived analytically so measured == predicted still holds exactly.
-//! * [`ParallelTiledBackend`] — the scale-out role: shards the plan's
-//!   outermost K (or Y) blocking split into disjoint iteration ranges,
-//!   runs the tiled kernel over each shard on the shared
-//!   [`crate::util::pool::WorkerPool`], and merges outputs and counters
-//!   deterministically — byte-identical output and exactly the
-//!   interpreter's counters at any worker count.
+//! * [`ParallelTiledBackend`] — the scale-out role: grids the plan's
+//!   outermost iterating K and Y blocking splits into tile-aligned
+//!   (k-range, y-range) cells, lets workers on the shared
+//!   [`crate::util::pool::WorkerPool`] claim cells through a
+//!   work-stealing atomic claim index, and merges outputs and counters
+//!   in fixed cell order regardless of claim order — byte-identical
+//!   output and exactly the interpreter's counters at any worker count
+//!   (plans with no grid axis run serially under the honest
+//!   `"parallel-serial"` label).
 //!
 //! Dispatch keys off [`BlockingPlan::provenance`]`.target` — every
 //! target executes through the tiled fast path, parallel-sharded when
@@ -63,6 +66,8 @@ mod tiled;
 pub use blocked::BlockedCpuBackend;
 pub use naive::NaiveBackend;
 pub use parallel::{shard_width, ParallelTiledBackend};
+#[doc(hidden)]
+pub use parallel::{execute_grid_claim_order, execute_single_axis, grid_cell_count};
 pub use tiled::{TiledCpuBackend, LANES};
 
 use crate::model::access;
@@ -113,8 +118,8 @@ pub fn backend_by_name(name: &str) -> Result<Arc<dyn Backend>> {
 /// differs per target is the buffer *placement* already recorded in the
 /// plan. When more than one worker thread is available
 /// (`CNNBLK_THREADS` / [`crate::util::pool::default_threads`]), the
-/// dispatch default is the [`ParallelTiledBackend`], which shards the
-/// outermost blocking split across the worker pool; with a single
+/// dispatch default is the [`ParallelTiledBackend`], which spreads the
+/// plan's K×Y shard grid across the worker pool; with a single
 /// thread it is the plain [`TiledCpuBackend`]. The
 /// [`BlockedCpuBackend`] per-MAC interpreter and the [`NaiveBackend`]
 /// oracle are only ever selected explicitly, by name.
@@ -518,7 +523,15 @@ mod tests {
         let inputs = ConvInputs::synthetic(plan.dims, 2);
         for name in BACKEND_NAMES {
             let out = plan.execute_on(name, &inputs).unwrap();
-            assert_eq!(out.counters.backend, name);
+            // The parallel backend tags gridless plans/runs with the
+            // honest "parallel-serial" provenance label.
+            assert!(
+                out.counters.backend == name
+                    || (name == "parallel" && out.counters.backend == "parallel-serial"),
+                "backend '{}' reported '{}'",
+                name,
+                out.counters.backend
+            );
         }
         assert!(plan.execute_on("cuda", &inputs).is_err());
     }
@@ -554,7 +567,8 @@ mod tests {
         let inputs = ConvInputs::synthetic(plan.dims, 1);
         let out = plan.execute(&inputs).unwrap();
         assert!(
-            out.counters.backend == "tiled" || out.counters.backend == "parallel",
+            out.counters.backend.starts_with("tiled")
+                || out.counters.backend.starts_with("parallel"),
             "dispatch default must be a tiled fast path, got '{}'",
             out.counters.backend
         );

@@ -170,12 +170,14 @@ fn fill_chain(
 
 /// Restriction of one walked loop level to a contiguous sub-range of
 /// its iterations — how [`super::ParallelTiledBackend`] splits a layer
-/// into per-worker shards. The restricted level must lie at or above
-/// the leaf boundary; every other level runs in full. Counters for
-/// buffers whose fills ride the restricted loop scale naturally (the
-/// walker simply executes fewer iterations); counters for buffers
-/// created at or above the restricted level are identical in every
-/// shard and are de-duplicated at merge time by the parallel backend.
+/// into per-worker shard-grid cells. A nest may carry several
+/// restrictions at once (one per grid axis, e.g. a K level and a Y
+/// level), each on a *distinct* level at or above the leaf boundary;
+/// every other level runs in full. Counters for buffers whose fills
+/// ride a restricted loop scale naturally (the walker simply executes
+/// fewer iterations); counters for buffers created at or above a
+/// restricted level repeat across the cells that share its range and
+/// are de-duplicated at merge time by the parallel backend.
 #[derive(Debug, Clone, Copy)]
 pub(super) struct NestShard {
     /// String position of the restricted loop level.
@@ -192,8 +194,8 @@ pub(super) struct NestShard {
 /// collect the result with [`Nest::finish`].
 pub(super) struct Nest<'a> {
     levels: Vec<LoopLevel>,
-    /// Iteration-range restriction of one level, if sharded.
-    shard: Option<NestShard>,
+    /// Iteration-range restrictions (one per grid axis), if sharded.
+    shards: Vec<NestShard>,
     /// MACs this (possibly sharded) nest is expected to execute.
     expected_macs: u64,
     /// Materialized buffers created at each string position, as
@@ -229,19 +231,19 @@ impl<'a> Nest<'a> {
     /// to execute those loops itself. `boundary == 0` materializes
     /// everything (the interpreter configuration).
     pub(super) fn new(plan: &BlockingPlan, inputs: &'a ConvInputs, boundary: usize) -> Result<Nest<'a>> {
-        Nest::with_shard(plan, inputs, boundary, None)
+        Nest::with_shards(plan, inputs, boundary, &[])
     }
 
-    /// [`Nest::new`] with an optional iteration-range restriction of one
-    /// walked level (see [`NestShard`]). Virtualized-buffer counters and
-    /// their DRAM terminals are derived from the *effective* trip counts,
-    /// so a shard's analytic counters are exactly its share of the whole
-    /// layer's.
-    pub(super) fn with_shard(
+    /// [`Nest::new`] with iteration-range restrictions of zero or more
+    /// *distinct* walked levels (see [`NestShard`]) — one per grid axis.
+    /// Virtualized-buffer counters and their DRAM terminals are derived
+    /// from the *effective* trip counts, so a cell's analytic counters
+    /// are exactly its share of the whole layer's.
+    pub(super) fn with_shards(
         plan: &BlockingPlan,
         inputs: &'a ConvInputs,
         boundary: usize,
-        shard: Option<NestShard>,
+        shards: &[NestShard],
     ) -> Result<Nest<'a>> {
         let d = plan.dims;
         ensure!(
@@ -298,7 +300,7 @@ impl<'a> Nest<'a> {
             });
         }
         let mut expected_macs = d.macs();
-        if let Some(sh) = &shard {
+        for (i, sh) in shards.iter().enumerate() {
             ensure!(
                 sh.pos >= boundary && sh.pos < n,
                 "internal: shard level {} outside walked range [{}, {})",
@@ -313,17 +315,23 @@ impl<'a> Nest<'a> {
                 sh.end,
                 levels[sh.pos].trip
             );
+            ensure!(
+                shards[..i].iter().all(|prev| prev.pos != sh.pos),
+                "internal: two shard restrictions on level {}",
+                sh.pos
+            );
             // Every trip is a factor of macs() on a validated string, so
-            // this division is exact.
+            // this division is exact, and distinct positions make the
+            // per-restriction factors independent.
             expected_macs = expected_macs / levels[sh.pos].trip * (sh.end - sh.start);
         }
         // trips_above[p] = product of *effective* trip counts at
         // positions >= p — the fill count of a buffer created at
         // position p - 1. A sharded level contributes only the
         // iterations this nest will actually run.
-        let eff = |p: usize| match &shard {
-            Some(sh) if sh.pos == p => sh.end - sh.start,
-            _ => levels[p].trip,
+        let eff = |p: usize| match shards.iter().find(|sh| sh.pos == p) {
+            Some(sh) => sh.end - sh.start,
+            None => levels[p].trip,
         };
         let mut trips_above = vec![1u64; n + 1];
         for p in (0..n).rev() {
@@ -420,7 +428,7 @@ impl<'a> Nest<'a> {
 
         Ok(Nest {
             levels,
-            shard,
+            shards: shards.to_vec(),
             expected_macs,
             by_pos,
             boundary,
@@ -475,9 +483,9 @@ impl<'a> Nest<'a> {
         };
         // A sharded level runs only its assigned iteration sub-range;
         // every other level runs in full.
-        let (it0, it1) = match &self.shard {
-            Some(sh) if sh.pos == pos => (sh.start, sh.end),
-            _ => (0, trip),
+        let (it0, it1) = match self.shards.iter().find(|sh| sh.pos == pos) {
+            Some(sh) => (sh.start, sh.end),
+            None => (0, trip),
         };
         let base = off[dim];
         let mut inner = off;

@@ -1,41 +1,55 @@
-//! Intra-layer parallel tiled execution: one layer sharded across the
-//! worker pool.
+//! Intra-layer parallel tiled execution: one layer spread over the
+//! worker pool through a 2-D K×Y shard grid.
 //!
-//! The blocked loop nests of the paper expose an outermost level of
-//! *independent* work: iterations of the outermost `K` split touch
-//! disjoint output channels (and disjoint kernel rows), iterations of
-//! the outermost `Y` split touch disjoint output rows. PR 4's serving
-//! path already exploited parallelism *across* batch images;
+//! The blocked loop nests of the paper expose outer levels of
+//! *independent* work: iterations of an outer `K` split touch disjoint
+//! output channels (and disjoint kernel rows), iterations of an outer
+//! `Y` split touch disjoint output rows. PR 4's serving path already
+//! exploited parallelism *across* batch images;
 //! [`ParallelTiledBackend`] exploits it *within* one layer — the piece
 //! that lets one big convolution scale across cores, matching how the
 //! paper's x86 implementation (Sec. 5) and the DianNao-style
 //! accelerators in PAPERS.md spread a layer over lanes.
 //!
-//! How a layer is sharded:
+//! How a layer is gridded:
 //!
-//! 1. Pick the shard level: the **outermost K split** of the plan's
-//!    blocking string, falling back to the outermost `Y` split when `K`
-//!    is unsplit outside the level-0 tile or too narrow to shard
-//!    (trip < 2). Both leave the compiled tile kernel untouched — the
-//!    restriction applies to a walked level at or above the tile
-//!    boundary.
-//! 2. Partition that level's trip count into contiguous per-worker
-//!    iteration ranges ([`NestShard`]) — ragged counts allowed (3
-//!    workers over a split of 8 get 2/3/3 iterations).
-//! 3. Run each shard through the ordinary tiled execution path
-//!    ([`super::TiledCpuBackend`]'s machinery) on the shared
-//!    [`crate::util::pool::WorkerPool`], each worker with its own
+//! 1. Pick the **grid axes**: for each of `K` and `Y`, the outermost
+//!    *iterating* (trip >= 2) split of that dim, provided it sits at or
+//!    above the level-0 tile boundary (trip-1 levels — extent-1 dims —
+//!    only ever contribute offset zero and are skipped). When the `K`
+//!    axis alone already offers at least one iteration per worker it is
+//!    used 1-D (cells stay as coarse as the machine needs); otherwise
+//!    both axes form a 2-D grid — which is what keeps every worker busy
+//!    on the narrow-split plans where a single axis (say an outermost K
+//!    split of trip 3 on 4 workers) would leave cores idle.
+//! 2. Enumerate tile-aligned grid **cells** ([`NestShard`] per axis) in
+//!    fixed row-major order, outer axis major — ragged counts allowed
+//!    (a trip of 8 over 3 ranges gets 2/3/3 iterations).
+//! 3. Workers on the shared [`crate::util::pool::WorkerPool`] **claim**
+//!    cells through the atomic claim index of
+//!    [`crate::util::pool::par_claim_with`] — work-stealing, so a
+//!    worker finishing a small cell immediately takes the next one —
+//!    and run each cell through the ordinary tiled execution path
+//!    ([`super::TiledCpuBackend`]'s machinery), each with its own
 //!    [`AccessCounters`](super::AccessCounters).
-//! 4. Merge deterministically, in fixed shard order: output regions are
-//!    disjoint (byte-identical to the serial tiled output at any worker
-//!    count), per-buffer counters **sum** for buffers created below the
-//!    shard level (each worker ran its share of the enclosing trips),
-//!    and are **accounted once** for buffers created at or above it —
-//!    those fills cross the shard boundary and are identical in every
-//!    worker, so summing would double-count what the model charges a
-//!    single execution. The same rule keyed off each tensor's outermost
-//!    buffer settles the DRAM terminals. The merged report equals the
-//!    per-MAC interpreter's exactly (`rust/tests/backend.rs` pins it).
+//! 4. Merge **in fixed cell order regardless of claim order**: output
+//!    regions are disjoint (byte-identical to the serial tiled output
+//!    at any worker count), and each buffer's counters are summed over
+//!    exactly the cells whose restrictions scale that buffer's fills.
+//!    A buffer created at position `c` refills once per iteration of
+//!    every loop *above* `c`: an axis above `c` partitions those fills
+//!    across its ranges (sum them), an axis at-or-below `c` repeats
+//!    them identically in every range (count index 0 only). A cell
+//!    therefore contributes a buffer iff every axis satisfies
+//!    `pos > c || index == 0`. The same rule keyed off each tensor's
+//!    outermost buffer settles the DRAM terminals. The merged report
+//!    equals the per-MAC interpreter's exactly (`rust/tests/backend.rs`
+//!    and `rust/tests/shard_grid.rs` pin it).
+//!
+//! Plans with no grid axis at all (e.g. a single-level string whose
+//! whole nest is one tile) still execute serially, reported under the
+//! honest `"parallel-serial"` label so counters never claim a fan-out
+//! that did not happen.
 //!
 //! Fan-out is cheap because nothing is copied: `ConvInputs` tensors are
 //! `Arc<[f32]>` (two refcount bumps per worker), the plan is shared
@@ -51,8 +65,8 @@ use crate::model::buffers::{allocate, BufferSet, Tensor};
 use crate::model::dims::Dim;
 use crate::model::string::BlockingString;
 use crate::plan::BlockingPlan;
-use crate::util::pool::{default_threads, par_map_with, shared_pool};
-use anyhow::{ensure, Result};
+use crate::util::pool::{default_threads, par_claim_with, par_map_with, shared_pool};
+use anyhow::{anyhow, ensure, Result};
 use std::sync::Arc;
 
 /// Intra-layer parallel tiled backend (see module docs). Registered as
@@ -63,36 +77,215 @@ use std::sync::Arc;
 pub struct ParallelTiledBackend {
     /// Worker-count override: `0` (the default) follows
     /// [`default_threads`] (`CNNBLK_THREADS` /
-    /// [`crate::util::pool::with_thread_cap`]); any other value shards
-    /// into at most that many ranges regardless of pool width.
+    /// [`crate::util::pool::with_thread_cap`]); any other value sizes
+    /// the grid for at most that many workers regardless of pool width.
     pub jobs: usize,
 }
 
-/// The string position to shard: the outermost `K` split at or above
-/// the tile boundary with at least 2 iterations, else the outermost `Y`
-/// split under the same conditions, else `None` (the layer runs
-/// serially — e.g. a single-level string whose whole nest is one tile).
-fn shard_level(s: &BlockingString, boundary: usize) -> Option<usize> {
-    for dim in [Dim::K, Dim::Y] {
-        if let Some(pos) = s.levels.iter().rposition(|l| l.dim == dim) {
-            if pos >= boundary && s.trip(pos) >= 2 {
-                return Some(pos);
-            }
-        }
-    }
-    None
+/// The grid axis of one dim: the outermost *iterating* (trip >= 2)
+/// level of `dim`, provided it sits at or above the tile boundary.
+/// Trip-1 levels (extent-1 dims) contribute only offset zero and are
+/// skipped. Walking past an *iterating* level would break the
+/// contiguous-region merge, so the first trip >= 2 level is the only
+/// candidate; inside the tile it cannot be restricted, hence `None`.
+fn axis_of(s: &BlockingString, boundary: usize, dim: Dim) -> Option<usize> {
+    let pos = (0..s.len())
+        .rev()
+        .find(|&p| s.levels[p].dim == dim && s.trip(p) >= 2)?;
+    (pos >= boundary).then_some(pos)
 }
 
-/// The number of independent shards [`ParallelTiledBackend`] can split
-/// `plan` into: the trip count of the shard level (outermost `K` split
-/// at or above the tile boundary with trip >= 2, else the outermost `Y`
-/// split), or `None` when the plan has no shardable level and executes
-/// serially under the "parallel" label. This is the legality/width
-/// signal the serving scheduler uses to decide whether intra-layer
-/// sharding is even worth scoring for a layer.
+/// The string positions the grid shards over, outermost first. The `K`
+/// axis is used alone when its trip already covers `workers` (one
+/// iteration per worker; coarser cells mean fewer duplicated
+/// above-the-grid fills), else K × Y when both exist, else whichever
+/// axis exists, else empty (the layer has nothing to shard).
+fn grid_axes(s: &BlockingString, boundary: usize, workers: u64) -> Vec<usize> {
+    let k = axis_of(s, boundary, Dim::K);
+    let y = axis_of(s, boundary, Dim::Y);
+    let mut axes = match (k, y) {
+        (Some(kp), Some(yp)) if s.trip(kp) < workers => vec![kp, yp],
+        (Some(kp), _) => vec![kp],
+        (None, Some(yp)) => vec![yp],
+        (None, None) => Vec::new(),
+    };
+    // Fixed enumeration order: outermost (highest position) axis major.
+    axes.sort_unstable_by(|a, b| b.cmp(a));
+    axes
+}
+
+/// One cell of the shard grid: the per-axis iteration-range
+/// restrictions handed to the nest, plus the per-axis range indices the
+/// merge's accounting rule keys on.
+#[derive(Debug, Clone)]
+struct GridCell {
+    shards: Vec<NestShard>,
+    idx: Vec<usize>,
+}
+
+/// Enumerate the grid cells for `axes` in fixed row-major order (outer
+/// axis major). Each axis with trip `T` is cut into `min(T, workers)`
+/// contiguous ragged-safe ranges (`range w` = `[w*T/S, (w+1)*T/S)`).
+fn grid_cells(s: &BlockingString, axes: &[usize], workers: u64) -> Vec<GridCell> {
+    let per_axis: Vec<Vec<NestShard>> = axes
+        .iter()
+        .map(|&pos| {
+            let trip = s.trip(pos);
+            let n = trip.min(workers.max(1));
+            (0..n)
+                .map(|w| NestShard {
+                    pos,
+                    start: trip * w / n,
+                    end: trip * (w + 1) / n,
+                })
+                .collect()
+        })
+        .collect();
+    let mut cells = vec![GridCell {
+        shards: Vec::new(),
+        idx: Vec::new(),
+    }];
+    for ranges in &per_axis {
+        let mut next = Vec::with_capacity(cells.len() * ranges.len());
+        for cell in &cells {
+            for (i, sh) in ranges.iter().enumerate() {
+                let mut shards = cell.shards.clone();
+                shards.push(*sh);
+                let mut idx = cell.idx.clone();
+                idx.push(i);
+                next.push(GridCell { shards, idx });
+            }
+        }
+        cells = next;
+    }
+    cells
+}
+
+/// The amount of independent intra-layer parallelism `plan` exposes:
+/// the product of the grid axes' trip counts (outermost iterating `K`
+/// split × outermost iterating `Y` split, each counted only when it
+/// sits at or above the tile boundary), or `None` when the plan has no
+/// grid axis and executes serially under the `"parallel-serial"` label.
+/// This is the legality/width signal the serving scheduler uses to
+/// decide whether intra-layer sharding is even worth scoring for a
+/// layer.
 pub fn shard_width(plan: &BlockingPlan) -> Option<u64> {
     let boundary = tile_boundary(&plan.string);
-    shard_level(&plan.string, boundary).map(|pos| plan.string.trip(pos))
+    let k = axis_of(&plan.string, boundary, Dim::K);
+    let y = axis_of(&plan.string, boundary, Dim::Y);
+    if k.is_none() && y.is_none() {
+        return None;
+    }
+    let trip = |a: Option<usize>| a.map(|p| plan.string.trip(p)).unwrap_or(1);
+    Some(trip(k) * trip(y))
+}
+
+/// The number of cells the shard grid would enumerate for `plan` at
+/// `workers` workers; 0 when the plan has no grid axis (serial
+/// execution). Exposed for the conformance suite in
+/// `rust/tests/shard_grid.rs`.
+#[doc(hidden)]
+pub fn grid_cell_count(plan: &BlockingPlan, workers: usize) -> usize {
+    let boundary = tile_boundary(&plan.string);
+    let axes = grid_axes(&plan.string, boundary, workers.max(1) as u64);
+    if axes.is_empty() {
+        return 0;
+    }
+    grid_cells(&plan.string, &axes, workers.max(1) as u64).len()
+}
+
+/// Execute the shard grid with an *injected* claim order: cells are run
+/// one at a time in the order `order` lists them (a permutation of
+/// `0..grid_cell_count`), then merged in fixed cell order — exactly the
+/// merge the racing pool path uses. The conformance suite drives this
+/// to prove the merged result is independent of claim order, which the
+/// nondeterministic atomic race cannot demonstrate on demand.
+#[doc(hidden)]
+pub fn execute_grid_claim_order(
+    plan: &BlockingPlan,
+    inputs: &ConvInputs,
+    workers: usize,
+    order: &[usize],
+) -> Result<ConvOutput> {
+    let boundary = tile_boundary(&plan.string);
+    let axes = grid_axes(&plan.string, boundary, workers.max(1) as u64);
+    ensure!(!axes.is_empty(), "plan has no grid axis to shard");
+    let cells = grid_cells(&plan.string, &axes, workers.max(1) as u64);
+    let mut seen = order.to_vec();
+    seen.sort_unstable();
+    ensure!(
+        seen == (0..cells.len()).collect::<Vec<_>>(),
+        "claim order {:?} is not a permutation of 0..{}",
+        order,
+        cells.len()
+    );
+    let mut outs: Vec<Option<ConvOutput>> = (0..cells.len()).map(|_| None).collect();
+    for &ci in order {
+        outs[ci] = Some(execute_tiled(plan, inputs, &cells[ci].shards, "parallel", None)?);
+    }
+    let outs = outs
+        .into_iter()
+        .map(|o| o.ok_or_else(|| anyhow!("internal: unexecuted cell")))
+        .collect::<Result<Vec<_>>>()?;
+    let bufs = allocate(&plan.string, &plan.dims);
+    merge(plan, &cells, &bufs, outs)
+}
+
+/// The pre-grid single-axis algorithm (one axis, fixed per-worker range
+/// assignment, no stealing), kept as the bench harness's baseline so
+/// the `RaggedGate` CI gate can fail if the grid is ever slower than
+/// 1-D sharding at the same worker count. Reports under the
+/// `"parallel1d"` label.
+#[doc(hidden)]
+pub fn execute_single_axis(
+    plan: &BlockingPlan,
+    inputs: &ConvInputs,
+    jobs: usize,
+) -> Result<ConvOutput> {
+    let boundary = tile_boundary(&plan.string);
+    let s = &plan.string;
+    let workers = if jobs > 0 { jobs } else { default_threads() } as u64;
+    let axis = axis_of(s, boundary, Dim::K).or_else(|| axis_of(s, boundary, Dim::Y));
+    let pos = match axis {
+        Some(pos) if workers > 1 => pos,
+        _ => return execute_tiled(plan, inputs, &[], "parallel1d", None),
+    };
+    let cells = grid_cells(s, &[pos], workers);
+    let bufs = allocate(s, &plan.dims);
+    let shared_pack = dram_weight_pack(plan, &bufs, boundary, inputs);
+    let outs: Vec<Result<ConvOutput>> = {
+        let plan = Arc::new(plan.clone());
+        let inputs = inputs.clone();
+        let sp = shared_pack.clone();
+        par_map_with(&shared_pool(), cells.clone(), move |cell| {
+            execute_tiled(&plan, &inputs, &cell.shards, "parallel1d", sp.as_ref())
+        })
+    };
+    let mut runs = Vec::with_capacity(outs.len());
+    for out in outs {
+        runs.push(out?);
+    }
+    merge(plan, &cells, &bufs, runs)
+}
+
+/// The shared read-only weight prepack, when sound: kernel buffers all
+/// inside the tile means the tile kernel reads weights straight from
+/// the immutable DRAM tensor — pack them once, shared across workers.
+fn dram_weight_pack(
+    plan: &BlockingPlan,
+    bufs: &BufferSet,
+    boundary: usize,
+    inputs: &ConvInputs,
+) -> Option<Arc<SharedPack>> {
+    if bufs.kernel.iter().all(|vb| vb.created_at < boundary) {
+        Some(Arc::new(prepack_dram_weights(
+            &plan.dims,
+            &Tile::of(plan, boundary),
+            &inputs.weights,
+        )))
+    } else {
+        None
+    }
 }
 
 impl Backend for ParallelTiledBackend {
@@ -101,162 +294,142 @@ impl Backend for ParallelTiledBackend {
     }
 
     fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput> {
-        let boundary = tile_boundary(&plan.string);
         let workers = if self.jobs > 0 {
             self.jobs
         } else {
             default_threads()
         };
-        let pos = match shard_level(&plan.string, boundary) {
-            Some(pos) if workers > 1 => pos,
-            // Nothing shardable (or a single worker): the plain tiled
-            // path, reported under this backend's name.
-            _ => return execute_tiled(plan, inputs, None, "parallel", None),
-        };
-        let trip = plan.string.trip(pos);
-        let shards = (workers as u64).min(trip);
-
-        // Kernel buffers all inside the tile means the tile kernel reads
-        // weights straight from the immutable DRAM tensor — pack them
-        // once, shared read-only across every worker.
+        if workers <= 1 {
+            // A single worker runs the plain tiled path — the grid
+            // would enumerate one whole-layer cell anyway.
+            return execute_tiled(plan, inputs, &[], "parallel", None);
+        }
+        let boundary = tile_boundary(&plan.string);
+        let axes = grid_axes(&plan.string, boundary, workers as u64);
+        if axes.is_empty() {
+            // No grid axis at all: honest provenance — this execution
+            // was serial, its counters are a single nest's.
+            return execute_tiled(plan, inputs, &[], "parallel-serial", None);
+        }
+        let cells = grid_cells(&plan.string, &axes, workers as u64);
         let bufs = allocate(&plan.string, &plan.dims);
-        let shared_pack = if bufs.kernel.iter().all(|vb| vb.created_at < boundary) {
-            Some(Arc::new(prepack_dram_weights(
-                &plan.dims,
-                &Tile::of(plan, boundary),
-                &inputs.weights,
-            )))
-        } else {
-            None
-        };
-
-        // Contiguous iteration ranges, ragged-safe: shard w runs
-        // [w*T/S, (w+1)*T/S) — non-empty whenever S <= T.
-        let ranges: Vec<NestShard> = (0..shards)
-            .map(|w| NestShard {
-                pos,
-                start: trip * w / shards,
-                end: trip * (w + 1) / shards,
-            })
-            .collect();
+        let shared_pack = dram_weight_pack(plan, &bufs, boundary, inputs);
 
         let outs: Vec<Result<ConvOutput>> = {
             let plan = Arc::new(plan.clone());
             let inputs = inputs.clone();
             let sp = shared_pack.clone();
-            par_map_with(&shared_pool(), ranges.clone(), move |sh| {
-                execute_tiled(&plan, &inputs, Some(sh), "parallel", sp.as_ref())
+            par_claim_with(&shared_pool(), cells.clone(), move |_i, cell| {
+                execute_tiled(&plan, &inputs, &cell.shards, "parallel", sp.as_ref())
             })
         };
-        let mut shards_out = Vec::with_capacity(outs.len());
+        let mut runs = Vec::with_capacity(outs.len());
         for out in outs {
-            shards_out.push(out?);
+            runs.push(out?);
         }
-        merge(plan, pos, &ranges, &bufs, shards_out)
+        merge(plan, &cells, &bufs, runs)
     }
 }
 
-/// Merge per-shard results deterministically (fixed shard order):
+/// Merge per-cell results deterministically, in fixed cell order:
 /// disjoint output regions copied into the full tensor, counters summed
-/// or accounted once per the shard-boundary rule (module docs).
+/// over exactly the cells whose restrictions scale each buffer's fills
+/// (the `pos > created_at || index == 0` rule — module docs).
 fn merge(
     plan: &BlockingPlan,
-    pos: usize,
-    ranges: &[NestShard],
+    cells: &[GridCell],
     bufs: &BufferSet,
-    shards: Vec<ConvOutput>,
+    runs: Vec<ConvOutput>,
 ) -> Result<ConvOutput> {
     let d = plan.dims;
-    let dim = plan.string.levels[pos].dim;
-    // Extent of `dim` covered per iteration of the shard level.
-    let stride = plan.string.covered_below(pos)[dim as usize] as usize;
-    let (bb, kk, yy, xx) = (
-        d.b as usize,
-        d.k as usize,
-        d.y as usize,
-        d.x as usize,
-    );
+    let s = &plan.string;
+    let (bb, kk, yy, xx) = (d.b as usize, d.k as usize, d.y as usize, d.x as usize);
     let plane = yy * xx;
 
     let mut output = vec![0f32; d.output_elems() as usize];
-    for (sh, run) in ranges.iter().zip(&shards) {
+    for (cell, run) in cells.iter().zip(&runs) {
         ensure!(
             run.output.len() == output.len(),
-            "internal: shard output length {} != layer output {}",
+            "internal: cell output length {} != layer output {}",
             run.output.len(),
             output.len()
         );
-        let (lo, hi) = (sh.start as usize * stride, sh.end as usize * stride);
-        match dim {
-            Dim::K => {
-                // Rows [lo, hi) of the K axis, per image.
-                for b in 0..bb {
-                    let at = (b * kk + lo) * plane;
-                    let len = (hi - lo) * plane;
-                    output[at..at + len].copy_from_slice(&run.output[at..at + len]);
-                }
+        // The cell's output region: its K range × its Y range, the full
+        // extent along any axis the grid does not restrict.
+        let (mut klo, mut khi, mut ylo, mut yhi) = (0usize, kk, 0usize, yy);
+        for sh in &cell.shards {
+            let dim = s.levels[sh.pos].dim;
+            let stride = s.covered_below(sh.pos)[dim as usize] as usize;
+            match dim {
+                Dim::K => (klo, khi) = (sh.start as usize * stride, sh.end as usize * stride),
+                Dim::Y => (ylo, yhi) = (sh.start as usize * stride, sh.end as usize * stride),
+                other => unreachable!("grid axis is K or Y, got {}", other),
             }
-            Dim::Y => {
-                // Rows [lo, hi) of the Y axis, per (image, channel).
-                for b in 0..bb {
-                    for k in 0..kk {
-                        let at = (b * kk + k) * plane + lo * xx;
-                        let len = (hi - lo) * xx;
-                        output[at..at + len].copy_from_slice(&run.output[at..at + len]);
-                    }
-                }
+        }
+        for b in 0..bb {
+            for k in klo..khi {
+                let at = (b * kk + k) * plane + ylo * xx;
+                let len = (yhi - ylo) * xx;
+                output[at..at + len].copy_from_slice(&run.output[at..at + len]);
             }
-            other => unreachable!("shard level is K or Y, got {}", other),
         }
     }
 
-    // Counters: start from shard 0 (operand levels, buffer identities
-    // and every at-or-above-the-boundary value are identical in all
-    // shards), then fold the remaining shards in.
-    let mut counters = shards[0].counters.clone();
-    // True when the fills of tensor `t`'s outermost buffer — the DRAM
-    // terminal of its chain — cross the shard boundary (account once).
-    let dram_once = |t: Tensor| {
+    // A cell contributes a buffer created at `c` iff every axis either
+    // sits above `c` (the cell ran a real share of that buffer's fills)
+    // or is at range index 0 (the one representative of fills that
+    // repeat identically across that axis's ranges).
+    let contributes = |cell: &GridCell, created_at: usize| {
+        cell.shards
+            .iter()
+            .zip(&cell.idx)
+            .all(|(sh, &ix)| sh.pos > created_at || ix == 0)
+    };
+    // The DRAM terminal of a tensor rides its outermost buffer; a
+    // tensor with no buffers has no block-transfer DRAM traffic (its
+    // cold stream is operand traffic), so summing its zeros is safe.
+    let dram_contributes = |cell: &GridCell, t: Tensor| {
         bufs.of(t)
             .last()
-            .map(|vb| vb.created_at >= pos)
-            .unwrap_or(false)
+            .map(|vb| contributes(cell, vb.created_at))
+            .unwrap_or(true)
     };
-    for run in &shards[1..] {
+
+    // Start from cell 0 — every range index is 0 there, so it
+    // contributes to every buffer — then fold the remaining cells in.
+    let mut counters = runs[0].counters.clone();
+    for (cell, run) in cells.iter().zip(&runs).skip(1) {
         counters.macs += run.counters.macs;
         counters.operand.input_reads += run.counters.operand.input_reads;
         counters.operand.kernel_reads += run.counters.operand.kernel_reads;
         counters.operand.output_accesses += run.counters.operand.output_accesses;
         ensure!(
             counters.buffers.len() == run.counters.buffers.len(),
-            "internal: shard buffer reports diverge"
+            "internal: cell buffer reports diverge"
         );
         for (acc, b) in counters.buffers.iter_mut().zip(&run.counters.buffers) {
             let created_at = bufs.of(b.tensor)[b.ordinal].created_at;
-            if created_at >= pos {
-                // Fills crossing the shard boundary: every worker
-                // performed the identical (re)fill of this buffer, but a
-                // single execution of the layer pays it once.
+            if !contributes(cell, created_at) {
                 continue;
             }
             acc.fill_events += b.fill_events;
             acc.fill_elems += b.fill_elems;
             acc.writeback_elems += b.writeback_elems;
         }
-        if !dram_once(Tensor::Input) {
+        if dram_contributes(cell, Tensor::Input) {
             counters.dram.input_loads += run.counters.dram.input_loads;
         }
-        if !dram_once(Tensor::Kernel) {
+        if dram_contributes(cell, Tensor::Kernel) {
             counters.dram.kernel_loads += run.counters.dram.kernel_loads;
         }
-        if !dram_once(Tensor::Output) {
+        if dram_contributes(cell, Tensor::Output) {
             counters.dram.output_loads += run.counters.dram.output_loads;
             counters.dram.output_stores += run.counters.dram.output_stores;
         }
     }
     ensure!(
         counters.macs == d.macs(),
-        "internal: merged shards executed {} MACs, layer has {}",
+        "internal: merged cells executed {} MACs, layer has {}",
         counters.macs,
         d.macs()
     );
@@ -275,27 +448,48 @@ mod tests {
     }
 
     #[test]
-    fn shard_level_prefers_outermost_k() {
+    fn axis_prefers_outermost_iterating_k() {
         let d = LayerDims::conv(8, 8, 4, 4, 3, 3);
         let s = parse(&d, "Fw Fh X0=4 Y0=4 C0=2 K0=2 C1=4 K1=4 X1=8 Y1=8");
-        // boundary 6; outermost K is K1 at position 7 with trip 2
-        assert_eq!(shard_level(&s, tile_boundary(&s)), Some(7));
+        // boundary 6; outermost iterating K is K1 at position 7, trip 2
+        let b = tile_boundary(&s);
+        assert_eq!(axis_of(&s, b, Dim::K), Some(7));
+        assert_eq!(grid_axes(&s, b, 2), vec![7]);
     }
 
     #[test]
-    fn shard_level_falls_back_to_y_then_none() {
+    fn axis_falls_back_to_y_then_none() {
         let d = LayerDims::conv(8, 8, 4, 4, 3, 3);
         // K only inside the tile: fall back to the outermost Y split.
         let s = parse(&d, "Fw Fh X0=4 Y0=4 C0=4 K0=4 X1=8 Y1=8");
         let b = tile_boundary(&s);
-        assert_eq!(shard_level(&s, b), Some(7)); // Y1
+        assert_eq!(axis_of(&s, b, Dim::K), None);
+        assert_eq!(grid_axes(&s, b, 4), vec![7]); // Y1
         // single-level string: everything is one tile, nothing to shard
         let s = parse(&d, "Fw Fh C0=4 K0=4 X0=8 Y0=8");
-        assert_eq!(shard_level(&s, tile_boundary(&s)), None);
+        assert!(grid_axes(&s, tile_boundary(&s), 4).is_empty());
     }
 
     #[test]
-    fn shard_width_reports_the_shard_level_trip() {
+    fn grid_goes_2d_only_when_k_is_narrower_than_workers() {
+        let d = LayerDims::conv(8, 8, 4, 4, 3, 3);
+        let s = parse(&d, "Fw Fh X0=4 Y0=4 C0=4 K0=2 K1=4 X1=8 Y1=8");
+        let b = tile_boundary(&s);
+        // K1 trip 2, Y1 trip 2. Two workers: K alone saturates.
+        assert_eq!(grid_axes(&s, b, 2).len(), 1);
+        // Four workers: K alone cannot, so the grid takes K × Y.
+        let axes = grid_axes(&s, b, 4);
+        assert_eq!(axes.len(), 2);
+        assert!(axes[0] > axes[1], "outer axis must come first");
+        let cells = grid_cells(&s, &axes, 4);
+        assert_eq!(cells.len(), 4); // 2 K ranges × 2 Y ranges
+        // fixed row-major order, outer axis major
+        let idx: Vec<Vec<usize>> = cells.iter().map(|c| c.idx.clone()).collect();
+        assert_eq!(idx, vec![vec![0, 0], vec![0, 1], vec![1, 0], vec![1, 1]]);
+    }
+
+    #[test]
+    fn shard_width_is_the_product_of_axis_trips() {
         use crate::plan::{Planner, Target};
         let plan = Planner::for_named("t", LayerDims::conv(8, 8, 4, 4, 3, 3))
             .target(Target::Bespoke {
@@ -305,22 +499,29 @@ mod tests {
             .plan()
             .unwrap();
         let b = tile_boundary(&plan.string);
-        match shard_level(&plan.string, b) {
-            Some(pos) => assert_eq!(shard_width(&plan), Some(plan.string.trip(pos))),
-            None => assert_eq!(shard_width(&plan), None),
-        }
-        if let Some(w) = shard_width(&plan) {
-            assert!(w >= 2, "shardable plans expose at least 2 shards, got {w}");
+        let k = axis_of(&plan.string, b, Dim::K);
+        let y = axis_of(&plan.string, b, Dim::Y);
+        match (k, y) {
+            (None, None) => assert_eq!(shard_width(&plan), None),
+            _ => {
+                let t = |a: Option<usize>| a.map(|p| plan.string.trip(p)).unwrap_or(1);
+                assert_eq!(shard_width(&plan), Some(t(k) * t(y)));
+                assert!(shard_width(&plan).unwrap() >= 2);
+            }
         }
     }
 
     #[test]
     fn ranges_partition_ragged_trips() {
-        // 3 workers over a K split 8 ways: 2/3/3 contiguous iterations.
-        let trip = 8u64;
-        let shards = 3u64;
-        let ranges: Vec<(u64, u64)> = (0..shards)
-            .map(|w| (trip * w / shards, trip * (w + 1) / shards))
+        // 3 ranges over a split of 8: 2/3/3 contiguous iterations.
+        let d = LayerDims::conv(8, 8, 4, 32, 3, 3);
+        let s = parse(&d, "Fw Fh X0=4 Y0=4 C0=4 K0=4 X1=8 Y1=8 K1=32");
+        let b = tile_boundary(&s);
+        let axes = grid_axes(&s, b, 3);
+        let cells = grid_cells(&s, &axes, 3);
+        let ranges: Vec<(u64, u64)> = cells
+            .iter()
+            .map(|c| (c.shards[0].start, c.shards[0].end))
             .collect();
         assert_eq!(ranges, vec![(0, 2), (2, 5), (5, 8)]);
     }

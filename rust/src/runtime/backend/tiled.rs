@@ -245,21 +245,21 @@ pub(super) fn prepack_dram_weights(d: &LayerDims, t: &Tile, weights: &[f32]) -> 
 }
 
 /// Run a plan through the tiled execution path: walk the nest down to
-/// the level-0 tile boundary (optionally restricted to one shard's
-/// iteration range — see [`NestShard`]) and execute each tile through
-/// the compiled kernel. `label` names the backend in the counter
-/// report; `shared_pack` supplies the read-only weight prepack when the
-/// caller knows the kernel view is the immutable DRAM tensor (ignored
-/// otherwise).
+/// the level-0 tile boundary (optionally restricted to one grid cell's
+/// iteration ranges — see [`NestShard`]; empty slice = whole layer) and
+/// execute each tile through the compiled kernel. `label` names the
+/// backend in the counter report; `shared_pack` supplies the read-only
+/// weight prepack when the caller knows the kernel view is the
+/// immutable DRAM tensor (ignored otherwise).
 pub(super) fn execute_tiled(
     plan: &BlockingPlan,
     inputs: &ConvInputs,
-    shard: Option<NestShard>,
+    shards: &[NestShard],
     label: &'static str,
     shared_pack: Option<&Arc<SharedPack>>,
 ) -> Result<ConvOutput> {
     let boundary = tile_boundary(&plan.string);
-    let mut nest = Nest::with_shard(plan, inputs, boundary, shard)?;
+    let mut nest = Nest::with_shards(plan, inputs, boundary, shards)?;
     let tile = Tile::of(plan, boundary);
     let mut pack = match shared_pack {
         // The prepack is only sound while the kernel view is DRAM.
@@ -279,7 +279,7 @@ impl Backend for TiledCpuBackend {
     }
 
     fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput> {
-        execute_tiled(plan, inputs, None, "tiled", None)
+        execute_tiled(plan, inputs, &[], "tiled", None)
     }
 }
 

@@ -36,9 +36,9 @@
 //! ```
 //!
 //! where `width` is the shard width the plan's blocking string exposes
-//! ([`crate::runtime::backend::shard_width`]: the outermost K/Y split's
-//! trip count) and the constants price the pool dispatch and shard
-//! fork/merge overheads in the same units. Per layer the cheapest
+//! ([`crate::runtime::backend::shard_width`]: the product of the K×Y
+//! shard grid's axis trip counts) and the constants price the pool
+//! dispatch and shard fork/merge overheads in the same units. Per layer the cheapest
 //! mapping wins; ties go to image-parallel — except single-image
 //! batches, where fan-out cannot help (there is nothing to fan) and
 //! ties go to intra-layer sharding, which degrades to the identical
@@ -116,9 +116,9 @@ pub struct LayerCost {
     /// Predicted DRAM element traffic (loads + stores) of one
     /// execution, from the plan's Eq. 1 access counts.
     pub dram_elems: u64,
-    /// Shard width the plan's blocking string exposes (outermost K/Y
-    /// split trip), `None` when intra-layer sharding has no parallelism
-    /// to offer and falls back to serial execution.
+    /// Shard width the plan's blocking string exposes (product of the
+    /// K×Y shard grid's axis trips), `None` when intra-layer sharding
+    /// has no parallelism to offer and falls back to serial execution.
     pub shard_width: Option<u64>,
 }
 

@@ -6,9 +6,13 @@
 //! work across cores with `std::thread::scope`, chunking work items to
 //! amortize spawn cost. The plan engine instead keeps a [`WorkerPool`]
 //! alive across batches of planning jobs and feeds it through
-//! [`par_map_with`], so a whole-network plan pays thread-spawn cost once.
+//! [`par_map_with`], so a whole-network plan pays thread-spawn cost
+//! once. [`par_claim_with`] is the work-stealing variant — workers race
+//! an atomic claim index over a shared item list — used where item
+//! costs are ragged (the parallel backend's shard-grid cells).
 
 use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -228,6 +232,64 @@ where
     out.into_iter().map(|r| r.unwrap()).collect()
 }
 
+/// Work-stealing parallel map over shared items on a persistent
+/// [`WorkerPool`], preserving input order. Where [`par_map_with`]
+/// pre-assigns one job per item, this submits `min(threads, items)`
+/// *drainer* jobs that race to claim items through one atomic claim
+/// index — so a worker that finishes a cheap item immediately claims
+/// the next unclaimed one instead of idling behind a fixed assignment.
+/// That is what keeps ragged workloads (shard-grid cells of unequal
+/// size, planning jobs of wildly different search cost) load-balanced
+/// without any up-front cost model.
+///
+/// The claim order is nondeterministic; the *result* order is not —
+/// results are slotted by item index, so callers observe the same fixed
+/// order at any worker count or claim interleaving.
+///
+/// Panics if a drainer panics (a claimed item's result never arrives).
+pub fn par_claim_with<T, R, F>(pool: &WorkerPool, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + Sync + 'static,
+    R: Send + 'static,
+    F: Fn(usize, &T) -> R + Send + Sync + 'static,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    if pool.threads() <= 1 || items.len() == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let n = items.len();
+    let items = Arc::new(items);
+    let f = Arc::new(f);
+    let next = Arc::new(AtomicUsize::new(0));
+    let (rtx, rrx) = channel::<(usize, R)>();
+    for _ in 0..pool.threads().min(n) {
+        let items = Arc::clone(&items);
+        let f = Arc::clone(&f);
+        let next = Arc::clone(&next);
+        let rtx = rtx.clone();
+        pool.submit(Box::new(move || loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= items.len() {
+                return;
+            }
+            let r = f(i, &items[i]);
+            let _ = rtx.send((i, r));
+        }));
+    }
+    drop(rtx);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    for _ in 0..n {
+        let (i, r) = rrx
+            .recv()
+            .expect("a pool drainer panicked before returning its result");
+        out[i] = Some(r);
+    }
+    out.into_iter().map(|r| r.unwrap()).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,6 +355,47 @@ mod tests {
         let pool = WorkerPool::new(0);
         assert_eq!(pool.threads(), 1);
         assert_eq!(par_map_with(&pool, vec![1, 2, 3], |x| x * x), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn claim_map_preserves_order_at_any_width() {
+        for threads in [1, 2, 3, 4, 7] {
+            let pool = WorkerPool::new(threads);
+            let items: Vec<u64> = (0..53).collect();
+            let out = par_claim_with(&pool, items, |i, x| (i as u64) * 100 + x);
+            assert_eq!(
+                out,
+                (0..53u64).map(|x| x * 101).collect::<Vec<_>>(),
+                "at {} threads",
+                threads
+            );
+        }
+    }
+
+    #[test]
+    fn claim_map_drains_ragged_workloads() {
+        // One huge item among many tiny ones: every item must still be
+        // claimed exactly once and land in its slot.
+        let pool = WorkerPool::new(4);
+        let items: Vec<u64> = (0..17).collect();
+        let out = par_claim_with(&pool, items, |_, &x| {
+            let spins = if x == 0 { 200_000 } else { 10 };
+            let mut acc = 0u64;
+            for i in 0..spins {
+                acc = acc.wrapping_add(i ^ x);
+            }
+            (x, acc)
+        });
+        let claimed: Vec<u64> = out.iter().map(|(x, _)| *x).collect();
+        assert_eq!(claimed, (0..17).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn claim_map_empty_and_single() {
+        let pool = WorkerPool::new(3);
+        let none: Vec<u32> = vec![];
+        assert!(par_claim_with(&pool, none, |_, x: &u32| *x).is_empty());
+        assert_eq!(par_claim_with(&pool, vec![5u32], |_, x| x + 1), vec![6]);
     }
 
     #[test]

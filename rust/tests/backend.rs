@@ -286,9 +286,10 @@ fn parallel_equals_tiled_and_naive_on_all_table4_layers() {
     // backend's merged output is byte-identical to the serial tiled
     // output (sharding never reassociates a shard's own partial sums)
     // and matches the naive oracle within the pinned tolerance — on the
-    // 7 searched benchmark rows and the 2 degenerate aux rows (whose
-    // single-level strings have nothing to shard, exercising the
-    // serial fallback under the "parallel" label).
+    // 7 searched benchmark rows (which always expose a grid axis, so
+    // the label stays "parallel") and the 2 degenerate aux rows (whose
+    // single-level strings have nothing to shard and must say so:
+    // "parallel-serial", the honest-provenance label).
     let par = ParallelTiledBackend::default();
     for (i, b) in all_benchmarks().into_iter().enumerate() {
         let dims = b.dims.scaled_for_sim(EXEC_MACS);
@@ -311,16 +312,25 @@ fn parallel_equals_tiled_and_naive_on_all_table4_layers() {
         let tiled = TiledCpuBackend.execute(&plan, &inputs).unwrap();
         let got = with_thread_cap(4, || par.execute(&plan, &inputs)).unwrap();
         assert_eq!(got.output, tiled.output, "{}: parallel != tiled bytes", b.name);
-        assert_eq!(got.counters.backend, "parallel");
+        assert_eq!(
+            got.counters.backend, "parallel-serial",
+            "{}: a gridless plan at 4 workers must label its serial execution honestly",
+            b.name
+        );
+        // At one worker the same plan runs the plain tiled path, which
+        // IS what "parallel" at width 1 means — no fallback happened.
+        let one = with_thread_cap(1, || par.execute(&plan, &inputs)).unwrap();
+        assert_eq!(one.output, tiled.output);
+        assert_eq!(one.counters.backend, "parallel");
     }
 }
 
 #[test]
 fn parallel_summed_counters_equal_interpreter_at_1_and_4_workers() {
-    // The shard-merge accounting pin: summed below-boundary counters
-    // plus accounted-once crossing fills must reproduce the per-MAC
-    // interpreter's report exactly — at 1 worker (serial fallback) and
-    // 4 workers (real shards), on every counter case.
+    // The shard-merge accounting pin: the fixed-order merge must
+    // reproduce the per-MAC interpreter's report exactly — at 1 worker
+    // (the plain tiled path) and 4 workers (a real shard grid), on
+    // every counter case.
     for (name, dims, levels) in counter_cases() {
         let plan = planned(&name, dims, levels);
         let inputs = ConvInputs::synthetic(dims, 7);

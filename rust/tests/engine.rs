@@ -7,7 +7,7 @@ use cnn_blocking::optimizer::beam::BeamConfig;
 use cnn_blocking::optimizer::strategy::{BeamSearch, SearchBudget, SearchStrategy};
 use cnn_blocking::optimizer::targets::Evaluator;
 use cnn_blocking::optimizer::Scored;
-use cnn_blocking::plan::{PlanEngine, Planner, Target};
+use cnn_blocking::plan::{job_key, PlanCache, PlanEngine, Planner, Target};
 use std::collections::BTreeSet;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -185,5 +185,113 @@ fn engines_cooperate_through_one_cache_file() {
         assert_eq!(p.provenance.search_ms, 0);
     }
 
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn concurrent_cooperative_engines_partition_an_alexnet_sweep() {
+    // Two claimant engines (stand-ins for two planner processes) sweep
+    // AlexNet concurrently over one cache file. The claims section must
+    // make them *partition* the unique jobs — total searches across
+    // both engines exactly equals the unique job count — while both
+    // still return the full plan set, and the merged cache must be
+    // indistinguishable from a single-process run.
+    let path = temp_cache("claims");
+    let _ = std::fs::remove_file(&path);
+    let mk = |owner: &str| {
+        PlanEngine::new()
+            .levels(2)
+            .budget(BeamConfig::quick())
+            .cache_file(&path)
+            .claimant(owner)
+    };
+    let a = mk("pid-a");
+    let b = mk("pid-b");
+    let (pa, pb) = std::thread::scope(|s| {
+        let ta = s.spawn(|| a.plan_network("AlexNet").unwrap());
+        let tb = s.spawn(|| b.plan_network("AlexNet").unwrap());
+        (ta.join().unwrap(), tb.join().unwrap())
+    });
+    assert_eq!(pa.len(), pb.len());
+    for (x, y) in pa.iter().zip(&pb) {
+        assert_eq!(x.string, y.string, "{}: engines disagree on the plan", x.name);
+        assert_eq!(x.outcome, y.outcome);
+    }
+    let unique: BTreeSet<String> = Planner::for_network("AlexNet")
+        .unwrap()
+        .layers()
+        .iter()
+        .map(|(_, d)| format!("{}", d))
+        .collect();
+    let (sa, sb) = (a.searches_performed(), b.searches_performed());
+    assert_eq!(
+        sa + sb,
+        unique.len(),
+        "claims must partition the sweep (a ran {}, b ran {}, {} unique jobs)",
+        sa,
+        sb,
+        unique.len()
+    );
+
+    // The merged cooperative cache must equal a single-process run's.
+    let solo_path = temp_cache("claims-solo");
+    let _ = std::fs::remove_file(&solo_path);
+    PlanEngine::new()
+        .levels(2)
+        .budget(BeamConfig::quick())
+        .cache_file(&solo_path)
+        .plan_network("AlexNet")
+        .unwrap();
+    let merged = PlanCache::open(&path).unwrap();
+    let solo = PlanCache::open(&solo_path).unwrap();
+    assert_eq!(merged.len(), solo.len(), "cooperative cache entry count diverged");
+    for (k, p) in solo.entries() {
+        assert_eq!(merged.get(k), Some(p), "cooperative cache diverged on {}", k);
+    }
+    assert_eq!(
+        merged.claims().count(),
+        0,
+        "every claim must have been released by its entry landing"
+    );
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&solo_path);
+}
+
+#[test]
+fn stale_claims_are_reclaimed_instead_of_waited_on() {
+    // A claim whose owner crashed mid-search: stamped at the epoch, so
+    // any positive expiry marks it stale. The engine must re-claim and
+    // search the job itself — and its entry landing must retire the
+    // dead claim from the file.
+    let path = temp_cache("stale-claim");
+    let _ = std::fs::remove_file(&path);
+    let d = LayerDims::conv(16, 16, 8, 8, 3, 3);
+    let target = Target::Bespoke {
+        budget_bytes: 256 * 1024,
+    };
+    let budget = BeamConfig::quick();
+    let engine = PlanEngine::new()
+        .target(target)
+        .levels(2)
+        .budget(budget.clone())
+        .cache_file(&path)
+        .claimant("pid-live")
+        .claim_expiry_ms(1);
+    let key = job_key(&d, &target, 2, &budget, engine.strategy_name());
+    let mut cache = PlanCache::open(&path).unwrap();
+    cache.claim(key.clone(), "pid-dead", 0);
+    cache.save().unwrap();
+
+    let plans = engine.plan_layers(&[("l".to_string(), d)]).unwrap();
+    assert_eq!(plans.len(), 1);
+    assert_eq!(
+        engine.searches_performed(),
+        1,
+        "the stale claim must be re-claimed and searched, not deferred to"
+    );
+    let back = PlanCache::open(&path).unwrap();
+    assert!(back.get(&key).is_some(), "the re-claimed job's entry must land");
+    assert_eq!(back.claims().count(), 0, "the dead claim must be retired");
     let _ = std::fs::remove_file(&path);
 }
