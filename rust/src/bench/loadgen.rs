@@ -17,8 +17,15 @@
 //! a live server: barrier-synchronized bursts larger than the admission
 //! queue until at least one request is explicitly shed, then a health
 //! check and one more inference to show the server stayed live.
+//!
+//! Chaos mode (`--chaos <seed>`) replaces the timed run with a storm
+//! against a server that is expected to be running with
+//! `CNNBLK_FAULT_SEED` armed: error responses are counted rather than
+//! fatal, and the run fails unless every request gets exactly one
+//! response, every rejection carries a retry hint, the server's own
+//! accounting balances, and the server serves again after the storm.
 
-use crate::serve::codec::{Request, Response, ServeClient};
+use crate::serve::codec::{Request, Response, RetryPolicy, ServeClient};
 use crate::serve::health::{HealthReport, StatsReport};
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
@@ -58,6 +65,15 @@ pub struct LoadgenConfig {
     /// `connections` (or the full burst width in mixed mode); any other
     /// value caps the concurrent client threads.
     pub jobs: usize,
+    /// Chaos mode (`--chaos <seed>`): replace the timed run with a
+    /// deterministic fault-tolerance storm — barrier bursts with a
+    /// seeded mix of tight per-request deadlines, driven at a server
+    /// that is expected to have `CNNBLK_FAULT_SEED` armed. Error
+    /// responses are counted instead of aborting the run; what fails
+    /// the run is a *contract* violation: a request with no response, a
+    /// rejection without a retry hint, server accounting that does not
+    /// balance, or a server that cannot serve after the storm.
+    pub chaos: Option<u64>,
     /// How long to retry the initial connection (the server may still
     /// be planning its pipeline when launched in the background).
     pub connect_timeout: Duration,
@@ -74,6 +90,7 @@ impl Default for LoadgenConfig {
             smoke: false,
             mixed: false,
             jobs: 0,
+            chaos: None,
             connect_timeout: Duration::from_secs(30),
         }
     }
@@ -148,16 +165,19 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     );
     let input_len = health.input_len;
 
-    // The timed run: either the uniform stream or the mixed
-    // singles-plus-bursts workload that exercises every scheduler
-    // decision.
-    let (ok, mut shed, errors, latencies, wall) = if cfg.mixed {
+    // The timed run: the chaos storm (which subsumes the shed probe —
+    // it asserts the retry-hint contract on every rejection itself), or
+    // the uniform stream, or the mixed singles-plus-bursts workload
+    // that exercises every scheduler decision.
+    let (ok, mut shed, errors, latencies, wall) = if cfg.chaos.is_some() {
+        chaos_run(cfg, &health)?
+    } else if cfg.mixed {
         mixed_run(cfg, input_len)?
     } else {
         uniform_run(cfg, input_len)?
     };
 
-    if cfg.smoke {
+    if cfg.smoke && cfg.chaos.is_none() {
         shed += shed_probe(&cfg.addr, cfg.connect_timeout, &health, cfg.seed)?;
     }
 
@@ -165,6 +185,38 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let health = probe.health().context("post-run health check")?;
     ensure!(health.serving, "server stopped serving during the run");
     let server = probe.stats().context("post-run stats")?;
+
+    // After a chaos storm every one of our requests was answered
+    // synchronously before the stats snapshot, so the server's own
+    // accounting must balance: everything admitted either completed,
+    // failed with an explicit error, or was shed at batch formation for
+    // an expired deadline. (Queue-full sheds are rejected *before*
+    // admission and so do not appear on the accepted side.) An outer
+    // batcher restart may legitimately drop in-flight accounting, so
+    // the exact balance is only required when none occurred; the
+    // one-sided bound — never over-accounting — always holds.
+    if cfg.chaos.is_some() {
+        let resolved = server.requests + server.errors + server.shed_deadline;
+        ensure!(
+            resolved <= server.accepted,
+            "server over-accounted after the storm: requests={} + errors={} \
+             + shed_deadline={} > accepted={}",
+            server.requests,
+            server.errors,
+            server.shed_deadline,
+            server.accepted
+        );
+        ensure!(
+            server.batcher_restarts > 0 || resolved == server.accepted,
+            "server accounting does not balance after the storm: accepted={} \
+             but requests={} + errors={} + shed_deadline={} = {}",
+            server.accepted,
+            server.requests,
+            server.errors,
+            server.shed_deadline,
+            resolved
+        );
+    }
 
     // Mixed smoke runs must prove both scheduling modes actually fired:
     // singles must have produced layer-sharded decisions and bursts
@@ -374,6 +426,133 @@ fn mixed_run(
     Ok((ok, shed, errors, latencies, wall))
 }
 
+/// How much of the chaos storm carries a tight per-request deadline,
+/// so formation-time deadline sheds fire alongside queue-full sheds
+/// and the server's injected faults.
+const CHAOS_DEADLINE_FRACTION: f64 = 0.4;
+
+/// The chaos storm: barrier-synchronized bursts against a server that
+/// is expected to be running with `CNNBLK_FAULT_SEED` armed, with a
+/// deterministic (seeded by `--chaos`) mix of tight client deadlines
+/// folded in. Unlike the uniform/mixed runs an error response is
+/// *counted, not fatal* — injected faults are supposed to surface as
+/// explicit errors. What the storm pins is the fault-tolerance
+/// contract itself:
+///
+/// * every request gets exactly one response — a dropped connection or
+///   a hung read fails the run;
+/// * every rejection, queue-full or deadline, carries a non-zero
+///   retry-after hint;
+/// * after the storm the server still reports healthy and the retrying
+///   client gets an inference through within a bounded attempt budget.
+///
+/// Returns the same tuple as [`uniform_run`].
+fn chaos_run(
+    cfg: &LoadgenConfig,
+    health: &HealthReport,
+) -> Result<(u64, u64, u64, Vec<u64>, Duration)> {
+    let chaos_seed = cfg.chaos.expect("chaos_run requires cfg.chaos");
+    let input_len = health.input_len;
+    // Bursts comfortably above the queue capacity so queue-full sheds
+    // are exercised too, but bounded so CI runners are not swamped.
+    let burst = (health.queue_cap * 2).clamp(8, 32);
+    let rounds = cfg.requests.div_ceil(burst).max(2);
+    let mut ok = 0u64;
+    let mut shed = 0u64;
+    let mut errors = 0u64;
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut deadline_rng = Rng::new(chaos_seed);
+    let t0 = Instant::now();
+    for round in 0..rounds {
+        let barrier = Arc::new(Barrier::new(burst));
+        let mut handles = Vec::new();
+        for b in 0..burst {
+            let addr = cfg.addr.clone();
+            let barrier = barrier.clone();
+            let connect_timeout = cfg.connect_timeout;
+            let img = synth_image(cfg.seed ^ 0xC4A0_5EED, (round * burst + b) as u64, input_len);
+            // 1..=30 ms: tight enough that a stalled batch expires
+            // some of them, long enough that an idle server does not.
+            let deadline_ms = deadline_rng
+                .chance(CHAOS_DEADLINE_FRACTION)
+                .then(|| 1 + deadline_rng.below(30));
+            handles.push(std::thread::spawn(move || -> Result<(u64, u64, u64, u64)> {
+                let mut client = ServeClient::connect_retry(&addr, connect_timeout)?;
+                barrier.wait();
+                let sent = Instant::now();
+                let resp = match deadline_ms {
+                    Some(ms) => client.infer_deadline(&img, ms),
+                    None => client.infer(&img),
+                }
+                .context("chaos storm: a request got no response (transport failure)")?;
+                match resp {
+                    Response::Output(out) => {
+                        ensure!(!out.is_empty(), "empty output under chaos");
+                        Ok((1, 0, 0, sent.elapsed().as_micros() as u64))
+                    }
+                    Response::Shed { retry_after_ms } => {
+                        ensure!(
+                            retry_after_ms > 0,
+                            "a shed response carried no retry-after hint"
+                        );
+                        Ok((0, 1, 0, 0))
+                    }
+                    Response::Error(msg) => {
+                        ensure!(!msg.is_empty(), "an error response carried no message");
+                        Ok((0, 0, 1, 0))
+                    }
+                    other => bail!("unexpected storm response: {:?}", other),
+                }
+            }));
+        }
+        for h in handles {
+            let (o, s, e, lat) = h
+                .join()
+                .map_err(|_| anyhow!("a chaos-storm worker panicked"))??;
+            ok += o;
+            shed += s;
+            errors += e;
+            if o > 0 {
+                latencies.push(lat);
+            }
+        }
+    }
+    // Recovery: the server must still report healthy and the retrying
+    // client must get an answer out of it within a bounded number of
+    // attempts, even though its faults are still armed.
+    let mut client = ServeClient::connect_retry(&cfg.addr, cfg.connect_timeout)?;
+    let after = client.health().context("health after the chaos storm")?;
+    ensure!(after.serving, "server unhealthy after the chaos storm");
+    let img = synth_image(cfg.seed, 0, input_len);
+    let policy = RetryPolicy {
+        max_attempts: 16,
+        jitter_seed: chaos_seed,
+        ..RetryPolicy::default()
+    };
+    let mut recovered = false;
+    for _ in 0..8 {
+        match client.request_with_retry(&Request::infer(img.clone()), &policy)? {
+            Response::Output(out) => {
+                ensure!(!out.is_empty(), "empty output after the chaos storm");
+                recovered = true;
+                ok += 1;
+                break;
+            }
+            Response::Shed { .. } => shed += 1,
+            // An injected fault can still land on a retry attempt.
+            Response::Error(_) => errors += 1,
+            other => bail!("unexpected response after the chaos storm: {:?}", other),
+        }
+    }
+    ensure!(
+        recovered,
+        "server never served an inference after the chaos storm"
+    );
+    let wall = t0.elapsed();
+    latencies.sort_unstable();
+    Ok((ok, shed, errors, latencies, wall))
+}
+
 /// Drive the server past its queue capacity: barrier-synchronized
 /// bursts of single-request connections, repeated until at least one
 /// request is explicitly shed (a handful of rounds is plenty against a
@@ -435,7 +614,7 @@ fn shed_probe(
     let img = synth_image(seed, 0, health.input_len);
     let mut answered = false;
     for _ in 0..50 {
-        match client.request(&Request::Infer(img.clone()))? {
+        match client.request(&Request::infer(img.clone()))? {
             Response::Output(_) => {
                 answered = true;
                 break;
@@ -466,7 +645,14 @@ impl LoadgenReport {
             .set("seed", json::unum(c.seed))
             .set("smoke", Json::Bool(c.smoke))
             .set("mixed", Json::Bool(c.mixed))
-            .set("jobs", json::unum(c.jobs as u64));
+            .set("jobs", json::unum(c.jobs as u64))
+            .set(
+                "chaos",
+                match c.chaos {
+                    Some(seed) => json::unum(seed),
+                    None => Json::Null,
+                },
+            );
         root.set("config", cj);
         let mut rj = Json::obj();
         rj.set("ok", json::unum(self.ok))
@@ -500,15 +686,19 @@ impl LoadgenReport {
             self.p50_us, self.p95_us, self.p99_us, self.ok
         );
         println!(
-            "server:  backend={} accepted={} shed={} mac_per_s={} queue {}/{}",
+            "server:  backend={} accepted={} shed={} shed_deadline={} mac_per_s={} queue {}/{}",
             self.health.backend,
             self.server.accepted,
             self.server.shed,
+            self.server.shed_deadline,
             crate::util::table::eng(self.server.mac_per_s),
             self.server.queue_depth,
             self.server.queue_cap,
         );
         let s = &self.server;
+        if s.batcher_restarts > 0 {
+            println!("faults:  batcher_restarts={}", s.batcher_restarts);
+        }
         if s.sched_image + s.sched_layer + s.sched_hybrid > 0 {
             println!(
                 "sched:   image={} layer={} hybrid={} (batch decisions)",
@@ -682,8 +872,10 @@ mod tests {
                 queue_cap: 64,
                 accepted: 64,
                 shed: 4,
+                shed_deadline: 0,
                 requests: 60,
                 errors: 0,
+                batcher_restarts: 0,
                 macs: 1_000_000,
                 exec_us: 5_000,
                 mac_per_s: 2e8,
@@ -741,8 +933,10 @@ mod tests {
                 queue_cap: 8,
                 accepted: 48,
                 shed: 0,
+                shed_deadline: 0,
                 requests: 48,
                 errors: 0,
+                batcher_restarts: 0,
                 macs: 1_000_000,
                 exec_us: 5_000,
                 mac_per_s: 2e8,

@@ -75,8 +75,16 @@ pub struct Metrics {
     /// path and the blocking in-process path count here).
     pub accepted: u64,
     /// Requests shed at admission (queue full — the explicit
-    /// load-shedding response, never silent buffering).
+    /// load-shedding response, never silent buffering). Disjoint from
+    /// [`Metrics::shed_deadline`]: a request is counted in exactly one.
     pub shed: u64,
+    /// Requests shed *after* admission because their client deadline had
+    /// already expired at batch formation. Disjoint from
+    /// [`Metrics::shed`]; the two sum to the total rejected.
+    pub shed_deadline: u64,
+    /// Times the supervised batcher was restarted after a panic (its
+    /// in-flight batch answered with explicit errors, not dropped).
+    pub batcher_restarts: u64,
     /// Requests completed (success only).
     pub requests: u64,
     /// Batches executed.
@@ -114,6 +122,17 @@ impl Metrics {
     /// Record one request shed at admission (queue full).
     pub fn record_shed(&mut self) {
         self.shed += 1;
+    }
+
+    /// Record one admitted request shed at batch formation because its
+    /// deadline had expired.
+    pub fn record_shed_deadline(&mut self) {
+        self.shed_deadline += 1;
+    }
+
+    /// Record one supervised batcher restart after a panic.
+    pub fn record_batcher_restart(&mut self) {
+        self.batcher_restarts += 1;
     }
 
     /// Record one completed request and its latency.
@@ -201,20 +220,26 @@ impl Metrics {
     /// and batch-formation idle time into compute throughput. `wall` is
     /// the honest fallback only when no batch durations were recorded.
     pub fn report(&self, wall: Duration) -> String {
+        // `shed=` is the TOTAL rejected (queue-full + deadline) so the
+        // headline keeps its meaning; the deadline share is broken out.
         let mut line = format!(
-            "requests={} batches={} mean_batch={:.2} padded={} shed={} errors={} \
-             p50={:?} p95={:?} p99={:?} throughput={:.1} req/s",
+            "requests={} batches={} mean_batch={:.2} padded={} shed={} shed_deadline={} \
+             errors={} p50={:?} p95={:?} p99={:?} throughput={:.1} req/s",
             self.requests,
             self.batches,
             self.mean_batch_size(),
             self.padded_slots,
-            self.shed,
+            self.shed + self.shed_deadline,
+            self.shed_deadline,
             self.errors,
             self.latency_percentile(0.50),
             self.latency_percentile(0.95),
             self.latency_percentile(0.99),
             self.requests as f64 / wall.as_secs_f64().max(1e-9),
         );
+        if self.batcher_restarts > 0 {
+            line.push_str(&format!(" batcher_restarts={}", self.batcher_restarts));
+        }
         if self.macs > 0 {
             let label = if self.backend.is_empty() {
                 "?".to_string()
@@ -314,6 +339,31 @@ mod tests {
         assert_eq!(m.shed, 2);
         let r = m.report(Duration::from_secs(1));
         assert!(r.contains("shed=2"), "{}", r);
+    }
+
+    #[test]
+    fn shed_counters_are_disjoint_and_sum_in_the_report() {
+        // The PR 9 drift fix: queue-full sheds and deadline sheds are
+        // counted exactly once each, and the report's headline `shed=`
+        // is their sum.
+        let mut m = Metrics::default();
+        m.record_shed();
+        m.record_shed();
+        m.record_shed_deadline();
+        m.record_shed_deadline();
+        m.record_shed_deadline();
+        assert_eq!(m.shed, 2, "queue sheds only");
+        assert_eq!(m.shed_deadline, 3, "deadline sheds only");
+        let total_rejected = m.shed + m.shed_deadline;
+        assert_eq!(total_rejected, 5);
+        let r = m.report(Duration::from_secs(1));
+        assert!(r.contains("shed=5"), "{}", r);
+        assert!(r.contains("shed_deadline=3"), "{}", r);
+        // No restarts -> the field stays out of the headline.
+        assert!(!r.contains("batcher_restarts"), "{}", r);
+        m.record_batcher_restart();
+        let r = m.report(Duration::from_secs(1));
+        assert!(r.contains("batcher_restarts=1"), "{}", r);
     }
 
     #[test]

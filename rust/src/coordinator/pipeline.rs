@@ -45,6 +45,7 @@ use crate::runtime::backend::{
     backend_by_name, Backend, ConvInputs, ParallelTiledBackend, TiledCpuBackend,
 };
 use crate::runtime::Manifest;
+use crate::util::fault::{self, FaultPoint};
 use crate::util::pool::{default_threads, par_map_with, shared_pool};
 use crate::util::rng::Rng;
 use anyhow::{ensure, Context, Result};
@@ -310,7 +311,7 @@ impl InterpretedPipeline {
             let inner = Arc::clone(&self.inner);
             par_map_with(&shared_pool(), (0..b).collect::<Vec<usize>>(), move |i| {
                 inner.run_image_counted(&shared[i * per..(i + 1) * per])
-            })
+            })?
         };
         let mut out = PipelineRun {
             output: Vec::with_capacity(b * self.output_len()),
@@ -390,7 +391,7 @@ impl InterpretedPipeline {
                     let inner = Arc::clone(&self.inner);
                     par_map_with(&shared_pool(), acts, move |a| {
                         inner.run_layer_image(li, a, &TiledCpuBackend)
-                    })
+                    })?
                 };
             for run in fanned {
                 let (h, m, dr) = run?;
@@ -442,6 +443,7 @@ impl PipelineInner {
         let mut macs = 0u64;
         let mut dram_elems = 0u64;
         for layer in &self.layers {
+            fault::maybe_sleep(FaultPoint::SlowLayer);
             let d = layer.plan.dims;
             // Zero-copy on the weight side: `layer.weights` is shared by
             // refcount, never duplicated per image. The activation `h`
@@ -477,6 +479,7 @@ impl PipelineInner {
         act: Vec<f32>,
         backend: &dyn Backend,
     ) -> Result<(Vec<f32>, u64, u64)> {
+        fault::maybe_sleep(FaultPoint::SlowLayer);
         let layer = &self.layers[li];
         let d = layer.plan.dims;
         let inputs = ConvInputs::from_shared(d, act.into(), Arc::clone(&layer.weights))?;

@@ -23,7 +23,8 @@ use super::metrics::Metrics;
 use super::pipeline::InterpretedPipeline;
 use crate::runtime::{Engine, Manifest, Module};
 use crate::serve::core::{collect_batch, deliver, CoreConfig, ServeCore};
-use crate::serve::queue::{self, AdmissionQueue, AdmissionReceiver, InferRequest};
+use crate::serve::lock_unpoisoned;
+use crate::serve::queue::{self, AdmissionQueue, AdmissionReceiver, InferRequest, ReqError};
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -219,7 +220,7 @@ impl InferenceServer {
     /// a queue slot when the admission queue is full (in-process
     /// backpressure — the TCP path sheds instead; see
     /// [`ServeCore::admit`]).
-    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Result<Vec<f32>, String>>> {
+    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Result<Vec<f32>, ReqError>>> {
         if let Some(core) = &self.core {
             return core.submit_blocking(input);
         }
@@ -238,10 +239,11 @@ impl InferenceServer {
             .send_blocking(InferRequest {
                 input,
                 submitted: Instant::now(),
+                deadline: None,
                 resp: resp_tx,
             })
             .map_err(|_| anyhow!("server stopped"))?;
-        self.metrics.lock().unwrap().record_admit();
+        lock_unpoisoned(&self.metrics).record_admit();
         Ok(resp_rx)
     }
 
@@ -331,10 +333,7 @@ fn executor_loop(
 
         let t0 = Instant::now();
         let result = module.run_f32(&[&flat]);
-        metrics
-            .lock()
-            .unwrap()
-            .record_batch(formed, exec_size, t0.elapsed());
+        lock_unpoisoned(&metrics).record_batch(formed, exec_size, t0.elapsed());
         deliver(batch, result, &metrics, output_len);
     }
 }

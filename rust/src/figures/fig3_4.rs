@@ -164,6 +164,9 @@ pub fn run_all(max_macs: u64) -> Vec<CacheRow> {
     par_map_with(&pool, benches, move |b| {
         with_thread_cap(inner, || run_layer(b.name, &b.dims, max_macs))
     })
+    // Figure generation has no request to fail over to: a panicking
+    // bench job keeps its pre-isolation behavior and aborts the run.
+    .expect("figure bench job panicked")
 }
 
 /// Render the rows as the paper's Figure 3 and Figure 4 tables.

@@ -75,6 +75,8 @@ fn print_help() {
          \x20         [--top 5] [--cache PATH] [--no-cache]   (repeat runs hit the plan cache)\n\
          \x20         --network AlexNet                       (plan a whole network through the\n\
          \x20         engine: repeated shapes searched once, unique shapes in parallel)\n\
+         \x20         [--cooperate]                           (with --network: claim layers in\n\
+         \x20         the shared plan cache so concurrent planners partition the work)\n\
          run       --benchmark Conv1 [--backend naive|blocked|tiled|parallel] (execute the\n\
          \x20         planned layer and print measured-vs-predicted access counts; default\n\
          \x20         backend parallel when >1 worker thread is available, tiled otherwise)\n\
@@ -109,6 +111,9 @@ fn print_help() {
          \x20         over the interpreted pipeline: length-prefixed JSON protocol, explicit\n\
          \x20         load-shedding past --queue-cap, health/stats ops; runs until killed;\n\
          \x20         --port 0 picks an ephemeral port, printed on startup)\n\
+         \x20         (clients may attach deadline_ms to infer requests: expired requests\n\
+         \x20         are shed at batch formation with a retry-after hint; set\n\
+         \x20         CNNBLK_FAULT_SEED=<seed> to arm deterministic fault injection)\n\
          loadgen   [--addr 127.0.0.1:7744] [--connections 4] [--requests 64] [--rate 0]\n\
          \x20         [--seed 42] [--out BENCH_6.json] [--connect-timeout-s 30] [--smoke]\n\
          \x20         (drive a live `serve --listen`: p50/p95/p99 client latency + server\n\
@@ -119,6 +124,10 @@ fn print_help() {
          \x20         [--mixed]                   (singles + synchronized bursts: the workload\n\
          \x20         that exercises every scheduler decision; with --smoke also fails unless\n\
          \x20         the server's decision counters show both modes fired)\n\
+         \x20         [--chaos SEED]              (fault-tolerance storm against a server\n\
+         \x20         running with CNNBLK_FAULT_SEED: errors are counted, not fatal; fails\n\
+         \x20         unless every request is answered, every rejection carries a retry\n\
+         \x20         hint, accounting balances, and the server serves after the storm)\n\
          \x20         [--ab-image ADDR] [--ab-layer ADDR] (drive the same mixed workload at\n\
          \x20         two fixed-policy servers and write a three-way BENCH_7.json comparison;\n\
          \x20         with --smoke, fails if the model policy is slower than the worse fixed\n\
@@ -186,6 +195,7 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
             "full-search",
             "cache",
             "no-cache",
+            "cooperate",
         ],
     )?;
     let levels = args.get_u64("levels", 3) as usize;
@@ -212,6 +222,14 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
             .beam(beam_cfg(args))
             .strategy_named(&strategy)?
             .jobs(args.get_u64("jobs", 0) as usize);
+        if args.has("cooperate") {
+            anyhow::ensure!(
+                !args.has("no-cache"),
+                "--cooperate partitions work through the shared cache file \
+                 and cannot be combined with --no-cache"
+            );
+            np = np.claimant(cnn_blocking::plan::PlanEngine::default_claimant());
+        }
         if !args.has("no-cache") {
             np = np.cache_file(args.get_or("cache", DEFAULT_CACHE));
         }
@@ -734,6 +752,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             host: args.get_or("host", "127.0.0.1"),
             port: args.get_u64("port", 7744) as u16,
         };
+        // Arm fault injection only *after* the pipeline was planned and
+        // the core started: chaos exercises the serving layer, not
+        // startup, and a fault-free run must stay byte-identical.
+        if let Some(seed) = cnn_blocking::util::fault::arm_from_env() {
+            println!("fault injection armed (CNNBLK_FAULT_SEED={})", seed);
+        }
         let handle = TcpServeHandle::start(core, &listen)?;
         println!(
             "listening on {} (backend '{}', sched '{}', queue cap {}, max batch {}); \
@@ -767,6 +791,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let n = args.get_u64("requests", 256) as usize;
     let server = InferenceServer::start(cfg)?;
+    // Same placement rule as --listen: arm only after startup.
+    if let Some(seed) = cnn_blocking::util::fault::arm_from_env() {
+        println!("fault injection armed (CNNBLK_FAULT_SEED={})", seed);
+    }
     match &interpret {
         Some(b) => println!("server up (interpreted via '{}' backend); pipeline plans:", b),
         None => println!("server up; pipeline plans from the artifact manifest:"),
@@ -806,6 +834,7 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
             "smoke",
             "jobs",
             "mixed",
+            "chaos",
             "ab-image",
             "ab-layer",
         ],
@@ -819,9 +848,24 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         smoke: args.has("smoke"),
         mixed: args.has("mixed"),
         jobs: args.get_u64("jobs", 0) as usize,
+        chaos: match args.get("chaos") {
+            Some(s) => Some(s.parse::<u64>().map_err(|_| {
+                anyhow::anyhow!("--chaos expects an integer storm seed, got {:?}", s)
+            })?),
+            None => None,
+        },
         connect_timeout: Duration::from_secs(args.get_u64("connect-timeout-s", 30)),
     };
+    anyhow::ensure!(
+        cfg.chaos.is_none() || !cfg.mixed,
+        "--chaos replaces the timed run with the fault-tolerance storm \
+         and cannot be combined with --mixed"
+    );
     let ab = (args.get("ab-image"), args.get("ab-layer"));
+    anyhow::ensure!(
+        cfg.chaos.is_none() || ab == (None, None),
+        "--chaos cannot be combined with the --ab-image/--ab-layer comparison"
+    );
     match ab {
         (Some(image_addr), Some(layer_addr)) => {
             let report = run_ab(&cfg, image_addr, layer_addr)?;

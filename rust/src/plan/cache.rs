@@ -34,6 +34,7 @@
 //!   one duplicate search, never correctness.
 
 use super::ir::{BlockingPlan, PLAN_SCHEMA_VERSION};
+use crate::util::fault::{self, FaultPoint};
 use crate::util::json::{self, parse, Json};
 
 /// Version of the cache *key* format (bump when `plan::engine::job_key`
@@ -82,15 +83,25 @@ pub struct PlanCache {
 impl PlanCache {
     /// Open a cache file, loading existing entries; a missing file is an
     /// empty cache. The cache is purely regenerable, so damage is never
-    /// fatal: a document that fails to parse (truncated write, schema
-    /// drift) resets to empty, and individual entries that no longer
-    /// parse are dropped — both get recomputed and overwritten.
+    /// fatal: a document that fails to parse as JSON (a torn write from
+    /// a crashed process, disk corruption) is **quarantined** — renamed
+    /// to a `.corrupt-<pid>` sibling for post-mortem — and the cache
+    /// starts fresh; a document under a foreign key format resets
+    /// silently (it is well-formed, just unusable); individual entries
+    /// that no longer parse are dropped. Everything discarded gets
+    /// recomputed and overwritten.
     pub fn open(path: impl Into<PathBuf>) -> Result<PlanCache> {
         let path = path.into();
         let (entries, claims) = if path.exists() {
             let text = std::fs::read_to_string(&path)
                 .with_context(|| format!("reading plan cache {}", path.display()))?;
-            parse_document(&text)
+            match parse(&text) {
+                Ok(doc) => document_from_json(&doc),
+                Err(_) => {
+                    quarantine_corrupt(&path);
+                    (BTreeMap::new(), BTreeMap::new())
+                }
+            }
         } else {
             (BTreeMap::new(), BTreeMap::new())
         };
@@ -222,46 +233,92 @@ impl PlanCache {
         let tmp = self
             .path
             .with_extension(format!("json.tmp.{}", std::process::id()));
-        std::fs::write(&tmp, root.pretty())
+        let body = root.pretty();
+        // Chaos site: a torn write — half the document lands in the temp
+        // file and the save fails *before* the rename. The protocol's
+        // whole point is that the real cache file never sees the tear;
+        // `rust/tests/chaos.rs` pins that a reopen after this still
+        // parses (or, at worst, quarantines) instead of wedging.
+        if fault::should_fire(FaultPoint::TornCacheWrite) {
+            let _ = std::fs::write(&tmp, &body.as_bytes()[..body.len() / 2]);
+            anyhow::bail!(
+                "injected fault: torn plan-cache write ({} left truncated)",
+                tmp.display()
+            );
+        }
+        std::fs::write(&tmp, body)
             .with_context(|| format!("writing plan cache {}", tmp.display()))?;
         std::fs::rename(&tmp, &self.path)
             .with_context(|| format!("replacing plan cache {}", self.path.display()))
     }
 }
 
+/// Move an unparseable cache file aside to a `.corrupt-<pid>` sibling so
+/// planning starts fresh without destroying the evidence. Best-effort:
+/// if the rename itself fails the file is simply left in place (the next
+/// save's atomic rename overwrites it).
+fn quarantine_corrupt(path: &Path) {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "plan-cache.json".to_string());
+    let corrupt = path.with_file_name(format!("{}.corrupt-{}", name, std::process::id()));
+    match std::fs::rename(path, &corrupt) {
+        Ok(()) => eprintln!(
+            "cnnblk: plan cache {} is not valid JSON; quarantined to {} and starting fresh",
+            path.display(),
+            corrupt.display()
+        ),
+        Err(e) => eprintln!(
+            "cnnblk: plan cache {} is not valid JSON and could not be quarantined ({}); \
+             starting fresh",
+            path.display(),
+            e
+        ),
+    }
+}
+
 type Document = (BTreeMap<String, BlockingPlan>, BTreeMap<String, JobClaim>);
 
+/// Lenient text parse used by `save`'s merge step: malformed on-disk
+/// text just means nothing to merge (never quarantines — only `open`
+/// decides that).
 fn parse_document(text: &str) -> Document {
+    match parse(text) {
+        Ok(j) => document_from_json(&j),
+        Err(_) => (BTreeMap::new(), BTreeMap::new()),
+    }
+}
+
+fn document_from_json(j: &Json) -> Document {
     let mut entries = BTreeMap::new();
     let mut claims = BTreeMap::new();
-    if let Ok(j) = parse(text) {
-        // A document keyed under another format (or predating key
-        // formats) holds entries no current lookup can ever hit — and
-        // claims on keys no engine will ever compute: start fresh
-        // instead of dragging them through every merge.
-        if j.get("key_format").and_then(|v| v.as_u64()) != Some(KEY_FORMAT) {
-            return (entries, claims);
-        }
-        if let Some(Json::Obj(m)) = j.get("entries") {
-            for (k, v) in m {
-                if let Ok(p) = BlockingPlan::from_json(v) {
-                    entries.insert(k.clone(), p);
-                }
+    // A document keyed under another format (or predating key
+    // formats) holds entries no current lookup can ever hit — and
+    // claims on keys no engine will ever compute: start fresh
+    // instead of dragging them through every merge.
+    if j.get("key_format").and_then(|v| v.as_u64()) != Some(KEY_FORMAT) {
+        return (entries, claims);
+    }
+    if let Some(Json::Obj(m)) = j.get("entries") {
+        for (k, v) in m {
+            if let Ok(p) = BlockingPlan::from_json(v) {
+                entries.insert(k.clone(), p);
             }
         }
-        if let Some(Json::Obj(m)) = j.get("claims") {
-            for (k, v) in m {
-                let owner = v.get("owner").and_then(|o| o.as_str());
-                let stamp = v.get("stamp_ms").and_then(|s| s.as_u64());
-                if let (Some(owner), Some(stamp_ms)) = (owner, stamp) {
-                    claims.insert(
-                        k.clone(),
-                        JobClaim {
-                            owner: owner.to_string(),
-                            stamp_ms,
-                        },
-                    );
-                }
+    }
+    if let Some(Json::Obj(m)) = j.get("claims") {
+        for (k, v) in m {
+            let owner = v.get("owner").and_then(|o| o.as_str());
+            let stamp = v.get("stamp_ms").and_then(|s| s.as_u64());
+            if let (Some(owner), Some(stamp_ms)) = (owner, stamp) {
+                claims.insert(
+                    k.clone(),
+                    JobClaim {
+                        owner: owner.to_string(),
+                        stamp_ms,
+                    },
+                );
             }
         }
     }
@@ -385,11 +442,53 @@ mod tests {
     #[test]
     fn corrupt_file_resets_to_empty() {
         // The cache is regenerable: a truncated/corrupt document must not
-        // wedge planning, it just forgets.
+        // wedge planning, it just forgets — and quarantines the broken
+        // file to a `.corrupt-<pid>` sibling for post-mortem.
         let path = temp_path("corrupt");
         std::fs::write(&path, "{not json").unwrap();
         let c = PlanCache::open(&path).unwrap();
         assert!(c.is_empty());
+        let quarantined = path.with_file_name(format!(
+            "{}.corrupt-{}",
+            path.file_name().unwrap().to_string_lossy(),
+            std::process::id()
+        ));
+        assert!(quarantined.exists(), "corrupt file must be moved aside");
+        assert!(!path.exists(), "the original path starts fresh");
+        assert_eq!(
+            std::fs::read_to_string(&quarantined).unwrap(),
+            "{not json",
+            "quarantine preserves the evidence byte-for-byte"
+        );
+        // A save after quarantine recreates the file cleanly.
+        let mut c = c;
+        c.put("fresh".to_string(), sample_plan());
+        c.save().unwrap();
+        assert_eq!(PlanCache::open(&path).unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&quarantined);
+    }
+
+    #[test]
+    fn foreign_key_format_is_not_quarantined() {
+        // Well-formed JSON under another key format resets silently —
+        // quarantine is reserved for documents that fail to parse.
+        let path = temp_path("keyformat-silent");
+        let _ = std::fs::remove_file(&path);
+        let mut c = PlanCache::open(&path).unwrap();
+        c.put("k".to_string(), sample_plan());
+        c.save().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"key_format\": 2", "\"key_format\": 1")).unwrap();
+        let reloaded = PlanCache::open(&path).unwrap();
+        assert!(reloaded.is_empty());
+        assert!(path.exists(), "a readable document stays in place");
+        let quarantined = path.with_file_name(format!(
+            "{}.corrupt-{}",
+            path.file_name().unwrap().to_string_lossy(),
+            std::process::id()
+        ));
+        assert!(!quarantined.exists());
         let _ = std::fs::remove_file(&path);
     }
 

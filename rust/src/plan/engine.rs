@@ -419,7 +419,7 @@ impl PlanEngine {
                         }
                         Err(e) => Some(e.context(format!("planning layer '{}'", req.name))),
                     }
-                });
+                })?;
             if let Some(e) = errors.into_iter().flatten().next() {
                 return Err(e);
             }

@@ -117,6 +117,7 @@ impl Planner {
             layers,
             template: Planner::for_named("layer", LayerDims::conv(1, 1, 1, 1, 1, 1)),
             workers: 0,
+            claimant: None,
         })
     }
 
@@ -338,6 +339,7 @@ pub struct NetworkPlanner {
     layers: Vec<(String, LayerDims)>,
     template: Planner,
     workers: usize,
+    claimant: Option<String>,
 }
 
 impl NetworkPlanner {
@@ -396,6 +398,15 @@ impl NetworkPlanner {
         self
     }
 
+    /// Cooperate with other planner processes sharing the cache file:
+    /// claim jobs under `owner` before searching them and defer jobs
+    /// with a live foreign claim (see [`PlanEngine::claimant`]). Only
+    /// takes effect when a cache file is attached — claims live in it.
+    pub fn claimant(mut self, owner: impl Into<String>) -> NetworkPlanner {
+        self.claimant = Some(owner.into());
+        self
+    }
+
     /// The configured [`PlanEngine`] this planner drives — exposed so
     /// callers can reuse it for further batches against the same cache.
     pub fn engine(&self) -> PlanEngine {
@@ -408,6 +419,9 @@ impl NetworkPlanner {
             .jobs(self.workers);
         if let Some(path) = &t.cache_path {
             engine = engine.cache_file(path.clone());
+        }
+        if let Some(owner) = &self.claimant {
+            engine = engine.claimant(owner.clone());
         }
         engine
     }

@@ -259,7 +259,7 @@ pub fn execute_single_axis(
         let sp = shared_pack.clone();
         par_map_with(&shared_pool(), cells.clone(), move |cell| {
             execute_tiled(&plan, &inputs, &cell.shards, "parallel1d", sp.as_ref())
-        })
+        })?
     };
     let mut runs = Vec::with_capacity(outs.len());
     for out in outs {
@@ -321,7 +321,7 @@ impl Backend for ParallelTiledBackend {
             let sp = shared_pack.clone();
             par_claim_with(&shared_pool(), cells.clone(), move |_i, cell| {
                 execute_tiled(&plan, &inputs, &cell.shards, "parallel", sp.as_ref())
-            })
+            })?
         };
         let mut runs = Vec::with_capacity(outs.len());
         for out in outs {

@@ -17,6 +17,7 @@
 use crate::serve::frame::{read_frame, write_frame, MAX_FRAME_LEN};
 use crate::serve::health::{HealthReport, StatsReport};
 use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Context, Result};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
@@ -24,13 +25,30 @@ use std::time::{Duration, Instant};
 /// A client→server message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    /// Run one image through the pipeline (`input` is the flat image,
-    /// `input_len` elements).
-    Infer(Vec<f32>),
+    /// Run one image through the pipeline.
+    Infer {
+        /// The flat image, `input_len` elements.
+        input: Vec<f32>,
+        /// Optional client deadline, milliseconds from admission: a
+        /// request still unformed into a batch past this is shed
+        /// (`Response::Shed`) instead of executed late. `None` (the
+        /// wire default — the field is omitted) never expires.
+        deadline_ms: Option<u64>,
+    },
     /// Ask whether the server is accepting work and what shape of work.
     Health,
     /// Ask for the live serving counters.
     Stats,
+}
+
+impl Request {
+    /// An `infer` request with no deadline — the common constructor.
+    pub fn infer(input: Vec<f32>) -> Request {
+        Request::Infer {
+            input,
+            deadline_ms: None,
+        }
+    }
 }
 
 /// A server→client message.
@@ -88,9 +106,14 @@ impl Request {
     pub fn encode(&self) -> Result<Vec<u8>> {
         let mut o = Json::obj();
         match self {
-            Request::Infer(input) => {
+            Request::Infer { input, deadline_ms } => {
                 o.set("op", json::s("infer"))
                     .set("input", floats_to_json(input)?);
+                // Omitted when None so deadline-free requests encode to
+                // exactly the pre-deadline wire bytes.
+                if let Some(ms) = deadline_ms {
+                    o.set("deadline_ms", json::unum(*ms));
+                }
             }
             Request::Health => {
                 o.set("op", json::s("health"));
@@ -111,7 +134,17 @@ impl Request {
                 let input = doc
                     .get("input")
                     .ok_or_else(|| anyhow!("infer request has no 'input'"))?;
-                Ok(Request::Infer(json_to_floats(input)?))
+                let deadline_ms = match doc.get("deadline_ms") {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_u64()
+                            .ok_or_else(|| anyhow!("'deadline_ms' is not an integer"))?,
+                    ),
+                };
+                Ok(Request::Infer {
+                    input: json_to_floats(input)?,
+                    deadline_ms,
+                })
             }
             "health" => Ok(Request::Health),
             "stats" => Ok(Request::Stats),
@@ -232,7 +265,47 @@ impl ServeClient {
     /// distinguish `Output` from `Shed` (the load generator counts
     /// sheds; it does not treat them as failures).
     pub fn infer(&mut self, input: &[f32]) -> Result<Response> {
-        self.request(&Request::Infer(input.to_vec()))
+        self.request(&Request::infer(input.to_vec()))
+    }
+
+    /// Like [`ServeClient::infer`] with a per-request deadline (ms from
+    /// admission; expired requests come back as `Response::Shed`).
+    pub fn infer_deadline(&mut self, input: &[f32], deadline_ms: u64) -> Result<Response> {
+        self.request(&Request::Infer {
+            input: input.to_vec(),
+            deadline_ms: Some(deadline_ms),
+        })
+    }
+
+    /// Send `req` with retries under `policy`: a `Shed` response backs
+    /// off (honoring the server's `retry_after_ms` hint, capped by the
+    /// policy) and retries on the same connection; any other response
+    /// returns immediately. After `policy.max_attempts` sheds the last
+    /// `Shed` response is returned — the caller still sees an honest
+    /// rejection, never a silent drop.
+    pub fn request_with_retry(&mut self, req: &Request, policy: &RetryPolicy) -> Result<Response> {
+        let mut rng = Rng::new(policy.jitter_seed);
+        let mut backoff_ms = policy.base_backoff_ms.max(1);
+        for attempt in 1..=policy.max_attempts.max(1) {
+            let resp = self.request(req)?;
+            let hint = match resp {
+                Response::Shed { retry_after_ms } => retry_after_ms,
+                other => return Ok(other),
+            };
+            if attempt == policy.max_attempts.max(1) {
+                return Ok(Response::Shed {
+                    retry_after_ms: hint,
+                });
+            }
+            // Wait the larger of the server's hint and our exponential
+            // schedule, plus up to 25% seeded jitter so a fleet of
+            // retrying clients doesn't re-stampede in lockstep.
+            let base = hint.max(backoff_ms).min(policy.max_backoff_ms.max(1));
+            let jitter = rng.below(base / 4 + 1);
+            std::thread::sleep(Duration::from_millis(base + jitter));
+            backoff_ms = (backoff_ms * 2).min(policy.max_backoff_ms.max(1));
+        }
+        unreachable!("the loop returns on every path");
     }
 
     /// Fetch the health report, erroring on any other response.
@@ -248,6 +321,32 @@ impl ServeClient {
         match self.request(&Request::Stats)? {
             Response::Stats(s) => Ok(s),
             other => bail!("expected a stats response, got {:?}", other),
+        }
+    }
+}
+
+/// Client-side retry/backoff policy for [`ServeClient::request_with_retry`]:
+/// bounded attempts, exponential backoff seeded with deterministic
+/// jitter, and the server's `retry_after_ms` hint as a floor.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts (initial + retries), at least 1.
+    pub max_attempts: u32,
+    /// First retry's backoff, milliseconds (doubles per retry).
+    pub base_backoff_ms: u64,
+    /// Backoff ceiling, milliseconds (also caps the server hint).
+    pub max_backoff_ms: u64,
+    /// Seed for the deterministic jitter stream (up to +25% per wait).
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff_ms: 5,
+            max_backoff_ms: 1_000,
+            jitter_seed: 0x9E37_79B9,
         }
     }
 }
@@ -272,16 +371,32 @@ mod tests {
             f32::MIN_POSITIVE,
             std::f32::consts::PI,
         ];
-        let bytes = Request::Infer(vals.clone()).encode().unwrap();
+        let bytes = Request::infer(vals.clone()).encode().unwrap();
         match Request::decode(&bytes).unwrap() {
-            Request::Infer(back) => {
+            Request::Infer { input: back, deadline_ms } => {
                 assert_eq!(back.len(), vals.len());
+                assert_eq!(deadline_ms, None);
                 for (a, b) in back.iter().zip(vals.iter()) {
                     assert_eq!(a.to_bits(), b.to_bits(), "{} != {}", a, b);
                 }
             }
             other => panic!("wrong decode: {:?}", other),
         }
+    }
+
+    #[test]
+    fn deadline_roundtrips_and_is_omitted_when_absent() {
+        let with = Request::Infer {
+            input: vec![1.0, 2.0],
+            deadline_ms: Some(75),
+        };
+        assert_eq!(Request::decode(&with.encode().unwrap()).unwrap(), with);
+        // A deadline-free request must not mention the field at all —
+        // that keeps its wire bytes identical to the pre-deadline codec.
+        let without = Request::infer(vec![1.0, 2.0]);
+        let bytes = without.encode().unwrap();
+        assert!(!String::from_utf8(bytes.clone()).unwrap().contains("deadline"));
+        assert_eq!(Request::decode(&bytes).unwrap(), without);
     }
 
     #[test]
@@ -308,7 +423,7 @@ mod tests {
 
     #[test]
     fn non_finite_rejected_at_encode() {
-        assert!(Request::Infer(vec![f32::NAN]).encode().is_err());
+        assert!(Request::infer(vec![f32::NAN]).encode().is_err());
         assert!(Response::Output(vec![f32::INFINITY]).encode().is_err());
     }
 

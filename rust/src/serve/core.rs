@@ -20,14 +20,27 @@
 //! `sync_channel` still lets the consumer pop everything already
 //! queued, so the batcher finishes and answers every admitted request
 //! before exiting.
+//!
+//! Failure model: the batcher thread is supervised. A panic while a
+//! batch executes is caught in place — the formed batch is answered
+//! with explicit [`ReqError::Failed`] responses and the loop continues
+//! with fresh state; a panic anywhere else unwinds to the supervisor,
+//! which counts a restart and re-enters the loop. Either way the
+//! batcher thread never dies while the queue is open, so admitted
+//! requests are always answered (the chaos harness's invariant).
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::InterpretedPipeline;
 use crate::serve::health::{HealthReport, StatsReport};
-use crate::serve::queue::{self, AdmissionQueue, AdmissionReceiver, InferRequest, Rejected};
+use crate::serve::lock_unpoisoned;
+use crate::serve::queue::{
+    self, AdmissionQueue, AdmissionReceiver, InferRequest, ReqError, Rejected,
+};
 use crate::serve::sched::{SchedModel, SchedPolicy};
-use crate::util::pool::{default_threads, with_thread_cap};
+use crate::util::fault::{self, FaultPoint};
+use crate::util::pool::{default_threads, panic_msg, with_thread_cap};
 use anyhow::{anyhow, Context, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
@@ -75,7 +88,7 @@ impl Default for CoreConfig {
 /// Outcome of a non-blocking admission attempt.
 pub enum Admission {
     /// Queued; the result (or a per-request error) arrives here.
-    Admitted(Receiver<Result<Vec<f32>, String>>),
+    Admitted(Receiver<std::result::Result<Vec<f32>, ReqError>>),
     /// The queue was full — the request was shed, not buffered.
     Shed {
         /// Suggested client back-off before retrying, milliseconds.
@@ -113,17 +126,18 @@ impl ServeCore {
             let pipeline = pipeline.clone();
             let metrics = metrics.clone();
             let cfg = cfg.clone();
+            let depth = depth.clone();
             std::thread::Builder::new()
                 .name("cnnblk-serve-core".into())
                 // The --jobs cap is thread-local, so it must be applied
                 // *on the batcher thread* — every pool sizing and
                 // scheduler worker-count read happens there.
                 .spawn(move || {
+                    let run = || supervise_batcher(&pipeline, &rx, &metrics, &cfg, &depth);
                     if cfg.jobs > 0 {
-                        let jobs = cfg.jobs;
-                        with_thread_cap(jobs, || batcher_loop(pipeline, rx, metrics, cfg))
+                        with_thread_cap(cfg.jobs, run)
                     } else {
-                        batcher_loop(pipeline, rx, metrics, cfg)
+                        run()
                     }
                 })
                 .context("spawning the serving batcher")?
@@ -162,20 +176,23 @@ impl ServeCore {
     fn make_request(
         &self,
         input: Vec<f32>,
-    ) -> Result<(InferRequest, Receiver<Result<Vec<f32>, String>>)> {
+        deadline_ms: Option<u64>,
+    ) -> Result<(InferRequest, Receiver<std::result::Result<Vec<f32>, ReqError>>)> {
         if input.len() != self.input_len() {
-            self.metrics.lock().unwrap().record_error();
+            lock_unpoisoned(&self.metrics).record_error();
             return Err(anyhow!(
                 "input has {} elements, expected {}",
                 input.len(),
                 self.input_len()
             ));
         }
+        let submitted = Instant::now();
         let (resp_tx, resp_rx) = std::sync::mpsc::channel();
         Ok((
             InferRequest {
                 input,
-                submitted: Instant::now(),
+                submitted,
+                deadline: deadline_ms.map(|ms| submitted + Duration::from_millis(ms)),
                 resp: resp_tx,
             },
             resp_rx,
@@ -183,21 +200,24 @@ impl ServeCore {
     }
 
     /// Non-blocking admission (the TCP path): a full queue sheds the
-    /// request with a retry-after hint instead of buffering it. `Err`
-    /// only for malformed requests (wrong input length).
-    pub fn admit(&self, input: Vec<f32>) -> Result<Admission> {
-        let Some(q) = self.tx.lock().unwrap().clone() else {
+    /// request with a retry-after hint instead of buffering it.
+    /// `deadline_ms` is the client's patience budget, measured from
+    /// admission: a request still unformed into a batch past it is shed
+    /// (`ReqError::Shed`) instead of executed late. `Err` only for
+    /// malformed requests (wrong input length).
+    pub fn admit(&self, input: Vec<f32>, deadline_ms: Option<u64>) -> Result<Admission> {
+        let Some(q) = lock_unpoisoned(&self.tx).clone() else {
             return Ok(Admission::Closed);
         };
-        let (req, resp_rx) = self.make_request(input)?;
+        let (req, resp_rx) = self.make_request(input, deadline_ms)?;
         match q.try_send(req) {
             Ok(()) => {
-                self.metrics.lock().unwrap().record_admit();
+                lock_unpoisoned(&self.metrics).record_admit();
                 Ok(Admission::Admitted(resp_rx))
             }
             Err(Rejected::Full(_)) => {
                 let p50_us = {
-                    let mut m = self.metrics.lock().unwrap();
+                    let mut m = lock_unpoisoned(&self.metrics);
                     m.record_shed();
                     m.batch_exec_p50_us()
                 };
@@ -212,13 +232,16 @@ impl ServeCore {
     /// Blocking admission (the in-process path): waits for a queue slot
     /// — backpressure on the submitting thread instead of a shed
     /// response. Returns the response channel.
-    pub fn submit_blocking(&self, input: Vec<f32>) -> Result<Receiver<Result<Vec<f32>, String>>> {
-        let Some(q) = self.tx.lock().unwrap().clone() else {
+    pub fn submit_blocking(
+        &self,
+        input: Vec<f32>,
+    ) -> Result<Receiver<std::result::Result<Vec<f32>, ReqError>>> {
+        let Some(q) = lock_unpoisoned(&self.tx).clone() else {
             return Err(anyhow!("server stopped"));
         };
-        let (req, resp_rx) = self.make_request(input)?;
+        let (req, resp_rx) = self.make_request(input, None)?;
         q.send_blocking(req).map_err(|_| anyhow!("server stopped"))?;
-        self.metrics.lock().unwrap().record_admit();
+        lock_unpoisoned(&self.metrics).record_admit();
         Ok(resp_rx)
     }
 
@@ -230,23 +253,15 @@ impl ServeCore {
             .map_err(|e| anyhow!(e))
     }
 
-    /// The measured back-off hint for a shed response: roughly how long
-    /// until a queue slot frees up — the batches ahead of a new arrival
-    /// (queue depth / max_batch, plus the one forming) times the median
-    /// measured batch service time, rounded up to whole milliseconds
-    /// and clamped to [1, 1000]. Before any batch has executed the
-    /// configured `retry_after_ms` constant is the fallback, so clients
-    /// always get a non-zero hint.
+    /// The measured back-off hint for a shed response — see
+    /// [`retry_hint_ms`], which the batcher's deadline sheds share.
     fn retry_after_hint_ms(&self, batch_p50_us: u64) -> u64 {
-        if batch_p50_us == 0 {
-            return self.cfg.retry_after_ms;
-        }
-        let depth = self.depth.load(Ordering::SeqCst) as u64;
-        let batches_ahead = depth / self.cfg.max_batch.max(1) as u64 + 1;
-        batches_ahead
-            .saturating_mul(batch_p50_us)
-            .div_ceil(1_000)
-            .clamp(1, 1_000)
+        retry_hint_ms(
+            batch_p50_us,
+            self.depth.load(Ordering::SeqCst),
+            self.cfg.max_batch,
+            self.cfg.retry_after_ms,
+        )
     }
 
     /// The health/readiness snapshot served by the `health` op.
@@ -262,14 +277,16 @@ impl ServeCore {
 
     /// The live counter snapshot served by the `stats` op.
     pub fn stats(&self) -> StatsReport {
-        let m = self.metrics.lock().unwrap();
+        let m = lock_unpoisoned(&self.metrics);
         StatsReport {
             queue_depth: self.depth.load(Ordering::SeqCst),
             queue_cap: self.cfg.queue_cap,
             accepted: m.accepted,
             shed: m.shed,
+            shed_deadline: m.shed_deadline,
             requests: m.requests,
             errors: m.errors,
+            batcher_restarts: m.batcher_restarts,
             macs: m.macs,
             exec_us: m.exec_us,
             mac_per_s: m.mac_per_s(),
@@ -286,8 +303,8 @@ impl ServeCore {
     /// already-admitted request, and join it. Idempotent.
     pub fn shutdown(&self) {
         self.serving.store(false, Ordering::SeqCst);
-        drop(self.tx.lock().unwrap().take());
-        let handle = self.batcher.lock().unwrap().take();
+        drop(lock_unpoisoned(&self.tx).take());
+        let handle = lock_unpoisoned(&self.batcher).take();
         if let Some(h) = handle {
             let _ = h.join();
         }
@@ -300,49 +317,147 @@ impl Drop for ServeCore {
     }
 }
 
+/// The shed back-off hint: the batches ahead of a new arrival (queue
+/// depth / max_batch, plus the one forming) times the median measured
+/// batch service time, rounded up to whole milliseconds and clamped to
+/// [1, 1000]. Before any batch has executed, `fallback_ms` (the
+/// configured `retry_after_ms`) holds so clients always get a non-zero
+/// hint. Shared by queue-full sheds ([`ServeCore::admit`]) and the
+/// batcher's deadline sheds — both kinds answer with the same machinery.
+fn retry_hint_ms(batch_p50_us: u64, depth: usize, max_batch: usize, fallback_ms: u64) -> u64 {
+    if batch_p50_us == 0 {
+        return fallback_ms;
+    }
+    let batches_ahead = depth as u64 / max_batch.max(1) as u64 + 1;
+    batches_ahead
+        .saturating_mul(batch_p50_us)
+        .div_ceil(1_000)
+        .clamp(1, 1_000)
+}
+
+/// The batcher supervisor: re-enter [`batcher_loop`] after any panic
+/// that escapes its per-batch isolation, counting a restart each time.
+/// Requests held by the dead iteration had their response senders
+/// dropped by the unwind, so each waiting client observes a closed
+/// channel — an explicit error, never a hang. Returns when the loop
+/// drains cleanly (shutdown).
+fn supervise_batcher(
+    pipeline: &InterpretedPipeline,
+    rx: &AdmissionReceiver,
+    metrics: &Arc<Mutex<Metrics>>,
+    cfg: &CoreConfig,
+    depth: &Arc<AtomicUsize>,
+) {
+    loop {
+        match catch_unwind(AssertUnwindSafe(|| {
+            batcher_loop(pipeline, rx, metrics, cfg, depth)
+        })) {
+            Ok(()) => return, // queue drained: clean shutdown
+            Err(p) => {
+                eprintln!(
+                    "cnnblk-serve-core: batcher panicked ({}); restarting",
+                    panic_msg(&*p)
+                );
+                lock_unpoisoned(metrics).record_batcher_restart();
+            }
+        }
+    }
+}
+
 /// The batching loop: form a batch (up to `max_batch` or
-/// `batch_timeout` from the first request), let the scheduler pick the
-/// batch's mapping, run it through the pipeline as one flat execution,
-/// slice results back per request. Exits when every producer dropped
-/// and the queue is drained.
+/// `batch_timeout` from the first request), shed members whose deadline
+/// already expired, let the scheduler pick the batch's mapping, run it
+/// through the pipeline as one flat execution, slice results back per
+/// request. Exits when every producer dropped and the queue is drained.
 ///
 /// Scheduling only engages for the tiled-family backends ("tiled" /
 /// "parallel"), whose mappings are byte-identical by construction; the
 /// interpreter and naive oracle keep the legacy path so an operator who
 /// asked for their numerics gets exactly those.
+///
+/// A panic during batch execution (a poisoned input, an injected
+/// fault) is caught here, while this loop still owns the batch: every
+/// member is answered with [`ReqError::Failed`], a restart is counted,
+/// and the loop continues with fresh state.
 fn batcher_loop(
-    pipeline: InterpretedPipeline,
-    rx: AdmissionReceiver,
-    metrics: Arc<Mutex<Metrics>>,
-    cfg: CoreConfig,
+    pipeline: &InterpretedPipeline,
+    rx: &AdmissionReceiver,
+    metrics: &Arc<Mutex<Metrics>>,
+    cfg: &CoreConfig,
+    depth: &Arc<AtomicUsize>,
 ) {
     let input_len = pipeline.input_len();
     let output_len = pipeline.output_len();
     let sched = matches!(pipeline.backend_name(), "tiled" | "parallel")
-        .then(|| SchedModel::for_pipeline(&pipeline));
+        .then(|| SchedModel::for_pipeline(pipeline));
     loop {
-        let batch = match collect_batch(&rx, cfg.batch_timeout, cfg.max_batch.max(1)) {
+        let formed = match collect_batch(rx, cfg.batch_timeout, cfg.max_batch.max(1)) {
             Some(b) => b,
             None => return,
         };
+        // Deadline sheds happen at batch formation: a request whose
+        // deadline passed while it sat in the queue gets the same
+        // retry-after machinery as a queue-full shed, and the batch
+        // shrinks — late work is refused, not executed.
+        let now = Instant::now();
+        let mut batch = Vec::with_capacity(formed.len());
+        for r in formed {
+            if r.deadline.is_some_and(|d| now >= d) {
+                let p50_us = {
+                    let mut m = lock_unpoisoned(metrics);
+                    m.record_shed_deadline();
+                    m.batch_exec_p50_us()
+                };
+                let hint = retry_hint_ms(
+                    p50_us,
+                    depth.load(Ordering::SeqCst),
+                    cfg.max_batch,
+                    cfg.retry_after_ms,
+                );
+                let _ = r.resp.send(Err(ReqError::Shed {
+                    retry_after_ms: hint,
+                }));
+            } else {
+                batch.push(r);
+            }
+        }
+        if batch.is_empty() {
+            continue; // the whole batch expired — nothing to execute
+        }
         let formed = batch.len();
         let mut flat = Vec::with_capacity(formed * input_len);
         for r in &batch {
             flat.extend_from_slice(&r.input);
         }
         let t0 = Instant::now();
-        let (result, decided) = match &sched {
-            Some(model) => {
-                // default_threads() is read on this thread, where the
-                // --jobs cap (if any) is installed.
-                let d = model.decide(formed, default_threads(), cfg.policy);
-                let run = pipeline.run_batch_scheduled(flat, formed, &d.mappings);
-                (run, Some(d.kind))
+        // The batch is executed under panic isolation so this loop
+        // still owns `batch` if the pipeline (or an injected fault)
+        // panics — the requests get explicit errors, not dropped
+        // channels.
+        let executed = catch_unwind(AssertUnwindSafe(|| {
+            fault::maybe_panic(FaultPoint::BatcherPanic);
+            match &sched {
+                Some(model) => {
+                    // default_threads() is read on this thread, where
+                    // the --jobs cap (if any) is installed.
+                    let d = model.decide(formed, default_threads(), cfg.policy);
+                    let run = pipeline.run_batch_scheduled(flat, formed, &d.mappings);
+                    (run, Some(d.kind))
+                }
+                None => (pipeline.run_batch_counted(flat, formed), None),
             }
-            None => (pipeline.run_batch_counted(flat, formed), None),
+        }));
+        let (result, decided) = match executed {
+            Ok(r) => r,
+            Err(p) => {
+                let msg = format!("batch execution panicked: {}", panic_msg(&*p));
+                lock_unpoisoned(metrics).record_batcher_restart();
+                deliver(batch, Err(anyhow!(msg)), metrics, output_len);
+                continue;
+            }
         };
         {
-            let mut m = metrics.lock().unwrap();
+            let mut m = lock_unpoisoned(metrics);
             m.record_batch(formed, formed, t0.elapsed());
             if let Some(kind) = decided {
                 m.record_decision(kind);
@@ -351,7 +466,7 @@ fn batcher_loop(
                 m.record_macs(run.macs);
             }
         }
-        deliver(batch, result.map(|run| run.output), &metrics, output_len);
+        deliver(batch, result.map(|run| run.output), metrics, output_len);
     }
 }
 
@@ -380,7 +495,7 @@ pub(crate) fn collect_batch(
 }
 
 /// Slice a batch result back to per-request responses (or fan the error
-/// out to every requester), recording metrics.
+/// out to every requester as [`ReqError::Failed`]), recording metrics.
 pub(crate) fn deliver(
     batch: Vec<InferRequest>,
     result: Result<Vec<f32>>,
@@ -392,15 +507,15 @@ pub(crate) fn deliver(
             for (i, r) in batch.into_iter().enumerate() {
                 let slice = out[i * output_len..(i + 1) * output_len].to_vec();
                 let latency = r.submitted.elapsed();
-                metrics.lock().unwrap().record_request(latency);
+                lock_unpoisoned(metrics).record_request(latency);
                 let _ = r.resp.send(Ok(slice));
             }
         }
         Err(e) => {
             let msg = format!("{e:#}");
             for r in batch {
-                metrics.lock().unwrap().record_error();
-                let _ = r.resp.send(Err(msg.clone()));
+                lock_unpoisoned(metrics).record_error();
+                let _ = r.resp.send(Err(ReqError::Failed(msg.clone())));
             }
         }
     }
@@ -452,7 +567,7 @@ mod tests {
     fn bad_input_length_is_an_error_not_a_crash() {
         let c = core(16, 4);
         assert!(c.infer_blocking(vec![0.0; 3]).is_err());
-        assert!(c.admit(vec![0.0; 3]).is_err());
+        assert!(c.admit(vec![0.0; 3], None).is_err());
         assert_eq!(c.stats().errors, 2);
         // the core still serves afterward
         let img = image(&c, 1);
@@ -477,7 +592,7 @@ mod tests {
         }
         // ... and new work is refused, cleanly.
         assert!(c.submit_blocking(img.clone()).is_err());
-        assert!(matches!(c.admit(img).unwrap(), Admission::Closed));
+        assert!(matches!(c.admit(img, None).unwrap(), Admission::Closed));
         assert!(!c.health().serving);
     }
 
@@ -527,7 +642,7 @@ mod tests {
         let img = image(&c, 9);
         let mut outcomes = Vec::new();
         for _ in 0..16 {
-            outcomes.push(c.admit(img.clone()).unwrap());
+            outcomes.push(c.admit(img.clone(), None).unwrap());
         }
         let shed = outcomes
             .iter()
@@ -543,6 +658,47 @@ mod tests {
         }
         assert!(c.health().serving);
         assert!(c.infer_blocking(img).is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_sheds_at_formation_with_a_retry_hint() {
+        let c = core(16, 4);
+        let img = image(&c, 11);
+        // deadline_ms = 0: expired the instant it was admitted, so the
+        // batcher must shed it at formation rather than execute it late.
+        let rx = match c.admit(img.clone(), Some(0)).unwrap() {
+            Admission::Admitted(rx) => rx,
+            _ => panic!("an empty queue must admit"),
+        };
+        match rx.recv().unwrap() {
+            Err(ReqError::Shed { retry_after_ms }) => {
+                assert!(retry_after_ms > 0, "deadline shed must carry a hint")
+            }
+            other => panic!("expected a deadline shed, got {:?}", other),
+        }
+        let s = c.stats();
+        assert_eq!(s.shed_deadline, 1, "deadline sheds have their own counter");
+        assert_eq!(s.shed, 0, "queue-full sheds must stay untouched");
+        assert_eq!(s.requests, 0, "a shed request is never executed");
+        // A fresh request without a deadline is unaffected.
+        let want = c.pipeline().run_image(&img).unwrap();
+        assert_eq!(c.infer_blocking(img).unwrap(), want);
+        assert_eq!(c.stats().batcher_restarts, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn generous_deadlines_do_not_shed() {
+        let c = core(16, 4);
+        let img = image(&c, 13);
+        let want = c.pipeline().run_image(&img).unwrap();
+        let rx = match c.admit(img, Some(60_000)).unwrap() {
+            Admission::Admitted(rx) => rx,
+            _ => panic!("an empty queue must admit"),
+        };
+        assert_eq!(rx.recv().unwrap().unwrap(), want);
+        assert_eq!(c.stats().shed_deadline, 0);
         c.shutdown();
     }
 }

@@ -38,8 +38,15 @@ pub struct StatsReport {
     pub queue_cap: usize,
     /// Requests admitted into the queue since startup.
     pub accepted: u64,
-    /// Requests shed (rejected with retry-after) since startup.
+    /// Requests shed at admission (queue full) since startup. Disjoint
+    /// from [`StatsReport::shed_deadline`].
     pub shed: u64,
+    /// Admitted requests shed at batch formation because their client
+    /// deadline had already expired. Disjoint from [`StatsReport::shed`];
+    /// the two sum to the total rejected.
+    pub shed_deadline: u64,
+    /// Supervised batcher restarts after a panic since startup.
+    pub batcher_restarts: u64,
     /// Requests completed successfully.
     pub requests: u64,
     /// Requests that returned an error.
@@ -111,6 +118,8 @@ impl StatsReport {
             .set("queue_cap", json::unum(self.queue_cap as u64))
             .set("accepted", json::unum(self.accepted))
             .set("shed", json::unum(self.shed))
+            .set("shed_deadline", json::unum(self.shed_deadline))
+            .set("batcher_restarts", json::unum(self.batcher_restarts))
             .set("requests", json::unum(self.requests))
             .set("errors", json::unum(self.errors))
             .set("macs", json::unum(self.macs))
@@ -132,6 +141,16 @@ impl StatsReport {
             queue_cap: req_u64(doc, "queue_cap")? as usize,
             accepted: req_u64(doc, "accepted")?,
             shed: req_u64(doc, "shed")?,
+            // Absent in pre-PR-9 reports: default 0 so an old server's
+            // stats still parse.
+            shed_deadline: doc
+                .get("shed_deadline")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0),
+            batcher_restarts: doc
+                .get("batcher_restarts")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0),
             requests: req_u64(doc, "requests")?,
             errors: req_u64(doc, "errors")?,
             macs: req_u64(doc, "macs")?,
@@ -174,6 +193,8 @@ mod tests {
             queue_cap: 64,
             accepted: 100,
             shed: 7,
+            shed_deadline: 2,
+            batcher_restarts: 1,
             requests: 93,
             errors: 0,
             macs: 1_234_567,

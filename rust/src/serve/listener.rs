@@ -16,6 +16,7 @@
 //!    join the batcher).
 
 use crate::serve::core::ServeCore;
+use crate::serve::lock_unpoisoned;
 use crate::serve::session::run_session;
 use anyhow::{Context, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -88,7 +89,7 @@ impl TcpServeHandle {
                     let spawned = std::thread::Builder::new()
                         .name("cnnblk-session".into())
                         .spawn(move || run_session(conn, core, stop2));
-                    let mut held = sessions.lock().unwrap();
+                    let mut held = lock_unpoisoned(&sessions);
                     held.retain(|h| !h.is_finished()); // prune dead sessions
                     if let Ok(h) = spawned {
                         held.push(h);
@@ -125,7 +126,7 @@ impl TcpServeHandle {
         }
         // Join sessions *before* the core shuts down: the batcher is
         // still alive, so in-flight requests complete and respond.
-        let handles: Vec<_> = self.sessions.lock().unwrap().drain(..).collect();
+        let handles: Vec<_> = lock_unpoisoned(&self.sessions).drain(..).collect();
         for h in handles {
             let _ = h.join();
         }

@@ -43,6 +43,16 @@
 //! * [`health`] — the health/readiness and stats report types served
 //!   by the `health`/`stats` request ops.
 //!
+//! Failure model (PR 9): every layer of this stack is supervised. Pool
+//! jobs run under `catch_unwind` so a panicking job poisons *one batch*,
+//! not a worker thread; the batcher itself restarts on panic with every
+//! in-flight request answered by an explicit [`queue::ReqError`];
+//! requests may carry a client deadline and are shed at batch formation
+//! once it expires (with the same retry-after machinery as a queue-full
+//! rejection). The whole layer is exercised by the deterministic
+//! fault-injection substrate in [`crate::util::fault`] — see
+//! `docs/ARCHITECTURE.md` § "Failure model".
+//!
 //! Determinism across the network boundary: the codec carries `f32`
 //! tensors as JSON numbers through an exact round-trip (`f32 → f64` is
 //! exact, the serializer emits shortest-round-trip decimal, and the
@@ -60,8 +70,20 @@ pub mod queue;
 pub mod sched;
 pub mod session;
 
-pub use codec::{Request, Response, ServeClient};
+pub use codec::{Request, Response, RetryPolicy, ServeClient};
 pub use core::{Admission, CoreConfig, ServeCore};
 pub use health::{HealthReport, StatsReport};
 pub use listener::{ListenConfig, TcpServeHandle};
+pub use queue::ReqError;
 pub use sched::{Decision, LayerCost, SchedModel, SchedPolicy};
+
+/// Lock a mutex, recovering the guard even if a previous holder
+/// panicked. The serving data behind these locks (metrics counters, the
+/// session registry, channel handles) stays internally consistent under
+/// a mid-update panic — every update is a single field write or
+/// push — so continuing with the poisoned value is always safe, and a
+/// supervised subsystem must not turn one panic into a cascade of
+/// `PoisonError` unwraps.
+pub(crate) fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}

@@ -23,17 +23,51 @@ use std::sync::mpsc::{
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// Why an admitted request did not get an output. The distinction
+/// matters to clients: a [`ReqError::Shed`] carries the same
+/// retry-after machinery as a queue-full rejection (back off, retry),
+/// a [`ReqError::Failed`] is a server-side execution error (retrying
+/// may or may not help — the message says what broke).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReqError {
+    /// Shed after admission (deadline already expired at batch
+    /// formation); retry after the hinted back-off.
+    Shed {
+        /// Same semantics as the queue-full shed hint: measured median
+        /// batch service time scaled by queue depth.
+        retry_after_ms: u64,
+    },
+    /// The batch this request rode in failed (pipeline error or a
+    /// supervised batcher restart); the message is the explicit error
+    /// the client sees.
+    Failed(String),
+}
+
+impl std::fmt::Display for ReqError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReqError::Shed { retry_after_ms } => {
+                write!(f, "shed after admission; retry after {} ms", retry_after_ms)
+            }
+            ReqError::Failed(msg) => write!(f, "{}", msg),
+        }
+    }
+}
+
 /// One admitted inference request: the flat input image, the admission
-/// timestamp (latency is measured from here, so queue wait counts), and
-/// the channel the result goes back on.
+/// timestamp (latency is measured from here, so queue wait counts), an
+/// optional client deadline, and the channel the result goes back on.
 pub struct InferRequest {
     /// Flat input image, `input_len` elements.
     pub input: Vec<f32>,
     /// When the request entered the queue; `Metrics::record_request`
     /// latency is measured from this instant.
     pub submitted: Instant,
+    /// Client deadline: a request still unformed into a batch past this
+    /// instant is shed (`ReqError::Shed`) instead of executed late.
+    pub deadline: Option<Instant>,
     /// Where the (sliced, per-request) result is delivered.
-    pub resp: Sender<Result<Vec<f32>, String>>,
+    pub resp: Sender<Result<Vec<f32>, ReqError>>,
 }
 
 /// Why [`AdmissionQueue::try_send`] refused a request. Both variants
@@ -153,12 +187,13 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
-    fn req() -> (InferRequest, Receiver<Result<Vec<f32>, String>>) {
+    fn req() -> (InferRequest, Receiver<Result<Vec<f32>, ReqError>>) {
         let (tx, rx) = channel();
         (
             InferRequest {
                 input: vec![1.0, 2.0],
                 submitted: Instant::now(),
+                deadline: None,
                 resp: tx,
             },
             rx,

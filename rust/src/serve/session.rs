@@ -13,6 +13,8 @@
 use crate::serve::codec::{Request, Response};
 use crate::serve::core::{Admission, ServeCore};
 use crate::serve::frame::{read_frame_idle, write_frame, FrameRead, MAX_FRAME_LEN};
+use crate::serve::queue::ReqError;
+use crate::util::fault::{self, FaultPoint};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -54,6 +56,9 @@ pub fn run_session(mut stream: TcpStream, core: Arc<ServeCore>, stop: Arc<Atomic
                 Err(_) => return,
             },
         };
+        // Chaos site: a stalled socket write — the session must still
+        // answer (late), and the rest of the server must not care.
+        fault::maybe_sleep(FaultPoint::SocketStall);
         if write_frame(&mut stream, &bytes).is_err() {
             return;
         }
@@ -63,10 +68,13 @@ pub fn run_session(mut stream: TcpStream, core: Arc<ServeCore>, stop: Arc<Atomic
 /// Dispatch one decoded request against the core.
 fn handle(core: &ServeCore, req: Request) -> Response {
     match req {
-        Request::Infer(input) => match core.admit(input) {
+        Request::Infer { input, deadline_ms } => match core.admit(input, deadline_ms) {
             Ok(Admission::Admitted(rx)) => match rx.recv() {
                 Ok(Ok(output)) => Response::Output(output),
-                Ok(Err(msg)) => Response::Error(msg),
+                // A post-admission deadline shed keeps the same wire
+                // shape as a queue-full shed: explicit, with a hint.
+                Ok(Err(ReqError::Shed { retry_after_ms })) => Response::Shed { retry_after_ms },
+                Ok(Err(ReqError::Failed(msg))) => Response::Error(msg),
                 Err(_) => Response::Error("server dropped the response channel".to_string()),
             },
             Ok(Admission::Shed { retry_after_ms }) => Response::Shed { retry_after_ms },

@@ -1,0 +1,271 @@
+//! Deterministic fault-injection substrate for the serving stack.
+//!
+//! Failure behavior gets the same discipline as access counting: every
+//! fault is a named, point-addressable site whose firing is a pure
+//! function of `(seed, site, crossing index)` — armed runs are exactly
+//! reproducible, and an unarmed run pays a single relaxed atomic load
+//! per crossing. The sites are compiled in always (no cargo feature),
+//! so the code CI tests is the code production runs.
+//!
+//! Arming is explicit: [`arm`] (chaos mode, seeded probabilities),
+//! [`arm_once`] (scripted: the next crossing of one site fires, then
+//! the script clears — what the unit tests use), or [`arm_from_env`]
+//! (reads `CNNBLK_FAULT_SEED`; called only by `cnnblk serve`, never by
+//! the library, so library behavior is env-independent). [`disarm`]
+//! restores the no-op state and returns the per-site counters.
+
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A named failure site. Each variant marks one crossing point in the
+/// serving stack where a fault can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// A pool job panics mid-execution (inside `par_map_with` /
+    /// `par_claim_with` closures).
+    WorkerJobPanic,
+    /// The batcher thread panics after forming a batch — in-flight
+    /// admitted requests are outstanding when it dies.
+    BatcherPanic,
+    /// A pipeline layer stalls (injected sleep) — exercises deadline
+    /// expiry and queue backpressure.
+    SlowLayer,
+    /// The plan-cache save is torn: the temp file is truncated and the
+    /// atomic rename is skipped, as if the process died mid-write.
+    TornCacheWrite,
+    /// A session stalls (injected sleep) before writing its response —
+    /// exercises client-side timeouts and retry.
+    SocketStall,
+}
+
+/// All sites, in counter-report order.
+pub const ALL_POINTS: [FaultPoint; 5] = [
+    FaultPoint::WorkerJobPanic,
+    FaultPoint::BatcherPanic,
+    FaultPoint::SlowLayer,
+    FaultPoint::TornCacheWrite,
+    FaultPoint::SocketStall,
+];
+
+impl FaultPoint {
+    /// Stable short name (used in logs and seed hashing).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPoint::WorkerJobPanic => "worker-job-panic",
+            FaultPoint::BatcherPanic => "batcher-panic",
+            FaultPoint::SlowLayer => "slow-layer",
+            FaultPoint::TornCacheWrite => "torn-cache-write",
+            FaultPoint::SocketStall => "socket-stall",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultPoint::WorkerJobPanic => 0,
+            FaultPoint::BatcherPanic => 1,
+            FaultPoint::SlowLayer => 2,
+            FaultPoint::TornCacheWrite => 3,
+            FaultPoint::SocketStall => 4,
+        }
+    }
+
+    /// Firing probability under chaos mode, per crossing. Panic sites
+    /// fire rarely (each firing costs a whole batch or claim run);
+    /// stall sites fire more often but only cost latency.
+    fn chaos_rate(self) -> f64 {
+        match self {
+            FaultPoint::WorkerJobPanic => 0.02,
+            FaultPoint::BatcherPanic => 0.01,
+            FaultPoint::SlowLayer => 0.05,
+            FaultPoint::TornCacheWrite => 0.25,
+            FaultPoint::SocketStall => 0.05,
+        }
+    }
+
+    /// Injected stall length for the sleep-flavored sites.
+    fn stall(self) -> Duration {
+        match self {
+            FaultPoint::SlowLayer => Duration::from_millis(15),
+            FaultPoint::SocketStall => Duration::from_millis(30),
+            _ => Duration::ZERO,
+        }
+    }
+}
+
+/// Per-site counters snapshot returned by [`disarm`] and [`counters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// How many times the site was crossed while armed.
+    pub crossings: u64,
+    /// How many of those crossings actually fired the fault.
+    pub fired: u64,
+}
+
+#[derive(Debug)]
+enum Mode {
+    /// Seeded chaos: each crossing fires with the site's chaos rate,
+    /// decided by a pure hash of (seed, site, crossing index).
+    Chaos { seed: u64 },
+    /// Scripted: the next crossing of `point` fires once, then the
+    /// script clears itself.
+    Once { point: FaultPoint },
+}
+
+struct State {
+    mode: Mode,
+    counters: [FaultCounters; ALL_POINTS.len()],
+}
+
+/// One relaxed load on the hot path; everything else is behind it.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<State>> = Mutex::new(None);
+
+fn lock_state() -> std::sync::MutexGuard<'static, Option<State>> {
+    // A panic while holding this lock is itself an injected fault;
+    // the state stays usable.
+    STATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Arm seeded chaos mode: every site fires probabilistically, decided
+/// deterministically from `(seed, site, crossing index)`.
+pub fn arm(seed: u64) {
+    *lock_state() = Some(State {
+        mode: Mode::Chaos { seed },
+        counters: Default::default(),
+    });
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Arm a single scripted firing: the next crossing of `point` fires,
+/// then injection disarms itself (counters are retained until
+/// [`disarm`]). This is the unit-test entry point.
+pub fn arm_once(point: FaultPoint) {
+    *lock_state() = Some(State {
+        mode: Mode::Once { point },
+        counters: Default::default(),
+    });
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm injection and return the per-site counters accumulated since
+/// arming (zeros if injection was never armed).
+pub fn disarm() -> [FaultCounters; ALL_POINTS.len()] {
+    ARMED.store(false, Ordering::SeqCst);
+    lock_state().take().map(|s| s.counters).unwrap_or_default()
+}
+
+/// Snapshot the per-site counters without disarming.
+pub fn counters() -> [FaultCounters; ALL_POINTS.len()] {
+    lock_state().as_ref().map(|s| s.counters).unwrap_or_default()
+}
+
+/// Arm chaos mode from `CNNBLK_FAULT_SEED` when the variable is set to
+/// a valid u64; otherwise leave injection disarmed. Returns the seed
+/// when armed. Only `cnnblk serve` calls this — the library never
+/// arms itself from the environment, so library behavior (and every
+/// test that does not opt in) is env-independent.
+pub fn arm_from_env() -> Option<u64> {
+    let seed = seed_from_env()?;
+    arm(seed);
+    Some(seed)
+}
+
+/// Read `CNNBLK_FAULT_SEED` without arming anything: `Some` only when
+/// the variable is set to a valid u64.
+fn seed_from_env() -> Option<u64> {
+    std::env::var("CNNBLK_FAULT_SEED").ok()?.trim().parse().ok()
+}
+
+/// True when injection is armed (one relaxed load — the entire cost a
+/// fault-free run pays at each site).
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Record a crossing of `point`; true when the fault should fire.
+/// Always false when disarmed, after exactly one atomic load.
+pub fn should_fire(point: FaultPoint) -> bool {
+    if !armed() {
+        return false;
+    }
+    let mut guard = lock_state();
+    let Some(state) = guard.as_mut() else {
+        return false;
+    };
+    let c = &mut state.counters[point.index()];
+    let crossing = c.crossings;
+    c.crossings += 1;
+    let fire = match state.mode {
+        Mode::Chaos { seed } => {
+            // Pure function of (seed, site, crossing index): the same
+            // armed run replays the same firing sequence.
+            let mix = seed ^ (point.index() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            Rng::new(mix ^ crossing.wrapping_mul(0xD134_2543_DE82_EF95))
+                .chance(point.chaos_rate())
+        }
+        Mode::Once { point: scripted } => {
+            if scripted == point {
+                ARMED.store(false, Ordering::SeqCst);
+                true
+            } else {
+                false
+            }
+        }
+    };
+    if fire {
+        c.fired += 1;
+    }
+    fire
+}
+
+/// Crossing helper for panic-flavored sites: panics with a recognizable
+/// message when the site fires.
+pub fn maybe_panic(point: FaultPoint) {
+    if should_fire(point) {
+        panic!("injected fault: {}", point.name());
+    }
+}
+
+/// Crossing helper for stall-flavored sites: sleeps the site's stall
+/// length when it fires.
+pub fn maybe_sleep(point: FaultPoint) {
+    if should_fire(point) {
+        std::thread::sleep(point.stall());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Only the never-arming surface is tested here. Arming is global,
+    //! and cargo runs this binary's tests concurrently — a test that
+    //! armed (even briefly) could fire a fault inside an unrelated test
+    //! crossing the same site. Every test that arms lives in
+    //! `tests/chaos.rs`, a separate binary serialized behind one lock.
+
+    use super::*;
+
+    #[test]
+    fn disarmed_sites_never_fire() {
+        for p in ALL_POINTS {
+            assert!(!should_fire(p));
+        }
+        maybe_panic(FaultPoint::WorkerJobPanic); // must be a no-op
+        maybe_sleep(FaultPoint::SocketStall); // likewise
+        assert_eq!(counters(), Default::default());
+    }
+
+    #[test]
+    fn reading_the_env_seed_never_arms_the_library() {
+        // CI runs the whole suite with CNNBLK_FAULT_SEED set to prove
+        // the library is env-independent — so this test must not call
+        // arm_from_env() (actually arming would leak injected faults
+        // into concurrently running tests in this binary). It only
+        // proves the read side is inert.
+        let _ = seed_from_env();
+        assert!(!armed(), "reading the env variable must not arm");
+        assert_eq!(counters(), Default::default());
+    }
+}

@@ -10,12 +10,31 @@
 //! once. [`par_claim_with`] is the work-stealing variant — workers race
 //! an atomic claim index over a shared item list — used where item
 //! costs are ragged (the parallel backend's shard-grid cells).
+//!
+//! Pool jobs are panic-isolated: a panicking job is caught
+//! (`catch_unwind`) and surfaces as an `Err` from the submitting
+//! `par_*` call, never as a dead worker thread — the pool keeps its
+//! full width across any number of poisoned jobs.
 
+use crate::util::fault::{self, FaultPoint};
 use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+/// Render a panic payload as text (panics carry `&str` or `String`
+/// payloads in practice; anything else gets a placeholder).
+pub fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 thread_local! {
     /// Per-thread override of the parallel-map width; 0 = no override.
@@ -175,7 +194,10 @@ fn worker_loop(rx: &Mutex<Receiver<Job>>) {
             Err(_) => return, // a sibling panicked while dequeuing
         };
         match job {
-            Ok(job) => job(),
+            // Isolation: a panicking job must not kill the worker (the
+            // pool would silently lose width). The submitting `par_*`
+            // call observes the panic through its result channel.
+            Ok(job) => drop(catch_unwind(AssertUnwindSafe(job))),
             Err(_) => return, // queue closed: pool dropped
         }
     }
@@ -196,40 +218,51 @@ impl Drop for WorkerPool {
 /// like the plan engine's per-layer searches; for fine-grained borrowed
 /// maps use [`par_map`].
 ///
-/// Panics if a job panics (its result never arrives).
-pub fn par_map_with<T, R, F>(pool: &WorkerPool, items: Vec<T>, f: F) -> Vec<R>
+/// A panicking job fails the whole call with an `Err` naming the first
+/// panicked item (by item index); the pool itself survives at full
+/// width and the remaining jobs still run to completion.
+pub fn par_map_with<T, R, F>(pool: &WorkerPool, items: Vec<T>, f: F) -> anyhow::Result<Vec<R>>
 where
     T: Send + 'static,
     R: Send + 'static,
     F: Fn(T) -> R + Send + Sync + 'static,
 {
     if items.is_empty() {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     if pool.threads() <= 1 || items.len() == 1 {
-        return items.into_iter().map(f).collect();
+        // Serial fast path with the same isolation semantics as the
+        // pooled path: a panicking item becomes an error, not a crash.
+        let mut out = Vec::with_capacity(items.len());
+        for (i, item) in items.into_iter().enumerate() {
+            match catch_unwind(AssertUnwindSafe(|| {
+                fault::maybe_panic(FaultPoint::WorkerJobPanic);
+                f(item)
+            })) {
+                Ok(r) => out.push(r),
+                Err(p) => {
+                    anyhow::bail!("pool job for item {} panicked: {}", i, panic_msg(&*p))
+                }
+            }
+        }
+        return Ok(out);
     }
     let n = items.len();
     let f = Arc::new(f);
-    let (rtx, rrx) = channel::<(usize, R)>();
+    let (rtx, rrx) = channel::<(usize, std::thread::Result<R>)>();
     for (i, item) in items.into_iter().enumerate() {
         let f = Arc::clone(&f);
         let rtx = rtx.clone();
         pool.submit(Box::new(move || {
-            let r = f(item);
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                fault::maybe_panic(FaultPoint::WorkerJobPanic);
+                f(item)
+            }));
             let _ = rtx.send((i, r));
         }));
     }
     drop(rtx);
-    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
-    out.resize_with(n, || None);
-    for _ in 0..n {
-        let (i, r) = rrx
-            .recv()
-            .expect("a pool job panicked before returning its result");
-        out[i] = Some(r);
-    }
-    out.into_iter().map(|r| r.unwrap()).collect()
+    collect_results(&rrx, n, "job")
 }
 
 /// Work-stealing parallel map over shared items on a persistent
@@ -246,24 +279,40 @@ where
 /// results are slotted by item index, so callers observe the same fixed
 /// order at any worker count or claim interleaving.
 ///
-/// Panics if a drainer panics (a claimed item's result never arrives).
-pub fn par_claim_with<T, R, F>(pool: &WorkerPool, items: Vec<T>, f: F) -> Vec<R>
+/// A panicking claim fails the whole call with an `Err` naming the
+/// first panicked item, but the claim *inside* each drainer is
+/// isolated: the drainer that hit the panic keeps claiming, so every
+/// remaining cell is still executed (no cell is silently skipped and
+/// the call returns instead of hanging).
+pub fn par_claim_with<T, R, F>(pool: &WorkerPool, items: Vec<T>, f: F) -> anyhow::Result<Vec<R>>
 where
     T: Send + Sync + 'static,
     R: Send + 'static,
     F: Fn(usize, &T) -> R + Send + Sync + 'static,
 {
     if items.is_empty() {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     if pool.threads() <= 1 || items.len() == 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        let mut out = Vec::with_capacity(items.len());
+        for (i, item) in items.iter().enumerate() {
+            match catch_unwind(AssertUnwindSafe(|| {
+                fault::maybe_panic(FaultPoint::WorkerJobPanic);
+                f(i, item)
+            })) {
+                Ok(r) => out.push(r),
+                Err(p) => {
+                    anyhow::bail!("pool drainer claim {} panicked: {}", i, panic_msg(&*p))
+                }
+            }
+        }
+        return Ok(out);
     }
     let n = items.len();
     let items = Arc::new(items);
     let f = Arc::new(f);
     let next = Arc::new(AtomicUsize::new(0));
-    let (rtx, rrx) = channel::<(usize, R)>();
+    let (rtx, rrx) = channel::<(usize, std::thread::Result<R>)>();
     for _ in 0..pool.threads().min(n) {
         let items = Arc::clone(&items);
         let f = Arc::clone(&f);
@@ -274,20 +323,52 @@ where
             if i >= items.len() {
                 return;
             }
-            let r = f(i, &items[i]);
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                fault::maybe_panic(FaultPoint::WorkerJobPanic);
+                f(i, &items[i])
+            }));
             let _ = rtx.send((i, r));
         }));
     }
     drop(rtx);
+    collect_results(&rrx, n, "drainer claim")
+}
+
+/// Drain exactly `n` slotted results, turning the first panicked item
+/// (by item index) into an error after every result has arrived — so a
+/// failing run still waits for its stragglers instead of leaving jobs
+/// racing a dropped channel.
+fn collect_results<R>(
+    rrx: &Receiver<(usize, std::thread::Result<R>)>,
+    n: usize,
+    what: &str,
+) -> anyhow::Result<Vec<R>> {
     let mut out: Vec<Option<R>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
+    let mut first_panic: Option<(usize, String)> = None;
     for _ in 0..n {
-        let (i, r) = rrx
-            .recv()
-            .expect("a pool drainer panicked before returning its result");
-        out[i] = Some(r);
+        let Ok((i, r)) = rrx.recv() else {
+            // Unreachable by construction (every job sends exactly once,
+            // panicking or not) — but a lost job must be an error, not
+            // a hang or a crash.
+            anyhow::bail!("a pool {} was lost before returning its result", what);
+        };
+        match r {
+            Ok(r) => out[i] = Some(r),
+            Err(p) => {
+                if first_panic.as_ref().is_none_or(|(j, _)| i < *j) {
+                    first_panic = Some((i, panic_msg(&*p)));
+                }
+            }
+        }
     }
-    out.into_iter().map(|r| r.unwrap()).collect()
+    if let Some((i, msg)) = first_panic {
+        anyhow::bail!("pool {} for item {} panicked: {}", what, i, msg);
+    }
+    Ok(out
+        .into_iter()
+        .map(|r| r.expect("all n slots filled: no panic implies every index sent Ok"))
+        .collect())
 }
 
 #[cfg(test)]
@@ -327,7 +408,7 @@ mod tests {
         let pool = WorkerPool::new(4);
         assert_eq!(pool.threads(), 4);
         let items: Vec<u64> = (0..100).collect();
-        let out = par_map_with(&pool, items, |x| x * 3);
+        let out = par_map_with(&pool, items, |x| x * 3).unwrap();
         assert_eq!(out, (0..100).map(|x| x * 3).collect::<Vec<_>>());
     }
 
@@ -337,7 +418,7 @@ mod tests {
         let pool = WorkerPool::new(3);
         for round in 0..20u64 {
             let items: Vec<u64> = (0..17).collect();
-            let out = par_map_with(&pool, items, move |x| x + round);
+            let out = par_map_with(&pool, items, move |x| x + round).unwrap();
             assert_eq!(out[16], 16 + round);
         }
     }
@@ -346,15 +427,18 @@ mod tests {
     fn pool_empty_and_single_thread() {
         let pool = WorkerPool::new(1);
         let none: Vec<u32> = vec![];
-        assert!(par_map_with(&pool, none, |x: u32| x).is_empty());
-        assert_eq!(par_map_with(&pool, vec![5u32], |x| x + 1), vec![6]);
+        assert!(par_map_with(&pool, none, |x: u32| x).unwrap().is_empty());
+        assert_eq!(par_map_with(&pool, vec![5u32], |x| x + 1).unwrap(), vec![6]);
     }
 
     #[test]
     fn pool_zero_threads_clamps_to_one() {
         let pool = WorkerPool::new(0);
         assert_eq!(pool.threads(), 1);
-        assert_eq!(par_map_with(&pool, vec![1, 2, 3], |x| x * x), vec![1, 4, 9]);
+        assert_eq!(
+            par_map_with(&pool, vec![1, 2, 3], |x| x * x).unwrap(),
+            vec![1, 4, 9]
+        );
     }
 
     #[test]
@@ -362,7 +446,7 @@ mod tests {
         for threads in [1, 2, 3, 4, 7] {
             let pool = WorkerPool::new(threads);
             let items: Vec<u64> = (0..53).collect();
-            let out = par_claim_with(&pool, items, |i, x| (i as u64) * 100 + x);
+            let out = par_claim_with(&pool, items, |i, x| (i as u64) * 100 + x).unwrap();
             assert_eq!(
                 out,
                 (0..53u64).map(|x| x * 101).collect::<Vec<_>>(),
@@ -385,7 +469,8 @@ mod tests {
                 acc = acc.wrapping_add(i ^ x);
             }
             (x, acc)
-        });
+        })
+        .unwrap();
         let claimed: Vec<u64> = out.iter().map(|(x, _)| *x).collect();
         assert_eq!(claimed, (0..17).collect::<Vec<_>>());
     }
@@ -394,8 +479,8 @@ mod tests {
     fn claim_map_empty_and_single() {
         let pool = WorkerPool::new(3);
         let none: Vec<u32> = vec![];
-        assert!(par_claim_with(&pool, none, |_, x: &u32| *x).is_empty());
-        assert_eq!(par_claim_with(&pool, vec![5u32], |_, x| x + 1), vec![6]);
+        assert!(par_claim_with(&pool, none, |_, x: &u32| *x).unwrap().is_empty());
+        assert_eq!(par_claim_with(&pool, vec![5u32], |_, x| x + 1).unwrap(), vec![6]);
     }
 
     #[test]
@@ -408,8 +493,58 @@ mod tests {
         let c = with_thread_cap(2, shared_pool);
         assert_eq!(c.threads(), 2);
         // a handle stays usable even after the cache moved on
-        let out = par_map_with(&a, vec![1u64, 2, 3], |x| x * 2);
+        let out = par_map_with(&a, vec![1u64, 2, 3], |x| x * 2).unwrap();
         assert_eq!(out, vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn panicking_job_errors_and_the_pool_survives() {
+        // Both the pooled path and the serial fast path must turn a
+        // panicking job into an Err naming the first panicked item —
+        // and the same pool must keep serving afterward at full width.
+        for threads in [1usize, 4] {
+            let pool = WorkerPool::new(threads);
+            let err = par_map_with(&pool, (0..8u64).collect(), |x| {
+                if x == 3 {
+                    panic!("poisoned job");
+                }
+                x
+            })
+            .expect_err("a panicking job must fail the call");
+            let msg = format!("{:#}", err);
+            assert!(msg.contains("item 3"), "at {} threads: {}", threads, msg);
+            assert!(msg.contains("poisoned job"), "at {} threads: {}", threads, msg);
+            // The worker that caught the panic is still alive.
+            let out = par_map_with(&pool, (0..8u64).collect(), |x| x + 1).unwrap();
+            assert_eq!(out, (1..9u64).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn panicked_claimant_still_drains_remaining_cells() {
+        // A panicking claim must not stop its drainer: every other cell
+        // is still claimed and executed, and the call returns an error
+        // instead of hanging on a never-sent result.
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let executed = Arc::new(AtomicUsize::new(0));
+            let seen = Arc::clone(&executed);
+            let err = par_claim_with(&pool, (0..10u64).collect(), move |_, &x| {
+                seen.fetch_add(1, Ordering::SeqCst);
+                if x == 0 {
+                    panic!("poisoned claim");
+                }
+                x
+            })
+            .expect_err("a panicking claim must fail the call");
+            assert!(format!("{:#}", err).contains("poisoned claim"));
+            assert_eq!(
+                executed.load(Ordering::SeqCst),
+                10,
+                "at {} threads every cell must still be claimed",
+                threads
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Chaos-injection integration tests: the deterministic fault substrate
+//! ([`cnn_blocking::util::fault`]) armed for real against the pool, the
+//! serving core, and the plan cache.
+//!
+//! The fault state is process-global, and cargo runs a test binary's
+//! tests on concurrent threads — so this suite lives in its own binary
+//! (arming here can never leak into the library's unit tests or the
+//! serve suite) and serializes every test behind one lock. Each test
+//! arms exactly what it needs and disarms before releasing the lock.
+
+use cnn_blocking::coordinator::InterpretedPipeline;
+use cnn_blocking::model::dims::LayerDims;
+use cnn_blocking::model::string::BlockingString;
+use cnn_blocking::optimizer::beam::BeamConfig;
+use cnn_blocking::plan::{BlockingPlan, PlanCache, Provenance, Target};
+use cnn_blocking::serve::{Admission, CoreConfig, ReqError, ServeCore};
+use cnn_blocking::util::fault::{self, FaultPoint};
+use cnn_blocking::util::pool::{par_map_with, WorkerPool};
+use cnn_blocking::util::rng::Rng;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize the suite and guarantee a disarmed substrate on entry,
+/// even if a previous test panicked while holding the lock.
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    let g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    fault::disarm();
+    g
+}
+
+fn image(input_len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..input_len).map(|_| rng.f64() as f32 - 0.5).collect()
+}
+
+fn core() -> Arc<ServeCore> {
+    let pipeline = InterpretedPipeline::plan_default(&BeamConfig::quick(), "tiled", 0).unwrap();
+    ServeCore::start(pipeline, CoreConfig::default()).unwrap()
+}
+
+/// Position of `point` in the counter arrays returned by
+/// [`fault::disarm`] / [`fault::counters`] (they follow
+/// [`fault::ALL_POINTS`] order).
+fn idx(point: FaultPoint) -> usize {
+    fault::ALL_POINTS
+        .iter()
+        .position(|&p| p == point)
+        .expect("every point is in ALL_POINTS")
+}
+
+#[test]
+fn arm_once_fires_exactly_once_on_its_site_only() {
+    let _g = serial();
+    fault::arm_once(FaultPoint::TornCacheWrite);
+    assert!(!fault::should_fire(FaultPoint::WorkerJobPanic));
+    assert!(fault::should_fire(FaultPoint::TornCacheWrite));
+    // The script cleared itself: no further firings anywhere.
+    assert!(!fault::should_fire(FaultPoint::TornCacheWrite));
+    let c = fault::disarm();
+    assert_eq!(c[idx(FaultPoint::TornCacheWrite)].fired, 1);
+    assert_eq!(c[idx(FaultPoint::WorkerJobPanic)].fired, 0);
+}
+
+#[test]
+fn chaos_firing_sequence_is_deterministic_per_seed() {
+    let _g = serial();
+    let sequence = |seed: u64| -> Vec<bool> {
+        fault::arm(seed);
+        let seq = (0..200)
+            .map(|_| fault::should_fire(FaultPoint::SlowLayer))
+            .collect();
+        fault::disarm();
+        seq
+    };
+    let a = sequence(7);
+    let b = sequence(7);
+    assert_eq!(a, b, "same seed must replay the same firings");
+    assert!(a.iter().any(|&f| f), "200 crossings at 5% should fire");
+    assert!(!a.iter().all(|&f| f), "5% must not fire every crossing");
+}
+
+#[test]
+fn maybe_panic_carries_the_site_name() {
+    let _g = serial();
+    fault::arm_once(FaultPoint::WorkerJobPanic);
+    let err = std::panic::catch_unwind(|| fault::maybe_panic(FaultPoint::WorkerJobPanic))
+        .expect_err("armed site must panic");
+    let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+    assert!(msg.contains("worker-job-panic"), "got: {}", msg);
+    fault::disarm();
+}
+
+#[test]
+fn a_panicking_pool_job_is_an_error_not_a_dead_worker() {
+    let _g = serial();
+    let pool = WorkerPool::new(4);
+    fault::arm_once(FaultPoint::WorkerJobPanic);
+    let err = par_map_with(&pool, (0..32u64).collect(), |x| x * 2).unwrap_err();
+    assert!(err.to_string().contains("panicked"), "got: {}", err);
+    fault::disarm();
+
+    // The pool kept its full width: the same pool still completes
+    // every item of a fault-free run.
+    let out = par_map_with(&pool, (0..32u64).collect(), |x| x * 2).unwrap();
+    assert_eq!(out, (0..32u64).map(|x| x * 2).collect::<Vec<_>>());
+}
+
+#[test]
+fn batcher_panic_recovery_answers_in_flight_and_keeps_serving() {
+    let _g = serial();
+    let core = core();
+    let input_len = core.input_len();
+
+    // A clean request first, so the batch-service baseline exists.
+    let want = core.pipeline().run_image(&image(input_len, 1)).unwrap();
+    assert_eq!(core.infer_blocking(image(input_len, 1)).unwrap(), want);
+
+    // Script the batcher to panic on its next batch: the in-flight
+    // request must be answered with an explicit error — not dropped,
+    // not hung — and the supervisor must keep the core serving.
+    fault::arm_once(FaultPoint::BatcherPanic);
+    let rx = core.submit_blocking(image(input_len, 2)).unwrap();
+    match rx.recv_timeout(Duration::from_secs(60)) {
+        Ok(Err(ReqError::Failed(msg))) => {
+            assert!(msg.contains("batcher-panic"), "got: {}", msg);
+        }
+        other => panic!("in-flight request must fail explicitly, got {:?}", other),
+    }
+    fault::disarm();
+
+    let want = core.pipeline().run_image(&image(input_len, 3)).unwrap();
+    assert_eq!(core.infer_blocking(image(input_len, 3)).unwrap(), want);
+
+    let stats = core.stats();
+    assert!(stats.batcher_restarts >= 1, "the restart must be counted");
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.requests, 2);
+    core.shutdown();
+}
+
+#[test]
+fn a_torn_cache_write_never_reaches_the_real_file() {
+    let _g = serial();
+    let path = std::env::temp_dir().join(format!("cnnblk-chaos-cache-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    let dims = LayerDims::conv(16, 16, 8, 8, 3, 3);
+    let blocking = BlockingString::parse("Fw Fh X0=8 Y0=8 C0=8 K0=8 X1=16 Y1=16")
+        .unwrap()
+        .with_window(&dims);
+    let plan = BlockingPlan::evaluate(
+        "chaos-test",
+        dims,
+        blocking,
+        Provenance::external(
+            Target::Bespoke {
+                budget_bytes: 64 * 1024,
+            },
+            "chaos-test",
+        ),
+    )
+    .unwrap();
+
+    let mut cache = PlanCache::open(&path).unwrap();
+    cache.put("first".to_string(), plan.clone());
+    cache.save().unwrap();
+    let before = std::fs::read_to_string(&path).unwrap();
+
+    // A torn write dies before the atomic rename: the save fails, and
+    // the real cache file is byte-identical to the previous good save.
+    cache.put("second".to_string(), plan);
+    fault::arm_once(FaultPoint::TornCacheWrite);
+    let err = cache.save().unwrap_err();
+    assert!(err.to_string().contains("torn"), "got: {}", err);
+    fault::disarm();
+    assert_eq!(
+        std::fs::read_to_string(&path).unwrap(),
+        before,
+        "the tear must never reach the published file"
+    );
+    let reopened = PlanCache::open(&path).unwrap();
+    assert!(reopened.get("first").is_some());
+    assert!(reopened.get("second").is_none());
+
+    // A clean retry of the same save lands both entries.
+    cache.save().unwrap();
+    let reopened = PlanCache::open(&path).unwrap();
+    assert_eq!(reopened.len(), 2);
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(path.with_extension(format!("json.tmp.{}", std::process::id())));
+}
+
+#[test]
+fn a_seeded_chaos_storm_answers_every_request_and_recovers() {
+    let _g = serial();
+    let core = core();
+    let input_len = core.input_len();
+
+    // Fixed seed: the firing sequence at every site is a pure function
+    // of (seed, site, crossing index), so this storm replays.
+    fault::arm(0xC4A0_5EED);
+    let total = 30u64;
+    let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
+    for k in 0..total {
+        // Every fifth request carries an already-expired deadline, so
+        // formation-time sheds run alongside the injected faults.
+        let deadline_ms = if k % 5 == 4 { Some(0) } else { None };
+        match core.admit(image(input_len, k), deadline_ms).unwrap() {
+            Admission::Admitted(rx) => match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(Ok(out)) => {
+                    assert!(!out.is_empty(), "empty output under chaos");
+                    ok += 1;
+                }
+                Ok(Err(ReqError::Shed { retry_after_ms })) => {
+                    assert!(retry_after_ms > 0, "shed without a retry hint");
+                    shed += 1;
+                }
+                Ok(Err(ReqError::Failed(msg))) => {
+                    assert!(!msg.is_empty(), "failure without a message");
+                    failed += 1;
+                }
+                Err(e) => panic!("request {} hung under chaos: {:?}", k, e),
+            },
+            Admission::Shed { .. } => panic!("a serialized storm cannot fill the queue"),
+            Admission::Closed => panic!("core closed mid-storm"),
+        }
+    }
+    let counters = fault::disarm();
+
+    // The invariant the whole PR exists for: every admitted request was
+    // resolved exactly once, one way or another.
+    assert_eq!(ok + shed + failed, total);
+    // Zero-deadline requests are expired before the batcher ever runs
+    // them, so they shed deterministically regardless of the seed.
+    assert_eq!(shed, total / 5);
+    let crossings: u64 = counters.iter().map(|c| c.crossings).sum();
+    assert!(crossings > 0, "the storm never crossed a fault site");
+
+    // The server's own accounting balances: everything accepted either
+    // completed, failed explicitly, or was shed for its deadline.
+    let stats = core.stats();
+    assert_eq!(
+        stats.accepted,
+        stats.requests + stats.errors + stats.shed_deadline
+    );
+    assert_eq!(stats.shed_deadline, shed);
+    assert_eq!(stats.shed, 0, "no queue-full sheds in a serialized storm");
+
+    // Disarmed, the core serves byte-identically to the in-process
+    // pipeline — chaos left no residue.
+    let img = image(input_len, 999);
+    let want = core.pipeline().run_image(&img).unwrap();
+    assert_eq!(core.infer_blocking(img).unwrap(), want);
+    core.shutdown();
+}

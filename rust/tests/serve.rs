@@ -11,8 +11,8 @@ use cnn_blocking::coordinator::InterpretedPipeline;
 use cnn_blocking::optimizer::beam::BeamConfig;
 use cnn_blocking::serve::frame::{read_frame, write_frame, MAX_FRAME_LEN};
 use cnn_blocking::serve::{
-    CoreConfig, ListenConfig, Request, Response, SchedModel, SchedPolicy, ServeClient, ServeCore,
-    TcpServeHandle,
+    CoreConfig, ListenConfig, Request, Response, RetryPolicy, SchedModel, SchedPolicy,
+    ServeClient, ServeCore, TcpServeHandle,
 };
 use cnn_blocking::util::proptest::{check, Config};
 use cnn_blocking::util::rng::Rng;
@@ -117,9 +117,14 @@ fn prop_infer_tensors_roundtrip_bit_exact() {
                 }
             })
             .collect();
-        let req = Request::Infer(vals.clone()).encode().map_err(|e| e.to_string())?;
+        let req = Request::infer(vals.clone()).encode().map_err(|e| e.to_string())?;
         let back = match Request::decode(&req).map_err(|e| e.to_string())? {
-            Request::Infer(b) => b,
+            Request::Infer { input, deadline_ms } => {
+                if deadline_ms.is_some() {
+                    return Err("deadline materialized out of nowhere".to_string());
+                }
+                input
+            }
             other => return Err(format!("wrong request decode: {:?}", other)),
         };
         let resp = Response::Output(vals.clone()).encode().map_err(|e| e.to_string())?;
@@ -213,11 +218,11 @@ fn malformed_requests_get_error_responses_and_the_session_survives() {
     };
     expect_error(&mut stream, b"\xff\xfe not json");
     expect_error(&mut stream, b"{\"op\": \"warp\"}");
-    expect_error(&mut stream, &Request::Infer(vec![0.0; 3]).encode().unwrap());
+    expect_error(&mut stream, &Request::infer(vec![0.0; 3]).encode().unwrap());
 
     // The same connection still serves a well-formed request.
     let img = image(input_len, 1);
-    write_frame(&mut stream, &Request::Infer(img.clone()).encode().unwrap()).unwrap();
+    write_frame(&mut stream, &Request::infer(img.clone()).encode().unwrap()).unwrap();
     let resp = read_frame(&mut stream, MAX_FRAME_LEN).unwrap().unwrap();
     match Response::decode(&resp).unwrap() {
         Response::Output(got) => {
@@ -303,6 +308,116 @@ fn overload_sheds_and_the_server_stays_live() {
     assert_eq!(stats.shed, shed_total);
     assert_eq!(stats.queue_cap, 1);
     server.shutdown();
+}
+
+#[test]
+fn expired_deadlines_shed_over_tcp_and_the_connection_survives() {
+    let server = serve(CoreConfig::default());
+    let addr = server.local_addr().to_string();
+    let input_len = server.core().input_len();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let img = image(input_len, 7);
+
+    // deadline_ms = 0 is already expired when the batcher forms its
+    // batch, so the request must come back as an explicit shed with a
+    // retry hint — not an error, and not a served output.
+    match client.infer_deadline(&img, 0).unwrap() {
+        Response::Shed { retry_after_ms } => {
+            assert!(retry_after_ms > 0, "deadline shed must carry a retry hint");
+        }
+        other => panic!("expected a deadline shed, got {:?}", other),
+    }
+
+    // A generous deadline on the same connection serves normally and
+    // byte-identically to the in-process pipeline.
+    let want = server.core().pipeline().run_image(&img).unwrap();
+    match client.infer_deadline(&img, 60_000).unwrap() {
+        Response::Output(got) => assert_eq!(got, want),
+        other => panic!("expected an output, got {:?}", other),
+    }
+
+    // The two shed taxonomies stay disjoint: the expired request was
+    // admitted (accepted) and shed at batch formation, never counted as
+    // a queue-full rejection.
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.shed_deadline, 1);
+    assert_eq!(stats.shed, 0, "a deadline shed must not count as queue-full");
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.accepted, 2);
+    server.shutdown();
+}
+
+/// A hand-rolled single-connection server that sheds the first `sheds`
+/// infer requests and serves a fixed output afterwards — the shape
+/// [`ServeClient::request_with_retry`] exists to absorb. Returns the
+/// bound address and a handle yielding how many infers it saw.
+fn shed_first_server(sheds: u64) -> (String, std::thread::JoinHandle<u64>) {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().unwrap();
+        let mut seen = 0u64;
+        while let Ok(Some(frame)) = read_frame(&mut conn, MAX_FRAME_LEN) {
+            let resp = match Request::decode(&frame).unwrap() {
+                Request::Infer { .. } => {
+                    seen += 1;
+                    if seen <= sheds {
+                        Response::Shed { retry_after_ms: 2 }
+                    } else {
+                        Response::Output(vec![1.0, 2.0])
+                    }
+                }
+                other => panic!("unexpected request {:?}", other),
+            };
+            write_frame(&mut conn, &resp.encode().unwrap()).unwrap();
+        }
+        seen
+    });
+    (addr, handle)
+}
+
+#[test]
+fn request_with_retry_rides_out_sheds_until_served() {
+    let (addr, server) = shed_first_server(2);
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let policy = RetryPolicy {
+        max_attempts: 4,
+        base_backoff_ms: 1,
+        max_backoff_ms: 4,
+        jitter_seed: 11,
+    };
+    match client
+        .request_with_retry(&Request::infer(vec![0.5; 4]), &policy)
+        .unwrap()
+    {
+        Response::Output(out) => assert_eq!(out, vec![1.0, 2.0]),
+        other => panic!("expected the retried request to be served, got {:?}", other),
+    }
+    drop(client); // close the connection so the mock server exits
+    assert_eq!(server.join().unwrap(), 3, "two sheds, then one served");
+}
+
+#[test]
+fn request_with_retry_gives_up_after_the_attempt_budget() {
+    let (addr, server) = shed_first_server(u64::MAX); // sheds forever
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let policy = RetryPolicy {
+        max_attempts: 3,
+        base_backoff_ms: 1,
+        max_backoff_ms: 4,
+        jitter_seed: 11,
+    };
+    match client
+        .request_with_retry(&Request::infer(vec![0.5; 4]), &policy)
+        .unwrap()
+    {
+        Response::Shed { retry_after_ms } => {
+            assert!(retry_after_ms > 0, "the final shed still carries the hint");
+        }
+        other => panic!("expected the budget to exhaust on a shed, got {:?}", other),
+    }
+    drop(client);
+    assert_eq!(server.join().unwrap(), 3, "exactly max_attempts requests sent");
 }
 
 #[test]
