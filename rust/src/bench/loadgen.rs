@@ -699,6 +699,14 @@ impl LoadgenReport {
         if s.batcher_restarts > 0 {
             println!("faults:  batcher_restarts={}", s.batcher_restarts);
         }
+        // Trust-boundary counters: pre-admission wire rejects and
+        // resource-guard sheds, printed only when the run tripped them.
+        if s.validation_rejects + s.exec_sheds > 0 {
+            println!(
+                "reject:  validation_rejects={} exec_sheds={}",
+                s.validation_rejects, s.exec_sheds
+            );
+        }
         if s.sched_image + s.sched_layer + s.sched_hybrid > 0 {
             println!(
                 "sched:   image={} layer={} hybrid={} (batch decisions)",

@@ -85,6 +85,16 @@ pub struct Metrics {
     /// Times the supervised batcher was restarted after a panic (its
     /// in-flight batch answered with explicit errors, not dropped).
     pub batcher_restarts: u64,
+    /// Wire requests rejected at the decode/validation boundary before
+    /// admission (malformed frames or documents that fail typed
+    /// validation). These never reach the queue, so they are disjoint
+    /// from both shed counters and from [`Metrics::errors`].
+    pub validation_rejects: u64,
+    /// Admitted requests refused by the execution resource guard
+    /// ([`crate::runtime::backend::ExecLimits`]): the batch was answered
+    /// with a typed over-budget error instead of being executed. Also
+    /// counted in [`Metrics::errors`]; this breaks out the shed share.
+    pub exec_sheds: u64,
     /// Requests completed (success only).
     pub requests: u64,
     /// Batches executed.
@@ -133,6 +143,18 @@ impl Metrics {
     /// Record one supervised batcher restart after a panic.
     pub fn record_batcher_restart(&mut self) {
         self.batcher_restarts += 1;
+    }
+
+    /// Record one wire request rejected at the decode/validation
+    /// boundary (never admitted).
+    pub fn record_validation_reject(&mut self) {
+        self.validation_rejects += 1;
+    }
+
+    /// Record one admitted request refused by the execution resource
+    /// guard (answered with a typed over-budget error).
+    pub fn record_exec_shed(&mut self) {
+        self.exec_sheds += 1;
     }
 
     /// Record one completed request and its latency.
@@ -239,6 +261,12 @@ impl Metrics {
         );
         if self.batcher_restarts > 0 {
             line.push_str(&format!(" batcher_restarts={}", self.batcher_restarts));
+        }
+        if self.validation_rejects > 0 {
+            line.push_str(&format!(" validation_rejects={}", self.validation_rejects));
+        }
+        if self.exec_sheds > 0 {
+            line.push_str(&format!(" exec_sheds={}", self.exec_sheds));
         }
         if self.macs > 0 {
             let label = if self.backend.is_empty() {
@@ -364,6 +392,22 @@ mod tests {
         m.record_batcher_restart();
         let r = m.report(Duration::from_secs(1));
         assert!(r.contains("batcher_restarts=1"), "{}", r);
+    }
+
+    #[test]
+    fn trust_boundary_counters_stay_out_of_the_report_until_hit() {
+        let mut m = Metrics::default();
+        let r = m.report(Duration::from_secs(1));
+        assert!(!r.contains("validation_rejects"), "{}", r);
+        assert!(!r.contains("exec_sheds"), "{}", r);
+        m.record_validation_reject();
+        m.record_validation_reject();
+        m.record_exec_shed();
+        assert_eq!(m.validation_rejects, 2);
+        assert_eq!(m.exec_sheds, 1);
+        let r = m.report(Duration::from_secs(1));
+        assert!(r.contains("validation_rejects=2"), "{}", r);
+        assert!(r.contains("exec_sheds=1"), "{}", r);
     }
 
     #[test]

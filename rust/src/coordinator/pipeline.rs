@@ -42,7 +42,7 @@ use super::naive_conv::{maxpool2, relu};
 use crate::optimizer::beam::BeamConfig;
 use crate::plan::BlockingPlan;
 use crate::runtime::backend::{
-    backend_by_name, Backend, ConvInputs, ParallelTiledBackend, TiledCpuBackend,
+    backend_by_name, Backend, ConvInputs, ExecLimits, ParallelTiledBackend, TiledCpuBackend,
 };
 use crate::runtime::Manifest;
 use crate::util::fault::{self, FaultPoint};
@@ -112,6 +112,9 @@ pub struct PipelineRun {
 struct PipelineInner {
     layers: Vec<PipelineLayer>,
     backend: Arc<dyn Backend>,
+    /// Resource ceilings applied to every conv execution (serving's
+    /// `--max-exec-bytes`); [`ExecLimits::UNLIMITED`] by default.
+    limits: ExecLimits,
 }
 
 /// A conv→ReLU(→pool) chain executed through a plan backend. Batch
@@ -184,8 +187,31 @@ impl InterpretedPipeline {
             });
         }
         Ok(InterpretedPipeline {
-            inner: Arc::new(PipelineInner { layers, backend }),
+            inner: Arc::new(PipelineInner {
+                layers,
+                backend,
+                limits: ExecLimits::UNLIMITED,
+            }),
         })
+    }
+
+    /// The same pipeline with per-execution resource ceilings: every
+    /// conv execution is priced against `limits` and refused with a
+    /// typed [`crate::runtime::backend::ExecError`] when over — the
+    /// guard serving's `--max-exec-bytes` installs.
+    pub fn with_limits(&self, limits: ExecLimits) -> InterpretedPipeline {
+        InterpretedPipeline {
+            inner: Arc::new(PipelineInner {
+                layers: self.inner.layers.clone(),
+                backend: Arc::clone(&self.inner.backend),
+                limits,
+            }),
+        }
+    }
+
+    /// The resource ceilings every conv execution runs under.
+    pub fn limits(&self) -> ExecLimits {
+        self.inner.limits
     }
 
     /// Pipeline from an artifact manifest's rehydrated plans — the same
@@ -451,7 +477,7 @@ impl PipelineInner {
             // allocation (one memcpy — Arc<[f32]> carries an inline
             // refcount header, so the Vec buffer cannot be reused).
             let inputs = ConvInputs::from_shared(d, h.into(), Arc::clone(&layer.weights))?;
-            let out = self.backend.execute(&layer.plan, &inputs)?;
+            let out = self.backend.execute_with(&layer.plan, &inputs, self.limits)?;
             macs += out.counters.macs;
             let dc = &out.counters.dram;
             dram_elems += dc.input_loads + dc.kernel_loads + dc.output_loads + dc.output_stores;
@@ -483,7 +509,7 @@ impl PipelineInner {
         let layer = &self.layers[li];
         let d = layer.plan.dims;
         let inputs = ConvInputs::from_shared(d, act.into(), Arc::clone(&layer.weights))?;
-        let out = backend.execute(&layer.plan, &inputs)?;
+        let out = backend.execute_with(&layer.plan, &inputs, self.limits)?;
         let dc = &out.counters.dram;
         let dram = dc.input_loads + dc.kernel_loads + dc.output_loads + dc.output_stores;
         let mut h = out.output;
@@ -656,6 +682,22 @@ mod tests {
             .run_batch_scheduled(flat, 1, &[Mapping::ImageParallel; 3])
             .unwrap_err();
         assert!(err.to_string().contains("tiled"), "{}", err);
+    }
+
+    #[test]
+    fn limited_pipeline_sheds_with_a_typed_error() {
+        use crate::runtime::backend::ExecError;
+        let p = InterpretedPipeline::plan_default(&BeamConfig::quick(), "tiled", 0).unwrap();
+        let img = vec![0.1f32; p.input_len()];
+        // A 16-byte ceiling refuses the first conv before allocating,
+        // and the ExecError stays downcastable through the pipeline.
+        let limited = p.with_limits(ExecLimits::with_max_bytes(16));
+        assert_eq!(limited.limits(), ExecLimits::with_max_bytes(16));
+        let err = limited.run_image(&img).unwrap_err();
+        assert!(err.downcast_ref::<ExecError>().is_some(), "{}", err);
+        // A roomy ceiling admits and matches the unlimited pipeline.
+        let roomy = p.with_limits(ExecLimits::with_max_bytes(1 << 30));
+        assert_eq!(roomy.run_image(&img).unwrap(), p.run_image(&img).unwrap());
     }
 
     #[test]

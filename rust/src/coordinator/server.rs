@@ -74,6 +74,10 @@ pub struct ServerConfig {
     /// Worker-count override for the serving pool (`--jobs`; `0`
     /// follows `CNNBLK_THREADS` / machine width).
     pub jobs: usize,
+    /// Execution buffer ceiling per layer execution, bytes
+    /// (`--max-exec-bytes`; `0` disables the guard). Interpreted mode
+    /// only — PJRT executables have a fixed compiled footprint.
+    pub max_exec_bytes: u64,
 }
 
 impl Default for ServerConfig {
@@ -86,6 +90,7 @@ impl Default for ServerConfig {
             execution: Execution::Pjrt,
             policy: crate::serve::sched::SchedPolicy::Model,
             jobs: 0,
+            max_exec_bytes: 0,
         }
     }
 }
@@ -148,6 +153,7 @@ impl InferenceServer {
                 queue_cap: cfg.queue_depth,
                 policy: cfg.policy,
                 jobs: cfg.jobs,
+                max_exec_bytes: cfg.max_exec_bytes,
                 ..CoreConfig::default()
             },
         )?;

@@ -1,0 +1,346 @@
+//! Deterministic structure-aware fuzzing of the trust boundaries:
+//! `cnnblk fuzz` behind a library entry point.
+//!
+//! Three corpora are cycled round-robin, one mutation per iteration,
+//! all driven by the in-tree deterministic [`Rng`] so a seed replays
+//! byte-identically (CI runs a fixed seed and archives the report):
+//!
+//! 1. **Plan JSON** — a valid [`BlockingPlan`] document is mutated in
+//!    its parsed JSON tree (field deletion, type confusion, hostile
+//!    numbers, blocking-notation strings) and occasionally at the byte
+//!    level, then pushed back through [`json::parse`] and
+//!    [`BlockingPlan::from_json`]. Rejections must be the typed
+//!    [`PlanError`] taxonomy (counted per [`PlanError::class`]) or a
+//!    structured decode error — never a panic.
+//! 2. **Frame bytes** — random, truncated, and hostile-header byte
+//!    strings through [`read_frame`] with the production
+//!    [`MAX_FRAME_LEN`] cap.
+//! 3. **Codec requests** — mutated wire-request documents through
+//!    [`Request::decode`].
+//!
+//! Every iteration's parse/validate step runs under `catch_unwind`;
+//! the invariant the harness asserts is **zero panics** — hostile
+//! bytes may be rejected, but only ever with a typed or structured
+//! error. [`FuzzReport`] carries the per-class outcome counts so a
+//! drop in a class's count flags lost coverage, not just crashes.
+
+use crate::model::dims::LayerDims;
+use crate::plan::{BlockingPlan, PlanError, Planner, Target};
+use crate::serve::codec::Request;
+use crate::serve::frame::{read_frame, write_frame, MAX_FRAME_LEN};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::Cursor;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Outcome of one [`run`]: per-class counts over every iteration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FuzzReport {
+    /// The seed the run replays from.
+    pub seed: u64,
+    /// Iterations executed (one mutated input each).
+    pub iters: u64,
+    /// Iterations whose parse/validate step panicked — the failure
+    /// count; any non-zero value is a fuzz failure.
+    pub panics: u64,
+    /// Outcome counts keyed by class: `plan-<PlanError class>` for
+    /// typed plan rejections, `plan-decode` for structured decode
+    /// errors, `plan-ok`/`json-parse`, `frame-ok`/`frame-eof`/
+    /// `frame-err`, `req-ok`/`req-err`, and `panic`.
+    pub classes: BTreeMap<String, u64>,
+}
+
+impl FuzzReport {
+    /// Serialize for the `--out` report file (CI archives it).
+    pub fn to_json(&self) -> Json {
+        let mut classes = Json::obj();
+        for (k, v) in &self.classes {
+            classes.set(k, json::unum(*v));
+        }
+        let mut o = Json::obj();
+        o.set("seed", json::unum(self.seed))
+            .set("iters", json::unum(self.iters))
+            .set("panics", json::unum(self.panics))
+            .set("classes", classes);
+        o
+    }
+
+    /// Print the per-class counts, one line each, then the verdict.
+    pub fn print(&self) {
+        println!("fuzz: seed={} iters={}", self.seed, self.iters);
+        for (class, count) in &self.classes {
+            println!("  {:<24} {}", class, count);
+        }
+        println!(
+            "  {:<24} {} {}",
+            "panics",
+            self.panics,
+            if self.panics == 0 { "(ok)" } else { "(FAIL)" }
+        );
+    }
+}
+
+/// Replace a JSON node with a hostile leaf value.
+fn hostile_value(rng: &mut Rng) -> Json {
+    match rng.below(6) {
+        0 => Json::Null,
+        1 => Json::Num(
+            *rng.pick(&[0.0, -1.0, 0.5, 1e18, 9.9e307, f64::MAX, -0.0][..]),
+        ),
+        // Blocking-notation-shaped strings steer mutations into the
+        // string/tile validators instead of only the JSON decoder.
+        2 => Json::Str(
+            (*rng.pick(
+                &["", "XYCK", "Xx4|", "FwFhXYCKB", "Xx0Yy0|XYCK", "naive", "\u{1}"][..],
+            ))
+            .to_string(),
+        ),
+        3 => Json::Bool(rng.chance(0.5)),
+        4 => Json::Arr(Vec::new()),
+        _ => Json::obj(),
+    }
+}
+
+/// One structure-aware mutation: walk into a random child (mostly) and
+/// delete it or recurse; at a leaf, substitute a hostile value.
+fn mutate_tree(rng: &mut Rng, v: &mut Json) {
+    match v {
+        Json::Obj(m) if !m.is_empty() && rng.chance(0.8) => {
+            let keys: Vec<String> = m.keys().cloned().collect();
+            let k = (*rng.pick(&keys)).clone();
+            if rng.chance(0.2) {
+                m.remove(&k);
+            } else {
+                mutate_tree(rng, m.get_mut(&k).expect("picked key exists"));
+            }
+        }
+        Json::Arr(a) if !a.is_empty() && rng.chance(0.8) => {
+            let i = rng.below(a.len() as u64) as usize;
+            if rng.chance(0.2) {
+                a.remove(i);
+            } else {
+                mutate_tree(rng, &mut a[i]);
+            }
+        }
+        other => *other = hostile_value(rng),
+    }
+}
+
+/// One byte-level mutation: flip, truncate, or insert.
+fn mutate_bytes(rng: &mut Rng, bytes: &mut Vec<u8>) {
+    if bytes.is_empty() {
+        bytes.push(rng.next_u64() as u8);
+        return;
+    }
+    match rng.below(3) {
+        0 => {
+            let i = rng.below(bytes.len() as u64) as usize;
+            bytes[i] = rng.next_u64() as u8;
+        }
+        1 => {
+            let keep = rng.below(bytes.len() as u64 + 1) as usize;
+            bytes.truncate(keep);
+        }
+        _ => {
+            let i = rng.below(bytes.len() as u64 + 1) as usize;
+            bytes.insert(i, rng.next_u64() as u8);
+        }
+    }
+}
+
+/// Classify one mutated plan document (text form) through the parse →
+/// `from_json` → `validate` chain.
+fn classify_plan(text: &str) -> String {
+    match json::parse(text) {
+        Err(_) => "json-parse".to_string(),
+        Ok(doc) => match BlockingPlan::from_json(&doc) {
+            Ok(_) => "plan-ok".to_string(),
+            Err(e) => match e.downcast_ref::<PlanError>() {
+                Some(pe) => format!("plan-{}", pe.class()),
+                None => "plan-decode".to_string(),
+            },
+        },
+    }
+}
+
+/// Classify one byte string through the framing reader.
+fn classify_frame(bytes: &[u8]) -> String {
+    match read_frame(&mut Cursor::new(bytes), MAX_FRAME_LEN) {
+        Ok(Some(_)) => "frame-ok".to_string(),
+        Ok(None) => "frame-eof".to_string(),
+        Err(_) => "frame-err".to_string(),
+    }
+}
+
+/// Classify one byte string through the wire-request decoder.
+fn classify_request(bytes: &[u8]) -> String {
+    match Request::decode(bytes) {
+        Ok(_) => "req-ok".to_string(),
+        Err(_) => "req-err".to_string(),
+    }
+}
+
+/// Generate one mutated frame byte string: pure noise, a valid frame
+/// truncated mid-stream, or a hostile header declaring an absurd
+/// payload length.
+fn frame_input(rng: &mut Rng) -> Vec<u8> {
+    match rng.below(3) {
+        0 => {
+            let len = rng.below(64) as usize;
+            (0..len).map(|_| rng.next_u64() as u8).collect()
+        }
+        1 => {
+            let payload: Vec<u8> = (0..rng.below(128) as usize)
+                .map(|_| rng.next_u64() as u8)
+                .collect();
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &payload).expect("in-memory frame write");
+            let keep = rng.below(buf.len() as u64 + 1) as usize;
+            buf.truncate(keep);
+            buf
+        }
+        _ => {
+            // Header alone must refuse this before buffering a byte.
+            let declared = (MAX_FRAME_LEN as u32 + 1).saturating_add((rng.next_u64() as u32) >> 8);
+            let mut buf = declared.to_be_bytes().to_vec();
+            buf.extend((0..rng.below(16)).map(|_| rng.next_u64() as u8));
+            buf
+        }
+    }
+}
+
+/// Run `iters` deterministic mutations from `seed` across the three
+/// corpora and return the per-class report. The parse/validate step of
+/// every iteration runs under `catch_unwind`; a caught panic is counted
+/// (and the run keeps going, so one report shows every crash class).
+pub fn run(seed: u64, iters: u64) -> Result<FuzzReport> {
+    // The plan corpus seed: one small, genuinely valid plan document.
+    let plan = Planner::for_named("fuzz-seed", LayerDims::conv(8, 8, 4, 4, 3, 3))
+        .target(Target::Bespoke {
+            budget_bytes: 64 * 1024,
+        })
+        .levels(2)
+        .plan()
+        .context("planning the fuzz corpus seed plan")?;
+    let plan_base = plan.to_json();
+    let req_bases: Vec<Vec<u8>> = vec![
+        Request::infer(vec![0.25, -1.0, 3.5]).encode()?,
+        Request::Infer {
+            input: vec![1.0],
+            deadline_ms: Some(25),
+        }
+        .encode()?,
+        Request::Health.encode()?,
+        Request::Stats.encode()?,
+    ];
+
+    let mut rng = Rng::new(seed);
+    let mut classes: BTreeMap<String, u64> = BTreeMap::new();
+    let mut panics = 0u64;
+    for i in 0..iters {
+        // Generation (trusted harness code) stays outside catch_unwind;
+        // only the parsers under test run inside it.
+        let class = match i % 3 {
+            0 => {
+                let mut doc = plan_base.clone();
+                for _ in 0..rng.range(1, 3) {
+                    mutate_tree(&mut rng, &mut doc);
+                }
+                let mut bytes = doc.compact().into_bytes();
+                if rng.chance(0.3) {
+                    mutate_bytes(&mut rng, &mut bytes);
+                }
+                let text = String::from_utf8_lossy(&bytes).into_owned();
+                catch_unwind(AssertUnwindSafe(|| classify_plan(&text)))
+            }
+            1 => {
+                let bytes = frame_input(&mut rng);
+                catch_unwind(AssertUnwindSafe(|| classify_frame(&bytes)))
+            }
+            _ => {
+                let mut bytes = rng.pick(&req_bases).clone();
+                if rng.chance(0.5) {
+                    let text = String::from_utf8_lossy(&bytes).into_owned();
+                    if let Ok(mut doc) = json::parse(&text) {
+                        mutate_tree(&mut rng, &mut doc);
+                        bytes = doc.compact().into_bytes();
+                    }
+                }
+                mutate_bytes(&mut rng, &mut bytes);
+                catch_unwind(AssertUnwindSafe(|| classify_request(&bytes)))
+            }
+        };
+        let label = match class {
+            Ok(c) => c,
+            Err(_) => {
+                panics += 1;
+                "panic".to_string()
+            }
+        };
+        *classes.entry(label).or_insert(0) += 1;
+    }
+    Ok(FuzzReport {
+        seed,
+        iters,
+        panics,
+        classes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fuzz_is_deterministic_and_panic_free() {
+        let a = run(7, 600).unwrap();
+        let b = run(7, 600).unwrap();
+        assert_eq!(a, b, "same seed must replay byte-identically");
+        assert_eq!(a.panics, 0, "classes: {:?}", a.classes);
+        assert_eq!(a.iters, 600);
+        assert_eq!(a.classes.values().sum::<u64>(), 600);
+    }
+
+    #[test]
+    fn fuzz_exercises_every_corpus() {
+        let r = run(42, 900).unwrap();
+        assert_eq!(r.panics, 0, "classes: {:?}", r.classes);
+        let hit = |prefix: &str| {
+            r.classes
+                .iter()
+                .any(|(k, &v)| k.starts_with(prefix) && v > 0)
+        };
+        // Every corpus produced at least one rejection AND mutations
+        // reached the typed plan taxonomy (not only the JSON decoder).
+        assert!(hit("json-parse") || hit("plan-"), "{:?}", r.classes);
+        assert!(hit("frame-err"), "{:?}", r.classes);
+        assert!(hit("req-err"), "{:?}", r.classes);
+        assert!(
+            r.classes.keys().filter(|k| k.starts_with("plan-")).count() >= 2,
+            "plan mutations too shallow: {:?}",
+            r.classes
+        );
+    }
+
+    #[test]
+    fn seed_changes_the_trajectory() {
+        let a = run(1, 300).unwrap();
+        let b = run(2, 300).unwrap();
+        assert_ne!(a.classes, b.classes, "different seeds, same outcome mix");
+    }
+
+    #[test]
+    fn report_roundtrips_through_json() {
+        let r = run(3, 150).unwrap();
+        let doc = r.to_json();
+        assert_eq!(doc.get("seed").unwrap().as_u64(), Some(3));
+        assert_eq!(doc.get("panics").unwrap().as_u64(), Some(0));
+        let total: u64 = match doc.get("classes").unwrap() {
+            Json::Obj(m) => m.values().filter_map(|v| v.as_u64()).sum(),
+            _ => panic!("classes must serialize as an object"),
+        };
+        assert_eq!(total, 150);
+    }
+}

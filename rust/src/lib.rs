@@ -86,6 +86,10 @@
 //!   health/stats endpoints, graceful drain — `cnnblk serve --listen`
 //!   and the `cnnblk loadgen` harness run on it.
 //! * [`figures`] — harness that regenerates each paper table/figure.
+//! * [`fuzz`] — deterministic structure-aware fuzz harness over the
+//!   trust boundaries (plan JSON, wire frames, codec requests):
+//!   `cnnblk fuzz` asserts the no-panic invariant and reports
+//!   per-error-class counts.
 //! * [`bench`] — the `cnnblk bench` perf harness: naive vs blocked vs
 //!   tiled vs parallel MAC/s and per-level bytes/s on the Table 4
 //!   layers, written to the machine-readable `BENCH_5.json` trajectory
@@ -103,6 +107,7 @@ pub mod bench;
 pub mod cachesim;
 pub mod coordinator;
 pub mod figures;
+pub mod fuzz;
 pub mod model;
 pub mod optimizer;
 pub mod parallel;

@@ -18,6 +18,9 @@
 //!              load-shedding via --listen
 //!   loadgen    drive a live `serve --listen` server: N connections,
 //!              p50/p95/p99 latency + MAC/s, BENCH_6.json trajectory point
+//!   fuzz       deterministic structure-aware fuzzing of the trust
+//!              boundaries (plan JSON, wire frames, codec requests);
+//!              fails if any mutation panics a parser
 //!   validate   PJRT round-trip checks against goldens and the native conv
 //!
 //! docs/CLI.md documents every subcommand and flag; `print_help` below
@@ -54,6 +57,7 @@ fn main() -> anyhow::Result<()> {
         Some("cachesim") => cmd_cachesim(&args),
         Some("serve") => cmd_serve(&args),
         Some("loadgen") => cmd_loadgen(&args),
+        Some("fuzz") => cmd_fuzz(&args),
         Some("validate") => cmd_validate(&args),
         _ => {
             print_help();
@@ -107,6 +111,10 @@ fn print_help() {
          \x20         per batch; 'image'/'layer' pin the mapping for A/B runs)\n\
          \x20         [--jobs N]                    (worker threads for the serving pool;\n\
          \x20         0 = CNNBLK_THREADS / machine width; takes precedence over CNNBLK_THREADS)\n\
+         \x20         [--max-exec-bytes N]          (execution resource guard, interpreted\n\
+         \x20         serving only: plans whose working set needs more than N bytes of\n\
+         \x20         execution buffers are refused with a typed over-budget error instead\n\
+         \x20         of executed; 0 = unlimited)\n\
          \x20         [--listen] [--host 127.0.0.1] [--port 7744] (concurrent TCP front end\n\
          \x20         over the interpreted pipeline: length-prefixed JSON protocol, explicit\n\
          \x20         load-shedding past --queue-cap, health/stats ops; runs until killed;\n\
@@ -132,6 +140,10 @@ fn print_help() {
          \x20         two fixed-policy servers and write a three-way BENCH_7.json comparison;\n\
          \x20         with --smoke, fails if the model policy is slower than the worse fixed\n\
          \x20         policy)\n\
+         fuzz      [--seed 42] [--iters 10000] [--out fuzz-report.json]\n\
+         \x20         (deterministic structure-aware fuzzing of the deserialization trust\n\
+         \x20         boundaries — plan JSON, wire frames, codec requests; prints per-error-\n\
+         \x20         class counts and fails if any mutation panics a parser)\n\
          validate  [--artifacts artifacts]                    (PJRT round-trip checks)\n\
          \n\
          add --full-search for the paper-width beam (128 seeds) instead of the quick one"
@@ -711,6 +723,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             "queue-cap",
             "sched",
             "jobs",
+            "max-exec-bytes",
         ],
     )?;
     // A bare `--interpret` (no backend name) serves the tiled fast
@@ -728,6 +741,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let queue_cap = args.get_u64("queue-cap", 64) as usize;
     let policy = SchedPolicy::parse(&args.get_or("sched", "model"))?;
     let jobs = args.get_u64("jobs", 0) as usize;
+    let max_exec_bytes = args.get_u64("max-exec-bytes", 0);
 
     if args.has("listen") {
         // The TCP front end always serves the interpreted pipeline
@@ -745,6 +759,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 queue_cap,
                 policy,
                 jobs,
+                max_exec_bytes,
                 ..CoreConfig::default()
             },
         )?;
@@ -788,6 +803,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         execution,
         policy,
         jobs,
+        max_exec_bytes,
     };
     let n = args.get_u64("requests", 256) as usize;
     let server = InferenceServer::start(cfg)?;
@@ -888,6 +904,25 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
              compares both fixed policies against the model server)"
         ),
     }
+    Ok(())
+}
+
+fn cmd_fuzz(args: &Args) -> anyhow::Result<()> {
+    check_flags(args, &["seed", "iters", "out"])?;
+    let seed = args.get_u64("seed", 42);
+    let iters = args.get_u64("iters", 10_000);
+    let report = cnn_blocking::fuzz::run(seed, iters)?;
+    report.print();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json().pretty())?;
+        println!("wrote {}", out);
+    }
+    anyhow::ensure!(
+        report.panics == 0,
+        "{} of {} mutations panicked — the no-panic invariant is broken",
+        report.panics,
+        report.iters
+    );
     Ok(())
 }
 

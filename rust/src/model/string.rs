@@ -29,7 +29,7 @@ pub struct BlockingString {
 }
 
 /// Validation failure for a blocking string against a layer's dims.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
 pub enum StringError {
     /// A dim's outermost range stops short of the problem extent.
     #[error("dim {0} never reaches its full extent ({1} < {2})")]

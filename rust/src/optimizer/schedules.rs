@@ -46,16 +46,30 @@ impl LayerSchedule {
     }
 
     /// Rebuild the full plan (re-evaluating on the export target).
+    ///
+    /// Trust boundary: the row came from a JSON document. The rebuilt
+    /// plan runs the full [`BlockingPlan::validate`] contract, and the
+    /// row's *stored* tile must equal the tile the string derives —
+    /// otherwise the record describes a kernel compiled on different
+    /// block boundaries than the schedule claims.
     pub fn to_plan(&self, origin: &str) -> anyhow::Result<BlockingPlan> {
         let string = crate::model::string::BlockingString::parse(&self.string)
             .map_err(|e| anyhow::anyhow!("schedule string: {}", e))?
             .with_window(&self.dims);
-        BlockingPlan::evaluate(
+        let plan = BlockingPlan::evaluate(
             &self.name,
             self.dims,
             string,
             Provenance::external(export_target(), origin),
-        )
+        )?;
+        if self.tile != plan.tile {
+            return Err(anyhow::Error::new(crate::plan::PlanError::TileMismatch {
+                stored: self.tile,
+                derived: plan.tile,
+            }));
+        }
+        plan.validate().map_err(anyhow::Error::new)?;
+        Ok(plan)
     }
 }
 
@@ -243,6 +257,19 @@ mod tests {
             assert_eq!(dims.c % s.tile.2, 0, "{}: c tile", name);
             assert_eq!(dims.k % s.tile.3, 0, "{}: k tile", name);
         }
+    }
+
+    #[test]
+    fn to_plan_rejects_a_tile_inconsistent_with_the_string() {
+        let cfg = BeamConfig::quick();
+        let (name, dims) = &e2e_layers()[2];
+        let mut s = schedule_layer(name, dims, &cfg);
+        s.tile.0 += 1;
+        let err = s.to_plan("test").unwrap_err();
+        let pe = err
+            .downcast_ref::<crate::plan::PlanError>()
+            .expect("typed PlanError through the anyhow chain");
+        assert!(matches!(pe, crate::plan::PlanError::TileMismatch { .. }));
     }
 
     #[test]

@@ -78,6 +78,7 @@ pub struct PlanCache {
     path: PathBuf,
     entries: BTreeMap<String, BlockingPlan>,
     claims: BTreeMap<String, JobClaim>,
+    dropped_entries: usize,
 }
 
 impl PlanCache {
@@ -88,27 +89,40 @@ impl PlanCache {
     /// to a `.corrupt-<pid>` sibling for post-mortem — and the cache
     /// starts fresh; a document under a foreign key format resets
     /// silently (it is well-formed, just unusable); individual entries
-    /// that no longer parse are dropped. Everything discarded gets
-    /// recomputed and overwritten.
+    /// that no longer parse **or fail [`BlockingPlan::validate`]** are
+    /// dropped and counted ([`PlanCache::dropped_entries`]) while the
+    /// valid rest of the document survives — per-entry salvage, never
+    /// whole-file quarantine for a parseable document. Everything
+    /// discarded gets recomputed and overwritten.
     pub fn open(path: impl Into<PathBuf>) -> Result<PlanCache> {
         let path = path.into();
-        let (entries, claims) = if path.exists() {
+        let (entries, claims, dropped_entries) = if path.exists() {
             let text = std::fs::read_to_string(&path)
                 .with_context(|| format!("reading plan cache {}", path.display()))?;
             match parse(&text) {
                 Ok(doc) => document_from_json(&doc),
                 Err(_) => {
                     quarantine_corrupt(&path);
-                    (BTreeMap::new(), BTreeMap::new())
+                    (BTreeMap::new(), BTreeMap::new(), 0)
                 }
             }
         } else {
-            (BTreeMap::new(), BTreeMap::new())
+            (BTreeMap::new(), BTreeMap::new(), 0)
         };
+        if dropped_entries > 0 {
+            eprintln!(
+                "cnnblk: plan cache {}: dropped {} invalid entr{} ({} valid kept)",
+                path.display(),
+                dropped_entries,
+                if dropped_entries == 1 { "y" } else { "ies" },
+                entries.len()
+            );
+        }
         Ok(PlanCache {
             path,
             entries,
             claims,
+            dropped_entries,
         })
     }
 
@@ -121,12 +135,19 @@ impl PlanCache {
             path: path.into(),
             entries: BTreeMap::new(),
             claims: BTreeMap::new(),
+            dropped_entries: 0,
         }
     }
 
     /// The cache file this handle reads and writes.
     pub fn path(&self) -> &Path {
         &self.path
+    }
+
+    /// Entries the load dropped because they failed to parse or failed
+    /// plan validation (the valid rest of the document was kept).
+    pub fn dropped_entries(&self) -> usize {
+        self.dropped_entries
     }
 
     /// Number of in-memory entries.
@@ -278,14 +299,21 @@ fn quarantine_corrupt(path: &Path) {
     }
 }
 
-type Document = (BTreeMap<String, BlockingPlan>, BTreeMap<String, JobClaim>);
+type Document = (
+    BTreeMap<String, BlockingPlan>,
+    BTreeMap<String, JobClaim>,
+    usize,
+);
 
 /// Lenient text parse used by `save`'s merge step: malformed on-disk
 /// text just means nothing to merge (never quarantines — only `open`
 /// decides that).
-fn parse_document(text: &str) -> Document {
+fn parse_document(text: &str) -> (BTreeMap<String, BlockingPlan>, BTreeMap<String, JobClaim>) {
     match parse(text) {
-        Ok(j) => document_from_json(&j),
+        Ok(j) => {
+            let (entries, claims, _dropped) = document_from_json(&j);
+            (entries, claims)
+        }
         Err(_) => (BTreeMap::new(), BTreeMap::new()),
     }
 }
@@ -293,17 +321,25 @@ fn parse_document(text: &str) -> Document {
 fn document_from_json(j: &Json) -> Document {
     let mut entries = BTreeMap::new();
     let mut claims = BTreeMap::new();
+    let mut dropped = 0usize;
     // A document keyed under another format (or predating key
     // formats) holds entries no current lookup can ever hit — and
     // claims on keys no engine will ever compute: start fresh
     // instead of dragging them through every merge.
     if j.get("key_format").and_then(|v| v.as_u64()) != Some(KEY_FORMAT) {
-        return (entries, claims);
+        return (entries, claims, dropped);
     }
     if let Some(Json::Obj(m)) = j.get("entries") {
         for (k, v) in m {
-            if let Ok(p) = BlockingPlan::from_json(v) {
-                entries.insert(k.clone(), p);
+            // Per-entry salvage: `from_json` runs the full plan
+            // validation, so a parseable-but-invalid entry is dropped
+            // (and counted) here instead of reaching a backend — while
+            // every valid sibling entry survives.
+            match BlockingPlan::from_json(v) {
+                Ok(p) => {
+                    entries.insert(k.clone(), p);
+                }
+                Err(_) => dropped += 1,
             }
         }
     }
@@ -322,7 +358,7 @@ fn document_from_json(j: &Json) -> Document {
             }
         }
     }
-    (entries, claims)
+    (entries, claims, dropped)
 }
 
 /// Concurrency-safe in-memory plan index: keys are hashed across
@@ -489,6 +525,53 @@ mod tests {
             std::process::id()
         ));
         assert!(!quarantined.exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mixed_document_salvages_valid_entries_and_counts_drops() {
+        // A parseable document with one parseable-but-invalid entry
+        // (tile inconsistent with the string) must keep every valid
+        // entry, drop only the bad one, count it — and never quarantine.
+        let path = temp_path("salvage");
+        let _ = std::fs::remove_file(&path);
+        let plan = sample_plan();
+        let mut bad = plan.to_json();
+        bad.set(
+            "tile",
+            json::arr([json::unum(9), json::unum(9), json::unum(9), json::unum(9)]),
+        );
+        let mut entries = Json::obj();
+        entries.set("good-a", plan.to_json());
+        entries.set("bad", bad);
+        entries.set("good-b", plan.to_json());
+        let mut root = Json::obj();
+        root.set("version", json::unum(PLAN_SCHEMA_VERSION));
+        root.set("key_format", json::unum(KEY_FORMAT));
+        root.set("entries", entries);
+        std::fs::write(&path, root.pretty()).unwrap();
+
+        let c = PlanCache::open(&path).unwrap();
+        assert_eq!(c.len(), 2, "both valid entries survive");
+        assert_eq!(c.get("good-a"), Some(&plan));
+        assert_eq!(c.get("good-b"), Some(&plan));
+        assert!(c.get("bad").is_none());
+        assert_eq!(c.dropped_entries(), 1);
+
+        // Salvage, not quarantine: the document stays in place.
+        assert!(path.exists());
+        let quarantined = path.with_file_name(format!(
+            "{}.corrupt-{}",
+            path.file_name().unwrap().to_string_lossy(),
+            std::process::id()
+        ));
+        assert!(!quarantined.exists());
+
+        // A save rewrites the file with only the valid entries.
+        c.save().unwrap();
+        let back = PlanCache::open(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.dropped_entries(), 0);
         let _ = std::fs::remove_file(&path);
     }
 

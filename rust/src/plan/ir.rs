@@ -403,12 +403,6 @@ impl BlockingPlan {
         let string = BlockingString::parse(get_str(j, "string")?)
             .map_err(|e| anyhow!("plan string: {}", e))?
             .with_window(&dims);
-        // A hand-edited or stale document must not smuggle in a blocking
-        // that violates the divisibility invariants the rest of the code
-        // assumes (every other construction path validates too).
-        string
-            .validate(&dims)
-            .map_err(|e| anyhow!("plan string '{}' invalid for {}: {}", string, dims, e))?;
         let tj = j
             .get("tile")
             .and_then(|t| t.as_arr())
@@ -465,7 +459,7 @@ impl BlockingPlan {
             search_ms: get_u64(pj, "search_ms")?,
             cache_hit: get_bool(pj, "cache_hit")?,
         };
-        Ok(BlockingPlan {
+        let plan = BlockingPlan {
             name,
             dims,
             string,
@@ -473,7 +467,13 @@ impl BlockingPlan {
             buffers,
             outcome,
             provenance,
-        })
+        };
+        // A hand-edited or stale document must not smuggle in a plan
+        // that violates the structural invariants the backends index
+        // buffers by — reject with the typed diagnostic (downcastable
+        // to [`crate::plan::PlanError`] through the anyhow chain).
+        plan.validate().map_err(anyhow::Error::new)?;
+        Ok(plan)
     }
 }
 

@@ -16,6 +16,7 @@ pub mod cache;
 pub mod engine;
 pub mod ir;
 pub mod planner;
+pub mod validate;
 
 pub use cache::{JobClaim, PlanCache, SharedPlanCache};
 pub use engine::{job_key, PlanEngine, PlanRequest};
@@ -23,3 +24,4 @@ pub use ir::{
     BlockingPlan, PlanBuffer, PlanOutcome, Provenance, Target, MODEL_VERSION, PLAN_SCHEMA_VERSION,
 };
 pub use planner::{NetworkPlanner, Planner};
+pub use validate::PlanError;

@@ -258,6 +258,16 @@ impl Planner {
                 )
             })
             .collect::<Result<Vec<_>>>()?;
+        // Every searched plan must satisfy the full plan contract — the
+        // property suite pins this across strategies; the debug
+        // assertion catches a regressing strategy at its source.
+        for p in &plans {
+            debug_assert!(
+                p.validate().is_ok(),
+                "searched plan failed validation: {:?}",
+                p.validate()
+            );
+        }
         if let Some(path) = &self.cache_path {
             // Persisting is best-effort: the search already succeeded and
             // its result must not be discarded over a cache-write failure
@@ -308,12 +318,18 @@ impl Planner {
             .iter()
             .find(|s| pred(&s.string, &self.dims))
             .unwrap_or(&scored[0]);
-        BlockingPlan::evaluate(
+        let plan = BlockingPlan::evaluate(
             &self.name,
             self.dims,
             chosen.string.clone(),
             self.provenance("search", search_ms),
-        )
+        )?;
+        debug_assert!(
+            plan.validate().is_ok(),
+            "searched plan failed validation: {:?}",
+            plan.validate()
+        );
+        Ok(plan)
     }
 
     /// Wrap a caller-supplied blocking string in a plan (no search):

@@ -1,0 +1,587 @@
+//! Plan-level validation: the typed trust-boundary contract.
+//!
+//! The paper's guarantee — measured accesses equal the analytical
+//! model's predictions — only holds for *well-formed* blockings, yet a
+//! [`BlockingPlan`] crosses several deserialization boundaries (the plan
+//! cache, manifests, `schedules.json`, the serve codec) where a
+//! parseable-but-invalid document could smuggle a plan whose splits the
+//! backends index buffers from. [`BlockingPlan::validate`] re-derives
+//! every structural invariant from the plan's own `dims` and `string`
+//! and checks the recorded fields against them, returning a typed
+//! [`PlanError`] instead of letting a backend panic (or over-allocate)
+//! later. Every deserialization path calls it: `from_json`, the
+//! per-entry cache load, manifest and schedule parsing — and searched
+//! plans debug-assert it, so the contract is pinned from both sides
+//! (`rust/tests/properties.rs` proves every searched plan passes clean;
+//! the unit tests here violate each invariant singly).
+
+use crate::model::buffers::{allocate, Tensor};
+use crate::model::dims::Dim;
+use crate::model::string::StringError;
+use crate::plan::ir::{BlockingPlan, Target};
+
+/// Why a [`BlockingPlan`] failed [`BlockingPlan::validate`]. Each
+/// variant names one violated invariant; [`PlanError::class`] gives the
+/// stable short label the fuzz harness counts error taxonomies by.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum PlanError {
+    /// A problem dimension has extent zero — no loop nest exists.
+    #[error("dimension {dim} has extent 0")]
+    ZeroDim {
+        /// The zero-extent dimension.
+        dim: Dim,
+    },
+    /// The extent product (MACs) or a derived footprint overflows u64 —
+    /// the dims describe no machine-representable problem.
+    #[error("problem dimensions overflow u64 arithmetic")]
+    DimsOverflow,
+    /// A blocking level carries range 0 (would divide by zero in trip
+    /// counts and allocate nothing).
+    #[error("level {position} splits {dim} with range 0")]
+    ZeroSplit {
+        /// Dimension of the zero-range level.
+        dim: Dim,
+        /// Index of the level in the string (innermost = 0).
+        position: usize,
+    },
+    /// A blocking level covers more data than the problem has.
+    #[error("level {position} splits {dim} with range {range} > extent {extent}")]
+    OverflowingSplit {
+        /// Dimension of the oversized level.
+        dim: Dim,
+        /// Index of the level in the string (innermost = 0).
+        position: usize,
+        /// The level's recorded range.
+        range: u64,
+        /// The problem extent it overflows.
+        extent: u64,
+    },
+    /// The blocking string violates the Sec. 3.1 well-formedness rules
+    /// (divisibility, completeness, unsplit window dims).
+    #[error("blocking string invalid: {0}")]
+    String(#[from] StringError),
+    /// The recorded MAC count disagrees with the trip product the string
+    /// implies over these dims.
+    #[error("recorded {recorded} MACs but the trip product is {expected}")]
+    TripProduct {
+        /// MAC count recorded in the plan's outcome.
+        recorded: u64,
+        /// Trip product derived from the string and dims.
+        expected: u64,
+    },
+    /// The stored level-0 tile disagrees with the one the string derives
+    /// — downstream kernels would carve blocks on the wrong boundaries.
+    #[error("stored tile {stored:?} but the string derives {derived:?}")]
+    TileMismatch {
+        /// Tile recorded in the plan.
+        stored: (u64, u64, u64, u64),
+        /// Tile derived from the string (`level0_tile`).
+        derived: (u64, u64, u64, u64),
+    },
+    /// A buffer placement names an ordinal past the end of its tensor's
+    /// Table 2 buffer chain.
+    #[error("{tensor}{ordinal} placed but the chain has {chain} buffers")]
+    PlacementOutOfRange {
+        /// Tensor of the out-of-range placement.
+        tensor: Tensor,
+        /// The recorded (out-of-range) ordinal.
+        ordinal: usize,
+        /// Length of the derived buffer chain.
+        chain: usize,
+    },
+    /// The same `(tensor, ordinal)` buffer is placed twice.
+    #[error("{tensor}{ordinal} placed more than once")]
+    DuplicateBuffer {
+        /// Tensor of the duplicated placement.
+        tensor: Tensor,
+        /// The duplicated ordinal.
+        ordinal: usize,
+    },
+    /// A tensor's placement list does not cover its whole buffer chain.
+    #[error("{tensor} has {stored} placements but the chain has {expected}")]
+    BufferCount {
+        /// Tensor with the wrong placement count.
+        tensor: Tensor,
+        /// Placements recorded in the plan.
+        stored: usize,
+        /// Buffers Table 2 derives for the tensor.
+        expected: usize,
+    },
+    /// A placed buffer's recorded footprint disagrees with Table 2.
+    #[error("{tensor}{ordinal} records {stored} bytes but Table 2 sizes it {expected}")]
+    BufferSize {
+        /// Tensor of the mis-sized buffer.
+        tensor: Tensor,
+        /// Ordinal of the mis-sized buffer.
+        ordinal: usize,
+        /// Footprint recorded in the plan, bytes.
+        stored: u64,
+        /// Footprint Table 2 derives, bytes.
+        expected: u64,
+    },
+    /// The on-chip buffer footprint exceeds the bespoke target's SRAM
+    /// budget — the plan claims hardware its target does not have.
+    #[error("on-chip footprint {bytes} B exceeds the {budget} B budget")]
+    FootprintOverBudget {
+        /// On-chip bytes the plan uses.
+        bytes: u64,
+        /// The target's SRAM budget, bytes.
+        budget: u64,
+    },
+    /// A predicted-outcome field is NaN or infinite.
+    #[error("outcome field {field} is non-finite ({value})")]
+    NonFiniteOutcome {
+        /// Name of the non-finite field.
+        field: &'static str,
+        /// The offending value.
+        value: f64,
+    },
+}
+
+impl PlanError {
+    /// Stable short label for the violated invariant — what the fuzz
+    /// harness aggregates its per-error-class counts by.
+    pub fn class(&self) -> &'static str {
+        match self {
+            PlanError::ZeroDim { .. } => "zero-dim",
+            PlanError::DimsOverflow => "dims-overflow",
+            PlanError::ZeroSplit { .. } => "zero-split",
+            PlanError::OverflowingSplit { .. } => "overflowing-split",
+            PlanError::String(_) => "string",
+            PlanError::TripProduct { .. } => "trip-product",
+            PlanError::TileMismatch { .. } => "tile",
+            PlanError::PlacementOutOfRange { .. } => "placement",
+            PlanError::DuplicateBuffer { .. } => "buffer-duplicate",
+            PlanError::BufferCount { .. } => "buffer-count",
+            PlanError::BufferSize { .. } => "buffer-size",
+            PlanError::FootprintOverBudget { .. } => "footprint",
+            PlanError::NonFiniteOutcome { .. } => "outcome",
+        }
+    }
+}
+
+impl BlockingPlan {
+    /// Check every structural invariant of the plan against what its own
+    /// `dims` and `string` derive. `Ok(())` means the plan is safe to
+    /// hand to any backend: trips telescope to the layer's MACs, the
+    /// tile matches the string, every Table 2 buffer is placed exactly
+    /// once at its derived size, the on-chip footprint fits the bespoke
+    /// budget, and the predicted outcome is finite.
+    ///
+    /// The checks run cheapest-first and use checked arithmetic before
+    /// anything multiplies hostile extents, so validation itself never
+    /// panics or overflows — `cnnblk fuzz` pins that over seeded
+    /// mutations of plan JSON.
+    pub fn validate(&self) -> Result<(), PlanError> {
+        // 1. Dims: every extent present and the MAC product representable.
+        //    (Everything later multiplies covered extents, all bounded by
+        //    this product, so this is the single overflow gate.)
+        let mut expected_macs: u64 = 1;
+        for d in Dim::ALL {
+            let e = self.dims.extent(d);
+            if e == 0 {
+                return Err(PlanError::ZeroDim { dim: d });
+            }
+            expected_macs = expected_macs
+                .checked_mul(e)
+                .ok_or(PlanError::DimsOverflow)?;
+        }
+
+        // 2. Splits: no zero ranges, no range past its extent. Checked
+        //    before the string rules so the two hostile-split shapes get
+        //    their own diagnostics (and so trip math below cannot
+        //    divide by zero or overflow).
+        for (i, l) in self.string.levels.iter().enumerate() {
+            if l.range == 0 {
+                return Err(PlanError::ZeroSplit {
+                    dim: l.dim,
+                    position: i,
+                });
+            }
+            let extent = self.dims.extent(l.dim);
+            if l.range > extent {
+                return Err(PlanError::OverflowingSplit {
+                    dim: l.dim,
+                    position: i,
+                    range: l.range,
+                    extent,
+                });
+            }
+        }
+
+        // 3. The Sec. 3.1 string rules (divisibility, completeness,
+        //    window dims unsplit).
+        self.string.validate(&self.dims)?;
+
+        // 4. Trip product: per-dim trips telescope to the dim's extent,
+        //    so the product over all levels must equal the layer's MACs
+        //    — and the recorded outcome must agree.
+        let mut product: u64 = 1;
+        let mut covered = [1u64; 7];
+        for l in &self.string.levels {
+            let below = covered[l.dim as usize];
+            product = product
+                .checked_mul((l.range / below).max(1))
+                .ok_or(PlanError::DimsOverflow)?;
+            covered[l.dim as usize] = l.range;
+        }
+        if product != expected_macs || self.outcome.macs != product {
+            return Err(PlanError::TripProduct {
+                recorded: self.outcome.macs,
+                expected: product.min(expected_macs),
+            });
+        }
+
+        // 5. The stored tile must be the string's level-0 tile.
+        let derived = self.string.level0_tile(&self.dims);
+        if self.tile != derived {
+            return Err(PlanError::TileMismatch {
+                stored: self.tile,
+                derived,
+            });
+        }
+
+        // 6. Buffer placements must cover the Table 2 chain of every
+        //    tensor exactly once, at the derived footprints.
+        let chains = allocate(&self.string, &self.dims);
+        for t in Tensor::ALL {
+            let chain = chains.of(t);
+            let stored = self.buffers.iter().filter(|b| b.tensor == t).count();
+            if stored != chain.len() {
+                return Err(PlanError::BufferCount {
+                    tensor: t,
+                    stored,
+                    expected: chain.len(),
+                });
+            }
+        }
+        let mut seen: Vec<(Tensor, usize)> = Vec::with_capacity(self.buffers.len());
+        for b in &self.buffers {
+            let chain = chains.of(b.tensor);
+            if b.ordinal >= chain.len() {
+                return Err(PlanError::PlacementOutOfRange {
+                    tensor: b.tensor,
+                    ordinal: b.ordinal,
+                    chain: chain.len(),
+                });
+            }
+            if seen.contains(&(b.tensor, b.ordinal)) {
+                return Err(PlanError::DuplicateBuffer {
+                    tensor: b.tensor,
+                    ordinal: b.ordinal,
+                });
+            }
+            seen.push((b.tensor, b.ordinal));
+            let expected = chain[b.ordinal].size_elems * 2;
+            if b.size_bytes != expected {
+                return Err(PlanError::BufferSize {
+                    tensor: b.tensor,
+                    ordinal: b.ordinal,
+                    stored: b.size_bytes,
+                    expected,
+                });
+            }
+        }
+
+        // 7. Bespoke targets: the on-chip footprint (both as the placed
+        //    buffers sum it and as the outcome records it) must fit the
+        //    SRAM budget the target was designed under.
+        if let Target::Bespoke { budget_bytes } = self.provenance.target {
+            let bytes = self
+                .buffers
+                .iter()
+                .filter(|b| b.on_chip)
+                .fold(0u64, |a, b| a.saturating_add(b.size_bytes))
+                .max(self.outcome.onchip_bytes);
+            if bytes > budget_bytes {
+                return Err(PlanError::FootprintOverBudget {
+                    bytes,
+                    budget: budget_bytes,
+                });
+            }
+        }
+
+        // 8. The predicted outcome must be finite (a NaN would poison
+        //    every downstream comparison silently).
+        let o = &self.outcome;
+        for (field, value) in [
+            ("total_pj", o.total_pj),
+            ("memory_pj", o.memory_pj),
+            ("mac_pj", o.mac_pj),
+            ("area_mm2", o.area_mm2),
+            ("input_pj", o.input_pj),
+            ("kernel_pj", o.kernel_pj),
+            ("output_pj", o.output_pj),
+            ("dram_pj", o.dram_pj),
+        ] {
+            if !value.is_finite() {
+                return Err(PlanError::NonFiniteOutcome { field, value });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! The mutation suite ISSUE 10 asks for: violate each invariant
+    //! singly on an otherwise-valid plan and pin the exact variant.
+
+    use super::*;
+    use crate::model::dims::LayerDims;
+    use crate::model::string::BlockingString;
+    use crate::plan::ir::Provenance;
+
+    fn base() -> BlockingPlan {
+        let d = LayerDims::conv(64, 64, 32, 16, 3, 3);
+        let s = BlockingString::parse("Fw Fh X0=8 Y0=8 C0=8 K0=4 C1=32 K1=16 X1=64 Y1=64")
+            .unwrap()
+            .with_window(&d);
+        BlockingPlan::evaluate(
+            "mutate",
+            d,
+            s,
+            Provenance::external(
+                Target::Bespoke {
+                    budget_bytes: 64 * 1024,
+                },
+                "manual",
+            ),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn evaluated_plans_validate_clean_on_every_target() {
+        let d = LayerDims::conv(64, 64, 32, 16, 3, 3);
+        let s = BlockingString::parse("Fw Fh X0=8 Y0=8 C0=8 K0=4 C1=32 K1=16 X1=64 Y1=64")
+            .unwrap()
+            .with_window(&d);
+        for target in [
+            Target::Bespoke {
+                budget_bytes: 64 * 1024,
+            },
+            Target::DianNao,
+            Target::Cpu,
+        ] {
+            let plan =
+                BlockingPlan::evaluate("ok", d, s.clone(), Provenance::external(target, "manual"))
+                    .unwrap();
+            plan.validate()
+                .unwrap_or_else(|e| panic!("clean plan rejected on {}: {}", target, e));
+        }
+    }
+
+    #[test]
+    fn zero_dim_is_caught_first() {
+        let mut p = base();
+        p.dims.c = 0;
+        assert_eq!(p.validate(), Err(PlanError::ZeroDim { dim: Dim::C }));
+    }
+
+    #[test]
+    fn overflowing_dims_never_panic() {
+        let mut p = base();
+        p.dims.x = u64::MAX / 2;
+        p.dims.y = u64::MAX / 2;
+        p.dims.c = 1 << 20;
+        assert_eq!(p.validate(), Err(PlanError::DimsOverflow));
+    }
+
+    #[test]
+    fn zero_split_is_typed() {
+        let mut p = base();
+        p.string.levels[3].range = 0; // Y0
+        assert_eq!(
+            p.validate(),
+            Err(PlanError::ZeroSplit {
+                dim: Dim::Y,
+                position: 3
+            })
+        );
+    }
+
+    #[test]
+    fn overflowing_split_is_typed() {
+        let mut p = base();
+        p.string.levels[2].range = 128; // X0 > x=64
+        assert_eq!(
+            p.validate(),
+            Err(PlanError::OverflowingSplit {
+                dim: Dim::X,
+                position: 2,
+                range: 128,
+                extent: 64
+            })
+        );
+    }
+
+    #[test]
+    fn string_rules_surface_as_string_errors() {
+        let mut p = base();
+        // Drop both C levels: the reduction dim goes missing entirely.
+        p.string.levels.retain(|l| l.dim != Dim::C);
+        assert!(matches!(p.validate(), Err(PlanError::String(_))));
+    }
+
+    #[test]
+    fn recorded_macs_must_match_the_trip_product() {
+        let mut p = base();
+        p.outcome.macs += 1;
+        let expected = p.dims.macs();
+        assert_eq!(
+            p.validate(),
+            Err(PlanError::TripProduct {
+                recorded: expected + 1,
+                expected
+            })
+        );
+    }
+
+    #[test]
+    fn tile_must_match_the_string() {
+        let mut p = base();
+        p.tile.0 = 16;
+        assert_eq!(
+            p.validate(),
+            Err(PlanError::TileMismatch {
+                stored: (16, 8, 8, 4),
+                derived: (8, 8, 8, 4)
+            })
+        );
+    }
+
+    #[test]
+    fn placement_ordinal_out_of_range_is_typed() {
+        let mut p = base();
+        let i = p
+            .buffers
+            .iter()
+            .position(|b| b.tensor == Tensor::Input)
+            .unwrap();
+        p.buffers[i].ordinal = 99;
+        assert!(matches!(
+            p.validate(),
+            Err(PlanError::PlacementOutOfRange {
+                tensor: Tensor::Input,
+                ordinal: 99,
+                ..
+            })
+        ));
+    }
+
+    #[test]
+    fn duplicate_placement_is_typed() {
+        let mut p = base();
+        let idxs: Vec<usize> = p
+            .buffers
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.tensor == Tensor::Input)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(idxs.len() >= 2, "base plan needs two input buffers");
+        p.buffers[idxs[1]] = p.buffers[idxs[0]].clone();
+        assert_eq!(
+            p.validate(),
+            Err(PlanError::DuplicateBuffer {
+                tensor: Tensor::Input,
+                ordinal: 0
+            })
+        );
+    }
+
+    #[test]
+    fn missing_placement_is_typed() {
+        let mut p = base();
+        let i = p
+            .buffers
+            .iter()
+            .position(|b| b.tensor == Tensor::Output)
+            .unwrap();
+        let expected = p
+            .buffers
+            .iter()
+            .filter(|b| b.tensor == Tensor::Output)
+            .count();
+        p.buffers.remove(i);
+        assert_eq!(
+            p.validate(),
+            Err(PlanError::BufferCount {
+                tensor: Tensor::Output,
+                stored: expected - 1,
+                expected
+            })
+        );
+    }
+
+    #[test]
+    fn wrong_buffer_size_is_typed() {
+        let mut p = base();
+        let i = p
+            .buffers
+            .iter()
+            .position(|b| b.tensor == Tensor::Kernel)
+            .unwrap();
+        p.buffers[i].size_bytes += 2;
+        assert!(matches!(
+            p.validate(),
+            Err(PlanError::BufferSize {
+                tensor: Tensor::Kernel,
+                ..
+            })
+        ));
+    }
+
+    #[test]
+    fn footprint_over_budget_is_typed() {
+        let mut p = base();
+        assert!(p.buffers.iter().any(|b| b.on_chip));
+        p.provenance.target = Target::Bespoke { budget_bytes: 1 };
+        assert!(matches!(
+            p.validate(),
+            Err(PlanError::FootprintOverBudget { budget: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn non_finite_outcome_is_typed() {
+        let mut p = base();
+        p.outcome.total_pj = f64::NAN;
+        assert!(matches!(
+            p.validate(),
+            Err(PlanError::NonFiniteOutcome {
+                field: "total_pj",
+                ..
+            })
+        ));
+    }
+
+    #[test]
+    fn every_class_label_is_distinct_enough_to_count() {
+        let labels = [
+            PlanError::ZeroDim { dim: Dim::X }.class(),
+            PlanError::DimsOverflow.class(),
+            PlanError::ZeroSplit {
+                dim: Dim::X,
+                position: 0,
+            }
+            .class(),
+            PlanError::TripProduct {
+                recorded: 0,
+                expected: 1,
+            }
+            .class(),
+            PlanError::NonFiniteOutcome {
+                field: "total_pj",
+                value: f64::NAN,
+            }
+            .class(),
+        ];
+        for (i, a) in labels.iter().enumerate() {
+            for b in &labels[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+}

@@ -38,7 +38,7 @@
 //! dispatch default.
 
 use super::nest::Nest;
-use super::{Backend, ConvInputs, ConvOutput};
+use super::{Backend, ConvInputs, ConvOutput, ExecLimits};
 use crate::plan::BlockingPlan;
 use anyhow::Result;
 
@@ -51,10 +51,15 @@ impl Backend for BlockedCpuBackend {
         "blocked"
     }
 
-    fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput> {
+    fn execute_with(
+        &self,
+        plan: &BlockingPlan,
+        inputs: &ConvInputs,
+        limits: ExecLimits,
+    ) -> Result<ConvOutput> {
         // Boundary 0: every loop level is walked, every buffer is
         // materialized, and the leaf is a single interpreted MAC.
-        let mut nest = Nest::new(plan, inputs, 0)?;
+        let mut nest = Nest::new(plan, inputs, 0, limits)?;
         nest.run(&mut |n, off| n.mac_at(off));
         nest.finish("blocked")
     }

@@ -82,17 +82,112 @@ use std::sync::Arc;
 /// The backend names [`backend_by_name`] resolves, in CLI order.
 pub const BACKEND_NAMES: [&str; 4] = ["naive", "blocked", "tiled", "parallel"];
 
+/// Resource ceilings a caller imposes on one plan execution. Backends
+/// compute what a run will cost — the MAC count and the `f32` working
+/// set they are about to allocate (materialized Table 2 buffers, the
+/// DRAM-resident output tensor, the tiled path's weight repack) — and
+/// refuse with a typed [`ExecError`] *before* allocating anything when
+/// a ceiling would be exceeded. A field of `0` means unlimited. Limits
+/// are plain values threaded per call (never process-global state), so
+/// concurrent executions with different ceilings cannot race.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecLimits {
+    /// Maximum bytes of execution buffers one nest may allocate
+    /// (`0` = unlimited).
+    pub max_alloc_bytes: u64,
+    /// Maximum multiply-accumulates one execution may perform
+    /// (`0` = unlimited).
+    pub max_macs: u64,
+}
+
+impl ExecLimits {
+    /// No ceilings: every plan executes (the [`Backend::execute`]
+    /// default).
+    pub const UNLIMITED: ExecLimits = ExecLimits {
+        max_alloc_bytes: 0,
+        max_macs: 0,
+    };
+
+    /// Limit allocation only (the serving `--max-exec-bytes` knob).
+    pub fn with_max_bytes(bytes: u64) -> ExecLimits {
+        ExecLimits {
+            max_alloc_bytes: bytes,
+            max_macs: 0,
+        }
+    }
+
+    /// Check a computed execution cost against these ceilings.
+    pub fn check(&self, macs: u64, alloc_bytes: u64) -> Result<(), ExecError> {
+        if self.max_macs > 0 && macs > self.max_macs {
+            return Err(ExecError::MacsOverLimit {
+                needed_macs: macs,
+                limit_macs: self.max_macs,
+            });
+        }
+        if self.max_alloc_bytes > 0 && alloc_bytes > self.max_alloc_bytes {
+            return Err(ExecError::AllocOverLimit {
+                needed_bytes: alloc_bytes,
+                limit_bytes: self.max_alloc_bytes,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Default for ExecLimits {
+    fn default() -> ExecLimits {
+        ExecLimits::UNLIMITED
+    }
+}
+
+/// A plan was refused by the resource guard before execution: running
+/// it would exceed a caller-imposed [`ExecLimits`] ceiling. Surfaced
+/// through `anyhow` and downcast by the serving layer, which sheds the
+/// request with a structured error instead of letting an oversized plan
+/// OOM the process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum ExecError {
+    /// The execution working set is larger than `max_alloc_bytes`.
+    #[error("plan needs {needed_bytes} B of execution buffers, over the {limit_bytes} B limit")]
+    AllocOverLimit {
+        /// Bytes the execution would have allocated.
+        needed_bytes: u64,
+        /// The `max_alloc_bytes` ceiling that refused it.
+        limit_bytes: u64,
+    },
+    /// The plan performs more MACs than `max_macs`.
+    #[error("plan executes {needed_macs} MACs, over the {limit_macs} limit")]
+    MacsOverLimit {
+        /// MACs the execution would have performed.
+        needed_macs: u64,
+        /// The `max_macs` ceiling that refused it.
+        limit_macs: u64,
+    },
+}
+
 /// An executor for planned convolutions: turns a [`BlockingPlan`] plus
 /// real tensors into an output tensor and a measured access report.
 pub trait Backend: Send + Sync {
     /// Stable name ("naive", "blocked") used by the CLI and registry.
     fn name(&self) -> &'static str;
 
+    /// Execute `plan` over `inputs` with no resource ceilings.
+    fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput> {
+        self.execute_with(plan, inputs, ExecLimits::UNLIMITED)
+    }
+
     /// Execute `plan` over `inputs`, returning the output tensor and the
     /// [`AccessCounters`] measured while running. Implementations must
     /// validate that `inputs` matches `plan.dims` and fail cleanly on
-    /// mismatch — never panic on user data.
-    fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput>;
+    /// mismatch — never panic on user data — and must refuse, with a
+    /// typed [`ExecError`] *before* allocating execution buffers, any
+    /// plan whose working set or MAC count exceeds `limits`.
+    fn execute_with(
+        &self,
+        plan: &BlockingPlan,
+        inputs: &ConvInputs,
+        limits: ExecLimits,
+    ) -> Result<ConvOutput>;
 }
 
 /// Resolve a backend by CLI name ("naive", "blocked", "tiled" or
@@ -141,6 +236,13 @@ impl BlockingPlan {
     /// `PlanEngine` outputs directly runnable.
     pub fn execute(&self, inputs: &ConvInputs) -> Result<ConvOutput> {
         backend_for_target(&self.provenance.target).execute(self, inputs)
+    }
+
+    /// [`BlockingPlan::execute`] under resource ceilings: the dispatched
+    /// backend refuses with a typed [`ExecError`] before allocating when
+    /// the plan's working set or MAC count exceeds `limits`.
+    pub fn execute_with(&self, inputs: &ConvInputs, limits: ExecLimits) -> Result<ConvOutput> {
+        backend_for_target(&self.provenance.target).execute_with(self, inputs, limits)
     }
 
     /// Execute this plan on an explicitly named backend
@@ -489,6 +591,54 @@ mod tests {
             .levels(2)
             .plan()
             .unwrap()
+    }
+
+    #[test]
+    fn exec_limits_refuse_oversized_plans_with_typed_errors() {
+        let plan = small_plan();
+        let inputs = ConvInputs::synthetic(plan.dims, 4);
+        // Unlimited (the `execute` default) admits.
+        assert!(plan.execute_with(&inputs, ExecLimits::UNLIMITED).is_ok());
+        assert_eq!(ExecLimits::default(), ExecLimits::UNLIMITED);
+        // A 1-byte allocation ceiling refuses with a typed, downcastable
+        // error carrying both the need and the ceiling.
+        let err = plan
+            .execute_with(&inputs, ExecLimits::with_max_bytes(1))
+            .unwrap_err();
+        match err.downcast_ref::<ExecError>() {
+            Some(ExecError::AllocOverLimit {
+                needed_bytes,
+                limit_bytes,
+            }) => {
+                assert!(*needed_bytes > 1);
+                assert_eq!(*limit_bytes, 1);
+            }
+            other => panic!("expected AllocOverLimit, got {:?}", other),
+        }
+        // A 1-MAC ceiling refuses on MAC count — on every backend.
+        let tight = ExecLimits {
+            max_alloc_bytes: 0,
+            max_macs: 1,
+        };
+        for name in BACKEND_NAMES {
+            let err = backend_by_name(name)
+                .unwrap()
+                .execute_with(&plan, &inputs, tight)
+                .unwrap_err();
+            let pe = err
+                .downcast_ref::<ExecError>()
+                .unwrap_or_else(|| panic!("{}: untyped refusal: {}", name, err));
+            assert!(matches!(pe, ExecError::MacsOverLimit { .. }), "{}", name);
+        }
+        // A roomy ceiling admits and computes the same output as the
+        // unlimited path.
+        let roomy = ExecLimits {
+            max_alloc_bytes: 1 << 30,
+            max_macs: u64::MAX,
+        };
+        let a = plan.execute(&inputs).unwrap();
+        let b = plan.execute_with(&inputs, roomy).unwrap();
+        assert_eq!(a.output, b.output);
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //! tensors of [`ConvInputs`] in place — comparing against the oracle
 //! never copies the inputs.
 
-use super::{AccessCounters, Backend, ConvInputs, ConvOutput, DramCounters, OperandCounters};
+use super::{
+    AccessCounters, Backend, ConvInputs, ConvOutput, DramCounters, ExecLimits, OperandCounters,
+};
 use crate::coordinator::naive_conv::conv_valid;
 use crate::model::dims::LayerDims;
 use crate::plan::BlockingPlan;
@@ -65,7 +67,12 @@ impl Backend for NaiveBackend {
     /// string is ignored apart from validation — naive semantics do not
     /// block). Counters report the unblocked memory-rate cost derived
     /// in [`unblocked_traffic`].
-    fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput> {
+    fn execute_with(
+        &self,
+        plan: &BlockingPlan,
+        inputs: &ConvInputs,
+        limits: ExecLimits,
+    ) -> Result<ConvOutput> {
         let d = plan.dims;
         ensure!(
             inputs.dims == d,
@@ -79,6 +86,11 @@ impl Backend for NaiveBackend {
             "input/weight tensors do not match {}",
             d
         );
+        // The unblocked nest allocates nothing beyond the output
+        // tensor; price that plus the MAC count against the ceilings.
+        limits
+            .check(d.macs(), d.output_elems().saturating_mul(4))
+            .map_err(anyhow::Error::new)?;
         let (h, w) = ((d.y + d.fh - 1) as usize, (d.x + d.fw - 1) as usize);
         let (c, k) = (d.c as usize, d.k as usize);
         let (fh, fw) = (d.fh as usize, d.fw as usize);

@@ -24,7 +24,8 @@
 //! every backend driving a [`Nest`].
 
 use super::{
-    AccessCounters, BufferCounters, ConvInputs, ConvOutput, DramCounters, OperandCounters,
+    AccessCounters, BufferCounters, ConvInputs, ConvOutput, DramCounters, ExecLimits,
+    OperandCounters,
 };
 use crate::model::buffers::{allocate, Tensor};
 use crate::model::dims::Dim;
@@ -229,21 +230,33 @@ impl<'a> Nest<'a> {
     /// fill/writeback counters are the exact trip-count products the
     /// interpreter would measure, charged up front; the leaf is expected
     /// to execute those loops itself. `boundary == 0` materializes
-    /// everything (the interpreter configuration).
-    pub(super) fn new(plan: &BlockingPlan, inputs: &'a ConvInputs, boundary: usize) -> Result<Nest<'a>> {
-        Nest::with_shards(plan, inputs, boundary, &[])
+    /// everything (the interpreter configuration). The nest refuses
+    /// with a typed [`super::ExecError`] before allocating anything
+    /// when the working set or MAC count exceeds `limits`.
+    pub(super) fn new(
+        plan: &BlockingPlan,
+        inputs: &'a ConvInputs,
+        boundary: usize,
+        limits: ExecLimits,
+    ) -> Result<Nest<'a>> {
+        Nest::with_shards(plan, inputs, boundary, &[], limits, 0)
     }
 
     /// [`Nest::new`] with iteration-range restrictions of zero or more
     /// *distinct* walked levels (see [`NestShard`]) — one per grid axis.
     /// Virtualized-buffer counters and their DRAM terminals are derived
     /// from the *effective* trip counts, so a cell's analytic counters
-    /// are exactly its share of the whole layer's.
+    /// are exactly its share of the whole layer's. `extra_bytes` is
+    /// working-set allocation the *caller* will add on top of the
+    /// nest's own buffers (the tiled kernel's weight repack), priced
+    /// into the same `limits` check.
     pub(super) fn with_shards(
         plan: &BlockingPlan,
         inputs: &'a ConvInputs,
         boundary: usize,
         shards: &[NestShard],
+        limits: ExecLimits,
+        extra_bytes: u64,
     ) -> Result<Nest<'a>> {
         let d = plan.dims;
         ensure!(
@@ -339,6 +352,25 @@ impl<'a> Nest<'a> {
         }
 
         let bufs = allocate(s, &d);
+        // Resource guard: price the working set this nest is about to
+        // allocate — one real f32 buffer per materialized Table 2
+        // virtual buffer, the DRAM-resident output tensor, plus the
+        // caller's `extra_bytes` — and refuse with a typed ExecError
+        // before allocating any of it. Sharded cells check the whole
+        // layer's MAC count, so a limit admits or refuses a plan
+        // identically at every worker width.
+        let mut need_bytes = d
+            .output_elems()
+            .saturating_mul(4)
+            .saturating_add(extra_bytes);
+        for t in Tensor::ALL {
+            for vb in bufs.of(t) {
+                if vb.created_at >= boundary {
+                    need_bytes = need_bytes.saturating_add(vb.size_elems.saturating_mul(4));
+                }
+            }
+        }
+        limits.check(d.macs(), need_bytes).map_err(anyhow::Error::new)?;
         let mut by_pos: Vec<Vec<(Tensor, usize)>> = vec![Vec::new(); n];
         let mut chains: [Vec<Block>; 3] = [Vec::new(), Vec::new(), Vec::new()];
         let mut virtualized: [Vec<BufferCounters>; 3] = Default::default();

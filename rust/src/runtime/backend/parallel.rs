@@ -60,7 +60,7 @@
 
 use super::nest::NestShard;
 use super::tiled::{execute_tiled, prepack_dram_weights, tile_boundary, SharedPack, Tile};
-use super::{Backend, ConvInputs, ConvOutput};
+use super::{Backend, ConvInputs, ConvOutput, ExecLimits};
 use crate::model::buffers::{allocate, BufferSet, Tensor};
 use crate::model::dims::Dim;
 use crate::model::string::BlockingString;
@@ -221,7 +221,14 @@ pub fn execute_grid_claim_order(
     );
     let mut outs: Vec<Option<ConvOutput>> = (0..cells.len()).map(|_| None).collect();
     for &ci in order {
-        outs[ci] = Some(execute_tiled(plan, inputs, &cells[ci].shards, "parallel", None)?);
+        outs[ci] = Some(execute_tiled(
+            plan,
+            inputs,
+            &cells[ci].shards,
+            "parallel",
+            None,
+            ExecLimits::UNLIMITED,
+        )?);
     }
     let outs = outs
         .into_iter()
@@ -248,7 +255,7 @@ pub fn execute_single_axis(
     let axis = axis_of(s, boundary, Dim::K).or_else(|| axis_of(s, boundary, Dim::Y));
     let pos = match axis {
         Some(pos) if workers > 1 => pos,
-        _ => return execute_tiled(plan, inputs, &[], "parallel1d", None),
+        _ => return execute_tiled(plan, inputs, &[], "parallel1d", None, ExecLimits::UNLIMITED),
     };
     let cells = grid_cells(s, &[pos], workers);
     let bufs = allocate(s, &plan.dims);
@@ -258,7 +265,14 @@ pub fn execute_single_axis(
         let inputs = inputs.clone();
         let sp = shared_pack.clone();
         par_map_with(&shared_pool(), cells.clone(), move |cell| {
-            execute_tiled(&plan, &inputs, &cell.shards, "parallel1d", sp.as_ref())
+            execute_tiled(
+                &plan,
+                &inputs,
+                &cell.shards,
+                "parallel1d",
+                sp.as_ref(),
+                ExecLimits::UNLIMITED,
+            )
         })?
     };
     let mut runs = Vec::with_capacity(outs.len());
@@ -293,7 +307,12 @@ impl Backend for ParallelTiledBackend {
         "parallel"
     }
 
-    fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput> {
+    fn execute_with(
+        &self,
+        plan: &BlockingPlan,
+        inputs: &ConvInputs,
+        limits: ExecLimits,
+    ) -> Result<ConvOutput> {
         let workers = if self.jobs > 0 {
             self.jobs
         } else {
@@ -302,14 +321,14 @@ impl Backend for ParallelTiledBackend {
         if workers <= 1 {
             // A single worker runs the plain tiled path — the grid
             // would enumerate one whole-layer cell anyway.
-            return execute_tiled(plan, inputs, &[], "parallel", None);
+            return execute_tiled(plan, inputs, &[], "parallel", None, limits);
         }
         let boundary = tile_boundary(&plan.string);
         let axes = grid_axes(&plan.string, boundary, workers as u64);
         if axes.is_empty() {
             // No grid axis at all: honest provenance — this execution
             // was serial, its counters are a single nest's.
-            return execute_tiled(plan, inputs, &[], "parallel-serial", None);
+            return execute_tiled(plan, inputs, &[], "parallel-serial", None, limits);
         }
         let cells = grid_cells(&plan.string, &axes, workers as u64);
         let bufs = allocate(&plan.string, &plan.dims);
@@ -320,7 +339,7 @@ impl Backend for ParallelTiledBackend {
             let inputs = inputs.clone();
             let sp = shared_pack.clone();
             par_claim_with(&shared_pool(), cells.clone(), move |_i, cell| {
-                execute_tiled(&plan, &inputs, &cell.shards, "parallel", sp.as_ref())
+                execute_tiled(&plan, &inputs, &cell.shards, "parallel", sp.as_ref(), limits)
             })?
         };
         let mut runs = Vec::with_capacity(outs.len());

@@ -44,7 +44,7 @@
 //! nest.
 
 use super::nest::{Nest, NestShard};
-use super::{Backend, ConvInputs, ConvOutput};
+use super::{Backend, ConvInputs, ConvOutput, ExecLimits};
 use crate::model::dims::{Dim, LayerDims};
 use crate::model::string::BlockingString;
 use crate::plan::BlockingPlan;
@@ -257,10 +257,16 @@ pub(super) fn execute_tiled(
     shards: &[NestShard],
     label: &'static str,
     shared_pack: Option<&Arc<SharedPack>>,
+    limits: ExecLimits,
 ) -> Result<ConvOutput> {
     let boundary = tile_boundary(&plan.string);
-    let mut nest = Nest::with_shards(plan, inputs, boundary, shards)?;
     let tile = Tile::of(plan, boundary);
+    // The per-tile weight repack is real allocation too; price it into
+    // the nest's resource-guard check.
+    let repack_bytes = (tile.chunks() as u64)
+        .saturating_mul(tile.chunk_len() as u64)
+        .saturating_mul(4);
+    let mut nest = Nest::with_shards(plan, inputs, boundary, shards, limits, repack_bytes)?;
     let mut pack = match shared_pack {
         // The prepack is only sound while the kernel view is DRAM.
         Some(sp) if nest.kernel_chain.is_empty() => TilePack::Shared(Arc::clone(sp)),
@@ -278,8 +284,13 @@ impl Backend for TiledCpuBackend {
         "tiled"
     }
 
-    fn execute(&self, plan: &BlockingPlan, inputs: &ConvInputs) -> Result<ConvOutput> {
-        execute_tiled(plan, inputs, &[], "tiled", None)
+    fn execute_with(
+        &self,
+        plan: &BlockingPlan,
+        inputs: &ConvInputs,
+        limits: ExecLimits,
+    ) -> Result<ConvOutput> {
+        execute_tiled(plan, inputs, &[], "tiled", None, limits)
     }
 }
 

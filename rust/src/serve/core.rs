@@ -31,6 +31,7 @@
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::InterpretedPipeline;
+use crate::runtime::backend::{ExecError, ExecLimits};
 use crate::serve::health::{HealthReport, StatsReport};
 use crate::serve::lock_unpoisoned;
 use crate::serve::queue::{
@@ -70,6 +71,11 @@ pub struct CoreConfig {
     /// `0` follows `CNNBLK_THREADS` / the machine width; any other
     /// value caps the shared pool and the scheduler's worker count.
     pub jobs: usize,
+    /// Execution buffer ceiling per layer execution, bytes (the
+    /// `--max-exec-bytes` knob): plans whose working set would exceed
+    /// it are refused with a typed over-budget error instead of being
+    /// executed. `0` disables the guard.
+    pub max_exec_bytes: u64,
 }
 
 impl Default for CoreConfig {
@@ -81,6 +87,7 @@ impl Default for CoreConfig {
             retry_after_ms: 25,
             policy: SchedPolicy::Model,
             jobs: 0,
+            max_exec_bytes: 0,
         }
     }
 }
@@ -116,6 +123,13 @@ pub struct ServeCore {
 impl ServeCore {
     /// Spin up the batcher over `pipeline` and return the shared core.
     pub fn start(pipeline: InterpretedPipeline, cfg: CoreConfig) -> Result<Arc<ServeCore>> {
+        // The resource guard is part of the served pipeline itself, so
+        // the batcher's clone and the stored handle both carry it.
+        let pipeline = if cfg.max_exec_bytes > 0 {
+            pipeline.with_limits(ExecLimits::with_max_bytes(cfg.max_exec_bytes))
+        } else {
+            pipeline
+        };
         let (tx, rx) = queue::bounded(cfg.queue_cap);
         let depth = tx.depth_gauge();
         let metrics = Arc::new(Mutex::new(Metrics {
@@ -287,6 +301,8 @@ impl ServeCore {
             requests: m.requests,
             errors: m.errors,
             batcher_restarts: m.batcher_restarts,
+            validation_rejects: m.validation_rejects,
+            exec_sheds: m.exec_sheds,
             macs: m.macs,
             exec_us: m.exec_us,
             mac_per_s: m.mac_per_s(),
@@ -465,6 +481,14 @@ fn batcher_loop(
             if let Ok(run) = &result {
                 m.record_macs(run.macs);
             }
+            // A typed refusal from the execution resource guard is a
+            // shed, not a fault: break it out so operators can tell
+            // "over budget" from "broken".
+            if let Err(e) = &result {
+                if e.downcast_ref::<ExecError>().is_some() {
+                    m.record_exec_shed();
+                }
+            }
         }
         deliver(batch, result.map(|run| run.output), metrics, output_len);
     }
@@ -614,6 +638,36 @@ mod tests {
             "every scheduled batch must be counted exactly once"
         );
         assert!(s.sched_layer > 0, "single-image batches bucket as layer");
+        c.shutdown();
+    }
+
+    #[test]
+    fn over_budget_plans_are_shed_with_typed_errors_and_the_core_survives() {
+        // The acceptance pin: a serving core with an execution budget
+        // far below the pipeline's working set refuses every request
+        // with a structured over-budget error — and stays healthy.
+        let pipeline =
+            InterpretedPipeline::plan_default(&BeamConfig::quick(), "tiled", 0).unwrap();
+        let c = ServeCore::start(
+            pipeline,
+            CoreConfig {
+                max_exec_bytes: 16,
+                ..CoreConfig::default()
+            },
+        )
+        .unwrap();
+        let img = image(&c, 21);
+        let err = c.infer_blocking(img.clone()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("over the 16 B limit"), "{}", msg);
+        let s = c.stats();
+        assert_eq!(s.exec_sheds, 1, "the guard refusal must be classified");
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.batcher_restarts, 0, "a guard refusal is not a panic");
+        assert!(c.health().serving, "the core must stay up after shedding");
+        // The refusal is deterministic, not flapping.
+        assert!(c.infer_blocking(img).is_err());
+        assert_eq!(c.stats().exec_sheds, 2);
         c.shutdown();
     }
 

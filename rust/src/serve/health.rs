@@ -47,6 +47,13 @@ pub struct StatsReport {
     pub shed_deadline: u64,
     /// Supervised batcher restarts after a panic since startup.
     pub batcher_restarts: u64,
+    /// Wire requests rejected at the decode/validation boundary before
+    /// admission (malformed frames or invalid documents).
+    pub validation_rejects: u64,
+    /// Admitted requests refused by the execution resource guard with a
+    /// typed over-budget error (also counted in
+    /// [`StatsReport::errors`]).
+    pub exec_sheds: u64,
     /// Requests completed successfully.
     pub requests: u64,
     /// Requests that returned an error.
@@ -120,6 +127,8 @@ impl StatsReport {
             .set("shed", json::unum(self.shed))
             .set("shed_deadline", json::unum(self.shed_deadline))
             .set("batcher_restarts", json::unum(self.batcher_restarts))
+            .set("validation_rejects", json::unum(self.validation_rejects))
+            .set("exec_sheds", json::unum(self.exec_sheds))
             .set("requests", json::unum(self.requests))
             .set("errors", json::unum(self.errors))
             .set("macs", json::unum(self.macs))
@@ -151,6 +160,12 @@ impl StatsReport {
                 .get("batcher_restarts")
                 .and_then(|v| v.as_u64())
                 .unwrap_or(0),
+            // Absent in pre-PR-10 reports: default 0, same contract.
+            validation_rejects: doc
+                .get("validation_rejects")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0),
+            exec_sheds: doc.get("exec_sheds").and_then(|v| v.as_u64()).unwrap_or(0),
             requests: req_u64(doc, "requests")?,
             errors: req_u64(doc, "errors")?,
             macs: req_u64(doc, "macs")?,
@@ -195,6 +210,8 @@ mod tests {
             shed: 7,
             shed_deadline: 2,
             batcher_restarts: 1,
+            validation_rejects: 4,
+            exec_sheds: 2,
             requests: 93,
             errors: 0,
             macs: 1_234_567,

@@ -13,6 +13,7 @@
 use crate::serve::codec::{Request, Response};
 use crate::serve::core::{Admission, ServeCore};
 use crate::serve::frame::{read_frame_idle, write_frame, FrameRead, MAX_FRAME_LEN};
+use crate::serve::lock_unpoisoned;
 use crate::serve::queue::ReqError;
 use crate::util::fault::{self, FaultPoint};
 use std::net::TcpStream;
@@ -23,6 +24,13 @@ use std::time::Duration;
 /// How long a blocked session read waits before re-checking `stop`.
 pub const STOP_POLL: Duration = Duration::from_millis(200);
 
+/// Ceiling on one blocking response write. A peer that stops draining
+/// its receive window would otherwise pin this session thread forever
+/// with the response half-sent; past this the write errors and the
+/// session closes — one slow client costs one connection, never a
+/// thread leak.
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
 /// Serve one connection until the peer disconnects, a protocol error
 /// occurs, or `stop` is raised while the connection is idle. Each
 /// request is answered before the next is read (the protocol is
@@ -30,7 +38,9 @@ pub const STOP_POLL: Duration = Duration::from_millis(200);
 /// many connections).
 pub fn run_session(mut stream: TcpStream, core: Arc<ServeCore>, stop: Arc<AtomicBool>) {
     stream.set_nodelay(true).ok();
-    if stream.set_read_timeout(Some(STOP_POLL)).is_err() {
+    if stream.set_read_timeout(Some(STOP_POLL)).is_err()
+        || stream.set_write_timeout(Some(WRITE_TIMEOUT)).is_err()
+    {
         return;
     }
     loop {
@@ -47,7 +57,12 @@ pub fn run_session(mut stream: TcpStream, core: Arc<ServeCore>, stop: Arc<Atomic
         };
         let response = match Request::decode(&payload) {
             Ok(req) => handle(&core, req),
-            Err(e) => Response::Error(format!("{e:#}")),
+            Err(e) => {
+                // The trust boundary: a frame that decodes but fails
+                // typed validation is rejected here, before admission.
+                lock_unpoisoned(&core.metrics()).record_validation_reject();
+                Response::Error(format!("{e:#}"))
+            }
         };
         let bytes = match response.encode() {
             Ok(b) => b,

@@ -13,7 +13,10 @@ use cnn_blocking::model::dims::LayerDims;
 use cnn_blocking::model::string::BlockingString;
 use cnn_blocking::optimizer::beam::BeamConfig;
 use cnn_blocking::plan::{BlockingPlan, PlanCache, Provenance, Target};
-use cnn_blocking::serve::{Admission, CoreConfig, ReqError, ServeCore};
+use cnn_blocking::serve::{
+    Admission, CoreConfig, ListenConfig, ReqError, Response, ServeClient, ServeCore,
+    TcpServeHandle,
+};
 use cnn_blocking::util::fault::{self, FaultPoint};
 use cnn_blocking::util::pool::{par_map_with, WorkerPool};
 use cnn_blocking::util::rng::Rng;
@@ -191,6 +194,50 @@ fn a_torn_cache_write_never_reaches_the_real_file() {
 
     let _ = std::fs::remove_file(&path);
     let _ = std::fs::remove_file(path.with_extension(format!("json.tmp.{}", std::process::id())));
+}
+
+#[test]
+fn a_stalled_response_write_is_answered_late_not_dropped() {
+    let _g = serial();
+    let server = TcpServeHandle::start(
+        core(),
+        &ListenConfig {
+            host: "127.0.0.1".to_string(),
+            port: 0,
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let input_len = server.core().input_len();
+
+    // Script exactly one stall on the session's response write: the
+    // client must still get its answer — late, not dropped, and well
+    // under the session's WRITE_TIMEOUT so the connection survives.
+    fault::arm_once(FaultPoint::SocketStall);
+    let t0 = std::time::Instant::now();
+    let img = image(input_len, 5);
+    let want = server.core().pipeline().run_image(&img).unwrap();
+    match client.infer(&img).unwrap() {
+        Response::Output(got) => assert_eq!(got, want),
+        other => panic!("stalled write must still answer, got {:?}", other),
+    }
+    assert!(
+        t0.elapsed() >= Duration::from_millis(30),
+        "the scripted stall must actually delay the response"
+    );
+    let c = fault::disarm();
+    assert_eq!(c[idx(FaultPoint::SocketStall)].fired, 1);
+
+    // One slow write cost one response some latency — the same
+    // connection serves again, fault-free, and the server is healthy.
+    match client.infer(&img).unwrap() {
+        Response::Output(got) => assert_eq!(got, want),
+        other => panic!("session must survive the stall, got {:?}", other),
+    }
+    assert!(client.health().unwrap().serving);
+    assert_eq!(server.core().stats().errors, 0);
+    server.shutdown();
 }
 
 #[test]

@@ -214,6 +214,49 @@ fn plan_json_roundtrips_randomly() {
 }
 
 #[test]
+fn every_searched_plan_validates_clean() {
+    // The trust-boundary contract from the producing side: whatever the
+    // search emits — any strategy, target, or level count — must pass
+    // the same typed validation the deserialization boundary enforces,
+    // so a plan the optimizer wrote can never be rejected on reload.
+    use cnn_blocking::{Planner, Target};
+    check(
+        "searched plans validate",
+        Config { cases: 25, ..Default::default() },
+        |rng| {
+            let dims = random_dims(rng);
+            let strategy = *rng.pick(&["beam", "exhaustive", "random"]);
+            // Exhaustive enumerates the whole space: keep it at the
+            // shallow level count so the property stays fast.
+            let levels = if strategy == "exhaustive" { 2 } else { rng.range(2, 3) };
+            let target = *rng.pick(&[
+                Target::Bespoke {
+                    budget_bytes: 64 * 1024,
+                },
+                Target::DianNao,
+                Target::Cpu,
+            ]);
+            let plan = Planner::for_named("searched", dims)
+                .target(target)
+                .levels(levels)
+                .strategy_named(strategy)
+                .map_err(|e| e.to_string())?
+                .plan()
+                .map_err(|e| e.to_string())?;
+            plan.validate().map_err(|e| {
+                format!(
+                    "{} search produced invalid plan {} ({}): {}",
+                    strategy,
+                    plan.string,
+                    e.class(),
+                    e
+                )
+            })
+        },
+    );
+}
+
+#[test]
 fn trace_length_invariant_under_blocking() {
     // The register-filtered trace length may vary, but the un-filtered
     // MAC count served must be identical for every blocking of the same

@@ -230,7 +230,12 @@ fn malformed_requests_get_error_responses_and_the_session_survives() {
         }
         other => panic!("expected an output, got {:?}", other),
     }
-    assert!(server.core().stats().errors >= 3);
+    // The precise trust-boundary accounting: the two undecodable
+    // payloads are validation rejects (they never reached the queue),
+    // the wrong-length tensor is an admission error.
+    let stats = server.core().stats();
+    assert_eq!(stats.validation_rejects, 2);
+    assert!(stats.errors >= 1);
     server.shutdown();
 }
 
